@@ -1,0 +1,70 @@
+//! Batch-scaling study (the Table 1/2/4 machinery as a standalone
+//! program): fixed total samples, batch doubling up the ladder, LR and
+//! warmup set by the paper's sqrt-scaling and linear-epoch rules, LAMB vs
+//! LARS side by side.
+//!
+//!     cargo run --release --example batch_scaling [base_steps]
+
+use anyhow::Result;
+use lamb_train::config::TrainConfig;
+use lamb_train::coordinator::{BertTrainer, Stage};
+use lamb_train::manifest::Manifest;
+use lamb_train::metrics::render_table;
+use lamb_train::runtime::Engine;
+use lamb_train::schedule::{steps_for_batch, Schedule};
+
+fn main() -> Result<()> {
+    let base_steps: u64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(256);
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+    let mut rows = Vec::new();
+    for batch in [32usize, 64, 128, 256, 512] {
+        let steps = steps_for_batch(base_steps, 32, batch);
+        let paper_batch = batch * 16; // map tiny ladder onto 512..8K
+        let mut cells = vec![
+            format!("{batch}"),
+            format!("{paper_batch}"),
+            steps.to_string(),
+        ];
+        for opt in ["lamb", "lars"] {
+            let cfg = TrainConfig {
+                model: "bert-tiny".into(),
+                seq: 32,
+                optimizer: opt.into(),
+                global_batch: batch,
+                steps,
+                chips: (batch / 8).max(1),
+                ..TrainConfig::default()
+            };
+            let stage = Stage {
+                seq: 32,
+                global_batch: batch,
+                steps,
+                schedule: Schedule::untuned_bert(paper_batch, steps),
+            };
+            let mut tr = BertTrainer::new(&engine, &manifest, cfg)?;
+            let log = tr.train(&[stage])?;
+            if log.diverged {
+                cells.push("diverge".into());
+            } else {
+                let (_, acc) = tr.evaluate(32, 8)?;
+                cells.push(format!("{acc:.4}"));
+            }
+        }
+        rows.push(cells);
+        println!("batch {batch} done");
+    }
+    println!(
+        "{}",
+        render_table(
+            &["batch", "paper-batch", "steps", "lamb dev-acc", "lars dev-acc"],
+            &rows
+        )
+    );
+    println!("(paper shape: LAMB flat across the ladder, LARS decaying/diverging at the top)");
+    Ok(())
+}

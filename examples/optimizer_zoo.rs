@@ -1,0 +1,64 @@
+//! Optimizer zoo on the native substrate: every solver the paper
+//! evaluates, on the ImageNet-proxy task with a small LR grid each —
+//! the Table 3 / Table 6 comparison as a standalone program.
+//!
+//!     cargo run --release --example optimizer_zoo [steps]
+
+use anyhow::Result;
+use lamb_train::coordinator::{NativeTask, NativeTrainer};
+use lamb_train::metrics::render_table;
+use lamb_train::optim::{Hyper, ALL};
+use lamb_train::schedule::Schedule;
+
+fn main() -> Result<()> {
+    let steps: u64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(400);
+    let task = NativeTask::imagenet_proxy();
+    let batch = 256;
+    let lrs = [0.001f32, 0.005, 0.02, 0.05, 0.2];
+    let mut rows = Vec::new();
+    for opt in ALL {
+        let mut best: Option<(f32, f32)> = None;
+        for &lr in &lrs {
+            let sched = Schedule::WarmupPoly {
+                base: lr,
+                warmup: (steps / 20).max(1),
+                total: steps,
+                power: 1.0,
+            };
+            let h = Hyper {
+                weight_decay: if opt.contains("lamb") || *opt == "adamw" {
+                    0.01
+                } else {
+                    0.0
+                },
+                l2_reg: if *opt == "momentum" { 0.0005 } else { 0.0 },
+                ..Hyper::default()
+            };
+            let mut tr = NativeTrainer::new(&task, opt, h, sched, 42);
+            let log = tr.train(steps, batch);
+            if let Some(acc) = log.final_metric {
+                if best.map(|(_, a)| acc > a).unwrap_or(true) {
+                    best = Some((lr, acc));
+                }
+            }
+        }
+        rows.push(match best {
+            Some((lr, acc)) => {
+                vec![opt.to_string(), format!("{acc:.4}"), format!("{lr}")]
+            }
+            None => vec![opt.to_string(), "diverge".into(), "-".into()],
+        });
+        println!("{opt} done");
+    }
+    rows.sort_by(|a, b| b[1].cmp(&a[1]));
+    println!(
+        "{}",
+        render_table(&["optimizer", "test accuracy", "best lr"], &rows)
+    );
+    println!("(paper shape: lamb family at the top, plain adaptive solvers below)");
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Quickstart: load the AOT artifacts, run a short LAMB pre-training job
+//! on the synthetic MLM task, and print the loss curve + dev metric.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Everything here goes through the public API the `lamb-train` binary
+//! uses: `Manifest` -> `Engine` -> `BertTrainer`.
+
+use anyhow::Result;
+use lamb_train::config::TrainConfig;
+use lamb_train::coordinator::{BertTrainer, Stage};
+use lamb_train::manifest::Manifest;
+use lamb_train::metrics::fmt_duration;
+use lamb_train::runtime::Engine;
+use lamb_train::schedule::Schedule;
+
+fn main() -> Result<()> {
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+
+    let cfg = TrainConfig {
+        model: "bert-tiny".into(),
+        seq: 32,
+        optimizer: "lamb".into(),
+        global_batch: 64,
+        steps: 60,
+        chips: 8,
+        ..TrainConfig::default()
+    };
+    println!(
+        "quickstart: {} ({} params) | LAMB | global batch {} on {} simulated chips",
+        cfg.model,
+        manifest.model(&cfg.model)?.total_params,
+        cfg.global_batch,
+        cfg.chips
+    );
+
+    let stage = Stage {
+        seq: cfg.seq,
+        global_batch: cfg.global_batch,
+        steps: cfg.steps,
+        schedule: Schedule::WarmupPoly {
+            base: 0.005,
+            warmup: 10,
+            total: cfg.steps,
+            power: 1.0,
+        },
+    };
+    let seq = cfg.seq;
+    let mut trainer = BertTrainer::new(&engine, &manifest, cfg)?;
+    let log = trainer.train(&[stage])?;
+
+    for r in log.records.iter().step_by(10) {
+        println!(
+            "step {:>3}  lr {:.5}  loss {:.4}  (simulated pod time {})",
+            r.step,
+            r.lr,
+            r.loss,
+            fmt_duration(r.sim_time)
+        );
+    }
+    let (dev_loss, dev_acc) = trainer.evaluate(seq, 8)?;
+    println!(
+        "final: train loss {:.4} -> dev loss {dev_loss:.4}, dev masked-acc {dev_acc:.4}",
+        log.tail_loss(10)
+    );
+    assert!(
+        log.tail_loss(10) < log.records[0].loss,
+        "loss must decrease"
+    );
+    println!("quickstart OK");
+    Ok(())
+}

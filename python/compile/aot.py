@@ -1,0 +1,271 @@
+"""AOT export: lower every (model, optimizer) graph to HLO text + manifest.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (behind
+the Rust ``xla`` crate) rejects; the text parser reassigns ids and
+round-trips cleanly. Lowering goes jit -> stablehlo -> XlaComputation ->
+``as_hlo_text`` with ``return_tuple=True`` (Rust unwraps the tuple).
+
+Artifacts (all parameters flat — see model.py):
+
+  {model}_s{S}_b{B}_grad.hlo.txt   (params, tokens, targets, mask)
+                                   -> (loss, grads)
+  {model}_s{S}_b{B}_eval.hlo.txt   (params, tokens, targets, mask)
+                                   -> (loss, acc)
+  {model}_opt_{opt}.hlo.txt        (params, grads, m, v, lr, step)
+                                   -> (params', m', v', ratios)
+  {model}_s{S}_b{B}_step_{opt}.hlo.txt
+                                   (params, m, v, tokens, targets, mask,
+                                    lr, step) -> (params', m', v', loss,
+                                    ratios)
+
+``manifest.json`` records model configs, the parameter segment table, and
+per-artifact I/O signatures; it is the single source of truth the Rust
+side parses.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import optim as O
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _sig(name, dtype, shape):
+    return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+
+def _batch_sigs(b, s):
+    return [
+        _sig("tokens", "i32", (b, s)),
+        _sig("targets", "i32", (b, s)),
+        _sig("mask", "f32", (b, s)),
+    ]
+
+
+def lower_grad(cfg: M.ModelConfig, seq: int, mb: int):
+    n = M.total_params(cfg)
+    spec = jax.ShapeDtypeStruct
+
+    def f(params, tokens, targets, mask):
+        return M.loss_and_grad(params, tokens, targets, mask, cfg)
+
+    lowered = jax.jit(f, keep_unused=True).lower(
+        spec((n,), jnp.float32), spec((mb, seq), jnp.int32),
+        spec((mb, seq), jnp.int32), spec((mb, seq), jnp.float32))
+    sig_in = [_sig("params", "f32", (n,))] + _batch_sigs(mb, seq)
+    sig_out = [_sig("loss", "f32", ()), _sig("grads", "f32", (n,))]
+    return lowered, sig_in, sig_out
+
+
+def lower_eval(cfg: M.ModelConfig, seq: int, mb: int):
+    n = M.total_params(cfg)
+    spec = jax.ShapeDtypeStruct
+
+    def f(params, tokens, targets, mask):
+        return M.mlm_loss(params, tokens, targets, mask, cfg)
+
+    lowered = jax.jit(f, keep_unused=True).lower(
+        spec((n,), jnp.float32), spec((mb, seq), jnp.int32),
+        spec((mb, seq), jnp.int32), spec((mb, seq), jnp.float32))
+    sig_in = [_sig("params", "f32", (n,))] + _batch_sigs(mb, seq)
+    sig_out = [_sig("loss", "f32", ()), _sig("acc", "f32", ())]
+    return lowered, sig_in, sig_out
+
+
+def lower_opt(cfg: M.ModelConfig, opt: str):
+    n = M.total_params(cfg)
+    specs = M.param_specs(cfg)
+    spec = jax.ShapeDtypeStruct
+    step_fn = O.STEP_FNS[opt]
+
+    def f(params, grads, m, v, lr, step):
+        return step_fn(params, grads, m, v, lr, step, specs)
+
+    vec = spec((n,), jnp.float32)
+    scl = spec((), jnp.float32)
+    lowered = jax.jit(f, keep_unused=True).lower(vec, vec, vec, vec, scl, scl)
+    sig_in = [_sig("params", "f32", (n,)), _sig("grads", "f32", (n,)),
+              _sig("m", "f32", (n,)), _sig("v", "f32", (n,)),
+              _sig("lr", "f32", ()), _sig("step", "f32", ())]
+    sig_out = [_sig("params", "f32", (n,)), _sig("m", "f32", (n,)),
+               _sig("v", "f32", (n,)),
+               _sig("ratios", "f32", (len(specs),))]
+    return lowered, sig_in, sig_out
+
+
+def lower_opt_ref(cfg: M.ModelConfig):
+    """Pure-jnp LAMB step (no Pallas) — the roofline reference the L1
+    kernel is benchmarked against (EXPERIMENTS.md §Perf)."""
+    n = M.total_params(cfg)
+    specs = M.param_specs(cfg)
+    spec = jax.ShapeDtypeStruct
+    from .kernels import ref as K_ref
+
+    def f(params, grads, m, v, lr, step):
+        new_p, new_m, new_v, ratios = [], [], [], []
+        for s in specs:
+            x = params[s.offset:s.offset + s.size]
+            g = grads[s.offset:s.offset + s.size]
+            mi = m[s.offset:s.offset + s.size]
+            vi = v[s.offset:s.offset + s.size]
+            wd = 0.01 if s.decay else 0.0
+            if s.adapt:
+                px, pm, pv, r = K_ref.lamb_update(
+                    x, g, mi, vi, lr, step, weight_decay=wd)
+            else:
+                px, pm, pv = K_ref.adamw_update(
+                    x, g, mi, vi, lr, step, weight_decay=wd)
+                r = jnp.asarray(1.0, jnp.float32)
+            new_p.append(px); new_m.append(pm); new_v.append(pv)
+            ratios.append(r)
+        return (jnp.concatenate(new_p), jnp.concatenate(new_m),
+                jnp.concatenate(new_v), jnp.stack(ratios))
+
+    vec = spec((n,), jnp.float32)
+    scl = spec((), jnp.float32)
+    lowered = jax.jit(f, keep_unused=True).lower(vec, vec, vec, vec, scl, scl)
+    sig_in = [_sig("params", "f32", (n,)), _sig("grads", "f32", (n,)),
+              _sig("m", "f32", (n,)), _sig("v", "f32", (n,)),
+              _sig("lr", "f32", ()), _sig("step", "f32", ())]
+    sig_out = [_sig("params", "f32", (n,)), _sig("m", "f32", (n,)),
+               _sig("v", "f32", (n,)),
+               _sig("ratios", "f32", (len(specs),))]
+    return lowered, sig_in, sig_out
+
+
+def lower_step(cfg: M.ModelConfig, seq: int, mb: int, opt: str):
+    """Fused grad+opt train step — the single-worker fast path: no
+    param/grad round-trip through the host between bwd and update."""
+    n = M.total_params(cfg)
+    specs = M.param_specs(cfg)
+    spec = jax.ShapeDtypeStruct
+    step_fn = O.STEP_FNS[opt]
+
+    def f(params, m, v, tokens, targets, mask, lr, step):
+        loss, grads = M.loss_and_grad(params, tokens, targets, mask, cfg)
+        p2, m2, v2, ratios = step_fn(params, grads, m, v, lr, step, specs)
+        return p2, m2, v2, loss, ratios
+
+    vec = spec((n,), jnp.float32)
+    scl = spec((), jnp.float32)
+    lowered = jax.jit(f, keep_unused=True).lower(
+        vec, vec, vec, spec((mb, seq), jnp.int32),
+        spec((mb, seq), jnp.int32), spec((mb, seq), jnp.float32), scl, scl)
+    sig_in = ([_sig("params", "f32", (n,)), _sig("m", "f32", (n,)),
+               _sig("v", "f32", (n,))] + _batch_sigs(mb, seq)
+              + [_sig("lr", "f32", ()), _sig("step", "f32", ())])
+    sig_out = [_sig("params", "f32", (n,)), _sig("m", "f32", (n,)),
+               _sig("v", "f32", (n,)), _sig("loss", "f32", ()),
+               _sig("ratios", "f32", (len(specs),))]
+    return lowered, sig_in, sig_out
+
+
+# Default export plan: (model, [(seq, micro_batch)], [optimizers],
+# [(seq, mb, opt) fused steps]).
+PLAN = [
+    ("bert-tiny", [(32, 8), (128, 8)],
+     ["lamb", "lars", "adam", "adamw", "adagrad", "momentum", "nlamb",
+      "nnlamb"],
+     [(32, 8, "lamb"), (128, 8, "lamb"), (128, 8, "adamw")]),
+    ("bert-small", [(128, 4), (512, 1)],
+     ["lamb", "lars", "adamw"],
+     [(128, 4, "lamb")]),
+]
+
+FULL_PLAN = PLAN + [
+    ("bert-medium", [(128, 2)], ["lamb"], [(128, 2, "lamb")]),
+    ("bert-base-sim", [(128, 1)], ["lamb"], [(128, 1, "lamb")]),
+]
+
+
+def export(out_dir: str, plan, force: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"models": {}, "artifacts": []}
+
+    def emit(fname, lower_fn, meta):
+        path = os.path.join(out_dir, fname)
+        t0 = time.time()
+        lowered, sig_in, sig_out = lower_fn()
+        if force or not os.path.exists(path):
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  wrote {fname} ({len(text)//1024} KiB, "
+                  f"{time.time()-t0:.1f}s)")
+        else:
+            print(f"  kept  {fname}")
+        manifest["artifacts"].append(
+            dict(file=fname, inputs=sig_in, outputs=sig_out, **meta))
+
+    for name, batches, opts, steps in plan:
+        cfg = M.CONFIGS[name]
+        specs = M.param_specs(cfg)
+        manifest["models"][name] = {
+            "config": dataclasses.asdict(cfg),
+            "total_params": M.total_params(cfg),
+            "params": [
+                {"name": s.name, "shape": list(s.shape), "init": s.init,
+                 "offset": s.offset, "size": s.size, "decay": s.decay,
+                 "adapt": s.adapt}
+                for s in specs],
+        }
+        print(f"model {name}: {M.total_params(cfg):,} params")
+        for seq, mb in batches:
+            emit(f"{name}_s{seq}_b{mb}_grad.hlo.txt",
+                 lambda: lower_grad(cfg, seq, mb),
+                 dict(kind="grad", model=name, seq=seq, micro_batch=mb))
+            emit(f"{name}_s{seq}_b{mb}_eval.hlo.txt",
+                 lambda: lower_eval(cfg, seq, mb),
+                 dict(kind="eval", model=name, seq=seq, micro_batch=mb))
+        for opt in opts:
+            emit(f"{name}_opt_{opt}.hlo.txt",
+                 lambda: lower_opt(cfg, opt),
+                 dict(kind="opt", model=name, optimizer=opt))
+        if "lamb" in opts:
+            # pure-jnp reference step for the §Perf kernel comparison
+            emit(f"{name}_opt_lamb_ref.hlo.txt",
+                 lambda: lower_opt_ref(cfg),
+                 dict(kind="opt", model=name, optimizer="lamb_ref"))
+        for seq, mb, opt in steps:
+            emit(f"{name}_s{seq}_b{mb}_step_{opt}.hlo.txt",
+                 lambda: lower_step(cfg, seq, mb, opt),
+                 dict(kind="step", model=name, seq=seq, micro_batch=mb,
+                      optimizer=opt))
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--full", action="store_true",
+                    help="also export bert-medium / bert-base-sim")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    export(args.out, FULL_PLAN if args.full else PLAN, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

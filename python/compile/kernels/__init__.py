@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels: the paper's compute hot-spot — fused layerwise
+optimizer updates (LAMB, LARS, Adam family) and the block-tiled norm
+reductions that feed the trust ratio.
+
+All kernels run under ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the interpret path is the correctness (and AOT
+export) target. The block/tile structure is still written as it would be
+for VMEM on a real TPU — see DESIGN.md §Hardware-Adaptation.
+"""
+
+from . import ref  # noqa: F401
+from .norms import l1_norm, l2_norm, linf_norm, norm  # noqa: F401
+from .lamb import lamb_update  # noqa: F401
+from .lars import lars_update  # noqa: F401
+from .adam import adagrad_update, adam_update, adamw_update, momentum_update  # noqa: F401

@@ -1,0 +1,148 @@
+"""Fused baseline optimizer updates (Adam, AdamW, Adagrad, momentum SGD).
+
+These are the comparison optimizers of the paper's Section 4 / Appendix H
+tuning studies. Each is a single elementwise Pallas pass — no trust ratio,
+so no norm phase. They share the flat-pad-block schedule of the LAMB
+kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import BLOCK, num_blocks, pad_flat, unpad
+
+
+def _adam_kernel(x_ref, g_ref, m_ref, v_ref, s_ref, x_out, m_out, v_out,
+                 *, beta1: float, beta2: float, eps: float,
+                 l2_reg: float, weight_decay: float):
+    x = x_ref[...]
+    g = g_ref[...] + l2_reg * x  # L2 regularization enters the gradient
+    m = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    lr = s_ref[0]
+    c1 = s_ref[1]
+    c2 = s_ref[2]
+    update = (c1 * m) / (jnp.sqrt(c2 * v) + eps)
+    # AdamW decoupled weight decay (Loshchilov & Hutter): applied on the
+    # parameter, scaled by lr, outside the moment estimates.
+    x_out[...] = x - lr * (update + weight_decay * x)
+    m_out[...] = m
+    v_out[...] = v
+
+
+def _adagrad_kernel(x_ref, g_ref, v_ref, s_ref, x_out, v_out,
+                    *, eps: float, l2_reg: float):
+    x = x_ref[...]
+    g = g_ref[...] + l2_reg * x
+    v = v_ref[...] + g * g
+    x_out[...] = x - s_ref[0] * g / (jnp.sqrt(v) + eps)
+    v_out[...] = v
+
+
+def _momentum_kernel(x_ref, g_ref, m_ref, s_ref, x_out, m_out,
+                     *, beta1: float, l2_reg: float):
+    x = x_ref[...]
+    g = g_ref[...] + l2_reg * x
+    m = beta1 * m_ref[...] + g
+    x_out[...] = x - s_ref[0] * m
+    m_out[...] = m
+
+
+def _run_elementwise(kernel, inputs, n_outputs: int, block: int, n: int):
+    nb = num_blocks(n, block)
+    big = pl.BlockSpec((block,), lambda i: (i,))
+    scal = pl.BlockSpec((4,), lambda i: (0,))
+    in_specs = [big] * (len(inputs) - 1) + [scal]
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=in_specs,
+        out_specs=[big] * n_outputs,
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * n_outputs,
+        interpret=True,
+    )(*inputs)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("beta1", "beta2", "eps", "l2_reg", "weight_decay",
+                     "bias_correction", "block"),
+)
+def adamw_update(
+    param, grad, m, v, lr, step, *,
+    beta1: float = 0.9, beta2: float = 0.999, eps: float = 1e-6,
+    l2_reg: float = 0.0, weight_decay: float = 0.01,
+    bias_correction: bool = True, block: int = BLOCK,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One AdamW step; returns ``(new_param, new_m, new_v)``."""
+    shape = param.shape
+    f32 = jnp.float32
+    x = pad_flat(param.astype(f32), block)
+    g = pad_flat(grad.astype(f32), block)
+    mf = pad_flat(m.astype(f32), block)
+    vf = pad_flat(v.astype(f32), block)
+    t = jnp.asarray(step, f32)
+    if bias_correction:
+        c1 = 1.0 / (1.0 - jnp.power(beta1, t))
+        c2 = 1.0 / (1.0 - jnp.power(beta2, t))
+    else:
+        c1 = jnp.asarray(1.0, f32)
+        c2 = jnp.asarray(1.0, f32)
+    s = jnp.stack([jnp.asarray(lr, f32), c1, c2, jnp.asarray(0.0, f32)])
+    kernel = functools.partial(
+        _adam_kernel, beta1=beta1, beta2=beta2, eps=eps, l2_reg=l2_reg,
+        weight_decay=weight_decay)
+    new_x, new_m, new_v = _run_elementwise(
+        kernel, (x, g, mf, vf, s), 3, block, x.shape[0])
+    dt = param.dtype
+    return (unpad(new_x, shape).astype(dt), unpad(new_m, shape).astype(dt),
+            unpad(new_v, shape).astype(dt))
+
+
+def adam_update(param, grad, m, v, lr, step, *, beta1=0.9, beta2=0.999,
+                eps=1e-6, l2_reg=0.0, bias_correction=True, block=BLOCK):
+    """Plain Adam = AdamW with decoupled decay 0 (L2 reg via ``l2_reg``)."""
+    return adamw_update(
+        param, grad, m, v, lr, step, beta1=beta1, beta2=beta2, eps=eps,
+        l2_reg=l2_reg, weight_decay=0.0, bias_correction=bias_correction,
+        block=block)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "l2_reg", "block"))
+def adagrad_update(param, grad, v, lr, *, eps: float = 1e-7,
+                   l2_reg: float = 0.0, block: int = BLOCK):
+    """One Adagrad step; returns ``(new_param, new_v)``."""
+    shape = param.shape
+    f32 = jnp.float32
+    x = pad_flat(param.astype(f32), block)
+    g = pad_flat(grad.astype(f32), block)
+    vf = pad_flat(v.astype(f32), block)
+    s = jnp.stack([jnp.asarray(lr, f32)] + [jnp.asarray(0.0, f32)] * 3)
+    kernel = functools.partial(_adagrad_kernel, eps=eps, l2_reg=l2_reg)
+    new_x, new_v = _run_elementwise(kernel, (x, g, vf, s), 2, block,
+                                    x.shape[0])
+    dt = param.dtype
+    return unpad(new_x, shape).astype(dt), unpad(new_v, shape).astype(dt)
+
+
+@functools.partial(jax.jit, static_argnames=("beta1", "l2_reg", "block"))
+def momentum_update(param, grad, m, lr, *, beta1: float = 0.9,
+                    l2_reg: float = 0.0, block: int = BLOCK):
+    """One heavy-ball momentum SGD step; returns ``(new_param, new_m)``."""
+    shape = param.shape
+    f32 = jnp.float32
+    x = pad_flat(param.astype(f32), block)
+    g = pad_flat(grad.astype(f32), block)
+    mf = pad_flat(m.astype(f32), block)
+    s = jnp.stack([jnp.asarray(lr, f32)] + [jnp.asarray(0.0, f32)] * 3)
+    kernel = functools.partial(_momentum_kernel, beta1=beta1, l2_reg=l2_reg)
+    new_x, new_m = _run_elementwise(kernel, (x, g, mf, s), 2, block,
+                                    x.shape[0])
+    dt = param.dtype
+    return unpad(new_x, shape).astype(dt), unpad(new_m, shape).astype(dt)

@@ -1,0 +1,173 @@
+"""Fused LAMB update (Algorithm 2 of the paper) as a two-phase Pallas kernel.
+
+Phase A (one grid pass over VMEM blocks) fuses, per element:
+
+    m' = b1*m + (1-b1)*g
+    v' = b2*v + (1-b2)*g^2
+    u  = (c1*m') / (sqrt(c2*v') + eps) + wd*x     # r_t + lambda*x_t
+
+and simultaneously emits per-block partials of ``sum(x^2)`` and ``sum(u^2)``
+so the two trust-ratio L2 norms cost no extra pass over HBM. ``c1``/``c2``
+are the Adam bias corrections ``1/(1-b^t)`` (1.0 when bias correction is
+disabled — paper Appendix E removes it in favour of warmup).
+
+The host-side (XLA) epilogue combines the partials into the trust ratio
+
+    ratio = phi(||x||) / ||u||     (1 where either norm vanishes)
+
+and phase B applies ``x' = x - lr*ratio*u`` in a second elementwise pass.
+
+For the Appendix-F norm ablation (l1 / linf) the fused partials cannot be
+used, so the norms fall back to the block-tiled reduction in
+:mod:`norms` — same structure, one extra pass.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import BLOCK, num_blocks, pad_flat, unpad
+from .norms import norm as pallas_norm
+
+
+def _phase_a_kernel(x_ref, g_ref, m_ref, v_ref, c_ref,
+                    m_out, v_out, u_out, xsq_out, usq_out,
+                    *, beta1: float, beta2: float, eps: float, wd: float):
+    x = x_ref[...]
+    g = g_ref[...]
+    m = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    c1 = c_ref[0]
+    c2 = c_ref[1]
+    u = (c1 * m) / (jnp.sqrt(c2 * v) + eps) + wd * x
+    m_out[...] = m
+    v_out[...] = v
+    u_out[...] = u
+    xsq_out[0] = jnp.sum(x * x)
+    usq_out[0] = jnp.sum(u * u)
+
+
+def _phase_b_kernel(x_ref, u_ref, s_ref, o_ref):
+    # s = lr * trust_ratio, combined on the host side.
+    o_ref[...] = x_ref[...] - s_ref[0] * u_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("beta1", "beta2", "eps", "weight_decay",
+                     "bias_correction", "phi_lo", "phi_hi", "norm_kind",
+                     "block"),
+)
+def lamb_update(
+    param: jnp.ndarray,
+    grad: jnp.ndarray,
+    m: jnp.ndarray,
+    v: jnp.ndarray,
+    lr,
+    step,
+    *,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-6,
+    weight_decay: float = 0.01,
+    bias_correction: bool = True,
+    phi_lo: Optional[float] = None,
+    phi_hi: Optional[float] = None,
+    norm_kind: str = "l2",
+    block: int = BLOCK,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One LAMB step for a single layer.
+
+    Returns ``(new_param, new_m, new_v, trust_ratio)`` with shapes/dtypes of
+    the inputs preserved (``trust_ratio`` is a f32 scalar — the quantity
+    plotted in the paper's Figures 9-14).
+    """
+    shape = param.shape
+    f32 = jnp.float32
+    x = pad_flat(param.astype(f32), block)
+    g = pad_flat(grad.astype(f32), block)
+    mf = pad_flat(m.astype(f32), block)
+    vf = pad_flat(v.astype(f32), block)
+    n = x.shape[0]
+    nb = num_blocks(n, block)
+
+    t = jnp.asarray(step, f32)
+    if bias_correction:
+        c1 = 1.0 / (1.0 - jnp.power(beta1, t))
+        c2 = 1.0 / (1.0 - jnp.power(beta2, t))
+    else:
+        c1 = jnp.asarray(1.0, f32)
+        c2 = jnp.asarray(1.0, f32)
+    c = jnp.stack([c1, c2]).astype(f32)
+
+    kernel = functools.partial(
+        _phase_a_kernel, beta1=beta1, beta2=beta2, eps=eps,
+        wd=weight_decay,
+    )
+    new_m, new_v, u, xsq, usq = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), f32),
+            jax.ShapeDtypeStruct((n,), f32),
+            jax.ShapeDtypeStruct((n,), f32),
+            jax.ShapeDtypeStruct((nb,), f32),
+            jax.ShapeDtypeStruct((nb,), f32),
+        ],
+        interpret=True,
+    )(x, g, mf, vf, c)
+
+    if norm_kind == "l2":
+        w_norm = jnp.sqrt(jnp.sum(xsq))
+        u_norm = jnp.sqrt(jnp.sum(usq))
+    else:
+        w_norm = pallas_norm(unpad(x, shape), norm_kind, block)
+        u_norm = pallas_norm(unpad(u, shape), norm_kind, block)
+
+    phi = w_norm
+    if phi_lo is not None or phi_hi is not None:
+        lo = 0.0 if phi_lo is None else phi_lo
+        hi = jnp.inf if phi_hi is None else phi_hi
+        phi = jnp.clip(phi, lo, hi)
+    ratio = jnp.where((phi > 0.0) & (u_norm > 0.0), phi / u_norm, 1.0)
+
+    s = (jnp.asarray(lr, f32) * ratio).reshape(1)
+    new_x = pl.pallas_call(
+        _phase_b_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), f32),
+        interpret=True,
+    )(x, u, s)
+
+    dt = param.dtype
+    return (
+        unpad(new_x, shape).astype(dt),
+        unpad(new_m, shape).astype(dt),
+        unpad(new_v, shape).astype(dt),
+        ratio,
+    )

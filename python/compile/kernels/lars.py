@@ -1,0 +1,118 @@
+"""Fused LARS update (Algorithm 1 of the paper) as a two-phase Pallas kernel.
+
+Phase A fuses the heavy-ball momentum update over the weight-decayed
+gradient and emits the trust-ratio L2 partials; phase B applies the scaled
+step. Structure mirrors :mod:`lamb` (see that module's docstring for the
+VMEM schedule).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import BLOCK, num_blocks, pad_flat, unpad
+from .lamb import _phase_b_kernel
+from .norms import norm as pallas_norm
+
+
+def _phase_a_kernel(x_ref, g_ref, m_ref, m_out, xsq_out, msq_out,
+                    *, beta1: float, wd: float):
+    x = x_ref[...]
+    g = g_ref[...]
+    m = beta1 * m_ref[...] + (1.0 - beta1) * (g + wd * x)
+    m_out[...] = m
+    xsq_out[0] = jnp.sum(x * x)
+    msq_out[0] = jnp.sum(m * m)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("beta1", "weight_decay", "phi_lo", "phi_hi",
+                     "norm_kind", "block"),
+)
+def lars_update(
+    param: jnp.ndarray,
+    grad: jnp.ndarray,
+    m: jnp.ndarray,
+    lr,
+    *,
+    beta1: float = 0.9,
+    weight_decay: float = 0.01,
+    phi_lo: Optional[float] = None,
+    phi_hi: Optional[float] = None,
+    norm_kind: str = "l2",
+    block: int = BLOCK,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One LARS step for a single layer.
+
+    Returns ``(new_param, new_m, trust_ratio)``.
+    """
+    shape = param.shape
+    f32 = jnp.float32
+    x = pad_flat(param.astype(f32), block)
+    g = pad_flat(grad.astype(f32), block)
+    mf = pad_flat(m.astype(f32), block)
+    n = x.shape[0]
+    nb = num_blocks(n, block)
+
+    kernel = functools.partial(_phase_a_kernel, beta1=beta1, wd=weight_decay)
+    new_m, xsq, msq = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), f32),
+            jax.ShapeDtypeStruct((nb,), f32),
+            jax.ShapeDtypeStruct((nb,), f32),
+        ],
+        interpret=True,
+    )(x, g, mf)
+
+    if norm_kind == "l2":
+        w_norm = jnp.sqrt(jnp.sum(xsq))
+        m_norm = jnp.sqrt(jnp.sum(msq))
+    else:
+        w_norm = pallas_norm(unpad(x, shape), norm_kind, block)
+        m_norm = pallas_norm(unpad(new_m, shape), norm_kind, block)
+
+    phi = w_norm
+    if phi_lo is not None or phi_hi is not None:
+        lo = 0.0 if phi_lo is None else phi_lo
+        hi = jnp.inf if phi_hi is None else phi_hi
+        phi = jnp.clip(phi, lo, hi)
+    ratio = jnp.where((phi > 0.0) & (m_norm > 0.0), phi / m_norm, 1.0)
+
+    s = (jnp.asarray(lr, f32) * ratio).reshape(1)
+    new_x = pl.pallas_call(
+        _phase_b_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), f32),
+        interpret=True,
+    )(x, new_m, s)
+
+    dt = param.dtype
+    return (
+        unpad(new_x, shape).astype(dt),
+        unpad(new_m, shape).astype(dt),
+        ratio,
+    )

@@ -1,0 +1,72 @@
+"""Block-tiled norm reductions.
+
+The LAMB/LARS trust ratio needs two full-layer norms per layer per step
+(``phi(||x||)`` and ``||u||``). On TPU the natural schedule is a two-level
+reduction: each grid step reduces one VMEM block to a scalar partial in the
+output vector, and the h partials are combined by a trivially small final
+reduce. That is exactly the structure here; under ``interpret=True`` the
+same HLO runs on CPU.
+
+Supported norms (paper Appendix F ablates these): ``l2`` (default), ``l1``,
+``linf``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import BLOCK, num_blocks, pad_flat
+
+
+def _partial_kernel(x_ref, o_ref, *, kind: str):
+    x = x_ref[...]
+    if kind == "l2":
+        o_ref[0] = jnp.sum(x * x)
+    elif kind == "l1":
+        o_ref[0] = jnp.sum(jnp.abs(x))
+    elif kind == "linf":
+        o_ref[0] = jnp.max(jnp.abs(x))
+    else:  # pragma: no cover - guarded by `norm`
+        raise ValueError(kind)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "block"))
+def _norm_impl(x: jnp.ndarray, kind: str, block: int) -> jnp.ndarray:
+    flat = pad_flat(x.astype(jnp.float32), block)
+    nb = num_blocks(flat.shape[0], block)
+    partials = pl.pallas_call(
+        functools.partial(_partial_kernel, kind=kind),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb,), jnp.float32),
+        interpret=True,
+    )(flat)
+    if kind == "l2":
+        return jnp.sqrt(jnp.sum(partials))
+    if kind == "l1":
+        return jnp.sum(partials)
+    return jnp.max(partials)
+
+
+def norm(x: jnp.ndarray, kind: str = "l2", block: int = BLOCK) -> jnp.ndarray:
+    """Full-tensor norm of ``x`` via the block-tiled Pallas reduction."""
+    if kind not in ("l2", "l1", "linf"):
+        raise ValueError(f"unsupported norm kind: {kind!r}")
+    return _norm_impl(x, kind, block)
+
+
+def l2_norm(x: jnp.ndarray, block: int = BLOCK) -> jnp.ndarray:
+    return norm(x, "l2", block)
+
+
+def l1_norm(x: jnp.ndarray, block: int = BLOCK) -> jnp.ndarray:
+    return norm(x, "l1", block)
+
+
+def linf_norm(x: jnp.ndarray, block: int = BLOCK) -> jnp.ndarray:
+    return norm(x, "linf", block)

@@ -1,0 +1,139 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These are straight transcriptions of the paper's Algorithms 1 and 2 (and
+the Appendix D Nesterov variants) with no tiling, padding, or fusion —
+the ground truth the kernels are asserted against by
+``python/tests/test_kernels.py``, and the reference implementations the
+Rust-native optimizers in ``rust/src/optim/`` mirror.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def norm(x, kind: str = "l2"):
+    x = x.astype(jnp.float32)
+    if kind == "l2":
+        return jnp.sqrt(jnp.sum(x * x))
+    if kind == "l1":
+        return jnp.sum(jnp.abs(x))
+    if kind == "linf":
+        return jnp.max(jnp.abs(x))
+    raise ValueError(kind)
+
+
+def _phi(w_norm, phi_lo, phi_hi):
+    if phi_lo is None and phi_hi is None:
+        return w_norm
+    lo = 0.0 if phi_lo is None else phi_lo
+    hi = jnp.inf if phi_hi is None else phi_hi
+    return jnp.clip(w_norm, lo, hi)
+
+
+def trust_ratio(w_norm, u_norm, phi_lo=None, phi_hi=None):
+    phi = _phi(w_norm, phi_lo, phi_hi)
+    return jnp.where((phi > 0.0) & (u_norm > 0.0), phi / u_norm, 1.0)
+
+
+def lamb_update(param, grad, m, v, lr, step, *, beta1=0.9, beta2=0.999,
+                eps=1e-6, weight_decay=0.01, bias_correction=True,
+                phi_lo=None, phi_hi=None, norm_kind="l2"):
+    f32 = jnp.float32
+    x, g = param.astype(f32), grad.astype(f32)
+    m = beta1 * m.astype(f32) + (1.0 - beta1) * g
+    v = beta2 * v.astype(f32) + (1.0 - beta2) * g * g
+    t = jnp.asarray(step, f32)
+    m_hat = m / (1.0 - beta1 ** t) if bias_correction else m
+    v_hat = v / (1.0 - beta2 ** t) if bias_correction else v
+    u = m_hat / (jnp.sqrt(v_hat) + eps) + weight_decay * x
+    ratio = trust_ratio(norm(x, norm_kind), norm(u, norm_kind),
+                        phi_lo, phi_hi)
+    new_x = x - jnp.asarray(lr, f32) * ratio * u
+    dt = param.dtype
+    return new_x.astype(dt), m.astype(dt), v.astype(dt), ratio
+
+
+def lars_update(param, grad, m, lr, *, beta1=0.9, weight_decay=0.01,
+                phi_lo=None, phi_hi=None, norm_kind="l2"):
+    f32 = jnp.float32
+    x, g = param.astype(f32), grad.astype(f32)
+    m = beta1 * m.astype(f32) + (1.0 - beta1) * (g + weight_decay * x)
+    ratio = trust_ratio(norm(x, norm_kind), norm(m, norm_kind),
+                        phi_lo, phi_hi)
+    new_x = x - jnp.asarray(lr, f32) * ratio * m
+    dt = param.dtype
+    return new_x.astype(dt), m.astype(dt), ratio
+
+
+def adamw_update(param, grad, m, v, lr, step, *, beta1=0.9, beta2=0.999,
+                 eps=1e-6, l2_reg=0.0, weight_decay=0.01,
+                 bias_correction=True):
+    f32 = jnp.float32
+    x = param.astype(f32)
+    g = grad.astype(f32) + l2_reg * x
+    m = beta1 * m.astype(f32) + (1.0 - beta1) * g
+    v = beta2 * v.astype(f32) + (1.0 - beta2) * g * g
+    t = jnp.asarray(step, f32)
+    m_hat = m / (1.0 - beta1 ** t) if bias_correction else m
+    v_hat = v / (1.0 - beta2 ** t) if bias_correction else v
+    update = m_hat / (jnp.sqrt(v_hat) + eps)
+    new_x = x - jnp.asarray(lr, f32) * (update + weight_decay * x)
+    dt = param.dtype
+    return new_x.astype(dt), m.astype(dt), v.astype(dt)
+
+
+def adam_update(param, grad, m, v, lr, step, *, beta1=0.9, beta2=0.999,
+                eps=1e-6, l2_reg=0.0, bias_correction=True):
+    return adamw_update(param, grad, m, v, lr, step, beta1=beta1,
+                        beta2=beta2, eps=eps, l2_reg=l2_reg,
+                        weight_decay=0.0, bias_correction=bias_correction)
+
+
+def adagrad_update(param, grad, v, lr, *, eps=1e-7, l2_reg=0.0):
+    f32 = jnp.float32
+    x = param.astype(f32)
+    g = grad.astype(f32) + l2_reg * x
+    v = v.astype(f32) + g * g
+    new_x = x - jnp.asarray(lr, f32) * g / (jnp.sqrt(v) + eps)
+    dt = param.dtype
+    return new_x.astype(dt), v.astype(dt)
+
+
+def momentum_update(param, grad, m, lr, *, beta1=0.9, l2_reg=0.0):
+    f32 = jnp.float32
+    x = param.astype(f32)
+    g = grad.astype(f32) + l2_reg * x
+    m = beta1 * m.astype(f32) + g
+    new_x = x - jnp.asarray(lr, f32) * m
+    dt = param.dtype
+    return new_x.astype(dt), m.astype(dt)
+
+
+def nlamb_update(param, grad, m, v, lr, step, *, beta1=0.9, beta2=0.999,
+                 eps=1e-6, weight_decay=0.01, phi_lo=None, phi_hi=None,
+                 norm_kind="l2", nesterov_v=False):
+    """N-LAMB (Algorithm 3) and, with ``nesterov_v=True``, NN-LAMB (Alg 4).
+
+    Nesterov momentum applied to the first (and optionally second) moment,
+    following Dozat (2016)'s Nadam construction with a constant beta
+    schedule (so the Algorithm-3 beta products collapse to powers).
+    """
+    f32 = jnp.float32
+    x, g = param.astype(f32), grad.astype(f32)
+    t = jnp.asarray(step, f32)
+    m = beta1 * m.astype(f32) + (1.0 - beta1) * g
+    m_hat = (beta1 * m / (1.0 - beta1 ** (t + 1.0))
+             + (1.0 - beta1) * g / (1.0 - beta1 ** t))
+    v = beta2 * v.astype(f32) + (1.0 - beta2) * g * g
+    if nesterov_v:
+        v_hat = (beta2 * v / (1.0 - beta2 ** (t + 1.0))
+                 + (1.0 - beta2) * g * g / (1.0 - beta2 ** t))
+    else:
+        v_hat = beta2 * v / (1.0 - beta2 ** t)
+    u = m_hat / (jnp.sqrt(v_hat) + eps) + weight_decay * x
+    ratio = trust_ratio(norm(x, norm_kind), norm(u, norm_kind),
+                        phi_lo, phi_hi)
+    new_x = x - jnp.asarray(lr, f32) * ratio * u
+    dt = param.dtype
+    return new_x.astype(dt), m.astype(dt), v.astype(dt), ratio

@@ -1,0 +1,215 @@
+"""Layer-2 model definitions: a BERT-style masked-LM transformer in pure
+jnp, parameterized over a flat f32 vector.
+
+Flat layout: every artifact (grad / opt / eval / fused train-step) takes the
+parameters as ONE flat f32 vector; the static segment table (name, offset,
+length, shape, init) is emitted into ``artifacts/manifest.json`` so the Rust
+coordinator owns allocation/initialization and the ring all-reduce operates
+on a single contiguous gradient buffer. Unflattening is static slicing —
+free in XLA.
+
+The positional embedding is always sized ``max_seq`` (512) and sliced to the
+artifact's sequence length, so the seq-128 and seq-512 artifacts of the
+paper's two-stage BERT training share one parameter vector.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+MAX_SEQ = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """A BERT-family configuration (paper: BERT-Large; here scaled)."""
+
+    name: str
+    vocab: int
+    hidden: int
+    layers: int
+    heads: int
+    ff: int
+    max_seq: int = MAX_SEQ
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+
+# The configs exported by aot.py. ``bert-base-sim`` approximates the paper's
+# BERT in structure at ~100M params; the smaller two keep every experiment
+# re-runnable on CPU in minutes.
+CONFIGS = {
+    "bert-tiny": ModelConfig("bert-tiny", vocab=1024, hidden=64, layers=2,
+                             heads=2, ff=256),
+    "bert-small": ModelConfig("bert-small", vocab=8192, hidden=256,
+                              layers=4, heads=4, ff=1024),
+    "bert-medium": ModelConfig("bert-medium", vocab=8192, hidden=512,
+                               layers=8, heads=8, ff=2048),
+    "bert-base-sim": ModelConfig("bert-base-sim", vocab=16384, hidden=768,
+                                 layers=12, heads=12, ff=3072),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    init: str  # "normal:<std>" | "zeros" | "ones"
+    offset: int
+    size: int
+    # Following the released LAMB implementation: biases and layer-norm
+    # parameters are excluded from weight decay and from layerwise
+    # adaptation (their trust ratio is pinned to 1).
+    decay: bool = True
+    adapt: bool = True
+
+
+def _is_matrix_like(name: str) -> bool:
+    last = name.split("/")[-1]
+    return not (last.endswith("_b") or last.startswith("b")
+                or "bias" in last or "scale" in last)
+
+
+def param_specs(cfg: ModelConfig) -> List[ParamSpec]:
+    """Canonical parameter order. The MLM output projection is tied to the
+    token embedding (as in BERT); only an output bias is added."""
+    specs: List[Tuple[str, Tuple[int, ...], str]] = []
+    std = f"normal:0.02"
+
+    specs.append(("embed/token", (cfg.vocab, cfg.hidden), std))
+    specs.append(("embed/pos", (cfg.max_seq, cfg.hidden), std))
+    specs.append(("embed/ln_scale", (cfg.hidden,), "ones"))
+    specs.append(("embed/ln_bias", (cfg.hidden,), "zeros"))
+    for i in range(cfg.layers):
+        p = f"layer_{i}"
+        h, f = cfg.hidden, cfg.ff
+        specs += [
+            (f"{p}/attn/q_w", (h, h), std), (f"{p}/attn/q_b", (h,), "zeros"),
+            (f"{p}/attn/k_w", (h, h), std), (f"{p}/attn/k_b", (h,), "zeros"),
+            (f"{p}/attn/v_w", (h, h), std), (f"{p}/attn/v_b", (h,), "zeros"),
+            (f"{p}/attn/o_w", (h, h), std), (f"{p}/attn/o_b", (h,), "zeros"),
+            (f"{p}/ln1_scale", (h,), "ones"), (f"{p}/ln1_bias", (h,), "zeros"),
+            (f"{p}/ff/w1", (h, f), std), (f"{p}/ff/b1", (f,), "zeros"),
+            (f"{p}/ff/w2", (f, h), std), (f"{p}/ff/b2", (h,), "zeros"),
+            (f"{p}/ln2_scale", (h,), "ones"), (f"{p}/ln2_bias", (h,), "zeros"),
+        ]
+    specs.append(("mlm/out_bias", (cfg.vocab,), "zeros"))
+
+    out: List[ParamSpec] = []
+    off = 0
+    for name, shape, init in specs:
+        size = 1
+        for d in shape:
+            size *= d
+        mat = _is_matrix_like(name)
+        out.append(ParamSpec(name, shape, init, off, size,
+                             decay=mat, adapt=mat))
+        off += size
+    return out
+
+
+def total_params(cfg: ModelConfig) -> int:
+    s = param_specs(cfg)
+    return s[-1].offset + s[-1].size
+
+
+def unflatten(flat: jnp.ndarray, specs: List[ParamSpec]) -> Dict[str, jnp.ndarray]:
+    return {s.name: jax.lax.slice(flat, (s.offset,), (s.offset + s.size,))
+            .reshape(s.shape) for s in specs}
+
+
+def flatten(params: Dict[str, jnp.ndarray], specs: List[ParamSpec]) -> jnp.ndarray:
+    return jnp.concatenate([params[s.name].reshape(-1) for s in specs])
+
+
+def init_params(cfg: ModelConfig, key) -> jnp.ndarray:
+    """Reference initializer (tests only — Rust owns init at runtime)."""
+    specs = param_specs(cfg)
+    chunks = []
+    for s in specs:
+        key, sub = jax.random.split(key)
+        if s.init.startswith("normal:"):
+            std = float(s.init.split(":")[1])
+            chunks.append(std * jax.random.normal(sub, (s.size,), jnp.float32))
+        elif s.init == "ones":
+            chunks.append(jnp.ones((s.size,), jnp.float32))
+        else:
+            chunks.append(jnp.zeros((s.size,), jnp.float32))
+    return jnp.concatenate(chunks)
+
+
+def _layer_norm(x, scale, bias, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _attention(p, prefix, x, cfg: ModelConfig):
+    b, s, h = x.shape
+    nh, hd = cfg.heads, cfg.head_dim
+
+    def proj(kind):
+        w = p[f"{prefix}/attn/{kind}_w"]
+        bias = p[f"{prefix}/attn/{kind}_b"]
+        return (x @ w + bias).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = proj("q"), proj("k"), proj("v")
+    scores = jnp.einsum("bnqd,bnkd->bnqk", q, k) / jnp.sqrt(float(hd))
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bnqk,bnkd->bnqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, h)
+    return ctx @ p[f"{prefix}/attn/o_w"] + p[f"{prefix}/attn/o_b"]
+
+
+def forward(flat: jnp.ndarray, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Logits [B, S, V] for int32 ``tokens`` [B, S] (post-LN residual blocks,
+    gelu FFN — the Devlin et al. architecture)."""
+    specs = param_specs(cfg)
+    p = unflatten(flat, specs)
+    b, s = tokens.shape
+    x = p["embed/token"][tokens] + p["embed/pos"][:s][None, :, :]
+    x = _layer_norm(x, p["embed/ln_scale"], p["embed/ln_bias"])
+    for i in range(cfg.layers):
+        pre = f"layer_{i}"
+        x = _layer_norm(x + _attention(p, pre, x, cfg),
+                        p[f"{pre}/ln1_scale"], p[f"{pre}/ln1_bias"])
+        hdn = jax.nn.gelu(x @ p[f"{pre}/ff/w1"] + p[f"{pre}/ff/b1"])
+        x = _layer_norm(x + hdn @ p[f"{pre}/ff/w2"] + p[f"{pre}/ff/b2"],
+                        p[f"{pre}/ln2_scale"], p[f"{pre}/ln2_bias"])
+    logits = x @ p["embed/token"].T + p["mlm/out_bias"]
+    return logits
+
+
+def mlm_loss(flat, tokens, targets, mask, cfg: ModelConfig):
+    """Masked-LM cross entropy.
+
+    ``tokens``: input ids with masked positions replaced; ``targets``:
+    original ids; ``mask``: f32 [B, S], 1.0 at predicted positions.
+    Returns (loss, accuracy) where accuracy is the dev metric standing in
+    for the paper's SQuAD F1 (see DESIGN.md).
+    """
+    logits = forward(flat, tokens, cfg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt_logit = jnp.take_along_axis(
+        logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - tgt_logit
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    pred = jnp.argmax(logits, axis=-1)
+    acc = jnp.sum((pred == targets).astype(jnp.float32) * mask) / denom
+    return loss, acc
+
+
+def loss_and_grad(flat, tokens, targets, mask, cfg: ModelConfig):
+    """(loss, grad_flat) — the gradient artifact body."""
+    def f(p):
+        loss, _ = mlm_loss(p, tokens, targets, mask, cfg)
+        return loss
+    return jax.value_and_grad(f)(flat)

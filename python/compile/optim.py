@@ -1,0 +1,201 @@
+"""Layer-2 optimizer step graphs over the flat parameter vector.
+
+Each ``*_step`` function consumes/produces flat f32 state vectors and loops
+(statically, at trace time) over the manifest's layer segments, invoking
+the L1 Pallas kernels per layer. Lowered by aot.py these become the
+``opt_*`` artifacts the Rust coordinator executes after the all-reduce.
+
+Per the released LAMB/LARS implementations, parameters whose ``ParamSpec``
+has ``adapt=False`` (biases, layer-norm) get trust ratio 1 and no weight
+decay; this flag also controls ``l2_reg``/decay for the baselines.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax.numpy as jnp
+
+from . import model as M
+from .kernels import adam as K_adam
+from .kernels import lamb as K_lamb
+from .kernels import lars as K_lars
+from .kernels import ref as K_ref
+from .kernels.common import BLOCK
+
+# Every optimizer the paper evaluates. Values: number of moment slots.
+OPTIMIZERS = {
+    "lamb": 2, "lars": 1, "adam": 2, "adamw": 2, "adagrad": 1,
+    "momentum": 1, "nlamb": 2, "nnlamb": 2,
+}
+
+
+def auto_block(n: int) -> int:
+    """Largest power-of-two block <= BLOCK covering ``n`` without gross
+    padding waste (min 256 to keep full VPU lanes)."""
+    b = 256
+    while b < n and b < BLOCK:
+        b *= 2
+    return b
+
+
+def _segments(flat: jnp.ndarray, specs: List[M.ParamSpec]):
+    for s in specs:
+        yield s, flat[s.offset:s.offset + s.size]
+
+
+def _concat(chunks: List[jnp.ndarray]) -> jnp.ndarray:
+    return jnp.concatenate(chunks)
+
+
+def lamb_step(params, grads, m, v, lr, step, specs, *,
+              beta1=0.9, beta2=0.999, eps=1e-6, weight_decay=0.01,
+              bias_correction=True, norm_kind="l2",
+              phi_lo=None, phi_hi=None):
+    """One LAMB step (Algorithm 2). Returns (params', m', v', ratios[P])."""
+    new_p, new_m, new_v, ratios = [], [], [], []
+    for s, x in _segments(params, specs):
+        g = grads[s.offset:s.offset + s.size]
+        mi = m[s.offset:s.offset + s.size]
+        vi = v[s.offset:s.offset + s.size]
+        wd = weight_decay if s.decay else 0.0
+        blk = auto_block(s.size)
+        if s.adapt:
+            px, pm, pv, r = K_lamb.lamb_update(
+                x, g, mi, vi, lr, step, beta1=beta1, beta2=beta2, eps=eps,
+                weight_decay=wd, bias_correction=bias_correction,
+                norm_kind=norm_kind, phi_lo=phi_lo, phi_hi=phi_hi, block=blk)
+        else:
+            # adapt=False: trust ratio pinned to 1 == AdamW-style update.
+            px, pm, pv = K_adam.adamw_update(
+                x, g, mi, vi, lr, step, beta1=beta1, beta2=beta2, eps=eps,
+                weight_decay=wd, bias_correction=bias_correction, block=blk)
+            r = jnp.asarray(1.0, jnp.float32)
+        new_p.append(px); new_m.append(pm); new_v.append(pv)
+        ratios.append(r)
+    return _concat(new_p), _concat(new_m), _concat(new_v), jnp.stack(ratios)
+
+
+def lars_step(params, grads, m, v, lr, step, specs, *,
+              beta1=0.9, weight_decay=0.01, norm_kind="l2",
+              phi_lo=None, phi_hi=None):
+    """One LARS step (Algorithm 1). ``v``/``step`` ignored (kept for a
+    uniform artifact signature)."""
+    new_p, new_m, ratios = [], [], []
+    for s, x in _segments(params, specs):
+        g = grads[s.offset:s.offset + s.size]
+        mi = m[s.offset:s.offset + s.size]
+        wd = weight_decay if s.decay else 0.0
+        blk = auto_block(s.size)
+        if s.adapt:
+            px, pm, r = K_lars.lars_update(
+                x, g, mi, lr, beta1=beta1, weight_decay=wd,
+                norm_kind=norm_kind, phi_lo=phi_lo, phi_hi=phi_hi, block=blk)
+        else:
+            # Same EMA momentum update with the trust ratio pinned to 1
+            # (mirrors rust/src/optim/lars.rs for non-adapted segments).
+            pm = beta1 * mi + (1.0 - beta1) * (g + wd * x)
+            px = x - lr * pm
+            r = jnp.asarray(1.0, jnp.float32)
+        new_p.append(px); new_m.append(pm); ratios.append(r)
+    return _concat(new_p), _concat(new_m), v, jnp.stack(ratios)
+
+
+def _elementwise_step(kind, params, grads, m, v, lr, step, specs, *,
+                      beta1=0.9, beta2=0.999, eps=1e-6, l2_reg=0.0,
+                      weight_decay=0.01, bias_correction=True):
+    new_p, new_m, new_v = [], [], []
+    for s, x in _segments(params, specs):
+        g = grads[s.offset:s.offset + s.size]
+        mi = m[s.offset:s.offset + s.size]
+        vi = v[s.offset:s.offset + s.size]
+        wd = weight_decay if s.decay else 0.0
+        l2 = l2_reg if s.decay else 0.0
+        blk = auto_block(s.size)
+        if kind == "adamw":
+            px, pm, pv = K_adam.adamw_update(
+                x, g, mi, vi, lr, step, beta1=beta1, beta2=beta2, eps=eps,
+                l2_reg=l2, weight_decay=wd,
+                bias_correction=bias_correction, block=blk)
+        elif kind == "adam":
+            px, pm, pv = K_adam.adam_update(
+                x, g, mi, vi, lr, step, beta1=beta1, beta2=beta2, eps=eps,
+                l2_reg=l2, bias_correction=bias_correction, block=blk)
+        elif kind == "adagrad":
+            px, pv = K_adam.adagrad_update(x, g, vi, lr, l2_reg=l2,
+                                           block=blk)
+            pm = mi
+        elif kind == "momentum":
+            px, pm = K_adam.momentum_update(x, g, mi, lr, beta1=beta1,
+                                            l2_reg=l2, block=blk)
+            pv = vi
+        else:  # pragma: no cover
+            raise ValueError(kind)
+        new_p.append(px); new_m.append(pm); new_v.append(pv)
+    ratios = jnp.ones((len(specs),), jnp.float32)
+    return _concat(new_p), _concat(new_m), _concat(new_v), ratios
+
+
+def adamw_step(params, grads, m, v, lr, step, specs, **kw):
+    return _elementwise_step("adamw", params, grads, m, v, lr, step, specs,
+                             **kw)
+
+
+def adam_step(params, grads, m, v, lr, step, specs, **kw):
+    return _elementwise_step("adam", params, grads, m, v, lr, step, specs,
+                             **kw)
+
+
+def adagrad_step(params, grads, m, v, lr, step, specs, **kw):
+    return _elementwise_step("adagrad", params, grads, m, v, lr, step,
+                             specs, **kw)
+
+
+def momentum_step(params, grads, m, v, lr, step, specs, **kw):
+    return _elementwise_step("momentum", params, grads, m, v, lr, step,
+                             specs, **kw)
+
+
+def _nesterov_step(params, grads, m, v, lr, step, specs, *, nesterov_v,
+                   beta1=0.9, beta2=0.999, eps=1e-6, weight_decay=0.01,
+                   norm_kind="l2"):
+    """N-LAMB / NN-LAMB (Appendix D). The Nesterov bias-correction scalars
+    differ per step from Adam's, so these reuse the jnp oracle per segment
+    (the elementwise body is identical work; the Pallas fusion story is the
+    same as LAMB's and left to the kernels there)."""
+    new_p, new_m, new_v, ratios = [], [], [], []
+    for s, x in _segments(params, specs):
+        g = grads[s.offset:s.offset + s.size]
+        mi = m[s.offset:s.offset + s.size]
+        vi = v[s.offset:s.offset + s.size]
+        wd = weight_decay if s.decay else 0.0
+        if s.adapt:
+            px, pm, pv, r = K_ref.nlamb_update(
+                x, g, mi, vi, lr, step, beta1=beta1, beta2=beta2, eps=eps,
+                weight_decay=wd, norm_kind=norm_kind,
+                nesterov_v=nesterov_v)
+        else:
+            px, pm, pv = K_ref.adamw_update(
+                x, g, mi, vi, lr, step, beta1=beta1, beta2=beta2, eps=eps,
+                weight_decay=wd)
+            r = jnp.asarray(1.0, jnp.float32)
+        new_p.append(px); new_m.append(pm); new_v.append(pv)
+        ratios.append(r)
+    return _concat(new_p), _concat(new_m), _concat(new_v), jnp.stack(ratios)
+
+
+def nlamb_step(params, grads, m, v, lr, step, specs, **kw):
+    return _nesterov_step(params, grads, m, v, lr, step, specs,
+                          nesterov_v=False, **kw)
+
+
+def nnlamb_step(params, grads, m, v, lr, step, specs, **kw):
+    return _nesterov_step(params, grads, m, v, lr, step, specs,
+                          nesterov_v=True, **kw)
+
+
+STEP_FNS = {
+    "lamb": lamb_step, "lars": lars_step, "adam": adam_step,
+    "adamw": adamw_step, "adagrad": adagrad_step,
+    "momentum": momentum_step, "nlamb": nlamb_step, "nnlamb": nnlamb_step,
+}

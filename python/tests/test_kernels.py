@@ -1,0 +1,246 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (including non-block-multiple and multi-block
+sizes) and hyperparameters; every kernel must match ``ref.py`` to f32
+tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adam, lamb, lars, norms, ref
+from compile.kernels.common import TEST_BLOCK, pad_flat, unpad
+
+jax.config.update("jax_platform_name", "cpu")
+
+SHAPES = st.sampled_from([
+    (3,), (17,), (256,), (257,), (300,), (1024,),
+    (7, 9), (16, 16), (33, 65), (4, 3, 5),
+])
+
+
+def tensors(draw, shape, n, lo=-2.0, hi=2.0):
+    out = []
+    for k in range(n):
+        seed = draw(st.integers(0, 2**31 - 1))
+        rng = np.random.default_rng(seed)
+        out.append(jnp.asarray(rng.uniform(lo, hi, size=shape),
+                               dtype=jnp.float32))
+    return out
+
+
+@st.composite
+def lamb_case(draw):
+    shape = draw(SHAPES)
+    x, g, m = tensors(draw, shape, 3)
+    (v,) = tensors(draw, shape, 1, lo=0.0, hi=2.0)
+    lr = draw(st.floats(1e-4, 1.0))
+    step = draw(st.integers(1, 50))
+    wd = draw(st.sampled_from([0.0, 0.01, 0.1]))
+    bc = draw(st.booleans())
+    return shape, x, g, m, v, lr, step, wd, bc
+
+
+class TestNorms:
+    @pytest.mark.parametrize("kind", ["l2", "l1", "linf"])
+    @pytest.mark.parametrize("shape", [(5,), (256,), (511,), (16, 33)])
+    def test_matches_ref(self, kind, shape):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=shape), dtype=jnp.float32)
+        got = norms.norm(x, kind, block=TEST_BLOCK)
+        want = ref.norm(x, kind)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_zero_tensor(self):
+        x = jnp.zeros((100,), jnp.float32)
+        for kind in ("l2", "l1", "linf"):
+            assert float(norms.norm(x, kind, block=TEST_BLOCK)) == 0.0
+
+    def test_bad_kind_raises(self):
+        with pytest.raises(ValueError):
+            norms.norm(jnp.ones((4,)), "l3")
+
+    def test_multiblock_equals_singleblock(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(1000,)), dtype=jnp.float32)
+        a = norms.norm(x, "l2", block=128)
+        b = norms.norm(x, "l2", block=2048)
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+class TestPadding:
+    def test_pad_unpad_roundtrip(self):
+        x = jnp.arange(10, dtype=jnp.float32).reshape(2, 5)
+        flat = pad_flat(x, 8)
+        assert flat.shape == (16,)
+        assert float(flat[10:].sum()) == 0.0
+        np.testing.assert_array_equal(unpad(flat, (2, 5)), x)
+
+    def test_exact_multiple_no_pad(self):
+        x = jnp.ones((16,), jnp.float32)
+        assert pad_flat(x, 8).shape == (16,)
+
+
+class TestLamb:
+    @settings(max_examples=40, deadline=None)
+    @given(lamb_case())
+    def test_matches_ref(self, case):
+        shape, x, g, m, v, lr, step, wd, bc = case
+        got = lamb.lamb_update(x, g, m, v, lr, step, weight_decay=wd,
+                               bias_correction=bc, block=TEST_BLOCK)
+        want = ref.lamb_update(x, g, m, v, lr, step, weight_decay=wd,
+                               bias_correction=bc)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=2e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("norm_kind", ["l1", "linf"])
+    def test_norm_ablation_matches_ref(self, norm_kind):
+        rng = np.random.default_rng(7)
+        shape = (33, 9)
+        x, g, m = (jnp.asarray(rng.normal(size=shape), jnp.float32)
+                   for _ in range(3))
+        v = jnp.asarray(rng.uniform(0, 1, size=shape), jnp.float32)
+        got = lamb.lamb_update(x, g, m, v, 0.1, 3, norm_kind=norm_kind,
+                               block=TEST_BLOCK)
+        want = ref.lamb_update(x, g, m, v, 0.1, 3, norm_kind=norm_kind)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=2e-5, atol=1e-6)
+
+    def test_phi_clip(self):
+        rng = np.random.default_rng(8)
+        shape = (64,)
+        x = jnp.asarray(10.0 * rng.normal(size=shape), jnp.float32)
+        g, m = (jnp.asarray(rng.normal(size=shape), jnp.float32)
+                for _ in range(2))
+        v = jnp.asarray(rng.uniform(0, 1, size=shape), jnp.float32)
+        got = lamb.lamb_update(x, g, m, v, 0.1, 1, phi_lo=0.1, phi_hi=2.0,
+                               block=TEST_BLOCK)
+        want = ref.lamb_update(x, g, m, v, 0.1, 1, phi_lo=0.1, phi_hi=2.0)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=2e-5, atol=1e-6)
+        # ||x|| >> 2.0 here, so phi must saturate at the upper clip and the
+        # clipped ratio must be strictly below the unclipped one.
+        unclipped = ref.lamb_update(x, g, m, v, 0.1, 1)[3]
+        assert float(got[3]) < float(unclipped)
+
+    def test_zero_grad_zero_state_is_identity_direction(self):
+        # all-zero (g, m, v): u = wd*x, ratio = ||x||/||wd*x|| = 1/wd
+        x = jnp.ones((32,), jnp.float32)
+        z = jnp.zeros((32,), jnp.float32)
+        new_x, new_m, new_v, ratio = lamb.lamb_update(
+            x, z, z, z, 0.1, 1, weight_decay=0.01, block=TEST_BLOCK)
+        np.testing.assert_allclose(float(ratio), 100.0, rtol=1e-4)
+        np.testing.assert_allclose(new_m, z, atol=0)
+        np.testing.assert_allclose(new_v, z, atol=0)
+
+    def test_trust_ratio_one_when_param_zero(self):
+        z = jnp.zeros((16,), jnp.float32)
+        g = jnp.ones((16,), jnp.float32)
+        *_, ratio = lamb.lamb_update(z, g, z, z, 0.1, 1, block=TEST_BLOCK)
+        assert float(ratio) == 1.0
+
+
+class TestLars:
+    @settings(max_examples=30, deadline=None)
+    @given(lamb_case())
+    def test_matches_ref(self, case):
+        shape, x, g, m, v, lr, step, wd, bc = case
+        got = lars.lars_update(x, g, m, lr, weight_decay=wd,
+                               block=TEST_BLOCK)
+        want = ref.lars_update(x, g, m, lr, weight_decay=wd)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=2e-5, atol=1e-6)
+
+    def test_momentum_accumulates(self):
+        x = jnp.ones((8,), jnp.float32)
+        g = jnp.ones((8,), jnp.float32)
+        m = jnp.zeros((8,), jnp.float32)
+        _, m1, _ = lars.lars_update(x, g, m, 0.1, weight_decay=0.0,
+                                    block=TEST_BLOCK)
+        np.testing.assert_allclose(m1, 0.1 * jnp.ones((8,)), rtol=1e-6)
+
+
+class TestAdamFamily:
+    @settings(max_examples=30, deadline=None)
+    @given(lamb_case())
+    def test_adamw_matches_ref(self, case):
+        shape, x, g, m, v, lr, step, wd, bc = case
+        got = adam.adamw_update(x, g, m, v, lr, step, weight_decay=wd,
+                                bias_correction=bc, block=TEST_BLOCK)
+        want = ref.adamw_update(x, g, m, v, lr, step, weight_decay=wd,
+                                bias_correction=bc)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=2e-5, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(lamb_case())
+    def test_adam_l2reg_matches_ref(self, case):
+        shape, x, g, m, v, lr, step, wd, bc = case
+        got = adam.adam_update(x, g, m, v, lr, step, l2_reg=0.01,
+                               block=TEST_BLOCK)
+        want = ref.adam_update(x, g, m, v, lr, step, l2_reg=0.01)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=2e-5, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(lamb_case())
+    def test_adagrad_matches_ref(self, case):
+        shape, x, g, m, v, lr, step, wd, bc = case
+        got = adam.adagrad_update(x, g, v, lr, block=TEST_BLOCK)
+        want = ref.adagrad_update(x, g, v, lr)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=2e-5, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(lamb_case())
+    def test_momentum_matches_ref(self, case):
+        shape, x, g, m, v, lr, step, wd, bc = case
+        got = adam.momentum_update(x, g, m, lr, block=TEST_BLOCK)
+        want = ref.momentum_update(x, g, m, lr)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=2e-5, atol=1e-6)
+
+    def test_adam_equals_adamw_when_wd_zero(self):
+        rng = np.random.default_rng(3)
+        x, g, m = (jnp.asarray(rng.normal(size=(40,)), jnp.float32)
+                   for _ in range(3))
+        v = jnp.asarray(rng.uniform(0, 1, size=(40,)), jnp.float32)
+        a = adam.adam_update(x, g, m, v, 0.01, 2, block=TEST_BLOCK)
+        b = adam.adamw_update(x, g, m, v, 0.01, 2, weight_decay=0.0,
+                              block=TEST_BLOCK)
+        for u, w in zip(a, b):
+            np.testing.assert_array_equal(u, w)
+
+
+class TestInvariants:
+    """Paper-motivated invariants of the layerwise adaptation strategy."""
+
+    def test_update_norm_equals_phi_norm(self):
+        # ||x' - x|| = lr * phi(||x||): the Section-3 normalization property.
+        rng = np.random.default_rng(11)
+        x, g, m = (jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+                   for _ in range(3))
+        v = jnp.asarray(rng.uniform(0, 1, size=(128,)), jnp.float32)
+        lr = 0.05
+        new_x, *_ = lamb.lamb_update(x, g, m, v, lr, 1, weight_decay=0.0,
+                                     block=TEST_BLOCK)
+        delta = float(ref.norm(new_x - x, "l2"))
+        expect = lr * float(ref.norm(x, "l2"))
+        np.testing.assert_allclose(delta, expect, rtol=1e-4)
+
+    def test_scale_invariance_of_direction(self):
+        # Scaling the gradient must not change the LAMB step (sign/step
+        # robustness to exploding/vanishing grads, Section 3).
+        rng = np.random.default_rng(12)
+        x = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+        g = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+        z = jnp.zeros((64,), jnp.float32)
+        a, *_ = lamb.lamb_update(x, g, z, z, 0.1, 1, weight_decay=0.0,
+                                 eps=0.0, block=TEST_BLOCK)
+        b, *_ = lamb.lamb_update(x, 1000.0 * g, z, z, 0.1, 1,
+                                 weight_decay=0.0, eps=0.0,
+                                 block=TEST_BLOCK)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)

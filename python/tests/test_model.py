@@ -1,0 +1,150 @@
+"""L2 model tests: shapes, flat-layout invariants, loss semantics, and the
+core training-dynamics sanity check (loss decreases under every optimizer
+step function).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import optim as O
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.CONFIGS["bert-tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def make_batch(seed, b=4, s=32, vocab=None, mask_frac=0.15):
+    rng = np.random.default_rng(seed)
+    vocab = vocab or CFG.vocab
+    targets = rng.integers(0, vocab, size=(b, s))
+    mask = (rng.uniform(size=(b, s)) < mask_frac).astype(np.float32)
+    tokens = np.where(mask > 0, 3, targets)  # 3 == [MASK] stand-in
+    return (jnp.asarray(tokens, jnp.int32), jnp.asarray(targets, jnp.int32),
+            jnp.asarray(mask, jnp.float32))
+
+
+class TestSpecs:
+    def test_offsets_contiguous(self):
+        specs = M.param_specs(CFG)
+        off = 0
+        for s in specs:
+            assert s.offset == off
+            assert s.size == int(np.prod(s.shape))
+            off += s.size
+        assert off == M.total_params(CFG)
+
+    def test_bias_and_ln_not_adapted(self):
+        specs = M.param_specs(CFG)
+        by = {s.name: s for s in specs}
+        assert not by["layer_0/attn/q_b"].adapt
+        assert not by["layer_0/ln1_scale"].decay
+        assert by["layer_0/attn/q_w"].adapt
+        assert by["embed/token"].decay
+
+    def test_param_counts_scale(self):
+        # bert-base-sim should be ~100M params (the e2e validation scale).
+        n = M.total_params(M.CONFIGS["bert-base-sim"])
+        assert 90e6 < n < 120e6, n
+
+    def test_flatten_unflatten_roundtrip(self, params):
+        specs = M.param_specs(CFG)
+        d = M.unflatten(params, specs)
+        back = M.flatten(d, specs)
+        np.testing.assert_array_equal(back, params)
+
+
+class TestForward:
+    def test_logits_shape(self, params):
+        tokens, _, _ = make_batch(0)
+        logits = M.forward(params, tokens, CFG)
+        assert logits.shape == (4, 32, CFG.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_seq_len_shares_params(self, params):
+        # Same parameter vector must drive different sequence lengths
+        # (mixed-batch training requirement).
+        t1, _, _ = make_batch(0, b=2, s=16)
+        t2, _, _ = make_batch(0, b=2, s=64)
+        assert M.forward(params, t1, CFG).shape == (2, 16, CFG.vocab)
+        assert M.forward(params, t2, CFG).shape == (2, 64, CFG.vocab)
+
+    def test_loss_near_uniform_at_init(self, params):
+        tokens, targets, mask = make_batch(1)
+        loss, acc = M.mlm_loss(params, tokens, targets, mask, CFG)
+        # Random init => near-uniform predictive distribution.
+        assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+        assert float(acc) < 0.05
+
+    def test_mask_zero_positions_ignored(self, params):
+        tokens, targets, mask = make_batch(2)
+        loss1, _ = M.mlm_loss(params, tokens, targets, mask, CFG)
+        # Corrupt targets at unmasked positions: loss must not change.
+        targets2 = jnp.where(mask > 0, targets, (targets + 7) % CFG.vocab)
+        loss2, _ = M.mlm_loss(params, tokens, targets2, mask, CFG)
+        np.testing.assert_allclose(float(loss1), float(loss2), rtol=1e-6)
+
+
+class TestGrad:
+    def test_grad_shape_and_finite(self, params):
+        tokens, targets, mask = make_batch(3)
+        loss, grads = M.loss_and_grad(params, tokens, targets, mask, CFG)
+        assert grads.shape == params.shape
+        assert bool(jnp.all(jnp.isfinite(grads)))
+        assert float(jnp.abs(grads).max()) > 0.0
+
+    def test_grad_descent_direction(self, params):
+        tokens, targets, mask = make_batch(4)
+        loss0, grads = M.loss_and_grad(params, tokens, targets, mask, CFG)
+        p2 = params - 0.5 * grads
+        loss1, _ = M.mlm_loss(p2, tokens, targets, mask, CFG)
+        assert float(loss1) < float(loss0)
+
+
+class TestOptimSteps:
+    @pytest.mark.parametrize("opt", sorted(O.STEP_FNS))
+    def test_loss_decreases(self, params, opt):
+        specs = M.param_specs(CFG)
+        tokens, targets, mask = make_batch(5, b=8)
+        p = params
+        n = p.shape[0]
+        m = jnp.zeros((n,), jnp.float32)
+        v = jnp.zeros((n,), jnp.float32)
+        loss0 = None
+        lr = {"momentum": 0.05, "adagrad": 0.05}.get(opt, 0.01)
+        for t in range(1, 6):
+            loss, grads = M.loss_and_grad(p, tokens, targets, mask, CFG)
+            if loss0 is None:
+                loss0 = float(loss)
+            p, m, v, ratios = O.STEP_FNS[opt](
+                p, grads, m, v, lr, float(t), specs)
+        loss1 = float(M.mlm_loss(p, tokens, targets, mask, CFG)[0])
+        assert loss1 < loss0, f"{opt}: {loss0} -> {loss1}"
+        assert ratios.shape == (len(specs),)
+        assert bool(jnp.all(jnp.isfinite(p)))
+
+    def test_lamb_ratios_nontrivial(self, params):
+        specs = M.param_specs(CFG)
+        tokens, targets, mask = make_batch(6)
+        n = params.shape[0]
+        z = jnp.zeros((n,), jnp.float32)
+        _, grads = M.loss_and_grad(params, tokens, targets, mask, CFG)
+        _, _, _, ratios = O.lamb_step(params, grads, z, z, 0.01, 1.0, specs)
+        adapt = np.array([s.adapt for s in specs])
+        r = np.asarray(ratios)
+        # Non-adapted params pinned to 1; adapted ones spread (Figs 9-14).
+        np.testing.assert_array_equal(r[~adapt], 1.0)
+        assert r[adapt].std() > 0.01
+
+    def test_auto_block(self):
+        assert O.auto_block(10) == 256
+        assert O.auto_block(256) == 256
+        assert O.auto_block(257) == 512
+        assert O.auto_block(10**9) == O.auto_block(2**30)

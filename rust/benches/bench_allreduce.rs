@@ -1,0 +1,50 @@
+//! All-reduce benches: host reduce_mean throughput and the chunked ring
+//! simulation, plus the alpha-beta model's predicted pod times (the
+//! communication side of Table 1 / Figure 8).
+
+use std::time::Duration;
+
+use lamb_train::collective::{reduce_mean, RingAllReduce, RingCost};
+use lamb_train::util::bench::bench;
+use lamb_train::util::Rng;
+
+fn main() {
+    println!("== bench_allreduce ==");
+    let mut rng = Rng::new(2);
+    let n = 1 << 22; // 4M floats ~ 16 MB/worker (bert-small grads ~ 5.4M)
+    for k in [2usize, 4, 8] {
+        let bufs: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..n).map(|_| rng.normal_f32(1.0)).collect())
+            .collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let mut out = vec![0.0f32; n];
+        let r = bench(
+            &format!("reduce_mean k={k} n={n}"),
+            Duration::from_millis(400),
+            || reduce_mean(&refs, &mut out),
+        );
+        r.print_throughput((n * k) as f64, "elem");
+    }
+    for k in [4usize, 8] {
+        let proto: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..n / 4).map(|_| rng.normal_f32(1.0)).collect())
+            .collect();
+        let r = bench(
+            &format!("ring_sim k={k} n={}", n / 4),
+            Duration::from_millis(400),
+            || {
+                let mut bufs = proto.clone();
+                RingAllReduce::new(k).run(&mut bufs);
+            },
+        );
+        r.print_throughput((n / 4 * k) as f64, "elem");
+    }
+    println!("\nalpha-beta model (BERT-Large grads = 1.336 GB):");
+    let c = RingCost { alpha: 4.4e-5, beta: 70e9 };
+    for k in [16usize, 64, 256, 1024] {
+        println!(
+            "  chips {k:>5}: ring all-reduce {:>8.1} ms",
+            c.time(k, 334_000_000 * 4) * 1e3
+        );
+    }
+}

@@ -1,0 +1,29 @@
+//! Data-pipeline bench: synthetic corpus + MLM batch generation
+//! throughput (tokens/s). The generator must never be the bottleneck of
+//! the step loop — compare against bench_e2e step times.
+
+use std::time::Duration;
+
+use lamb_train::data::{Corpus, MlmConfig, MlmGenerator};
+use lamb_train::util::bench::bench;
+
+fn main() {
+    println!("== bench_data: MLM batch generation ==");
+    for (vocab, seq, b) in [(1024usize, 32usize, 8usize), (8192, 128, 4), (8192, 512, 1)] {
+        let mut g = MlmGenerator::new(
+            Corpus::new(vocab),
+            MlmConfig::new(seq),
+            0,
+            0,
+        );
+        let r = bench(
+            &format!("vocab={vocab} seq={seq} b={b}"),
+            Duration::from_millis(300),
+            || {
+                let batch = g.next_batch(b);
+                std::hint::black_box(batch.tokens.len());
+            },
+        );
+        r.print_throughput((seq * b) as f64, "tok");
+    }
+}

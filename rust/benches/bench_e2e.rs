@@ -1,0 +1,59 @@
+//! End-to-end coordinator step bench: one full synchronous data-parallel
+//! global step (microbatched grads -> all-reduce -> Pallas optimizer) at
+//! increasing global batch — the host-side analogue of Table 1's step
+//! cost, and the profile target of §Perf L3.
+
+use std::time::Duration;
+
+use lamb_train::config::TrainConfig;
+use lamb_train::coordinator::{BertTrainer, Stage};
+use lamb_train::manifest::Manifest;
+use lamb_train::runtime::Engine;
+use lamb_train::schedule::Schedule;
+use lamb_train::util::bench::bench;
+
+fn main() {
+    let manifest = Manifest::load("artifacts")
+        .expect("run `make artifacts` first");
+    let engine = Engine::cpu().unwrap();
+    println!("== bench_e2e: full coordinator global step (bert-tiny) ==");
+    for batch in [8usize, 32, 128] {
+        let cfg = TrainConfig {
+            model: "bert-tiny".into(),
+            seq: 32,
+            optimizer: "lamb".into(),
+            global_batch: batch,
+            steps: 1,
+            chips: 8,
+            ..TrainConfig::default()
+        };
+        let mut tr = BertTrainer::new(&engine, &manifest, cfg).unwrap();
+        let exec_before = engine.exec_time.get();
+        let r = bench(
+            &format!("global step batch={batch}"),
+            Duration::from_secs(2),
+            || {
+                let stage = Stage {
+                    seq: 32,
+                    global_batch: batch,
+                    steps: 1,
+                    schedule: Schedule::Constant { lr: 1e-3 },
+                };
+                tr.train(&[stage]).unwrap();
+            },
+        );
+        r.print_throughput((batch * 32) as f64, "tok");
+        // exec_time also accrues during bench warmup iterations, so the
+        // ratio can slightly exceed 1; clamp — the signal is "is the
+        // coordinator, not PJRT, ever the bottleneck".
+        let in_pjrt = engine.exec_time.get() - exec_before;
+        let total = r.mean * r.iters as u32;
+        let share =
+            (in_pjrt.as_secs_f64() / total.as_secs_f64().max(1e-9)).min(1.0);
+        println!(
+            "    PJRT share of wall time: {:.1}%  (coordinator overhead {:.1}%)",
+            100.0 * share,
+            100.0 * (1.0 - share),
+        );
+    }
+}

@@ -1,0 +1,111 @@
+//! Artifact execution benches (the L1/L2 half of §Perf): PJRT latency of
+//! the gradient, optimizer (Pallas kernel) and fused train-step
+//! artifacts, vs the native optimizer on the same model — plus the
+//! params/s each achieves.
+
+use std::time::Duration;
+
+use lamb_train::data::{Corpus, MlmConfig, MlmGenerator};
+use lamb_train::manifest::Manifest;
+use lamb_train::model::ParamStore;
+use lamb_train::optim::{self, Hyper, Seg};
+use lamb_train::runtime::{self, Engine};
+use lamb_train::util::bench::bench;
+
+fn main() {
+    let manifest = Manifest::load("artifacts")
+        .expect("run `make artifacts` first");
+    let engine = Engine::cpu().unwrap();
+    println!("== bench_kernel_step (model bert-tiny, seq 32, mb 8) ==");
+    let meta = manifest.model("bert-tiny").unwrap().clone();
+    let n = meta.total_params;
+    let ps = ParamStore::init(&meta, 1);
+    let mut gen = MlmGenerator::new(
+        Corpus::new(meta.vocab),
+        MlmConfig::new(32),
+        0,
+        0,
+    );
+    let b = gen.next_batch(8);
+
+    // grad artifact
+    let grad = engine
+        .load(manifest.path(manifest.grad("bert-tiny", 32).unwrap()))
+        .unwrap();
+    let mut grads = vec![0.0f32; n];
+    let r = bench("grad artifact (fwd+bwd)", Duration::from_secs(1), || {
+        let out = grad
+            .run(&[
+                runtime::lit_f32(&ps.flat),
+                runtime::lit_i32_2d(&b.tokens, 8, 32).unwrap(),
+                runtime::lit_i32_2d(&b.targets, 8, 32).unwrap(),
+                runtime::lit_f32_2d(&b.mask, 8, 32).unwrap(),
+            ])
+            .unwrap();
+        grads = runtime::vec_f32(&out[1]).unwrap();
+    });
+    r.print_throughput((8 * 32) as f64, "tok");
+
+    // opt artifacts (the Pallas kernels) + the pure-jnp lamb reference
+    // ("lamb_ref") — the §Perf L1 comparison: pallas-lowered HLO vs
+    // plain-jnp HLO on identical work.
+    for opt_name in ["lamb", "lamb_ref", "lars", "adamw"] {
+        let opt = engine
+            .load(manifest.path(manifest.opt("bert-tiny", opt_name).unwrap()))
+            .unwrap();
+        let m = vec![0.0f32; n];
+        let v = vec![0.0f32; n];
+        let r = bench(
+            &format!("opt artifact {opt_name} (pallas)"),
+            Duration::from_secs(1),
+            || {
+                let out = opt
+                    .run(&[
+                        runtime::lit_f32(&ps.flat),
+                        runtime::lit_f32(&grads),
+                        runtime::lit_f32(&m),
+                        runtime::lit_f32(&v),
+                        runtime::lit_scalar(1e-3),
+                        runtime::lit_scalar(1.0),
+                    ])
+                    .unwrap();
+                std::hint::black_box(out.len());
+            },
+        );
+        r.print_throughput(n as f64, "params");
+    }
+
+    // native optimizer on identical work
+    let segs = Seg::from_manifest(&meta.params);
+    let mut native = optim::build("lamb", n, Hyper::default()).unwrap();
+    let mut x = ps.flat.clone();
+    let mut t = 0u64;
+    let r = bench("native lamb (rust)", Duration::from_secs(1), || {
+        t += 1;
+        native.step(&mut x, &grads, 1e-3, t, &segs);
+    });
+    r.print_throughput(n as f64, "params");
+
+    // fused train step
+    let step = engine
+        .load(manifest.path(manifest.step("bert-tiny", 32, "lamb").unwrap()))
+        .unwrap();
+    let m = vec![0.0f32; n];
+    let v = vec![0.0f32; n];
+    let r = bench("fused train-step artifact", Duration::from_secs(1), || {
+        let out = step
+            .run(&[
+                runtime::lit_f32(&ps.flat),
+                runtime::lit_f32(&m),
+                runtime::lit_f32(&v),
+                runtime::lit_i32_2d(&b.tokens, 8, 32).unwrap(),
+                runtime::lit_i32_2d(&b.targets, 8, 32).unwrap(),
+                runtime::lit_f32_2d(&b.mask, 8, 32).unwrap(),
+                runtime::lit_scalar(1e-3),
+                runtime::lit_scalar(1.0),
+            ])
+            .unwrap();
+        std::hint::black_box(out.len());
+    });
+    r.print_throughput((8 * 32) as f64, "tok");
+}

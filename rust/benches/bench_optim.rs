@@ -1,0 +1,41 @@
+//! Optimizer-update throughput (native implementations): params/s per
+//! solver at BERT-layer sizes. Backs the L3 half of EXPERIMENTS.md §Perf
+//! and the per-step cost rows of Table 1.
+
+use std::time::Duration;
+
+use lamb_train::optim::{self, Hyper, Seg};
+use lamb_train::util::bench::bench;
+use lamb_train::util::Rng;
+
+fn main() {
+    println!("== bench_optim: native optimizer step throughput ==");
+    let mut rng = Rng::new(1);
+    for &n in &[65_536usize, 1 << 22] {
+        // Segment layout like a transformer: a few big matrices + small
+        // biases.
+        let mut segs = Vec::new();
+        let mut off = 0;
+        while off < n {
+            let big = (n / 8).min(n - off);
+            segs.push(Seg { offset: off, size: big, decay: true, adapt: true });
+            off += big;
+        }
+        let x0: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+        let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.1)).collect();
+        for name in optim::ALL {
+            let mut opt = optim::build(name, n, Hyper::default()).unwrap();
+            let mut x = x0.clone();
+            let mut t = 0u64;
+            let r = bench(
+                &format!("{name} n={n}"),
+                Duration::from_millis(300),
+                || {
+                    t += 1;
+                    opt.step(&mut x, &g, 1e-3, t, &segs);
+                },
+            );
+            r.print_throughput(n as f64, "params");
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! TPUv3-pod performance model — the substitute for the paper's hardware
+//! (DESIGN.md §Substitutions).
+//!
+//! Table 1's wall-clock column and Figure 8's scaling-efficiency curve are
+//! functions of three things: per-chip compute throughput, the ring
+//! all-reduce cost of a ~300M-parameter gradient, and per-seq-len memory
+//! caps. This module prices exactly those. Numerics still execute for
+//! real through PJRT; this model only accounts *time* the way the
+//! authors' testbed would.
+
+use crate::collective::RingCost;
+use crate::manifest::ModelMeta;
+
+/// One pod slice.
+#[derive(Clone, Copy, Debug)]
+pub struct Pod {
+    pub chips: usize,
+    /// Peak per-chip mixed-precision FLOP/s (TPUv3: ~123e12).
+    pub peak_flops: f64,
+    /// Sustained MXU efficiency on transformer fwd+bwd (empirically ~45%).
+    pub mxu_efficiency: f64,
+    /// Per-chip HBM bytes (TPUv3: 32 GiB).
+    pub hbm_bytes: usize,
+    /// ICI ring cost model.
+    pub ring: RingCost,
+    /// Fraction of the all-reduce hidden under the backward pass
+    /// (gradient bucketing overlap).
+    pub overlap: f64,
+}
+
+impl Pod {
+    /// A TPUv3 slice with the paper's interconnect characteristics.
+    ///
+    /// `alpha` is calibrated to Table 1: the paper's 0.293 s/step at 16
+    /// chips vs 0.385 s/step at 1024 chips (same per-chip load) implies
+    /// ~44 us of per-phase latency + synchronization overhead at pod
+    /// scale — that is what produces the 76.7% scaling efficiency, since
+    /// the bandwidth term of a ring all-reduce is chip-count-invariant.
+    pub fn tpu_v3(chips: usize) -> Pod {
+        Pod {
+            chips,
+            peak_flops: 123e12,
+            // Sustained fraction of peak on BERT-Large fwd+bwd. 0.30
+            // reproduces Table 1's absolute step times within ~15%
+            // across the whole ladder (see EXPERIMENTS.md Table 1b).
+            mxu_efficiency: 0.30,
+            hbm_bytes: 32 << 30,
+            ring: RingCost { alpha: 4.4e-5, beta: 70e9 },
+            overlap: 0.5,
+        }
+    }
+
+    /// Activation bytes needed to hold one sequence of length `seq`
+    /// through fwd+bwd (checkpoint-free), including the attention maps.
+    pub fn act_bytes_per_seq(model: &ModelMeta, seq: usize) -> usize {
+        let l = model.layers;
+        let h = model.hidden;
+        let heads = model.heads;
+        // ~32 f32-equivalents per hidden unit per layer (bf16 fwd + f32
+        // bwd residency), plus one attention map per head per layer.
+        l * seq * h * 32 + l * heads * seq * seq * 4
+    }
+
+    /// Optimizer + param + gradient state per chip (replicated under pure
+    /// data parallelism): params, grads, m, v @ 4 bytes.
+    pub fn state_bytes(model: &ModelMeta) -> usize {
+        model.total_params * 4 * 4
+    }
+
+    /// Largest per-chip microbatch for `seq` (the paper's "memory limit of
+    /// a TPUv3 Pod" that caps batch 32768 at seq 512 / 65536+ at 128).
+    pub fn max_microbatch(&self, model: &ModelMeta, seq: usize) -> usize {
+        let free = self.hbm_bytes.saturating_sub(Self::state_bytes(model));
+        free / Self::act_bytes_per_seq(model, seq).max(1)
+    }
+
+    /// Largest global batch for `seq`.
+    pub fn max_global_batch(&self, model: &ModelMeta, seq: usize) -> usize {
+        self.max_microbatch(model, seq) * self.chips
+    }
+
+    /// Simulated time for one synchronous data-parallel step at
+    /// `global_batch` sequences of length `seq` (gradient accumulation if
+    /// the per-chip share exceeds memory).
+    pub fn step_time(
+        &self,
+        model: &ModelMeta,
+        global_batch: usize,
+        seq: usize,
+    ) -> f64 {
+        let per_chip = (global_batch + self.chips - 1) / self.chips;
+        let tokens = (per_chip * seq) as f64;
+        let compute = tokens * model.train_flops_per_token(seq)
+            / (self.peak_flops * self.mxu_efficiency);
+        let grad_bytes = model.total_params * 4;
+        let comm = self.ring.time(self.chips, grad_bytes);
+        // Portion of comm hidden under backward compute.
+        let hidden = (comm * self.overlap).min(compute * 0.5);
+        compute + comm - hidden
+    }
+
+    /// Simulated wall-clock for a whole run (steps uniform in batch/seq).
+    pub fn run_time(
+        &self,
+        model: &ModelMeta,
+        steps: u64,
+        global_batch: usize,
+        seq: usize,
+    ) -> f64 {
+        steps as f64 * self.step_time(model, global_batch, seq)
+    }
+
+    /// Throughput-based scaling efficiency vs a reference slice running a
+    /// reference batch: (tokens/s per chip here) / (tokens/s per chip
+    /// there). Figure 8's y-axis.
+    pub fn scaling_efficiency(
+        &self,
+        model: &ModelMeta,
+        batch: usize,
+        seq: usize,
+        base: &Pod,
+        base_batch: usize,
+    ) -> f64 {
+        let here = (batch * seq) as f64 / self.step_time(model, batch, seq)
+            / self.chips as f64;
+        let there = (base_batch * seq) as f64
+            / base.step_time(model, base_batch, seq)
+            / base.chips as f64;
+        here / there
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::ModelMeta;
+
+    /// BERT-Large-like stand-in (the paper's 300M-parameter model).
+    fn bert_large() -> ModelMeta {
+        ModelMeta {
+            name: "bert-large-like".into(),
+            vocab: 30522,
+            hidden: 1024,
+            layers: 24,
+            heads: 16,
+            ff: 4096,
+            max_seq: 512,
+            total_params: 334_000_000,
+            params: vec![],
+        }
+    }
+
+    #[test]
+    fn memory_caps_match_paper_orders() {
+        let pod = Pod::tpu_v3(1024);
+        let m = bert_large();
+        // Paper: 32768 max at seq 512 on 1024 chips (32/chip), and no
+        // benefit past 65536-131072 at seq 128 (64-128/chip).
+        let cap512 = pod.max_microbatch(&m, 512);
+        let cap128 = pod.max_microbatch(&m, 128);
+        assert!((16..=64).contains(&cap512), "cap512 {cap512}");
+        assert!((64..=512).contains(&cap128), "cap128 {cap128}");
+        assert!(cap128 > 2 * cap512);
+    }
+
+    #[test]
+    fn step_time_decreases_with_chips_but_saturates() {
+        // Strong scaling at a fixed global batch is sublinear: compute
+        // shrinks 16x but the all-reduce does not (the paper's motivation
+        // for scaling the batch *with* the chips).
+        let m = bert_large();
+        let t16 = Pod::tpu_v3(16).step_time(&m, 512, 128);
+        let t256 = Pod::tpu_v3(256).step_time(&m, 512, 128);
+        assert!(t256 < t16, "{t16} vs {t256}");
+        assert!(t256 > t16 / 16.0, "{t16} vs {t256}");
+    }
+
+    #[test]
+    fn efficiency_below_one_and_reasonable() {
+        // Paper: 76.7% efficiency scaling 16 chips/512 -> 1024 chips/32K.
+        let m = bert_large();
+        let base = Pod::tpu_v3(16);
+        let big = Pod::tpu_v3(1024);
+        let eff = big.scaling_efficiency(&m, 32768, 128, &base, 512);
+        assert!((0.55..0.98).contains(&eff), "eff {eff}");
+    }
+
+    #[test]
+    fn larger_per_chip_batch_improves_efficiency() {
+        // The mixed-batch trick: bigger seq-128 batch -> better efficiency
+        // (paper's 101.8% is vs the un-mixed baseline).
+        let m = bert_large();
+        let base = Pod::tpu_v3(16);
+        let big = Pod::tpu_v3(1024);
+        let e32k = big.scaling_efficiency(&m, 32768, 128, &base, 512);
+        let e64k = big.scaling_efficiency(&m, 65536, 128, &base, 512);
+        assert!(e64k > e32k);
+    }
+
+    #[test]
+    fn run_time_linear_in_steps() {
+        let m = bert_large();
+        let pod = Pod::tpu_v3(64);
+        let a = pod.run_time(&m, 100, 4096, 128);
+        let b = pod.run_time(&m, 200, 4096, 128);
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+}

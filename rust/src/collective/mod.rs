@@ -1,0 +1,177 @@
+//! Synchronous gradient all-reduce.
+//!
+//! Two faces, one contract:
+//!
+//! * [`reduce_mean`] — the numeric hot path: average the per-worker
+//!   gradient shards into one buffer (what the TPU interconnect computes).
+//! * [`RingAllReduce`] — a faithful chunked ring simulation
+//!   (reduce-scatter + all-gather over 2(k-1) phases) used by tests to
+//!   prove the hot path computes exactly what a ring would, and by the
+//!   pod model to price each phase with the alpha-beta cost model that
+//!   Figure 8's scaling-efficiency curve comes from.
+
+/// Average `workers` gradient buffers into `out` (all same length).
+/// Accumulates in f64 — the same reduction order for any worker count, so
+/// batch-size sweeps are bitwise comparable.
+pub fn reduce_mean(workers: &[&[f32]], out: &mut [f32]) {
+    let k = workers.len();
+    assert!(k > 0, "no workers");
+    for w in workers {
+        assert_eq!(w.len(), out.len(), "shard length mismatch");
+    }
+    let inv = 1.0f64 / k as f64;
+    for i in 0..out.len() {
+        let mut acc = 0.0f64;
+        for w in workers {
+            acc += w[i] as f64;
+        }
+        out[i] = (acc * inv) as f32;
+    }
+}
+
+/// Sum-accumulate `src` into `acc` (microbatch gradient accumulation).
+pub fn accumulate(acc: &mut [f32], src: &[f32]) {
+    assert_eq!(acc.len(), src.len());
+    for i in 0..acc.len() {
+        acc[i] += src[i];
+    }
+}
+
+/// Scale a buffer in place (finishing an accumulation into a mean).
+pub fn scale(buf: &mut [f32], s: f32) {
+    for x in buf.iter_mut() {
+        *x *= s;
+    }
+}
+
+/// Alpha-beta cost model of one ring all-reduce over `k` workers for a
+/// payload of `bytes` per worker.
+///
+/// Ring all-reduce moves `2*(k-1)/k * bytes` per link in `2*(k-1)` phases:
+/// `time = 2*(k-1)*alpha + 2*(k-1)/k * bytes / beta`.
+#[derive(Clone, Copy, Debug)]
+pub struct RingCost {
+    /// Per-phase latency (s).
+    pub alpha: f64,
+    /// Per-link bandwidth (bytes/s).
+    pub beta: f64,
+}
+
+impl RingCost {
+    pub fn time(&self, k: usize, bytes: usize) -> f64 {
+        if k <= 1 {
+            return 0.0;
+        }
+        let phases = 2.0 * (k as f64 - 1.0);
+        phases * self.alpha
+            + (phases / k as f64) * (bytes as f64) / self.beta
+    }
+}
+
+/// Step-by-step ring all-reduce simulation: produces the averaged result
+/// via the actual reduce-scatter / all-gather chunk schedule.
+pub struct RingAllReduce {
+    pub k: usize,
+}
+
+impl RingAllReduce {
+    pub fn new(k: usize) -> RingAllReduce {
+        assert!(k > 0);
+        RingAllReduce { k }
+    }
+
+    /// Run the ring schedule over per-worker buffers in place; afterwards
+    /// every worker holds the mean. Returns the number of communication
+    /// phases executed (for cost-model cross-checks).
+    pub fn run(&self, bufs: &mut [Vec<f32>]) -> usize {
+        let k = self.k;
+        assert_eq!(bufs.len(), k);
+        if k == 1 {
+            return 0;
+        }
+        let n = bufs[0].len();
+        // Chunk boundaries: chunk c = [start(c), start(c+1)).
+        let start = |c: usize| (c * n) / k;
+        let mut phases = 0;
+
+        // Reduce-scatter: phase p, worker w sends chunk (w - p) mod k to
+        // worker (w+1) mod k, which accumulates.
+        for p in 0..k - 1 {
+            for w in 0..k {
+                let src = w;
+                let dst = (w + 1) % k;
+                let c = (w + k - p) % k;
+                let (a, b) = (start(c), start(c + 1));
+                // split_at_mut dance to borrow two workers at once
+                let (lo, hi) = if src < dst {
+                    let (l, h) = bufs.split_at_mut(dst);
+                    (&l[src], &mut h[0])
+                } else {
+                    let (l, h) = bufs.split_at_mut(src);
+                    (&h[0], &mut l[dst])
+                };
+                // note: when src<dst, lo=src buffer (immutable), hi=dst
+                for i in a..b {
+                    hi[i] += lo[i];
+                }
+                phases += 1;
+            }
+        }
+        // Chunk c is sent at phase p by worker (c+p) mod k; after the last
+        // phase (p = k-2) its full sum rests at worker (c-1) mod k.
+        // Normalize there, then all-gather ring-style.
+        let mut tmp = Vec::new();
+        for c in 0..k {
+            let owner = (c + k - 1) % k;
+            let (a, b) = (start(c), start(c + 1));
+            for i in a..b {
+                bufs[owner][i] /= k as f32;
+            }
+            tmp.clear();
+            tmp.extend_from_slice(&bufs[owner][a..b]);
+            for p in 1..k {
+                let dst = (owner + p) % k;
+                bufs[dst][a..b].copy_from_slice(&tmp);
+                phases += 1;
+            }
+        }
+        phases
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_of_workers() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![3.0f32, 2.0, 1.0];
+        let mut out = vec![0.0f32; 3];
+        reduce_mean(&[&a, &b], &mut out);
+        assert_eq!(out, vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn accumulate_and_scale() {
+        let mut acc = vec![1.0f32, 1.0];
+        accumulate(&mut acc, &[2.0, 3.0]);
+        scale(&mut acc, 0.5);
+        assert_eq!(acc, vec![1.5, 2.0]);
+    }
+
+    #[test]
+    fn cost_model_shape() {
+        let c = RingCost { alpha: 1e-6, beta: 70e9 };
+        assert_eq!(c.time(1, 1 << 30), 0.0);
+        // Bandwidth term saturates as k grows: time(k) -> 2*bytes/beta.
+        let t64 = c.time(64, 1 << 30);
+        let t1024 = c.time(1024, 1 << 30);
+        let asymptote = 2.0 * (1u64 << 30) as f64 / 70e9;
+        assert!(t64 < t1024);
+        assert!((t64 - asymptote).abs() / asymptote < 0.05);
+        // Latency term linear in k.
+        let lat_only = RingCost { alpha: 1e-6, beta: f64::INFINITY };
+        assert!((lat_only.time(11, 1) - 20e-6).abs() < 1e-12);
+    }
+}

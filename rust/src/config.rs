@@ -1,0 +1,361 @@
+//! Configuration system: a TOML-subset parser (offline build — no `toml`
+//! crate) plus the typed `TrainConfig` the CLI and coordinator consume.
+//!
+//! Supported TOML subset: `[section]` / `[a.b]` headers, `key = value`
+//! with string / integer / float / boolean / flat-array values, `#`
+//! comments. That covers every config under `configs/`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+// ---------------------------------------------------------------------
+// TOML-subset parsing
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat `section.key -> value` map.
+pub type TomlDoc = BTreeMap<String, TomlValue>;
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    let s = s.trim();
+    if let Some(inner) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+        let mut arr = Vec::new();
+        let inner = inner.trim();
+        if !inner.is_empty() {
+            for item in inner.split(',') {
+                arr.push(parse_value(item)?);
+            }
+        }
+        return Ok(TomlValue::Arr(arr));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse TOML value: {s:?}")
+}
+
+/// Parse the TOML subset into a flat dotted-key map.
+pub fn parse_toml(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::new();
+    let mut section = String::new();
+    for (lno, raw) in text.lines().enumerate() {
+        let line = match raw.find('#') {
+            // only strip comments outside strings (strings in our configs
+            // never contain '#')
+            Some(i) if !raw[..i].contains('"') || raw[..i].matches('"').count() % 2 == 0 => &raw[..i],
+            _ => raw,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lno + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        doc.insert(
+            key,
+            parse_value(v).with_context(|| format!("line {}", lno + 1))?,
+        );
+    }
+    Ok(doc)
+}
+
+// ---------------------------------------------------------------------
+// Typed training configuration
+// ---------------------------------------------------------------------
+
+/// Which step path the coordinator uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepPath {
+    /// Per-worker grad artifacts + Rust all-reduce + opt artifact.
+    Distributed,
+    /// Single fused train-step artifact (fast single-worker path).
+    Fused,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    // model / data
+    pub model: String,
+    pub seq: usize,
+    pub seed: u64,
+    // optimization
+    pub optimizer: String,
+    pub base_lr: Option<f32>, // None => paper sqrt-scaling rule
+    pub weight_decay: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub bias_correction: bool,
+    pub norm: String,
+    // batching
+    pub global_batch: usize,
+    pub steps: u64,
+    pub warmup_ratio: Option<f64>, // None => paper linear-epoch rule
+    // cluster
+    pub chips: usize,
+    pub step_path: StepPath,
+    // io
+    pub artifacts: String,
+    pub out_dir: String,
+    pub eval_every: u64,
+    pub log_every: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "bert-tiny".into(),
+            seq: 32,
+            seed: 42,
+            optimizer: "lamb".into(),
+            base_lr: None,
+            weight_decay: 0.01,
+            beta1: 0.9,
+            beta2: 0.999,
+            bias_correction: true,
+            norm: "l2".into(),
+            global_batch: 64,
+            steps: 200,
+            warmup_ratio: None,
+            chips: 8,
+            step_path: StepPath::Distributed,
+            artifacts: "artifacts".into(),
+            out_dir: "results".into(),
+            eval_every: 50,
+            log_every: 10,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Load from a TOML file and/or `key=value` CLI overrides.
+    pub fn load(
+        path: Option<&str>,
+        overrides: &[(String, String)],
+    ) -> Result<TrainConfig> {
+        let mut doc = match path {
+            Some(p) => parse_toml(
+                &std::fs::read_to_string(p)
+                    .with_context(|| format!("reading config {p}"))?,
+            )?,
+            None => TomlDoc::new(),
+        };
+        for (k, v) in overrides {
+            doc.insert(k.clone(), parse_value(v)?);
+        }
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> Result<TrainConfig> {
+        let mut c = TrainConfig::default();
+        let gets = |k: &str| -> Option<String> {
+            doc.get(k).and_then(|v| v.as_str().map(String::from))
+        };
+        let getf = |k: &str| doc.get(k).and_then(TomlValue::as_f64);
+        let geti = |k: &str| doc.get(k).and_then(TomlValue::as_f64).map(|f| f as u64);
+        let getb = |k: &str| doc.get(k).and_then(TomlValue::as_bool);
+
+        if let Some(v) = gets("model.name") { c.model = v; }
+        if let Some(v) = geti("model.seq") { c.seq = v as usize; }
+        if let Some(v) = geti("run.seed") { c.seed = v; }
+        if let Some(v) = gets("optimizer.name") { c.optimizer = v; }
+        if let Some(v) = getf("optimizer.lr") { c.base_lr = Some(v as f32); }
+        if let Some(v) = getf("optimizer.weight_decay") { c.weight_decay = v as f32; }
+        if let Some(v) = getf("optimizer.beta1") { c.beta1 = v as f32; }
+        if let Some(v) = getf("optimizer.beta2") { c.beta2 = v as f32; }
+        if let Some(v) = getb("optimizer.bias_correction") { c.bias_correction = v; }
+        if let Some(v) = gets("optimizer.norm") { c.norm = v; }
+        if let Some(v) = geti("batch.global") { c.global_batch = v as usize; }
+        if let Some(v) = geti("batch.steps") { c.steps = v; }
+        if let Some(v) = getf("batch.warmup_ratio") { c.warmup_ratio = Some(v); }
+        if let Some(v) = geti("cluster.chips") { c.chips = v as usize; }
+        if let Some(v) = gets("run.step_path") {
+            c.step_path = match v.as_str() {
+                "distributed" => StepPath::Distributed,
+                "fused" => StepPath::Fused,
+                other => bail!("unknown step_path {other:?}"),
+            };
+        }
+        if let Some(v) = gets("run.artifacts") { c.artifacts = v; }
+        if let Some(v) = gets("run.out_dir") { c.out_dir = v; }
+        if let Some(v) = geti("run.eval_every") { c.eval_every = v; }
+        if let Some(v) = geti("run.log_every") { c.log_every = v; }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.global_batch == 0 || self.steps == 0 || self.chips == 0 {
+            bail!("batch/steps/chips must be positive");
+        }
+        if crate::optim::build(&self.optimizer, 1, Default::default()).is_none() {
+            bail!(
+                "unknown optimizer {:?} (expected one of {:?})",
+                self.optimizer,
+                crate::optim::ALL
+            );
+        }
+        if crate::optim::Norm::parse(&self.norm).is_none() {
+            bail!("unknown norm {:?}", self.norm);
+        }
+        Ok(())
+    }
+
+    /// The effective schedule per the paper's untuned recipe (or the
+    /// explicit overrides).
+    pub fn schedule(&self) -> crate::schedule::Schedule {
+        let base = self.base_lr.unwrap_or_else(|| {
+            crate::schedule::sqrt_scaled_lr(0.005, 32768, self.global_batch)
+        });
+        let ratio = self
+            .warmup_ratio
+            .unwrap_or_else(|| crate::schedule::warmup_ratio(self.global_batch))
+            .min(0.5);
+        let warmup = ((self.steps as f64) * ratio).round().max(1.0) as u64;
+        crate::schedule::Schedule::WarmupPoly {
+            base,
+            warmup,
+            total: self.steps,
+            power: 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toml_subset() {
+        let doc = parse_toml(
+            r#"
+# comment
+top = 1
+[model]
+name = "bert-small"   # trailing comment
+seq = 128
+[optimizer]
+lr = 2.5e-3
+bias_correction = false
+betas = [0.9, 0.999]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc["top"], TomlValue::Int(1));
+        assert_eq!(doc["model.name"].as_str(), Some("bert-small"));
+        assert_eq!(doc["optimizer.lr"].as_f64(), Some(2.5e-3));
+        assert_eq!(doc["optimizer.bias_correction"].as_bool(), Some(false));
+        match &doc["optimizer.betas"] {
+            TomlValue::Arr(a) => assert_eq!(a.len(), 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn toml_errors() {
+        assert!(parse_toml("key").is_err());
+        assert!(parse_toml("k = @@").is_err());
+    }
+
+    #[test]
+    fn config_defaults_and_overrides() {
+        let c = TrainConfig::load(
+            None,
+            &[
+                ("optimizer.name".into(), "\"lars\"".into()),
+                ("batch.global".into(), "512".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.optimizer, "lars");
+        assert_eq!(c.global_batch, 512);
+        assert_eq!(c.model, "bert-tiny");
+    }
+
+    #[test]
+    fn config_rejects_unknown_optimizer() {
+        let r = TrainConfig::load(
+            None,
+            &[("optimizer.name".into(), "\"sgdx\"".into())],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn schedule_uses_paper_rules_by_default() {
+        let mut c = TrainConfig::default();
+        c.global_batch = 32768;
+        c.steps = 15625;
+        if let crate::schedule::Schedule::WarmupPoly { base, warmup, .. } =
+            c.schedule()
+        {
+            assert!((base - 0.005).abs() < 1e-9);
+            assert_eq!(warmup, 3125);
+        } else {
+            panic!();
+        }
+    }
+}

@@ -1,0 +1,374 @@
+//! Synchronous data-parallel BERT trainer over the AOT artifacts.
+//!
+//! One global step:
+//!   1. split the global batch into artifact-sized microbatches, one
+//!      stream per simulated worker (chip);
+//!   2. execute the gradient artifact per microbatch (real numerics on
+//!      PJRT-CPU) and accumulate into the flat gradient buffer;
+//!   3. all-reduce: average (what the pod's ring would compute) and
+//!      price the communication with the ring cost model;
+//!   4. execute the optimizer artifact — the L1 Pallas LAMB/LARS kernel —
+//!      or fall back to the native optimizer when no artifact exists;
+//!   5. log loss / lr / trust ratios / simulated pod time; detect
+//!      divergence (Tables 2/8 "diverge" cells).
+//!
+//! Multi-[`Stage`] runs express the paper's two-stage mixed-batch recipe
+//! (Section 4.1): stage 1 at seq 128 / huge batch, stage 2 at seq 512 with
+//! **re-warmup** — each stage carries its own schedule, and the optimizer
+//! moments persist across the switch.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::Pod;
+use crate::collective;
+use crate::config::{StepPath, TrainConfig};
+use crate::data::{Batch, Corpus, MlmConfig, MlmGenerator};
+use crate::manifest::{ArtifactKind, Manifest, ModelMeta};
+use crate::metrics::{DivergenceDetector, RunLog, StepRecord};
+use crate::model::ParamStore;
+use crate::optim::{self, Hyper, Optimizer, Seg};
+use crate::runtime::{self, Engine, Executable};
+use crate::schedule::Schedule;
+
+/// One homogeneous phase of training.
+#[derive(Clone, Debug)]
+pub struct Stage {
+    pub seq: usize,
+    pub global_batch: usize,
+    pub steps: u64,
+    pub schedule: Schedule,
+}
+
+impl Stage {
+    /// The paper's fixed-epoch single-stage setup at `batch`, with the
+    /// untuned sqrt-LR + linear-epoch-warmup recipe.
+    pub fn untuned(seq: usize, batch: usize, steps: u64) -> Stage {
+        Stage {
+            seq,
+            global_batch: batch,
+            steps,
+            schedule: Schedule::untuned_bert(batch, steps),
+        }
+    }
+}
+
+enum OptPath<'e> {
+    /// Pallas-kernel optimizer artifact.
+    Artifact(Executable<'e>),
+    /// Native Rust optimizer (models without an exported opt artifact).
+    Native(Box<dyn Optimizer>),
+}
+
+pub struct BertTrainer<'e> {
+    engine: &'e Engine,
+    manifest: &'e Manifest,
+    pub meta: ModelMeta,
+    pub cfg: TrainConfig,
+    pub pod: Pod,
+    opt: OptPath<'e>,
+    segs: Vec<Seg>,
+    // flat state
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: u64,
+    corpus: Corpus,
+    grad_acc: Vec<f32>,
+    /// (step, ratios) snapshots — Figures 9-14.
+    pub ratio_every: u64,
+}
+
+impl<'e> BertTrainer<'e> {
+    pub fn new(
+        engine: &'e Engine,
+        manifest: &'e Manifest,
+        cfg: TrainConfig,
+    ) -> Result<BertTrainer<'e>> {
+        let meta = manifest.model(&cfg.model)?.clone();
+        let ps = ParamStore::init(&meta, cfg.seed);
+        let n = meta.total_params;
+        let hyper = Hyper {
+            beta1: cfg.beta1,
+            beta2: cfg.beta2,
+            weight_decay: cfg.weight_decay,
+            bias_correction: cfg.bias_correction,
+            norm: optim::Norm::parse(&cfg.norm).context("norm")?,
+            ..Hyper::default()
+        };
+        let opt = match manifest.opt(&cfg.model, &cfg.optimizer) {
+            Ok(a) => OptPath::Artifact(
+                engine
+                    .load(manifest.path(a))
+                    .with_context(|| format!("loading {}", a.file))?,
+            ),
+            Err(_) => OptPath::Native(
+                optim::build(&cfg.optimizer, n, hyper)
+                    .with_context(|| format!("optimizer {}", cfg.optimizer))?,
+            ),
+        };
+        let segs = Seg::from_manifest(&meta.params);
+        let corpus = Corpus::new(meta.vocab);
+        Ok(BertTrainer {
+            engine,
+            manifest,
+            pod: Pod::tpu_v3(cfg.chips),
+            opt,
+            segs,
+            params: ps.flat,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            step: 0,
+            corpus,
+            grad_acc: vec![0.0; n],
+            ratio_every: 25,
+            meta,
+            cfg,
+        })
+    }
+
+    /// Run every stage in order, appending to one log.
+    pub fn train(&mut self, stages: &[Stage]) -> Result<RunLog> {
+        let mut log = RunLog::default();
+        let mut div = DivergenceDetector::new();
+        let t0 = Instant::now();
+        let mut sim_time = if stages.is_empty() { 0.0 } else { log.sim_time() };
+        for stage in stages {
+            sim_time = self.train_stage(stage, &mut log, &mut div, t0, sim_time)?;
+            if div.diverged {
+                break;
+            }
+        }
+        log.diverged = div.diverged;
+        Ok(log)
+    }
+
+    fn train_stage(
+        &mut self,
+        stage: &Stage,
+        log: &mut RunLog,
+        div: &mut DivergenceDetector,
+        t0: Instant,
+        mut sim_time: f64,
+    ) -> Result<f64> {
+        let grad_meta = self.manifest.grad(&self.cfg.model, stage.seq)?;
+        let mb = grad_meta.micro_batch.context("grad micro_batch")?;
+        if stage.global_batch % mb != 0 {
+            bail!(
+                "global batch {} not a multiple of artifact microbatch {mb}",
+                stage.global_batch
+            );
+        }
+        let n_micro = stage.global_batch / mb;
+        let workers = self.cfg.chips.min(n_micro.max(1));
+
+        // Fused path: single-worker single-microbatch steps with the
+        // grad+opt fused artifact (quickstart / kernel benches).
+        let fused = if self.cfg.step_path == StepPath::Fused && n_micro == 1 {
+            self.manifest
+                .step(&self.cfg.model, stage.seq, &self.cfg.optimizer)
+                .ok()
+        } else {
+            None
+        };
+        let fused_exe = match fused {
+            Some(a) => Some(self.engine.load(self.manifest.path(a))?),
+            None => None,
+        };
+        let grad_exe = if fused_exe.is_none() {
+            Some(self.engine.load(self.manifest.path(grad_meta))?)
+        } else {
+            None
+        };
+
+        // Per-worker data streams (stage-scoped; worker identity is stable
+        // so re-sharding across stages keeps streams independent).
+        let mut gens: Vec<MlmGenerator> = (0..workers)
+            .map(|w| {
+                MlmGenerator::new(
+                    self.corpus.clone(),
+                    MlmConfig::new(stage.seq),
+                    self.cfg.seed ^ (stage.seq as u64) << 32,
+                    w as u64,
+                )
+            })
+            .collect();
+
+        let step_sim = self.pod.step_time(&self.meta, stage.global_batch, stage.seq);
+        let n = self.meta.total_params;
+
+        for local in 1..=stage.steps {
+            self.step += 1;
+            let lr = stage.schedule.lr(local);
+            let (loss, ratios) = if let Some(exe) = &fused_exe {
+                let b = gens[0].next_batch(mb);
+                self.run_fused(exe, &b, lr)?
+            } else {
+                // -------- gradient phase over microbatches --------
+                self.grad_acc.fill(0.0);
+                let mut loss_sum = 0.0f64;
+                for mi in 0..n_micro {
+                    let b = gens[mi % workers].next_batch(mb);
+                    let out = grad_exe.as_ref().unwrap().run(&[
+                        runtime::lit_f32(&self.params),
+                        runtime::lit_i32_2d(&b.tokens, mb, stage.seq)?,
+                        runtime::lit_i32_2d(&b.targets, mb, stage.seq)?,
+                        runtime::lit_f32_2d(&b.mask, mb, stage.seq)?,
+                    ])?;
+                    loss_sum += runtime::scalar_f32(&out[0])? as f64;
+                    let g = runtime::vec_f32(&out[1])?;
+                    collective::accumulate(&mut self.grad_acc, &g);
+                }
+                // -------- all-reduce (mean) --------
+                collective::scale(&mut self.grad_acc, 1.0 / n_micro as f32);
+                let loss = (loss_sum / n_micro as f64) as f32;
+                // -------- optimizer phase --------
+                let ratios = self.apply_opt(lr)?;
+                (loss, ratios)
+            };
+
+            sim_time += step_sim;
+            if self.step % self.ratio_every == 0 || self.step == 1 {
+                log.trust_ratios.push((self.step, ratios));
+            }
+            log.push(StepRecord {
+                step: self.step,
+                lr,
+                loss,
+                sim_time,
+                host_time: t0.elapsed().as_secs_f64(),
+            });
+            if div.observe(loss) {
+                break;
+            }
+            let _ = n;
+        }
+        Ok(sim_time)
+    }
+
+    fn run_fused(
+        &mut self,
+        exe: &Executable<'_>,
+        b: &Batch,
+        lr: f32,
+    ) -> Result<(f32, Vec<f32>)> {
+        let out = exe.run(&[
+            runtime::lit_f32(&self.params),
+            runtime::lit_f32(&self.m),
+            runtime::lit_f32(&self.v),
+            runtime::lit_i32_2d(&b.tokens, b.b, b.seq)?,
+            runtime::lit_i32_2d(&b.targets, b.b, b.seq)?,
+            runtime::lit_f32_2d(&b.mask, b.b, b.seq)?,
+            runtime::lit_scalar(lr),
+            runtime::lit_scalar(self.step as f32),
+        ])?;
+        self.params = runtime::vec_f32(&out[0])?;
+        self.m = runtime::vec_f32(&out[1])?;
+        self.v = runtime::vec_f32(&out[2])?;
+        let loss = runtime::scalar_f32(&out[3])?;
+        let ratios = runtime::vec_f32(&out[4])?;
+        Ok((loss, ratios))
+    }
+
+    /// Apply the averaged gradient in `grad_acc` through the optimizer
+    /// artifact (or native fallback).
+    fn apply_opt(&mut self, lr: f32) -> Result<Vec<f32>> {
+        match &mut self.opt {
+            OptPath::Artifact(exe) => {
+                let out = exe.run(&[
+                    runtime::lit_f32(&self.params),
+                    runtime::lit_f32(&self.grad_acc),
+                    runtime::lit_f32(&self.m),
+                    runtime::lit_f32(&self.v),
+                    runtime::lit_scalar(lr),
+                    runtime::lit_scalar(self.step as f32),
+                ])?;
+                self.params = runtime::vec_f32(&out[0])?;
+                self.m = runtime::vec_f32(&out[1])?;
+                self.v = runtime::vec_f32(&out[2])?;
+                runtime::vec_f32(&out[3])
+            }
+            OptPath::Native(opt) => Ok(opt.step(
+                &mut self.params,
+                &self.grad_acc,
+                lr,
+                self.step,
+                &self.segs,
+            )),
+        }
+    }
+
+    /// Held-out dev metric: (mean loss, masked-prediction accuracy) over
+    /// `batches` eval microbatches from a stream disjoint from training
+    /// workers. Stands in for the paper's SQuAD F1 (DESIGN.md).
+    pub fn evaluate(&self, seq: usize, batches: usize) -> Result<(f32, f32)> {
+        let meta = self.manifest.eval(&self.cfg.model, seq)?;
+        let mb = meta.micro_batch.context("eval micro_batch")?;
+        let exe = self.engine.load(self.manifest.path(meta))?;
+        let mut gen = MlmGenerator::new(
+            self.corpus.clone(),
+            MlmConfig::new(seq),
+            self.cfg.seed ^ 0xe7a1_0000,
+            u64::MAX,
+        );
+        let (mut lsum, mut asum) = (0.0f64, 0.0f64);
+        for _ in 0..batches {
+            let b = gen.next_batch(mb);
+            let out = exe.run(&[
+                runtime::lit_f32(&self.params),
+                runtime::lit_i32_2d(&b.tokens, mb, seq)?,
+                runtime::lit_i32_2d(&b.targets, mb, seq)?,
+                runtime::lit_f32_2d(&b.mask, mb, seq)?,
+            ])?;
+            lsum += runtime::scalar_f32(&out[0])? as f64;
+            asum += runtime::scalar_f32(&out[1])? as f64;
+        }
+        Ok((
+            (lsum / batches as f64) as f32,
+            (asum / batches as f64) as f32,
+        ))
+    }
+
+    /// Save params + moments + step (resume support for the two-stage
+    /// recipe, which on the paper's pod ran as separate jobs).
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        crate::model::Checkpoint {
+            step: self.step,
+            params: self.params.clone(),
+            m: self.m.clone(),
+            v: self.v.clone(),
+        }
+        .save(path)
+    }
+
+    /// Restore state saved by `save_checkpoint`; step counting resumes.
+    pub fn load_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let c = crate::model::Checkpoint::load(path)?;
+        anyhow::ensure!(
+            c.params.len() == self.meta.total_params,
+            "checkpoint is for a different model ({} vs {} params)",
+            c.params.len(),
+            self.meta.total_params
+        );
+        self.step = c.step;
+        self.params = c.params;
+        self.m = c.m;
+        self.v = c.v;
+        Ok(())
+    }
+
+    /// Does this model have the artifacts a stage needs?
+    pub fn supports(&self, seq: usize) -> bool {
+        self.manifest.grad(&self.cfg.model, seq).is_ok()
+    }
+
+    pub fn artifact_kinds(&self) -> Vec<ArtifactKind> {
+        self.manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.model == self.cfg.model)
+            .map(|a| a.kind)
+            .collect()
+    }
+}

@@ -1,0 +1,18 @@
+//! The training coordinator — the paper's *system* contribution.
+//!
+//! [`bert::BertTrainer`] drives synchronous data-parallel large-batch
+//! training over the AOT artifacts: shard the global batch into
+//! microbatches, execute the gradient artifact per shard, all-reduce in
+//! Rust, execute the optimizer artifact (the Pallas LAMB kernel), account
+//! simulated pod time, detect divergence. Multi-stage [`bert::Stage`]
+//! lists express the paper's two-stage / mixed-batch BERT recipe with
+//! re-warmup.
+//!
+//! [`native::NativeTrainer`] is the same loop over the native MLP +
+//! Rust optimizers — the fast substrate for the appendix-scale sweeps.
+
+pub mod bert;
+pub mod native;
+
+pub use bert::{BertTrainer, Stage};
+pub use native::{NativeTrainer, NativeTask};

@@ -1,0 +1,223 @@
+//! Native trainer: the MLP/image-task loop used by the appendix-scale
+//! experiments (Tables 3, 5-25; Figures 1-5). Thousands of full runs
+//! complete in seconds — which is what the tuning grids need.
+
+use std::time::Instant;
+
+use crate::data::image::ImageTask;
+use crate::metrics::{DivergenceDetector, RunLog, StepRecord};
+use crate::nn::{Mlp, MlpConfig};
+use crate::optim::{build, Hyper, Optimizer, Seg};
+use crate::schedule::Schedule;
+use crate::util::Rng;
+
+/// A self-contained small-task training setup.
+#[derive(Clone)]
+pub struct NativeTask {
+    pub mlp: MlpConfig,
+    pub task_dim: usize,
+    pub classes: usize,
+    pub task_seed: u64,
+}
+
+impl NativeTask {
+    /// MNIST/LeNet-proxy (Table 7): easy task, all solvers near ceiling —
+    /// matching the paper's ~0.993-everywhere row.
+    pub fn mnist_proxy() -> NativeTask {
+        NativeTask {
+            mlp: MlpConfig::lenet_proxy(32, 10),
+            task_dim: 32,
+            classes: 10,
+            task_seed: 1001,
+        }
+    }
+
+    /// CIFAR/DavidNet-proxy (Table 6 / Figure 4): mid difficulty.
+    pub fn cifar_proxy() -> NativeTask {
+        NativeTask {
+            mlp: MlpConfig::resnet_proxy(64, 24),
+            task_dim: 64,
+            classes: 24,
+            task_seed: 2002,
+        }
+    }
+
+    /// ImageNet/ResNet-50-proxy (Tables 3/5, Figures 1-3): hard task —
+    /// many boundary-adjacent classes, wide per-dimension scale spread.
+    pub fn imagenet_proxy() -> NativeTask {
+        NativeTask {
+            mlp: MlpConfig::resnet_proxy(96, 48),
+            task_dim: 96,
+            classes: 48,
+            task_seed: 3003,
+        }
+    }
+}
+
+/// One full training run on the native substrate.
+pub struct NativeTrainer {
+    pub task: ImageTask,
+    pub mlp: Mlp,
+    segs: Vec<Seg>,
+    opt: Box<dyn Optimizer>,
+    pub schedule: Schedule,
+    rng: Rng,
+    grads: Vec<f32>,
+    // held-out test set, generated once
+    test_x: Vec<f32>,
+    test_y: Vec<u32>,
+}
+
+impl NativeTrainer {
+    pub fn new(
+        spec: &NativeTask,
+        optimizer: &str,
+        hyper: Hyper,
+        schedule: Schedule,
+        seed: u64,
+    ) -> NativeTrainer {
+        let task = ImageTask::new(spec.task_dim, spec.classes, spec.task_seed);
+        let mlp = Mlp::new(spec.mlp.clone(), seed);
+        let segs = mlp.segs().to_vec();
+        let opt = build(optimizer, mlp.n_params(), hyper)
+            .unwrap_or_else(|| panic!("unknown optimizer {optimizer}"));
+        let mut rng = Rng::new(seed ^ 0xda7a);
+        // Fixed held-out set from an independent stream.
+        let mut test_rng = Rng::new(spec.task_seed ^ 0x7e57);
+        let (mut tx, mut ty) = (Vec::new(), Vec::new());
+        task.sample(&mut test_rng, 2048, &mut tx, &mut ty);
+        let n = mlp.n_params();
+        let _ = &mut rng;
+        NativeTrainer {
+            task,
+            mlp,
+            segs,
+            opt,
+            schedule,
+            rng,
+            grads: vec![0.0; n],
+            test_x: tx,
+            test_y: ty,
+        }
+    }
+
+    /// Train `steps` steps at `batch`; returns the run log with
+    /// `final_metric` = held-out accuracy (the table cell value).
+    pub fn train(&mut self, steps: u64, batch: usize) -> RunLog {
+        self.train_with_eval(steps, batch, 0).0
+    }
+
+    /// As `train`, additionally recording `(step, test_loss, test_acc)`
+    /// every `eval_every` steps (0 = never) — feeds the figure drivers
+    /// (accuracy curves, Figure 5's loss-vs-accuracy mismatch).
+    pub fn train_with_eval(
+        &mut self,
+        steps: u64,
+        batch: usize,
+        eval_every: u64,
+    ) -> (RunLog, Vec<(u64, f32, f32)>) {
+        let mut log = RunLog::default();
+        let mut evals = Vec::new();
+        let mut div = DivergenceDetector::new();
+        let t0 = Instant::now();
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        for t in 1..=steps {
+            self.task.sample(&mut self.rng, batch, &mut x, &mut y);
+            let (loss, _) = self.mlp.loss_grad(&x, &y, &mut self.grads);
+            let lr = self.schedule.lr(t);
+            let ratios =
+                self.opt.step(&mut self.mlp.params, &self.grads, lr, t, &self.segs);
+            if t % 50 == 0 || t == 1 {
+                log.trust_ratios.push((t, ratios));
+            }
+            log.push(StepRecord {
+                step: t,
+                lr,
+                loss,
+                sim_time: 0.0,
+                host_time: t0.elapsed().as_secs_f64(),
+            });
+            if eval_every > 0 && (t % eval_every == 0 || t == 1) {
+                let (tl, ta) = self.mlp.evaluate(&self.test_x, &self.test_y);
+                evals.push((t, tl, ta));
+            }
+            if div.observe(loss) {
+                break;
+            }
+        }
+        log.diverged = div.diverged
+            || !self.mlp.params.iter().all(|p| p.is_finite());
+        log.final_metric = if log.diverged {
+            None
+        } else {
+            Some(self.test_accuracy())
+        };
+        (log, evals)
+    }
+
+    pub fn test_accuracy(&self) -> f32 {
+        self.mlp.evaluate(&self.test_x, &self.test_y).1
+    }
+
+    pub fn test_loss(&self) -> f32 {
+        self.mlp.evaluate(&self.test_x, &self.test_y).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lamb_trains_mnist_proxy() {
+        let spec = NativeTask::mnist_proxy();
+        let sched = Schedule::WarmupPoly {
+            base: 0.02,
+            warmup: 20,
+            total: 400,
+            power: 1.0,
+        };
+        let mut tr =
+            NativeTrainer::new(&spec, "lamb", Hyper::default(), sched, 0);
+        let log = tr.train(400, 128);
+        assert!(!log.diverged);
+        let acc = log.final_metric.unwrap();
+        assert!(acc > 0.7, "acc {acc}");
+        // loss should fall substantially
+        assert!(log.tail_loss(20) < 0.7 * log.records[0].loss);
+    }
+
+    #[test]
+    fn absurd_lr_diverges_and_is_detected() {
+        let spec = NativeTask::mnist_proxy();
+        let sched = Schedule::Constant { lr: 500.0 };
+        let mut tr = NativeTrainer::new(
+            &spec,
+            "momentum",
+            Hyper { l2_reg: 0.0, ..Hyper::default() },
+            sched,
+            0,
+        );
+        let log = tr.train(300, 64);
+        assert!(log.diverged);
+        assert!(log.final_metric.is_none());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = NativeTask::mnist_proxy();
+        let mk = || {
+            NativeTrainer::new(
+                &spec,
+                "adamw",
+                Hyper::default(),
+                Schedule::Constant { lr: 0.005 },
+                7,
+            )
+        };
+        let a = mk().train(50, 32);
+        let b = mk().train(50, 32);
+        assert_eq!(a.losses(), b.losses());
+        assert_eq!(a.final_metric, b.final_metric);
+    }
+}

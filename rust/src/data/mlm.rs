@@ -1,0 +1,154 @@
+//! Masked-LM batching: BERT's 15% masking with the 80/10/10
+//! mask/random/keep rule (Devlin et al. 2018), over the synthetic corpus.
+//!
+//! Batches are produced per *worker shard*: worker `w` of `W` draws from
+//! an independent RNG stream so the data-parallel coordinator sees the
+//! same global batch regardless of how many microbatches it is split
+//! into — exactly the property synchronous large-batch SGD relies on.
+
+use super::corpus::{Corpus, MASK, N_SPECIAL};
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct MlmConfig {
+    pub seq: usize,
+    pub mask_prob: f64,
+}
+
+impl MlmConfig {
+    pub fn new(seq: usize) -> MlmConfig {
+        MlmConfig { seq, mask_prob: 0.15 }
+    }
+}
+
+/// One microbatch, flattened row-major [b, seq] (PJRT literal layout).
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub b: usize,
+    pub seq: usize,
+}
+
+impl Batch {
+    pub fn masked_positions(&self) -> usize {
+        self.mask.iter().filter(|&&m| m > 0.0).count()
+    }
+}
+
+/// Deterministic batch stream for one worker shard.
+pub struct MlmGenerator {
+    corpus: Corpus,
+    cfg: MlmConfig,
+    rng: Rng,
+    doc: Vec<i32>,
+}
+
+impl MlmGenerator {
+    /// `seed` identifies the run; `worker` the shard. Streams for
+    /// different (seed, worker) pairs are independent.
+    pub fn new(corpus: Corpus, cfg: MlmConfig, seed: u64, worker: u64) -> Self {
+        let mut root = Rng::new(seed ^ 0x5eed_0000);
+        let rng = root.fork(worker.wrapping_add(1));
+        MlmGenerator { corpus, cfg, rng, doc: Vec::new() }
+    }
+
+    pub fn next_batch(&mut self, b: usize) -> Batch {
+        let s = self.cfg.seq;
+        let vocab = self.corpus.vocab as u64;
+        let mut tokens = Vec::with_capacity(b * s);
+        let mut targets = Vec::with_capacity(b * s);
+        let mut mask = Vec::with_capacity(b * s);
+        for _ in 0..b {
+            self.corpus.sample_doc(&mut self.rng, &mut self.doc, s);
+            for &orig in &self.doc {
+                targets.push(orig);
+                let masked = orig >= N_SPECIAL
+                    && self.rng.uniform() < self.cfg.mask_prob;
+                if masked {
+                    mask.push(1.0);
+                    let r = self.rng.uniform();
+                    if r < 0.8 {
+                        tokens.push(MASK);
+                    } else if r < 0.9 {
+                        // random replacement from the non-special band
+                        let t = N_SPECIAL as u64
+                            + self.rng.below(vocab - N_SPECIAL as u64);
+                        tokens.push(t as i32);
+                    } else {
+                        tokens.push(orig); // keep
+                    }
+                } else {
+                    mask.push(0.0);
+                    tokens.push(orig);
+                }
+            }
+        }
+        Batch { tokens, targets, mask, b, seq: s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(seed: u64, worker: u64) -> MlmGenerator {
+        MlmGenerator::new(Corpus::new(512), MlmConfig::new(64), seed, worker)
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let b = gen(0, 0).next_batch(4);
+        assert_eq!(b.tokens.len(), 4 * 64);
+        assert_eq!(b.targets.len(), 4 * 64);
+        assert_eq!(b.mask.len(), 4 * 64);
+    }
+
+    #[test]
+    fn mask_rate_near_fifteen_percent() {
+        let mut g = gen(1, 0);
+        let mut masked = 0usize;
+        let mut total = 0usize;
+        for _ in 0..20 {
+            let b = g.next_batch(8);
+            masked += b.masked_positions();
+            total += b.tokens.len();
+        }
+        let rate = masked as f64 / total as f64;
+        assert!((0.10..0.20).contains(&rate), "rate {rate}");
+    }
+
+    #[test]
+    fn masked_positions_altered_or_kept() {
+        let b = gen(2, 0).next_batch(8);
+        let mut mask_tok = 0;
+        for i in 0..b.tokens.len() {
+            if b.mask[i] > 0.0 {
+                if b.tokens[i] == MASK {
+                    mask_tok += 1;
+                }
+            } else {
+                assert_eq!(b.tokens[i], b.targets[i]);
+            }
+        }
+        // ~80% of masked positions become [MASK]
+        let frac = mask_tok as f64 / b.masked_positions() as f64;
+        assert!((0.6..0.95).contains(&frac), "frac {frac}");
+    }
+
+    #[test]
+    fn workers_get_distinct_streams() {
+        let a = gen(3, 0).next_batch(2);
+        let b = gen(3, 1).next_batch(2);
+        assert_ne!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn same_worker_deterministic() {
+        let a = gen(4, 2).next_batch(2);
+        let b = gen(4, 2).next_batch(2);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.mask, b.mask);
+    }
+}

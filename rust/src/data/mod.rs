@@ -1,0 +1,15 @@
+//! Synthetic data pipeline.
+//!
+//! Substitutes the paper's Wikipedia+BooksCorpus (3.3B words) with a
+//! deterministic Zipfian language corpus (see DESIGN.md §Substitutions):
+//! the optimizer comparison depends on layerwise gradient scale structure,
+//! not on English text, and a Zipfian MLM task exercises the identical
+//! code path. Also provides the synthetic image-classification task used
+//! by the ResNet/CIFAR/MNIST-proxy experiments (native trainer).
+
+pub mod corpus;
+pub mod image;
+pub mod mlm;
+
+pub use corpus::Corpus;
+pub use mlm::{Batch, MlmConfig, MlmGenerator};

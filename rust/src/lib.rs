@@ -1,0 +1,33 @@
+//! # lamb-train
+//!
+//! Full-system reproduction of **"Large Batch Optimization for Deep
+//! Learning: Training BERT in 76 minutes"** (You et al., ICLR 2020) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! This crate is Layer 3: the synchronous data-parallel training
+//! coordinator (the system behind the paper's headline result), plus every
+//! substrate it needs — native optimizer implementations (LAMB, LARS and
+//! the tuned baselines), LR schedules with the paper's sqrt-scaling and
+//! warmup rules, a ring all-reduce, a TPUv3-pod performance model, the
+//! synthetic corpus/MLM data pipeline, a native tiny-NN trainer for the
+//! appendix-scale sweeps, and the PJRT runtime that executes the
+//! AOT-compiled JAX/Pallas artifacts from `artifacts/`.
+//!
+//! Python never runs on the step path: `make artifacts` lowers the L2/L1
+//! graphs once; everything after that is this crate.
+
+pub mod cluster;
+pub mod collective;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod manifest;
+pub mod metrics;
+pub mod model;
+pub mod nn;
+pub mod optim;
+pub mod repro;
+pub mod runtime;
+pub mod schedule;
+pub mod sweep;
+pub mod util;

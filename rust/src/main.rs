@@ -1,0 +1,234 @@
+//! `lamb-train` — leader entrypoint.
+//!
+//! Subcommands:
+//!   info                        manifest / artifact summary
+//!   train [--config F] [k=v]    one training run over the AOT artifacts
+//!   repro <exp|all> [--scale S] regenerate a paper table/figure
+//!   sweep --optimizer O [...]   LR grid on the native substrate
+//!
+//! `k=v` overrides use the config's dotted keys, e.g.
+//! `optimizer.name="lars"` `batch.global=256` `model.name="bert-small"`.
+
+use anyhow::{bail, Context, Result};
+
+use lamb_train::config::TrainConfig;
+use lamb_train::coordinator::{BertTrainer, NativeTask, Stage};
+use lamb_train::manifest::Manifest;
+use lamb_train::metrics::{fmt_duration, render_table};
+use lamb_train::repro::{self, ReproCtx};
+use lamb_train::runtime::Engine;
+use lamb_train::sweep::{self, GridSpec};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: lamb-train <info|train|repro|sweep> [args]\n\
+         \n\
+         lamb-train info [--artifacts DIR]\n\
+         lamb-train train [--config FILE] [section.key=value ...]\n\
+         lamb-train repro <{}|all> [--scale S] [--out DIR] [--artifacts DIR]\n\
+         lamb-train sweep --optimizer NAME [--task mnist|cifar|imagenet]\n\
+         \u{20}                 [--steps N] [--batch B]",
+        repro::EXPERIMENTS.join("|")
+    );
+    std::process::exit(2)
+}
+
+/// Minimal flag parser: `--key value` pairs + bare `k=v` overrides +
+/// positionals.
+struct Args {
+    flags: Vec<(String, String)>,
+    overrides: Vec<(String, String)>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = Vec::new();
+        let mut overrides = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let val = argv
+                    .get(i + 1)
+                    .with_context(|| format!("--{name} needs a value"))?;
+                flags.push((name.to_string(), val.clone()));
+                i += 2;
+            } else if let Some((k, v)) = a.split_once('=') {
+                overrides.push((k.to_string(), v.to_string()));
+                i += 1;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Args { flags, overrides, positional })
+    }
+
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.flag("artifacts").unwrap_or("artifacts");
+    let man = Manifest::load(dir)?;
+    println!("artifacts: {dir}");
+    let mut rows = Vec::new();
+    for (name, m) in &man.models {
+        rows.push(vec![
+            name.clone(),
+            format!("{}", m.total_params),
+            format!("{}x{} h{} ff{}", m.layers, m.hidden, m.heads, m.ff),
+            m.params.len().to_string(),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(&["model", "params", "shape", "tensors"], &rows)
+    );
+    let mut rows = Vec::new();
+    for a in &man.artifacts {
+        rows.push(vec![
+            a.file.clone(),
+            format!("{:?}", a.kind),
+            a.optimizer.clone().unwrap_or_default(),
+            a.seq.map(|s| s.to_string()).unwrap_or_default(),
+            a.micro_batch.map(|b| b.to_string()).unwrap_or_default(),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(&["artifact", "kind", "opt", "seq", "mb"], &rows)
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = TrainConfig::load(args.flag("config"), &args.overrides)?;
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    println!(
+        "training {} with {} | batch {} x {} steps on {} simulated chips",
+        cfg.model, cfg.optimizer, cfg.global_batch, cfg.steps, cfg.chips
+    );
+    let stage = Stage {
+        seq: cfg.seq,
+        global_batch: cfg.global_batch,
+        steps: cfg.steps,
+        schedule: cfg.schedule(),
+    };
+    let out_dir = cfg.out_dir.clone();
+    let (seq, log_every, eval_every) = (cfg.seq, cfg.log_every, cfg.eval_every);
+    let mut tr = BertTrainer::new(&engine, &manifest, cfg)?;
+    if let Some(p) = args.flag("resume") {
+        tr.load_checkpoint(p)?;
+        println!("resumed from {p} at step {}", tr.step);
+    }
+    let log = tr.train(&[stage])?;
+    if let Some(p) = args.flag("save-checkpoint") {
+        tr.save_checkpoint(p)?;
+        println!("checkpoint: {p}");
+    }
+    for r in &log.records {
+        if r.step % log_every.max(1) == 0 || r.step == 1 {
+            println!(
+                "step {:>6}  lr {:.5}  loss {:.4}  sim {}  host {:.1}s",
+                r.step,
+                r.lr,
+                r.loss,
+                fmt_duration(r.sim_time),
+                r.host_time
+            );
+        }
+    }
+    if eval_every > 0 {
+        let (dl, da) = tr.evaluate(seq, 8)?;
+        println!("dev: loss {dl:.4} acc {da:.4}");
+    }
+    println!(
+        "{} | simulated pod time {} | host {}",
+        if log.diverged { "DIVERGED" } else { "done" },
+        fmt_duration(log.sim_time()),
+        fmt_duration(log.records.last().map(|r| r.host_time).unwrap_or(0.0))
+    );
+    std::fs::create_dir_all(&out_dir)?;
+    let path = format!("{out_dir}/train_run.csv");
+    log.write_csv(&path)?;
+    println!("log: {path}");
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let which = match args.positional.first() {
+        Some(w) => w.as_str(),
+        None => usage(),
+    };
+    let ctx = ReproCtx {
+        out_dir: args.flag("out").unwrap_or("results").into(),
+        artifacts: args.flag("artifacts").unwrap_or("artifacts").into(),
+        scale: args
+            .flag("scale")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or(1.0),
+        seed: args
+            .flag("seed")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or(42),
+    };
+    repro::run(which, &ctx)?;
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let optimizer = args.flag("optimizer").context("--optimizer required")?;
+    let task = match args.flag("task").unwrap_or("cifar") {
+        "mnist" => NativeTask::mnist_proxy(),
+        "cifar" => NativeTask::cifar_proxy(),
+        "imagenet" => NativeTask::imagenet_proxy(),
+        other => bail!("unknown task {other:?}"),
+    };
+    let steps: u64 =
+        args.flag("steps").map(|s| s.parse()).transpose()?.unwrap_or(300);
+    let batch: usize =
+        args.flag("batch").map(|s| s.parse()).transpose()?.unwrap_or(512);
+    let spec = GridSpec::lr_only(optimizer, sweep::LR_SPACE_SMALL, steps, batch);
+    let cells = sweep::run_grid(&task, &spec);
+    let mut rows = Vec::new();
+    for c in &cells {
+        rows.push(vec![
+            format!("{}", c.lr),
+            c.metric
+                .map(|m| format!("{m:.4}"))
+                .unwrap_or_else(|| "diverge".into()),
+        ]);
+    }
+    println!("{}", render_table(&["lr", "accuracy"], &rows));
+    if let Some(b) = sweep::best(&cells) {
+        println!("best: lr {} -> {:.4}", b.lr, b.metric.unwrap());
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = match argv.first() {
+        Some(c) => c.as_str(),
+        None => usage(),
+    };
+    let rest = Args::parse(&argv[1..])?;
+    match cmd {
+        "info" => cmd_info(&rest),
+        "train" => cmd_train(&rest),
+        "repro" => cmd_repro(&rest),
+        "sweep" => cmd_sweep(&rest),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,319 @@
+//! `artifacts/manifest.json` — the contract between the Python compile
+//! path and this coordinator. Parsed once at startup; everything the Rust
+//! side knows about models (parameter segment table, shapes, init) and
+//! artifacts (file names, I/O signatures) comes from here.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parameter initializer, mirrored from python `ParamSpec.init`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Init {
+    Normal(f32),
+    Zeros,
+    Ones,
+}
+
+impl Init {
+    fn parse(s: &str) -> Result<Init> {
+        if let Some(std) = s.strip_prefix("normal:") {
+            return Ok(Init::Normal(std.parse()?));
+        }
+        match s {
+            "zeros" => Ok(Init::Zeros),
+            "ones" => Ok(Init::Ones),
+            _ => bail!("unknown init spec {s:?}"),
+        }
+    }
+}
+
+/// One layer/tensor segment of the flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct ParamSeg {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+    pub offset: usize,
+    pub size: usize,
+    /// Weight decay applies (false for biases / layer-norm).
+    pub decay: bool,
+    /// Layerwise adaptation applies (trust ratio pinned to 1 when false).
+    pub adapt: bool,
+}
+
+/// A BERT-family model description.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ff: usize,
+    pub max_seq: usize,
+    pub total_params: usize,
+    pub params: Vec<ParamSeg>,
+}
+
+impl ModelMeta {
+    /// Approximate forward+backward FLOPs per token (the 6N rule plus the
+    /// attention term) — feeds the pod performance model.
+    pub fn train_flops_per_token(&self, seq: usize) -> f64 {
+        let n = self.total_params as f64;
+        // 6N for dense matmuls + 12*L*H*S for attention scores/context.
+        6.0 * n + 12.0 * (self.layers * self.hidden * seq) as f64
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// (params, tokens, targets, mask) -> (loss, grads)
+    Grad,
+    /// (params, tokens, targets, mask) -> (loss, acc)
+    Eval,
+    /// (params, grads, m, v, lr, step) -> (params', m', v', ratios)
+    Opt,
+    /// fused train step: (params, m, v, batch..., lr, step)
+    /// -> (params', m', v', loss, ratios)
+    Step,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSig {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub kind: ArtifactKind,
+    pub model: String,
+    pub seq: Option<usize>,
+    pub micro_batch: Option<usize>,
+    pub optimizer: Option<String>,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+fn sigs(j: &Json) -> Result<Vec<TensorSig>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("sig list not an array"))?
+        .iter()
+        .map(|s| {
+            Ok(TensorSig {
+                name: s.get("name").and_then(Json::as_str).unwrap_or("").into(),
+                dtype: s.get("dtype").and_then(Json::as_str).unwrap_or("f32").into(),
+                shape: s
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut models = BTreeMap::new();
+        for (name, mj) in j
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing models"))?
+        {
+            let cfg = mj.get("config").ok_or_else(|| anyhow!("model config"))?;
+            let gu = |k: &str| -> Result<usize> {
+                cfg.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("config field {k}"))
+            };
+            let mut params = Vec::new();
+            for p in mj
+                .get("params")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("model params"))?
+            {
+                params.push(ParamSeg {
+                    name: p
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("param name"))?
+                        .into(),
+                    shape: p
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                        .unwrap_or_default(),
+                    init: Init::parse(
+                        p.get("init").and_then(Json::as_str).unwrap_or("zeros"),
+                    )?,
+                    offset: p.get("offset").and_then(Json::as_usize).unwrap_or(0),
+                    size: p.get("size").and_then(Json::as_usize).unwrap_or(0),
+                    decay: p.get("decay").and_then(Json::as_bool).unwrap_or(true),
+                    adapt: p.get("adapt").and_then(Json::as_bool).unwrap_or(true),
+                });
+            }
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    name: name.clone(),
+                    vocab: gu("vocab")?,
+                    hidden: gu("hidden")?,
+                    layers: gu("layers")?,
+                    heads: gu("heads")?,
+                    ff: gu("ff")?,
+                    max_seq: gu("max_seq")?,
+                    total_params: mj
+                        .get("total_params")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("total_params"))?,
+                    params,
+                },
+            );
+        }
+
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let kind = match a.get("kind").and_then(Json::as_str) {
+                Some("grad") => ArtifactKind::Grad,
+                Some("eval") => ArtifactKind::Eval,
+                Some("opt") => ArtifactKind::Opt,
+                Some("step") => ArtifactKind::Step,
+                k => bail!("unknown artifact kind {k:?}"),
+            };
+            artifacts.push(ArtifactMeta {
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact file"))?
+                    .into(),
+                kind,
+                model: a
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .into(),
+                seq: a.get("seq").and_then(Json::as_usize),
+                micro_batch: a.get("micro_batch").and_then(Json::as_usize),
+                optimizer: a
+                    .get("optimizer")
+                    .and_then(Json::as_str)
+                    .map(String::from),
+                inputs: sigs(a.get("inputs").unwrap_or(&Json::Arr(vec![])))?,
+                outputs: sigs(a.get("outputs").unwrap_or(&Json::Arr(vec![])))?,
+            });
+        }
+
+        Ok(Manifest { dir, models, artifacts })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()))
+    }
+
+    fn find(
+        &self,
+        kind: ArtifactKind,
+        model: &str,
+        seq: Option<usize>,
+        opt: Option<&str>,
+    ) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| {
+                a.kind == kind
+                    && a.model == model
+                    && (seq.is_none() || a.seq == seq)
+                    && (opt.is_none() || a.optimizer.as_deref() == opt)
+            })
+            .ok_or_else(|| {
+                anyhow!(
+                    "no {kind:?} artifact for model={model} seq={seq:?} opt={opt:?}"
+                )
+            })
+    }
+
+    pub fn grad(&self, model: &str, seq: usize) -> Result<&ArtifactMeta> {
+        self.find(ArtifactKind::Grad, model, Some(seq), None)
+    }
+
+    pub fn eval(&self, model: &str, seq: usize) -> Result<&ArtifactMeta> {
+        self.find(ArtifactKind::Eval, model, Some(seq), None)
+    }
+
+    pub fn opt(&self, model: &str, optimizer: &str) -> Result<&ArtifactMeta> {
+        self.find(ArtifactKind::Opt, model, None, Some(optimizer))
+    }
+
+    pub fn step(
+        &self,
+        model: &str,
+        seq: usize,
+        optimizer: &str,
+    ) -> Result<&ArtifactMeta> {
+        self.find(ArtifactKind::Step, model, Some(seq), Some(optimizer))
+    }
+
+    pub fn path(&self, a: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_parse() {
+        assert_eq!(Init::parse("normal:0.02").unwrap(), Init::Normal(0.02));
+        assert_eq!(Init::parse("zeros").unwrap(), Init::Zeros);
+        assert_eq!(Init::parse("ones").unwrap(), Init::Ones);
+        assert!(Init::parse("uniform").is_err());
+    }
+
+    #[test]
+    fn flops_model_monotone_in_params() {
+        let mk = |n: usize| ModelMeta {
+            name: "m".into(),
+            vocab: 100,
+            hidden: 8,
+            layers: 2,
+            heads: 2,
+            ff: 16,
+            max_seq: 128,
+            total_params: n,
+            params: vec![],
+        };
+        assert!(
+            mk(2_000_000).train_flops_per_token(128)
+                > mk(1_000_000).train_flops_per_token(128)
+        );
+    }
+}

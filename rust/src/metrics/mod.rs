@@ -1,0 +1,254 @@
+//! Run metrics: per-step records, divergence detection (the "diverge"
+//! cells of Tables 2 and 8), loss-curve logging for the figure
+//! reproductions, and CSV emission under `results/`.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One training step's observables.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: u64,
+    pub lr: f32,
+    pub loss: f32,
+    /// Simulated pod wall-clock up to and including this step (seconds).
+    pub sim_time: f64,
+    /// Host wall-clock (seconds since run start).
+    pub host_time: f64,
+}
+
+/// Divergence detector per Tables 2/8: non-finite loss, or loss exceeding
+/// `factor` x the initial plateau for `patience` consecutive steps.
+#[derive(Clone, Debug)]
+pub struct DivergenceDetector {
+    initial: Option<f32>,
+    factor: f32,
+    patience: u32,
+    bad_streak: u32,
+    pub diverged: bool,
+}
+
+impl DivergenceDetector {
+    pub fn new() -> DivergenceDetector {
+        DivergenceDetector {
+            initial: None,
+            factor: 1.5,
+            patience: 20,
+            bad_streak: 0,
+            diverged: false,
+        }
+    }
+
+    /// Feed one loss; returns true once diverged (sticky).
+    pub fn observe(&mut self, loss: f32) -> bool {
+        if self.diverged {
+            return true;
+        }
+        if !loss.is_finite() {
+            self.diverged = true;
+            return true;
+        }
+        let init = *self.initial.get_or_insert(loss);
+        if loss > init * self.factor {
+            self.bad_streak += 1;
+            if self.bad_streak >= self.patience {
+                self.diverged = true;
+            }
+        } else {
+            self.bad_streak = 0;
+        }
+        self.diverged
+    }
+}
+
+impl Default for DivergenceDetector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Accumulated log for one run.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub records: Vec<StepRecord>,
+    pub trust_ratios: Vec<(u64, Vec<f32>)>,
+    pub final_metric: Option<f32>,
+    pub diverged: bool,
+}
+
+impl RunLog {
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn losses(&self) -> Vec<f32> {
+        self.records.iter().map(|r| r.loss).collect()
+    }
+
+    /// Mean loss over the last `k` records (smoothed final loss).
+    pub fn tail_loss(&self, k: usize) -> f32 {
+        let n = self.records.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let k = k.min(n).max(1);
+        self.records[n - k..].iter().map(|r| r.loss).sum::<f32>() / k as f32
+    }
+
+    pub fn sim_time(&self) -> f64 {
+        self.records.last().map(|r| r.sim_time).unwrap_or(0.0)
+    }
+
+    /// Write `step,lr,loss,sim_time,host_time` CSV.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {path:?}"))?;
+        writeln!(f, "step,lr,loss,sim_time,host_time")?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{},{},{},{},{}",
+                r.step, r.lr, r.loss, r.sim_time, r.host_time
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Write trust-ratio snapshots: `step,seg<idx>,ratio` rows.
+    pub fn write_ratios_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,segment,ratio")?;
+        for (step, ratios) in &self.trust_ratios {
+            for (i, r) in ratios.iter().enumerate() {
+                writeln!(f, "{step},{i},{r}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Render an aligned text table (paper-style output for `repro`).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, c) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: Vec<String>, widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+        }
+        line.push('\n');
+        line
+    };
+    out.push_str(&fmt_row(
+        headers.iter().map(|s| s.to_string()).collect(),
+        &widths,
+    ));
+    let mut sep = String::from("|");
+    for w in &widths {
+        sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+    }
+    sep.push('\n');
+    out.push_str(&sep);
+    for row in rows {
+        out.push_str(&fmt_row(row.clone(), &widths));
+    }
+    out
+}
+
+/// Format seconds the way Table 1 mixes units (e.g. "81.4h", "76.19m").
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 3600.0 * 3.0 {
+        format!("{:.1}h", secs / 3600.0)
+    } else if secs >= 60.0 {
+        format!("{:.1}m", secs / 60.0)
+    } else {
+        format!("{secs:.1}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divergence_on_nan() {
+        let mut d = DivergenceDetector::new();
+        assert!(!d.observe(5.0));
+        assert!(d.observe(f32::NAN));
+        assert!(d.observe(1.0)); // sticky
+    }
+
+    #[test]
+    fn divergence_needs_patience() {
+        let mut d = DivergenceDetector::new();
+        d.observe(1.0);
+        for _ in 0..19 {
+            assert!(!d.observe(10.0));
+        }
+        assert!(d.observe(10.0));
+    }
+
+    #[test]
+    fn recovery_resets_streak() {
+        let mut d = DivergenceDetector::new();
+        d.observe(1.0);
+        for _ in 0..15 {
+            d.observe(10.0);
+        }
+        d.observe(1.0); // recovered
+        for _ in 0..19 {
+            assert!(!d.observe(10.0));
+        }
+    }
+
+    #[test]
+    fn tail_loss_mean() {
+        let mut log = RunLog::default();
+        for (i, l) in [4.0, 3.0, 2.0, 1.0].iter().enumerate() {
+            log.push(StepRecord {
+                step: i as u64 + 1,
+                lr: 0.1,
+                loss: *l,
+                sim_time: 0.0,
+                host_time: 0.0,
+            });
+        }
+        assert_eq!(log.tail_loss(2), 1.5);
+        assert_eq!(log.tail_loss(100), 2.5);
+    }
+
+    #[test]
+    fn table_rendering_aligns() {
+        let t = render_table(
+            &["a", "bbbb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(fmt_duration(30.0), "30.0s");
+        assert_eq!(fmt_duration(4572.0), "76.2m");
+        assert_eq!(fmt_duration(293_040.0), "81.4h");
+    }
+}

@@ -1,0 +1,175 @@
+//! Checkpointing: save/restore the flat parameter vector and optimizer
+//! moments. Binary format, versioned, with integrity checks — enough for
+//! the two-stage BERT recipe to be resumed mid-run (the paper's 9/10 +
+//! 1/10 phases were separate jobs on the pod).
+//!
+//! Layout (little-endian):
+//!   magic "LMBCKPT1" | step u64 | n u64 | params [f32; n]
+//!   | m [f32; n] | v [f32; n] | checksum u64 (FNV-1a over payload)
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"LMBCKPT1";
+
+pub struct Checkpoint {
+    pub step: u64,
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+fn fnv1a(data: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        anyhow::ensure!(
+            self.params.len() == self.m.len() && self.m.len() == self.v.len(),
+            "state length mismatch"
+        );
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&self.step.to_le_bytes());
+        payload.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
+        payload.extend_from_slice(&f32s_to_bytes(&self.params));
+        payload.extend_from_slice(&f32s_to_bytes(&self.m));
+        payload.extend_from_slice(&f32s_to_bytes(&self.v));
+        let sum = fnv1a(&payload);
+        // write to a temp file then rename: a crash mid-save must not
+        // destroy the previous checkpoint
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {tmp:?}"))?;
+            f.write_all(MAGIC)?;
+            f.write_all(&payload)?;
+            f.write_all(&sum.to_le_bytes())?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {path:?}"))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?}: not a lamb-train checkpoint");
+        }
+        let mut rest = Vec::new();
+        f.read_to_end(&mut rest)?;
+        if rest.len() < 8 + 8 + 8 {
+            bail!("{path:?}: truncated checkpoint");
+        }
+        let (payload, sum_bytes) = rest.split_at(rest.len() - 8);
+        let want = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+        if fnv1a(payload) != want {
+            bail!("{path:?}: checksum mismatch (corrupt checkpoint)");
+        }
+        let step = u64::from_le_bytes(payload[0..8].try_into().unwrap());
+        let n = u64::from_le_bytes(payload[8..16].try_into().unwrap()) as usize;
+        let body = &payload[16..];
+        if body.len() != 3 * n * 4 {
+            bail!("{path:?}: wrong payload size for n={n}");
+        }
+        Ok(Checkpoint {
+            step,
+            params: bytes_to_f32s(&body[0..n * 4]),
+            m: bytes_to_f32s(&body[n * 4..2 * n * 4]),
+            v: bytes_to_f32s(&body[2 * n * 4..]),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("lamb_ckpt_{name}"))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = Checkpoint {
+            step: 123,
+            params: vec![1.0, -2.5, 3.25],
+            m: vec![0.1, 0.2, 0.3],
+            v: vec![0.01, 0.02, 0.03],
+        };
+        let p = tmp("roundtrip.bin");
+        c.save(&p).unwrap();
+        let d = Checkpoint::load(&p).unwrap();
+        assert_eq!(d.step, 123);
+        assert_eq!(d.params, c.params);
+        assert_eq!(d.m, c.m);
+        assert_eq!(d.v, c.v);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let c = Checkpoint {
+            step: 1,
+            params: vec![1.0; 16],
+            m: vec![0.0; 16],
+            v: vec![0.0; 16],
+        };
+        let p = tmp("corrupt.bin");
+        c.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let p = tmp("magic.bin");
+        std::fs::write(&p, b"NOTACKPTxxxxxxxxxxxxxxxxxxxx").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let c = Checkpoint {
+            step: 1,
+            params: vec![1.0; 8],
+            m: vec![0.0; 8],
+            v: vec![0.0; 8],
+        };
+        let p = tmp("trunc.bin");
+        c.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 20]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+}

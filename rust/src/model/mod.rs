@@ -1,0 +1,139 @@
+//! Host-side model state: the flat parameter vector and optimizer moment
+//! buffers, initialized according to the manifest's segment table.
+//!
+//! The layout contract (offsets, sizes, init, decay/adapt flags) comes
+//! from `manifest.json`; this module owns allocation and initialization so
+//! the Python side never has to ship tensors.
+
+pub mod checkpoint;
+
+pub use checkpoint::Checkpoint;
+
+use crate::manifest::{Init, ModelMeta, ParamSeg};
+use crate::util::Rng;
+
+/// Flat parameter vector + metadata.
+pub struct ParamStore {
+    pub flat: Vec<f32>,
+    pub segs: Vec<ParamSeg>,
+}
+
+impl ParamStore {
+    /// Initialize per the manifest: `normal:<std>` matrices, zero biases,
+    /// unit layer-norm scales. Deterministic in `seed`.
+    pub fn init(meta: &ModelMeta, seed: u64) -> ParamStore {
+        let mut rng = Rng::new(seed);
+        let mut flat = vec![0.0f32; meta.total_params];
+        for seg in &meta.params {
+            let dst = &mut flat[seg.offset..seg.offset + seg.size];
+            match seg.init {
+                Init::Normal(std) => {
+                    for x in dst.iter_mut() {
+                        *x = rng.normal_f32(std);
+                    }
+                }
+                Init::Ones => dst.fill(1.0),
+                Init::Zeros => {}
+            }
+        }
+        ParamStore { flat, segs: meta.params.clone() }
+    }
+
+    /// Zeroed buffer with the same length (moment slots, grad accumulators).
+    pub fn zeros_like(&self) -> Vec<f32> {
+        vec![0.0; self.flat.len()]
+    }
+
+    pub fn seg(&self, name: &str) -> Option<&ParamSeg> {
+        self.segs.iter().find(|s| s.name == name)
+    }
+
+    pub fn view(&self, seg: &ParamSeg) -> &[f32] {
+        &self.flat[seg.offset..seg.offset + seg.size]
+    }
+
+    /// Global L2 norm (debug / divergence checks).
+    pub fn global_norm(&self) -> f64 {
+        self.flat.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.flat.iter().all(|x| x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{Init, ModelMeta, ParamSeg};
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            name: "t".into(),
+            vocab: 8,
+            hidden: 4,
+            layers: 1,
+            heads: 1,
+            ff: 8,
+            max_seq: 16,
+            total_params: 12,
+            params: vec![
+                ParamSeg {
+                    name: "w".into(),
+                    shape: vec![2, 4],
+                    init: Init::Normal(0.02),
+                    offset: 0,
+                    size: 8,
+                    decay: true,
+                    adapt: true,
+                },
+                ParamSeg {
+                    name: "ln".into(),
+                    shape: vec![2],
+                    init: Init::Ones,
+                    offset: 8,
+                    size: 2,
+                    decay: false,
+                    adapt: false,
+                },
+                ParamSeg {
+                    name: "b".into(),
+                    shape: vec![2],
+                    init: Init::Zeros,
+                    offset: 10,
+                    size: 2,
+                    decay: false,
+                    adapt: false,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn init_respects_specs() {
+        let ps = ParamStore::init(&meta(), 1);
+        assert_eq!(ps.flat.len(), 12);
+        assert!(ps.view(ps.seg("w").unwrap()).iter().any(|&x| x != 0.0));
+        assert!(ps.view(ps.seg("ln").unwrap()).iter().all(|&x| x == 1.0));
+        assert!(ps.view(ps.seg("b").unwrap()).iter().all(|&x| x == 0.0));
+        assert!(ps.all_finite());
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = ParamStore::init(&meta(), 7);
+        let b = ParamStore::init(&meta(), 7);
+        let c = ParamStore::init(&meta(), 8);
+        assert_eq!(a.flat, b.flat);
+        assert_ne!(a.flat, c.flat);
+    }
+
+    #[test]
+    fn normal_std_scale() {
+        let mut m = meta();
+        m.params[0].size = 8;
+        let ps = ParamStore::init(&m, 2);
+        let w = ps.view(ps.seg("w").unwrap());
+        assert!(w.iter().all(|x| x.abs() < 0.2)); // ~10 sigma bound
+    }
+}

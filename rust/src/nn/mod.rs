@@ -1,0 +1,310 @@
+//! Native tiny neural network (MLP + softmax cross-entropy, manual
+//! backprop) over the flat-parameter / segment-table convention shared
+//! with the BERT artifacts.
+//!
+//! This is the fast substrate for the paper's appendix-scale studies: the
+//! ImageNet/CIFAR/MNIST-proxy optimizer comparisons (Tables 3, 5, 6, 7;
+//! Figures 1-5) and the tuning grids (Tables 8-25) each need thousands of
+//! full training runs — far too many for the PJRT BERT path, and exactly
+//! what a few-thousand-parameter MLP trained in milliseconds covers while
+//! preserving what those experiments measure: relative optimizer behaviour
+//! under layerwise scale disparity (the anisotropic input noise in
+//! `data::image` supplies the disparity).
+
+use crate::optim::Seg;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct MlpConfig {
+    pub input: usize,
+    pub hidden: Vec<usize>,
+    pub classes: usize,
+}
+
+impl MlpConfig {
+    /// LeNet-proxy (Table 7 / MNIST scale).
+    pub fn lenet_proxy(input: usize, classes: usize) -> MlpConfig {
+        MlpConfig { input, hidden: vec![64, 32], classes }
+    }
+
+    /// DavidNet/ResNet-proxy (Tables 3/5/6 scale) — deeper and wider so
+    /// layerwise scale structure matters more.
+    pub fn resnet_proxy(input: usize, classes: usize) -> MlpConfig {
+        MlpConfig { input, hidden: vec![128, 128, 64], classes }
+    }
+}
+
+/// Fully-connected net: relu hidden layers, linear head, softmax-CE loss.
+pub struct Mlp {
+    pub cfg: MlpConfig,
+    pub params: Vec<f32>,
+    segs: Vec<Seg>,
+    dims: Vec<(usize, usize)>, // (in, out) per layer
+}
+
+impl Mlp {
+    pub fn new(cfg: MlpConfig, seed: u64) -> Mlp {
+        let mut dims = Vec::new();
+        let mut prev = cfg.input;
+        for &h in &cfg.hidden {
+            dims.push((prev, h));
+            prev = h;
+        }
+        dims.push((prev, cfg.classes));
+
+        let mut segs = Vec::new();
+        let mut off = 0;
+        for &(i, o) in &dims {
+            segs.push(Seg { offset: off, size: i * o, decay: true, adapt: true });
+            off += i * o;
+            segs.push(Seg { offset: off, size: o, decay: false, adapt: false });
+            off += o;
+        }
+        let mut rng = Rng::new(seed ^ 0x3153_7370);
+        let mut params = vec![0.0f32; off];
+        for (li, &(i, _o)) in dims.iter().enumerate() {
+            let w = &segs[2 * li];
+            let std = (2.0 / i as f64).sqrt() as f32; // He init
+            for p in &mut params[w.offset..w.offset + w.size] {
+                *p = rng.normal_f32(std);
+            }
+        }
+        Mlp { cfg, params, segs, dims }
+    }
+
+    pub fn segs(&self) -> &[Seg] {
+        &self.segs
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Forward + backward over a batch. `x`: [n, input] row-major,
+    /// `y`: [n] class ids. Writes dL/dparams into `grads` (overwritten).
+    /// Returns (mean loss, accuracy).
+    pub fn loss_grad(
+        &self,
+        x: &[f32],
+        y: &[u32],
+        grads: &mut [f32],
+    ) -> (f32, f32) {
+        self.run(x, y, Some(grads))
+    }
+
+    /// Forward only.
+    pub fn evaluate(&self, x: &[f32], y: &[u32]) -> (f32, f32) {
+        self.run(x, y, None)
+    }
+
+    fn run(&self, x: &[f32], y: &[u32], grads: Option<&mut [f32]>) -> (f32, f32) {
+        let n = y.len();
+        assert_eq!(x.len(), n * self.cfg.input);
+        let nl = self.dims.len();
+
+        // Forward, keeping activations per layer.
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nl + 1);
+        acts.push(x.to_vec());
+        for (li, &(di, dout)) in self.dims.iter().enumerate() {
+            let w = &self.params[self.segs[2 * li].offset..];
+            let b = &self.params[self.segs[2 * li + 1].offset..];
+            let inp = &acts[li];
+            let mut out = vec![0.0f32; n * dout];
+            for s in 0..n {
+                let xi = &inp[s * di..(s + 1) * di];
+                let oi = &mut out[s * dout..(s + 1) * dout];
+                oi.copy_from_slice(&b[..dout]);
+                for i in 0..di {
+                    let xv = xi[i];
+                    if xv != 0.0 {
+                        let wr = &w[i * dout..(i + 1) * dout];
+                        for o in 0..dout {
+                            oi[o] += xv * wr[o];
+                        }
+                    }
+                }
+                if li + 1 < nl {
+                    for v in oi.iter_mut() {
+                        *v = v.max(0.0); // relu
+                    }
+                }
+            }
+            acts.push(out);
+        }
+
+        // Softmax CE + accuracy on the logits.
+        let c = self.cfg.classes;
+        let logits = acts.last().unwrap();
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        let mut dlogits = vec![0.0f32; n * c];
+        for s in 0..n {
+            let l = &logits[s * c..(s + 1) * c];
+            let mx = l.iter().cloned().fold(f32::MIN, f32::max);
+            let mut z = 0.0f64;
+            for &v in l {
+                z += ((v - mx) as f64).exp();
+            }
+            let target = y[s] as usize;
+            loss += (z.ln() + mx as f64) - l[target] as f64;
+            // total_cmp: NaN-safe — a diverged run must reach the
+            // divergence detector, not panic here.
+            let argmax = l
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            if argmax == target {
+                correct += 1;
+            }
+            let d = &mut dlogits[s * c..(s + 1) * c];
+            for o in 0..c {
+                let p = (((l[o] - mx) as f64).exp() / z) as f32;
+                d[o] = (p - if o == target { 1.0 } else { 0.0 }) / n as f32;
+            }
+        }
+        let loss = (loss / n as f64) as f32;
+        let acc = correct as f32 / n as f32;
+
+        let grads = match grads {
+            Some(g) => g,
+            None => return (loss, acc),
+        };
+        assert_eq!(grads.len(), self.params.len());
+        grads.fill(0.0);
+
+        // Backward.
+        let mut delta = dlogits;
+        for li in (0..nl).rev() {
+            let (di, dout) = self.dims[li];
+            let wseg = self.segs[2 * li];
+            let bseg = self.segs[2 * li + 1];
+            let w = &self.params[wseg.offset..wseg.offset + wseg.size];
+            let inp = &acts[li];
+            // dW, db
+            {
+                let (gw, gb) = {
+                    let (a, b) = grads.split_at_mut(bseg.offset);
+                    (&mut a[wseg.offset..], &mut b[..dout])
+                };
+                for s in 0..n {
+                    let xi = &inp[s * di..(s + 1) * di];
+                    let dsl = &delta[s * dout..(s + 1) * dout];
+                    for o in 0..dout {
+                        gb[o] += dsl[o];
+                    }
+                    for i in 0..di {
+                        let xv = xi[i];
+                        if xv != 0.0 {
+                            let gr = &mut gw[i * dout..(i + 1) * dout];
+                            for o in 0..dout {
+                                gr[o] += xv * dsl[o];
+                            }
+                        }
+                    }
+                }
+            }
+            if li == 0 {
+                break;
+            }
+            // delta_prev = (delta @ W^T) * relu'(act_prev)
+            let mut prev = vec![0.0f32; n * di];
+            for s in 0..n {
+                let dsl = &delta[s * dout..(s + 1) * dout];
+                let ai = &acts[li][s * di..(s + 1) * di];
+                let pd = &mut prev[s * di..(s + 1) * di];
+                for i in 0..di {
+                    if ai[i] > 0.0 {
+                        let wr = &w[i * dout..(i + 1) * dout];
+                        let mut acc = 0.0f32;
+                        for o in 0..dout {
+                            acc += wr[o] * dsl[o];
+                        }
+                        pd[i] = acc;
+                    }
+                }
+            }
+            delta = prev;
+        }
+        (loss, acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::image::ImageTask;
+    use crate::optim::{build, Hyper};
+
+    #[test]
+    fn segment_layout_contiguous() {
+        let m = Mlp::new(MlpConfig::lenet_proxy(16, 4), 0);
+        let mut off = 0;
+        for s in m.segs() {
+            assert_eq!(s.offset, off);
+            off += s.size;
+        }
+        assert_eq!(off, m.n_params());
+    }
+
+    #[test]
+    fn loss_near_uniform_at_init() {
+        let m = Mlp::new(MlpConfig::lenet_proxy(8, 10), 1);
+        let t = ImageTask::new(8, 10, 2);
+        let mut rng = Rng::new(3);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        t.sample(&mut rng, 64, &mut x, &mut y);
+        let (loss, acc) = m.evaluate(&x, &y);
+        assert!((loss - (10.0f32).ln()).abs() < 1.0, "loss {loss}");
+        assert!(acc < 0.4);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let m = Mlp::new(MlpConfig { input: 5, hidden: vec![7], classes: 3 }, 4);
+        let t = ImageTask::new(5, 3, 5);
+        let mut rng = Rng::new(6);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        t.sample(&mut rng, 8, &mut x, &mut y);
+        let mut g = vec![0.0f32; m.n_params()];
+        let (l0, _) = m.loss_grad(&x, &y, &mut g);
+        assert!(l0.is_finite());
+        // Check a scatter of coordinates with central differences.
+        let mut m2 = Mlp::new(MlpConfig { input: 5, hidden: vec![7], classes: 3 }, 4);
+        let eps = 1e-3f32;
+        for &idx in &[0usize, 3, 17, 35, 40, m.n_params() - 1] {
+            let orig = m2.params[idx];
+            m2.params[idx] = orig + eps;
+            let (lp, _) = m2.evaluate(&x, &y);
+            m2.params[idx] = orig - eps;
+            let (lm, _) = m2.evaluate(&x, &y);
+            m2.params[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - g[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "idx {idx}: fd {fd} vs an {}",
+                g[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn trains_to_high_accuracy() {
+        let task = ImageTask::new(16, 4, 7);
+        let mut m = Mlp::new(MlpConfig::lenet_proxy(16, 4), 8);
+        let segs = m.segs().to_vec();
+        let mut opt = build("lamb", m.n_params(), Hyper::default()).unwrap();
+        let mut rng = Rng::new(9);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        let mut g = vec![0.0f32; m.n_params()];
+        for t in 1..=300 {
+            task.sample(&mut rng, 64, &mut x, &mut y);
+            m.loss_grad(&x, &y, &mut g);
+            opt.step(&mut m.params, &g, 0.02, t, &segs);
+        }
+        task.sample(&mut rng, 512, &mut x, &mut y);
+        let (_, acc) = m.evaluate(&x, &y);
+        assert!(acc > 0.8, "acc {acc}");
+    }
+}

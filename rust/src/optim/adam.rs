@@ -1,0 +1,242 @@
+//! The tuned baselines of Section 4 / Appendix H: Adam, AdamW (decoupled
+//! weight decay), Adagrad, and heavy-ball momentum SGD.
+//!
+//! `l2_reg` folds into the gradient (the "L2 regularization" column of
+//! Tables 13-25); `weight_decay` is AdamW's decoupled term.
+
+use super::{Hyper, Optimizer, Seg};
+
+macro_rules! adam_like {
+    ($name:ident, $sname:literal, $decoupled:expr) => {
+        pub struct $name {
+            pub h: Hyper,
+            m: Vec<f32>,
+            v: Vec<f32>,
+        }
+
+        impl $name {
+            pub fn new(n: usize, h: Hyper) -> Self {
+                Self { h, m: vec![0.0; n], v: vec![0.0; n] }
+            }
+
+            pub fn state(&self) -> (&[f32], &[f32]) {
+                (&self.m, &self.v)
+            }
+        }
+
+        impl Optimizer for $name {
+            fn step(
+                &mut self,
+                params: &mut [f32],
+                grads: &[f32],
+                lr: f32,
+                step: u64,
+                segs: &[Seg],
+            ) -> Vec<f32> {
+                let h = self.h;
+                let (c1, c2) = if h.bias_correction {
+                    let t = step as f32;
+                    (
+                        1.0 / (1.0 - h.beta1.powf(t)),
+                        1.0 / (1.0 - h.beta2.powf(t)),
+                    )
+                } else {
+                    (1.0, 1.0)
+                };
+                for s in segs {
+                    let r = s.offset..s.offset + s.size;
+                    let x = &mut params[r.clone()];
+                    let g = &grads[r.clone()];
+                    let m = &mut self.m[r.clone()];
+                    let v = &mut self.v[r];
+                    let l2 = if s.decay { h.l2_reg } else { 0.0 };
+                    let wd = if $decoupled && s.decay {
+                        h.weight_decay
+                    } else {
+                        0.0
+                    };
+                    for i in 0..x.len() {
+                        let gi = g[i] + l2 * x[i];
+                        m[i] = h.beta1 * m[i] + (1.0 - h.beta1) * gi;
+                        v[i] = h.beta2 * v[i] + (1.0 - h.beta2) * gi * gi;
+                        let upd = (c1 * m[i]) / ((c2 * v[i]).sqrt() + h.eps);
+                        x[i] -= lr * (upd + wd * x[i]);
+                    }
+                }
+                vec![1.0; segs.len()]
+            }
+
+            fn name(&self) -> &'static str {
+                $sname
+            }
+
+            fn state_bytes(&self) -> usize {
+                (self.m.len() + self.v.len()) * 4
+            }
+        }
+    };
+}
+
+adam_like!(Adam, "adam", false);
+adam_like!(AdamW, "adamw", true);
+
+/// Adagrad with the standard accumulating second moment.
+pub struct Adagrad {
+    pub h: Hyper,
+    v: Vec<f32>,
+}
+
+impl Adagrad {
+    pub fn new(n: usize, h: Hyper) -> Adagrad {
+        Adagrad { h, v: vec![0.0; n] }
+    }
+}
+
+impl Optimizer for Adagrad {
+    fn step(
+        &mut self,
+        params: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        _step: u64,
+        segs: &[Seg],
+    ) -> Vec<f32> {
+        let h = self.h;
+        for s in segs {
+            let r = s.offset..s.offset + s.size;
+            let x = &mut params[r.clone()];
+            let g = &grads[r.clone()];
+            let v = &mut self.v[r];
+            let l2 = if s.decay { h.l2_reg } else { 0.0 };
+            for i in 0..x.len() {
+                let gi = g[i] + l2 * x[i];
+                v[i] += gi * gi;
+                x[i] -= lr * gi / (v[i].sqrt() + 1e-7);
+            }
+        }
+        vec![1.0; segs.len()]
+    }
+
+    fn name(&self) -> &'static str {
+        "adagrad"
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.v.len() * 4
+    }
+}
+
+/// Heavy-ball momentum SGD — the ResNet-50 baseline of Goyal et al. 2017.
+pub struct Momentum {
+    pub h: Hyper,
+    m: Vec<f32>,
+}
+
+impl Momentum {
+    pub fn new(n: usize, h: Hyper) -> Momentum {
+        Momentum { h, m: vec![0.0; n] }
+    }
+}
+
+impl Optimizer for Momentum {
+    fn step(
+        &mut self,
+        params: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        _step: u64,
+        segs: &[Seg],
+    ) -> Vec<f32> {
+        let h = self.h;
+        for s in segs {
+            let r = s.offset..s.offset + s.size;
+            let x = &mut params[r.clone()];
+            let g = &grads[r.clone()];
+            let m = &mut self.m[r];
+            let l2 = if s.decay { h.l2_reg } else { 0.0 };
+            for i in 0..x.len() {
+                let gi = g[i] + l2 * x[i];
+                m[i] = h.beta1 * m[i] + gi;
+                x[i] -= lr * m[i];
+            }
+        }
+        vec![1.0; segs.len()]
+    }
+
+    fn name(&self) -> &'static str {
+        "momentum"
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.m.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // Classic Adam property: |Delta x| ~ lr on the first step.
+        let h = Hyper { weight_decay: 0.0, eps: 1e-8, ..Hyper::default() };
+        let mut o = Adam::new(1, h);
+        let mut x = vec![1.0f32];
+        o.step(&mut x, &[0.3], 0.01, 1, &Seg::whole(1));
+        assert!((1.0 - x[0] - 0.01).abs() < 1e-4, "{x:?}");
+    }
+
+    #[test]
+    fn adamw_decay_is_decoupled() {
+        // With zero gradient, AdamW still shrinks weights; Adam does not.
+        let h = Hyper { weight_decay: 0.1, ..Hyper::default() };
+        let mut aw = AdamW::new(1, h);
+        let mut a = Adam::new(1, h);
+        let mut xw = vec![1.0f32];
+        let mut xa = vec![1.0f32];
+        aw.step(&mut xw, &[0.0], 0.1, 1, &Seg::whole(1));
+        a.step(&mut xa, &[0.0], 0.1, 1, &Seg::whole(1));
+        assert!(xw[0] < 1.0);
+        assert_eq!(xa[0], 1.0);
+    }
+
+    #[test]
+    fn adagrad_lr_shrinks_with_accumulation() {
+        let mut o = Adagrad::new(1, Hyper::default());
+        let mut x = vec![10.0f32];
+        let mut deltas = Vec::new();
+        for t in 1..=5 {
+            let before = x[0];
+            o.step(&mut x, &[1.0], 0.1, t, &Seg::whole(1));
+            deltas.push(before - x[0]);
+        }
+        for w in deltas.windows(2) {
+            assert!(w[1] < w[0], "{deltas:?}");
+        }
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let h = Hyper { l2_reg: 0.0, ..Hyper::default() };
+        let mut o = Momentum::new(1, h);
+        let mut x = vec![0.0f32];
+        o.step(&mut x, &[1.0], 1.0, 1, &Seg::whole(1));
+        assert!((x[0] + 1.0).abs() < 1e-6); // m=1
+        o.step(&mut x, &[1.0], 1.0, 2, &Seg::whole(1));
+        assert!((x[0] + 2.9).abs() < 1e-6); // m=1.9
+    }
+
+    #[test]
+    fn l2_reg_only_on_decay_segments() {
+        let h = Hyper { l2_reg: 1.0, ..Hyper::default() };
+        let mut o = Momentum::new(2, h);
+        let mut x = vec![1.0f32, 1.0];
+        let segs = vec![
+            Seg { offset: 0, size: 1, decay: true, adapt: true },
+            Seg { offset: 1, size: 1, decay: false, adapt: false },
+        ];
+        o.step(&mut x, &[0.0, 0.0], 0.1, 1, &segs);
+        assert!(x[0] < 1.0);
+        assert_eq!(x[1], 1.0);
+    }
+}

@@ -1,0 +1,145 @@
+//! LAMB (Algorithm 2) — the paper's contribution, native implementation.
+//!
+//! Per layer i:  m = b1*m + (1-b1)*g;  v = b2*v + (1-b2)*g^2
+//!               u = m_hat / (sqrt(v_hat) + eps) + wd * x
+//!               x -= lr * phi(||x||)/||u|| * u
+//!
+//! Matches `python/compile/kernels/lamb.py` (and therefore the AOT
+//! artifact) including the adapt/decay exclusions.
+
+use super::{trust_ratio, Hyper, Optimizer, Seg};
+
+pub struct Lamb {
+    pub h: Hyper,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    /// Scratch for the update direction (avoids per-step allocation).
+    u: Vec<f32>,
+}
+
+impl Lamb {
+    pub fn new(n: usize, h: Hyper) -> Lamb {
+        Lamb { h, m: vec![0.0; n], v: vec![0.0; n], u: vec![0.0; n] }
+    }
+
+    /// Direct access to moments (checkpointing / artifact cross-checks).
+    pub fn state(&self) -> (&[f32], &[f32]) {
+        (&self.m, &self.v)
+    }
+
+    pub fn state_mut(&mut self) -> (&mut [f32], &mut [f32]) {
+        (&mut self.m, &mut self.v)
+    }
+}
+
+impl Optimizer for Lamb {
+    fn step(
+        &mut self,
+        params: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        step: u64,
+        segs: &[Seg],
+    ) -> Vec<f32> {
+        let h = self.h;
+        let (c1, c2) = if h.bias_correction {
+            let t = step as f32;
+            (
+                1.0 / (1.0 - h.beta1.powf(t)),
+                1.0 / (1.0 - h.beta2.powf(t)),
+            )
+        } else {
+            (1.0, 1.0)
+        };
+        let mut ratios = Vec::with_capacity(segs.len());
+        for s in segs {
+            let r = s.offset..s.offset + s.size;
+            let x = &mut params[r.clone()];
+            let g = &grads[r.clone()];
+            let m = &mut self.m[r.clone()];
+            let v = &mut self.v[r.clone()];
+            let u = &mut self.u[r];
+            let wd = if s.decay { h.weight_decay } else { 0.0 };
+            for i in 0..x.len() {
+                m[i] = h.beta1 * m[i] + (1.0 - h.beta1) * g[i];
+                v[i] = h.beta2 * v[i] + (1.0 - h.beta2) * g[i] * g[i];
+                u[i] = (c1 * m[i]) / ((c2 * v[i]).sqrt() + h.eps) + wd * x[i];
+            }
+            let ratio = if s.adapt {
+                trust_ratio(h.norm.eval(x), h.norm.eval(u), &h)
+            } else {
+                1.0
+            };
+            let scale = lr * ratio;
+            for i in 0..x.len() {
+                x[i] -= scale * u[i];
+            }
+            ratios.push(ratio);
+        }
+        ratios
+    }
+
+    fn name(&self) -> &'static str {
+        "lamb"
+    }
+
+    fn state_bytes(&self) -> usize {
+        (self.m.len() + self.v.len()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_hand_computation_one_element() {
+        // Single weight x=2, g=1, fresh state, step 1, wd=0, eps=0:
+        // m=0.1, v=0.001; bias-corrected m_hat=1, v_hat=1 => u=1.
+        // ratio = |x|/|u| = 2; x' = 2 - lr*2*1.
+        let h = Hyper { weight_decay: 0.0, eps: 0.0, ..Hyper::default() };
+        let mut o = Lamb::new(1, h);
+        let mut x = vec![2.0f32];
+        let r = o.step(&mut x, &[1.0], 0.1, 1, &Seg::whole(1));
+        assert!((r[0] - 2.0).abs() < 1e-5, "{r:?}");
+        assert!((x[0] - 1.8).abs() < 1e-5, "{x:?}");
+        let (m, v) = o.state();
+        assert!((m[0] - 0.1).abs() < 1e-6);
+        assert!((v[0] - 0.001).abs() < 1e-7);
+    }
+
+    #[test]
+    fn non_adapt_segment_pins_ratio() {
+        let mut o = Lamb::new(4, Hyper::default());
+        let mut x = vec![1.0, 1.0, 1.0, 1.0];
+        let segs = vec![
+            Seg { offset: 0, size: 2, decay: true, adapt: true },
+            Seg { offset: 2, size: 2, decay: false, adapt: false },
+        ];
+        let r = o.step(&mut x, &[0.5; 4], 0.01, 1, &segs);
+        assert_eq!(r[1], 1.0);
+        assert_ne!(r[0], 1.0);
+    }
+
+    #[test]
+    fn weight_decay_pulls_toward_zero() {
+        let h = Hyper { weight_decay: 0.1, ..Hyper::default() };
+        let mut o = Lamb::new(2, h);
+        let mut x = vec![1.0f32, -1.0];
+        for t in 1..=100 {
+            o.step(&mut x, &[0.0, 0.0], 0.05, t, &Seg::whole(2));
+        }
+        assert!(x[0].abs() < 0.5 && x[1].abs() < 0.5, "{x:?}");
+    }
+
+    #[test]
+    fn no_bias_correction_variant() {
+        let h = Hyper { bias_correction: false, weight_decay: 0.0, ..Hyper::default() };
+        let mut o = Lamb::new(1, h);
+        let mut x = vec![1.0f32];
+        // m=0.1, v=0.001 (no correction): u = 0.1/(sqrt(0.001)+eps) ~ 3.16
+        o.step(&mut x, &[1.0], 0.1, 1, &Seg::whole(1));
+        // ratio = 1/3.16 -> x' = 1 - 0.1*1 = 0.9 (step length = lr*||x||)
+        assert!((x[0] - 0.9).abs() < 1e-4, "{x:?}");
+    }
+}

@@ -1,0 +1,90 @@
+//! LARS (Algorithm 1, You et al. 2017) — the prior layerwise method LAMB
+//! is compared against throughout Section 4 / Table 2.
+
+use super::{trust_ratio, Hyper, Optimizer, Seg};
+
+pub struct Lars {
+    pub h: Hyper,
+    m: Vec<f32>,
+}
+
+impl Lars {
+    pub fn new(n: usize, h: Hyper) -> Lars {
+        Lars { h, m: vec![0.0; n] }
+    }
+
+    pub fn state(&self) -> &[f32] {
+        &self.m
+    }
+}
+
+impl Optimizer for Lars {
+    fn step(
+        &mut self,
+        params: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        _step: u64,
+        segs: &[Seg],
+    ) -> Vec<f32> {
+        let h = self.h;
+        let mut ratios = Vec::with_capacity(segs.len());
+        for s in segs {
+            let r = s.offset..s.offset + s.size;
+            let x = &mut params[r.clone()];
+            let g = &grads[r.clone()];
+            let m = &mut self.m[r];
+            let wd = if s.decay { h.weight_decay } else { 0.0 };
+            for i in 0..x.len() {
+                m[i] = h.beta1 * m[i] + (1.0 - h.beta1) * (g[i] + wd * x[i]);
+            }
+            let ratio = if s.adapt {
+                trust_ratio(h.norm.eval(x), h.norm.eval(m), &h)
+            } else {
+                1.0
+            };
+            let scale = lr * ratio;
+            for i in 0..x.len() {
+                x[i] -= scale * m[i];
+            }
+            ratios.push(ratio);
+        }
+        ratios
+    }
+
+    fn name(&self) -> &'static str {
+        "lars"
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.m.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_length_is_lr_times_xnorm() {
+        let h = Hyper { weight_decay: 0.0, ..Hyper::default() };
+        let mut o = Lars::new(2, h);
+        let mut x = vec![3.0f32, 4.0]; // ||x|| = 5
+        o.step(&mut x, &[1.0, 0.0], 0.1, 1, &Seg::whole(2));
+        let dx = ((3.0 - x[0]).powi(2) + (4.0 - x[1]).powi(2)).sqrt();
+        assert!((dx - 0.5).abs() < 1e-5, "{dx}");
+    }
+
+    #[test]
+    fn momentum_smooths_direction() {
+        let h = Hyper { weight_decay: 0.0, ..Hyper::default() };
+        let mut o = Lars::new(1, h);
+        let mut x = vec![1.0f32];
+        o.step(&mut x, &[1.0], 0.01, 1, &Seg::whole(1));
+        // After one step, m = 0.1.
+        assert!((o.state()[0] - 0.1).abs() < 1e-6);
+        o.step(&mut x, &[-1.0], 0.01, 2, &Seg::whole(1));
+        // m = 0.9*0.1 - 0.1 = -0.01: sign flipped only partially.
+        assert!((o.state()[0] + 0.01).abs() < 1e-6);
+    }
+}

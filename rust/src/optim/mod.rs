@@ -1,0 +1,283 @@
+//! Native Rust optimizers — every solver the paper evaluates.
+//!
+//! These mirror the L1 Pallas kernels / `ref.py` oracles exactly (the
+//! integration test `tests/test_artifacts.rs` asserts the native LAMB step
+//! matches the AOT artifact's output to f32 tolerance). They serve three
+//! roles:
+//!
+//! 1. baselines & sweeps — the appendix tuning grids (Tables 8-25) and
+//!    small-dataset studies run thousands of steps on the native trainer;
+//! 2. property-test subjects for the paper's Section-3 invariants;
+//! 3. a fallback step path when no `opt` artifact exists for a model.
+//!
+//! All operate on the flat parameter vector with the manifest's segment
+//! table (`decay`/`adapt` flags follow the released LAMB implementation:
+//! biases and layer-norm parameters get no weight decay and a pinned
+//! trust ratio).
+
+mod adam;
+mod lamb;
+mod lars;
+mod nesterov;
+
+pub use adam::{Adagrad, Adam, AdamW, Momentum};
+pub use lamb::Lamb;
+pub use lars::Lars;
+pub use nesterov::{NLamb, NnLamb};
+
+use crate::manifest::ParamSeg;
+
+/// Norm used by the trust ratio (paper Appendix F ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Norm {
+    L2,
+    L1,
+    Linf,
+}
+
+impl Norm {
+    pub fn eval(&self, x: &[f32]) -> f32 {
+        match self {
+            Norm::L2 => {
+                x.iter().map(|&a| (a as f64) * (a as f64)).sum::<f64>().sqrt()
+                    as f32
+            }
+            Norm::L1 => x.iter().map(|&a| a.abs() as f64).sum::<f64>() as f32,
+            Norm::Linf => x.iter().fold(0.0f32, |m, &a| m.max(a.abs())),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Norm> {
+        match s {
+            "l2" => Some(Norm::L2),
+            "l1" => Some(Norm::L1),
+            "linf" => Some(Norm::Linf),
+            _ => None,
+        }
+    }
+}
+
+/// Segment of the flat vector an optimizer treats as one "layer".
+#[derive(Clone, Copy, Debug)]
+pub struct Seg {
+    pub offset: usize,
+    pub size: usize,
+    pub decay: bool,
+    pub adapt: bool,
+}
+
+impl Seg {
+    pub fn from_manifest(segs: &[ParamSeg]) -> Vec<Seg> {
+        segs.iter()
+            .map(|s| Seg {
+                offset: s.offset,
+                size: s.size,
+                decay: s.decay,
+                adapt: s.adapt,
+            })
+            .collect()
+    }
+
+    /// A single segment covering the whole vector (unit tests / simple
+    /// convex problems).
+    pub fn whole(n: usize) -> Vec<Seg> {
+        vec![Seg { offset: 0, size: n, decay: true, adapt: true }]
+    }
+}
+
+/// Shared hyperparameters (paper defaults from Appendix H).
+#[derive(Clone, Copy, Debug)]
+pub struct Hyper {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Decoupled weight decay (LAMB / AdamW). Paper default 0.01.
+    pub weight_decay: f32,
+    /// L2 regularization folded into the gradient (Adam/Adagrad baselines).
+    pub l2_reg: f32,
+    /// Adam bias correction; Appendix E shows warmup subsumes it.
+    pub bias_correction: bool,
+    pub norm: Norm,
+    /// phi clipping bounds; `None` = identity phi (released-impl default).
+    pub phi_lo: Option<f32>,
+    pub phi_hi: Option<f32>,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-6,
+            weight_decay: 0.01,
+            l2_reg: 0.0,
+            bias_correction: true,
+            norm: Norm::L2,
+            phi_lo: None,
+            phi_hi: None,
+        }
+    }
+}
+
+pub(crate) fn phi(w_norm: f32, h: &Hyper) -> f32 {
+    let mut p = w_norm;
+    if let Some(lo) = h.phi_lo {
+        p = p.max(lo);
+    }
+    if let Some(hi) = h.phi_hi {
+        p = p.min(hi);
+    }
+    p
+}
+
+pub(crate) fn trust_ratio(w_norm: f32, u_norm: f32, h: &Hyper) -> f32 {
+    let p = phi(w_norm, h);
+    if p > 0.0 && u_norm > 0.0 {
+        p / u_norm
+    } else {
+        1.0
+    }
+}
+
+/// A layerwise first-order optimizer over the flat parameter vector.
+pub trait Optimizer {
+    /// Apply one step in place. `step` is 1-based. Returns the per-segment
+    /// trust ratios (1.0 for optimizers/segments without adaptation) —
+    /// the quantity plotted in the paper's Figures 9-14.
+    fn step(
+        &mut self,
+        params: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        step: u64,
+        segs: &[Seg],
+    ) -> Vec<f32>;
+
+    fn name(&self) -> &'static str;
+
+    /// Moment buffer size (for state-size accounting in the pod model).
+    fn state_bytes(&self) -> usize;
+}
+
+/// Construct an optimizer by paper name.
+pub fn build(name: &str, n: usize, h: Hyper) -> Option<Box<dyn Optimizer>> {
+    Some(match name {
+        "lamb" => Box::new(Lamb::new(n, h)),
+        "lars" => Box::new(Lars::new(n, h)),
+        "adam" => Box::new(Adam::new(n, h)),
+        "adamw" => Box::new(AdamW::new(n, h)),
+        "adagrad" => Box::new(Adagrad::new(n, h)),
+        "momentum" => Box::new(Momentum::new(n, h)),
+        "nlamb" => Box::new(NLamb::new(n, h)),
+        "nnlamb" => Box::new(NnLamb::new(n, h)),
+        _ => return None,
+    })
+}
+
+pub const ALL: &[&str] = &[
+    "lamb", "lars", "adam", "adamw", "adagrad", "momentum", "nlamb",
+    "nnlamb",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms() {
+        let x = [3.0, -4.0];
+        assert!((Norm::L2.eval(&x) - 5.0).abs() < 1e-6);
+        assert!((Norm::L1.eval(&x) - 7.0).abs() < 1e-6);
+        assert!((Norm::Linf.eval(&x) - 4.0).abs() < 1e-6);
+        assert_eq!(Norm::parse("l1"), Some(Norm::L1));
+        assert_eq!(Norm::parse("lp"), None);
+    }
+
+    #[test]
+    fn trust_ratio_guards() {
+        let h = Hyper::default();
+        assert_eq!(trust_ratio(0.0, 1.0, &h), 1.0);
+        assert_eq!(trust_ratio(1.0, 0.0, &h), 1.0);
+        assert!((trust_ratio(2.0, 4.0, &h) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn phi_clipping() {
+        let h = Hyper { phi_lo: Some(0.5), phi_hi: Some(2.0), ..Hyper::default() };
+        assert_eq!(phi(0.1, &h), 0.5);
+        assert_eq!(phi(1.0, &h), 1.0);
+        assert_eq!(phi(5.0, &h), 2.0);
+    }
+
+    #[test]
+    fn build_all() {
+        for name in ALL {
+            let o = build(name, 16, Hyper::default()).unwrap();
+            assert_eq!(&o.name(), name);
+        }
+        assert!(build("sgd2", 16, Hyper::default()).is_none());
+    }
+
+    /// Every optimizer reduces a simple separable quadratic.
+    #[test]
+    fn all_reduce_quadratic() {
+        let n = 32;
+        let segs = Seg::whole(n);
+        for name in ALL {
+            let mut opt = build(
+                name,
+                n,
+                Hyper { weight_decay: 0.0, l2_reg: 0.0, ..Hyper::default() },
+            )
+            .unwrap();
+            let mut x: Vec<f32> =
+                (0..n).map(|i| 1.0 + (i as f32) * 0.1).collect();
+            let f = |x: &[f32]| -> f32 { x.iter().map(|a| a * a).sum() };
+            let f0 = f(&x);
+            // Adagrad's effective LR decays as 1/sqrt(sum g^2); give it a
+            // proportionally larger base LR, as the paper's grids do.
+            let lr = match *name {
+                "adagrad" => 0.3,
+                "momentum" => 0.02,
+                _ => 0.01,
+            };
+            for t in 1..=200 {
+                let g: Vec<f32> = x.iter().map(|a| 2.0 * a).collect();
+                opt.step(&mut x, &g, lr, t, &segs);
+            }
+            let f1 = f(&x);
+            assert!(f1 < 0.5 * f0, "{name}: {f0} -> {f1}");
+            assert!(x.iter().all(|a| a.is_finite()), "{name} diverged");
+        }
+    }
+
+    /// Section-3 invariant: the LAMB step length per layer is
+    /// lr * phi(||x||), independent of gradient scale.
+    #[test]
+    fn lamb_step_norm_invariant() {
+        let n = 64;
+        let segs = Seg::whole(n);
+        let h = Hyper { weight_decay: 0.0, eps: 0.0, ..Hyper::default() };
+        for scale in [1.0f32, 1e3, 1e-3] {
+            let mut opt = Lamb::new(n, h);
+            let x0: Vec<f32> =
+                (0..n).map(|i| ((i * 37 % 11) as f32) - 5.0).collect();
+            let mut x = x0.clone();
+            // strictly nonzero gradient: with eps = 0 a zero coordinate
+            // would give 0/0 (the kernels share this contract; eps > 0 in
+            // any real configuration)
+            let g: Vec<f32> = (0..n)
+                .map(|i| scale * (((i * 13 % 7) as f32) - 3.5))
+                .collect();
+            opt.step(&mut x, &g, 0.1, 1, &segs);
+            let delta: f32 = Norm::L2.eval(
+                &x.iter().zip(&x0).map(|(a, b)| a - b).collect::<Vec<_>>(),
+            );
+            let expect = 0.1 * Norm::L2.eval(&x0);
+            assert!(
+                (delta - expect).abs() / expect < 1e-3,
+                "scale {scale}: {delta} vs {expect}"
+            );
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! N-LAMB and NN-LAMB (Appendix D): Nesterov momentum folded into LAMB's
+//! first (and, for NN-LAMB, second) moment, following Dozat (2016)'s Nadam
+//! construction with a constant beta schedule.
+//!
+//! Matches `ref.nlamb_update` in python/compile/kernels/ref.py.
+
+use super::{trust_ratio, Hyper, Optimizer, Seg};
+
+fn nesterov_step(
+    h: &Hyper,
+    nesterov_v: bool,
+    params: &mut [f32],
+    grads: &[f32],
+    m_all: &mut [f32],
+    v_all: &mut [f32],
+    u_scratch: &mut [f32],
+    lr: f32,
+    step: u64,
+    segs: &[Seg],
+) -> Vec<f32> {
+    let t = step as f32;
+    let b1 = h.beta1;
+    let b2 = h.beta2;
+    // Nadam-style double corrections (constant-beta products -> powers).
+    let cm_prev = 1.0 - b1.powf(t + 1.0);
+    let cm_cur = 1.0 - b1.powf(t);
+    let cv_prev = 1.0 - b2.powf(t + 1.0);
+    let cv_cur = 1.0 - b2.powf(t);
+    let mut ratios = Vec::with_capacity(segs.len());
+    for s in segs {
+        let r = s.offset..s.offset + s.size;
+        let x = &mut params[r.clone()];
+        let g = &grads[r.clone()];
+        let m = &mut m_all[r.clone()];
+        let v = &mut v_all[r.clone()];
+        let u = &mut u_scratch[r];
+        let wd = if s.decay { h.weight_decay } else { 0.0 };
+        for i in 0..x.len() {
+            m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+            let m_hat = b1 * m[i] / cm_prev + (1.0 - b1) * g[i] / cm_cur;
+            v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+            let v_hat = if nesterov_v {
+                b2 * v[i] / cv_prev + (1.0 - b2) * g[i] * g[i] / cv_cur
+            } else {
+                b2 * v[i] / cv_cur
+            };
+            u[i] = m_hat / (v_hat.sqrt() + h.eps) + wd * x[i];
+        }
+        let ratio = if s.adapt {
+            trust_ratio(h.norm.eval(x), h.norm.eval(u), h)
+        } else {
+            1.0
+        };
+        let scale = lr * ratio;
+        for i in 0..x.len() {
+            x[i] -= scale * u[i];
+        }
+        ratios.push(ratio);
+    }
+    ratios
+}
+
+macro_rules! nesterov_opt {
+    ($name:ident, $sname:literal, $nv:expr) => {
+        pub struct $name {
+            pub h: Hyper,
+            m: Vec<f32>,
+            v: Vec<f32>,
+            u: Vec<f32>,
+        }
+
+        impl $name {
+            pub fn new(n: usize, h: Hyper) -> Self {
+                Self { h, m: vec![0.0; n], v: vec![0.0; n], u: vec![0.0; n] }
+            }
+        }
+
+        impl Optimizer for $name {
+            fn step(
+                &mut self,
+                params: &mut [f32],
+                grads: &[f32],
+                lr: f32,
+                step: u64,
+                segs: &[Seg],
+            ) -> Vec<f32> {
+                nesterov_step(
+                    &self.h, $nv, params, grads, &mut self.m, &mut self.v,
+                    &mut self.u, lr, step, segs,
+                )
+            }
+
+            fn name(&self) -> &'static str {
+                $sname
+            }
+
+            fn state_bytes(&self) -> usize {
+                (self.m.len() + self.v.len()) * 4
+            }
+        }
+    };
+}
+
+nesterov_opt!(NLamb, "nlamb", false);
+nesterov_opt!(NnLamb, "nnlamb", true);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::Lamb;
+
+    #[test]
+    fn nlamb_close_to_lamb_late_in_training() {
+        // As t grows the Nesterov corrections converge toward Adam's, so
+        // N-LAMB steps approach LAMB steps (Figure 1's near-identical
+        // curves).
+        let h = Hyper { weight_decay: 0.0, ..Hyper::default() };
+        let mut nl = NLamb::new(4, h);
+        let mut l = Lamb::new(4, h);
+        let mut xa = vec![1.0f32, 2.0, -1.0, 0.5];
+        let mut xb = xa.clone();
+        let segs = Seg::whole(4);
+        for t in 1..=300 {
+            let ga: Vec<f32> = xa.iter().map(|a| 2.0 * a).collect();
+            let gb: Vec<f32> = xb.iter().map(|a| 2.0 * a).collect();
+            nl.step(&mut xa, &ga, 0.01, t, &segs);
+            l.step(&mut xb, &gb, 0.01, t, &segs);
+        }
+        for (a, b) in xa.iter().zip(&xb) {
+            assert!((a - b).abs() < 0.05, "{xa:?} vs {xb:?}");
+        }
+    }
+
+    #[test]
+    fn nnlamb_differs_from_nlamb_early() {
+        let h = Hyper { weight_decay: 0.0, ..Hyper::default() };
+        let mut a = NLamb::new(2, h);
+        let mut b = NnLamb::new(2, h);
+        let mut xa = vec![1.0f32, -2.0];
+        let mut xb = xa.clone();
+        a.step(&mut xa, &[0.5, 0.3], 0.1, 1, &Seg::whole(2));
+        b.step(&mut xb, &[0.5, 0.3], 0.1, 1, &Seg::whole(2));
+        assert_ne!(xa, xb);
+    }
+}

@@ -1,0 +1,432 @@
+//! BERT-path reproductions: real training through the AOT artifacts on
+//! the synthetic MLM task, plus the pod model for the paper-scale time
+//! columns. These are the paper's headline experiments (Tables 1, 2, 4,
+//! 8; Figures 6, 7, 9-14).
+//!
+//! Scale note: quality columns train `bert-tiny` (hundreds of steps,
+//! CPU-sized batches) with the paper's *rules* (fixed epochs, sqrt-LR
+//! scaling, linear-epoch warmup); time/efficiency columns price the
+//! paper's exact BERT-Large setup with the calibrated pod model. The
+//! *shape* to check is stated above each table.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+
+use anyhow::Result;
+
+use crate::cluster::Pod;
+use crate::config::TrainConfig;
+use crate::coordinator::{BertTrainer, Stage};
+use crate::manifest::{Manifest, ModelMeta};
+use crate::metrics::{fmt_duration, render_table};
+use crate::runtime::Engine;
+use crate::schedule::{steps_for_batch, Schedule};
+
+use super::ReproCtx;
+
+/// The paper's BERT-Large-like model for pod-time accounting.
+pub fn bert_large_meta() -> ModelMeta {
+    ModelMeta {
+        name: "bert-large-sim".into(),
+        vocab: 30522,
+        hidden: 1024,
+        layers: 24,
+        heads: 16,
+        ff: 4096,
+        max_seq: 512,
+        total_params: 334_000_000,
+        params: vec![],
+    }
+}
+
+fn cfg_for(ctx: &ReproCtx, optimizer: &str, batch: usize, steps: u64) -> TrainConfig {
+    TrainConfig {
+        model: "bert-tiny".into(),
+        seq: 32,
+        seed: ctx.seed,
+        optimizer: optimizer.into(),
+        global_batch: batch,
+        steps,
+        chips: 8,
+        artifacts: ctx.artifacts.clone(),
+        ..TrainConfig::default()
+    }
+}
+
+/// Scaled-down batch ladder standing in for the paper's 512..32K: fixed
+/// total samples, steps halved as batch doubles.
+const LADDER: &[usize] = &[32, 64, 128, 256, 512];
+const BASE_BATCH: usize = 32;
+
+/// Map a ladder batch onto the paper's (so LR/warmup rules see the
+/// paper-scale batch): 32 -> 512, 512 -> 8192 ... factor 16.
+fn paper_batch(b: usize) -> usize {
+    b * 16
+}
+
+/// Table 1 (quality half): untuned LAMB, fixed epochs, batch ladder;
+/// plus the simulated pod time for the paper's exact rows.
+pub fn table1(ctx: &ReproCtx) -> Result<String> {
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load(&ctx.artifacts)?;
+    let base_steps = ctx.steps(512);
+    let mut rows = Vec::new();
+    for &batch in LADDER {
+        let steps = steps_for_batch(base_steps, BASE_BATCH, batch);
+        let pb = paper_batch(batch);
+        let sched = Schedule::untuned_bert(pb, steps);
+        let mut cfg = cfg_for(ctx, "lamb", batch, steps);
+        cfg.chips = (batch / 8).max(1);
+        let mut tr = BertTrainer::new(&engine, &manifest, cfg)?;
+        let stage = Stage { seq: 32, global_batch: batch, steps, schedule: sched };
+        let log = tr.train(&[stage])?;
+        let (dev_loss, dev_acc) = tr.evaluate(32, 8)?;
+        rows.push(vec![
+            format!("{batch} (paper {pb})"),
+            steps.to_string(),
+            if log.diverged { "diverge".into() } else { format!("{dev_acc:.4}") },
+            format!("{dev_loss:.3}"),
+            format!("{:.1}", log.tail_loss(10)),
+        ]);
+    }
+    let mut s = String::from(
+        "== Table 1a: LAMB batch scaling, fixed epochs (bert-tiny, real training) ==\n\
+         (paper shape: dev metric flat across the ladder while steps shrink 1/batch)\n",
+    );
+    s.push_str(&render_table(
+        &["batch", "steps", "dev acc", "dev loss", "train loss"],
+        &rows,
+    ));
+
+    // ---- Table 1b: paper-scale time columns from the pod model ----
+    let meta = bert_large_meta();
+    let mut rows = Vec::new();
+    let paper: &[(usize, u64, usize)] = &[
+        (512, 1_000_000, 16),
+        (1_024, 500_000, 32),
+        (2_048, 250_000, 64),
+        (4_096, 125_000, 128),
+        (8_192, 62_500, 256),
+        (16_384, 31_250, 512),
+        (32_768, 15_625, 1024),
+    ];
+    let paper_times = ["81.4h", "43.2h", "21.4h", "693.6m", "390.5m", "200.0m", "101.2m"];
+    for (i, &(batch, steps, chips)) in paper.iter().enumerate() {
+        let pod = Pod::tpu_v3(chips);
+        // Two-phase training: 9/10 of steps at seq 128, 1/10 at seq 512.
+        let t = pod.run_time(&meta, steps * 9 / 10, batch, 128)
+            + pod.run_time(&meta, steps / 10, batch, 512);
+        rows.push(vec![
+            batch.to_string(),
+            steps.to_string(),
+            chips.to_string(),
+            fmt_duration(t),
+            paper_times[i].into(),
+        ]);
+    }
+    // Mixed-batch row: stage 1 at 65536/seq128 (steps shrink 2x), stage 2
+    // at 32768/seq512.
+    {
+        let pod = Pod::tpu_v3(1024);
+        let s1 = 15_625u64 * 9 / 10 / 2; // 7031
+        let s2 = 15_625u64 / 10; // 1562
+        let t = pod.run_time(&meta, s1, 65_536, 128)
+            + pod.run_time(&meta, s2, 32_768, 512);
+        rows.push(vec![
+            "64k/32k".into(),
+            (s1 + s2).to_string(),
+            "1024".into(),
+            fmt_duration(t),
+            "76.19m".into(),
+        ]);
+    }
+    s.push_str(
+        "\n== Table 1b: simulated pod wall-clock at paper scale (BERT-Large, two-phase) ==\n",
+    );
+    s.push_str(&render_table(
+        &["batch", "steps", "TPUs", "simulated", "paper"],
+        &rows,
+    ));
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    std::fs::write(ctx.csv_path("table1b_times.csv"), {
+        let mut c = String::from("batch,steps,chips,sim_seconds\n");
+        for r in &rows {
+            writeln!(c, "{},{},{},{}", r[0], r[1], r[2], r[3])?;
+        }
+        c
+    })?;
+    Ok(s)
+}
+
+/// Table 2: LAMB vs LARS across the batch ladder.
+pub fn table2(ctx: &ReproCtx) -> Result<String> {
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load(&ctx.artifacts)?;
+    let base_steps = ctx.steps(512);
+    let mut rows = Vec::new();
+    for &batch in LADDER {
+        let steps = steps_for_batch(base_steps, BASE_BATCH, batch);
+        let pb = paper_batch(batch);
+        let mut cells = vec![format!("{batch} (paper {pb})")];
+        for opt in ["lars", "lamb"] {
+            let sched = Schedule::untuned_bert(pb, steps);
+            let cfg = cfg_for(ctx, opt, batch, steps);
+            let mut tr = BertTrainer::new(&engine, &manifest, cfg)?;
+            let stage =
+                Stage { seq: 32, global_batch: batch, steps, schedule: sched };
+            let log = tr.train(&[stage])?;
+            if log.diverged {
+                cells.push("diverge".into());
+            } else {
+                let (_, acc) = tr.evaluate(32, 8)?;
+                cells.push(format!("{acc:.4}"));
+            }
+        }
+        rows.push(cells);
+    }
+    let mut s = String::from(
+        "== Table 2: LAMB vs LARS across batch sizes (bert-tiny MLM) ==\n\
+         (paper shape: LAMB > LARS at every batch; LARS degrades/diverges at the top)\n",
+    );
+    s.push_str(&render_table(&["batch", "lars", "lamb"], &rows));
+    Ok(s)
+}
+
+/// Table 4: the untuned-LAMB recipe table (LR and warmup per batch, with
+/// the resulting dev metric) — the quality half of table1 with the rule
+/// values printed explicitly.
+pub fn table4(ctx: &ReproCtx) -> Result<String> {
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load(&ctx.artifacts)?;
+    let base_steps = ctx.steps(512);
+    let mut rows = Vec::new();
+    for &batch in LADDER {
+        let steps = steps_for_batch(base_steps, BASE_BATCH, batch);
+        let pb = paper_batch(batch);
+        let sched = Schedule::untuned_bert(pb, steps);
+        let (lr, warmup) = match &sched {
+            Schedule::WarmupPoly { base, warmup, .. } => (*base, *warmup),
+            _ => unreachable!(),
+        };
+        let cfg = cfg_for(ctx, "lamb", batch, steps);
+        let mut tr = BertTrainer::new(&engine, &manifest, cfg)?;
+        let stage = Stage { seq: 32, global_batch: batch, steps, schedule: sched };
+        let log = tr.train(&[stage])?;
+        let (_, acc) = tr.evaluate(32, 8)?;
+        rows.push(vec![
+            format!("{pb}"),
+            format!("{lr:.5}"),
+            format!("{warmup}/{steps}"),
+            if log.diverged { "diverge".into() } else { format!("{acc:.4}") },
+        ]);
+    }
+    let mut s = String::from(
+        "== Table 4: untuned LAMB — sqrt-LR scaling + linear-epoch warmup ==\n\
+         (LR doubles per 4x batch; warmup ratio doubles per 2x batch; metric stays flat)\n",
+    );
+    s.push_str(&render_table(
+        &["paper batch", "lr", "warmup/steps", "dev acc"],
+        &rows,
+    ));
+    Ok(s)
+}
+
+/// Table 8: ADAMW tuning at large batch — warmup x LR grid with
+/// divergence cells.
+pub fn table8(ctx: &ReproCtx) -> Result<String> {
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load(&ctx.artifacts)?;
+    let batch = 256; // top of the tiny ladder ~ paper 16K
+    let steps = steps_for_batch(ctx.steps(512), BASE_BATCH, batch);
+    let mut rows = Vec::new();
+    for warmup_frac in [0.05f64, 0.10, 0.20] {
+        for lr in [0.0001f32, 0.0002, 0.0003] {
+            // AdamW LRs are per-dimension (no trust scaling); the paper's
+            // values carry over directly.
+            let sched = Schedule::WarmupPoly {
+                base: lr * 8.0, // tiny model needs proportionally larger LR
+                warmup: ((steps as f64) * warmup_frac).round().max(1.0) as u64,
+                total: steps,
+                power: 1.0,
+            };
+            let cfg = cfg_for(ctx, "adamw", batch, steps);
+            let mut tr = BertTrainer::new(&engine, &manifest, cfg)?;
+            let stage =
+                Stage { seq: 32, global_batch: batch, steps, schedule: sched };
+            let log = tr.train(&[stage])?;
+            let cell = if log.diverged {
+                "diverged".to_string()
+            } else {
+                let (_, acc) = tr.evaluate(32, 8)?;
+                format!("{acc:.4}")
+            };
+            rows.push(vec![
+                format!("{warmup_frac:.2}x{steps}"),
+                format!("{:.4}", lr * 8.0),
+                format!("loss={:.3}", log.tail_loss(10)),
+                cell,
+            ]);
+        }
+    }
+    let mut s = String::from(
+        "== Table 8: ADAMW at large batch — warmup x LR grid ==\n\
+         (paper shape: divergence at low warmup / high LR; best cells below LAMB)\n",
+    );
+    s.push_str(&render_table(
+        &["warmup", "lr", "last loss", "dev acc"],
+        &rows,
+    ));
+    Ok(s)
+}
+
+/// Figure 6: loss curves nearly identical across batch sizes (fixed
+/// epochs).
+pub fn fig6(ctx: &ReproCtx) -> Result<String> {
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load(&ctx.artifacts)?;
+    let base_steps = ctx.steps(512);
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    let mut f = std::fs::File::create(ctx.csv_path("fig6_loss_curves.csv"))?;
+    writeln!(f, "batch,step,epoch_frac,loss")?;
+    let mut rows = Vec::new();
+    for &batch in &[32usize, 128, 512] {
+        let steps = steps_for_batch(base_steps, BASE_BATCH, batch);
+        let sched = Schedule::untuned_bert(paper_batch(batch), steps);
+        let cfg = cfg_for(ctx, "lamb", batch, steps);
+        let mut tr = BertTrainer::new(&engine, &manifest, cfg)?;
+        let stage = Stage { seq: 32, global_batch: batch, steps, schedule: sched };
+        let log = tr.train(&[stage])?;
+        for r in &log.records {
+            writeln!(
+                f,
+                "{batch},{},{:.4},{}",
+                r.step,
+                r.step as f64 / steps as f64,
+                r.loss
+            )?;
+        }
+        rows.push(vec![
+            batch.to_string(),
+            steps.to_string(),
+            format!("{:.3}", log.records[0].loss),
+            format!("{:.3}", log.tail_loss(10)),
+        ]);
+    }
+    let mut s = String::from(
+        "== Figure 6: loss vs epoch-fraction across batch sizes ==\n\
+         (paper shape: curves overlay when plotted against epochs)\n",
+    );
+    s.push_str(&render_table(
+        &["batch", "steps", "first loss", "final loss"],
+        &rows,
+    ));
+    s.push_str("curves: results/fig6_loss_curves.csv\n");
+    Ok(s)
+}
+
+/// Figure 7 (+ the 76-minute row machinery): mixed-batch two-stage
+/// training with re-warmup.
+pub fn fig7(ctx: &ReproCtx) -> Result<String> {
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load(&ctx.artifacts)?;
+    let total = steps_for_batch(ctx.steps(512), BASE_BATCH, 128);
+    // Stage 1: seq 32 at batch 256 (the "65536" analogue) for 9/10 of the
+    // (already halved) steps; stage 2: seq 128 at batch 128 ("32768").
+    let s1_steps = (total * 9 / 10 / 2).max(2);
+    let s2_steps = (total / 10).max(2);
+    let stage1 = Stage {
+        seq: 32,
+        global_batch: 256,
+        steps: s1_steps,
+        schedule: Schedule::untuned_bert(paper_batch(256), s1_steps),
+    };
+    // Re-warmup: stage 2 ramps from zero again (Section 4.1).
+    let stage2 = Stage {
+        seq: 128,
+        global_batch: 128,
+        steps: s2_steps,
+        schedule: Schedule::untuned_bert(paper_batch(128), s2_steps),
+    };
+    let cfg = cfg_for(ctx, "lamb", 256, s1_steps + s2_steps);
+    let mut tr = BertTrainer::new(&engine, &manifest, cfg)?;
+    let log = tr.train(&[stage1, stage2])?;
+    let (dev_loss, dev_acc) = tr.evaluate(128, 4)?;
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    log.write_csv(ctx.csv_path("fig7_mixed_batch_loss.csv"))?;
+    let mut s = String::from(
+        "== Figure 7: mixed-batch two-stage training with re-warmup ==\n\
+         (paper shape: smooth convergence across the stage switch, no blow-up)\n",
+    );
+    let max_stage2 = log
+        .records
+        .iter()
+        .filter(|r| r.step > s1_steps + 5)
+        .map(|r| r.loss)
+        .fold(f32::MIN, f32::max);
+    let end_stage1 = log
+        .records
+        .iter()
+        .filter(|r| r.step <= s1_steps)
+        .map(|r| r.loss)
+        .fold(f32::MAX, f32::min);
+    s.push_str(&format!(
+        "stage1 steps {s1_steps} (seq 32, b 256), stage2 steps {s2_steps} (seq 128, b 128)\n\
+         diverged: {} | min stage-1 loss {end_stage1:.3} | max post-switch loss {max_stage2:.3}\n\
+         dev (seq 128): loss {dev_loss:.3}, acc {dev_acc:.4}\n\
+         curve: results/fig7_mixed_batch_loss.csv\n",
+        log.diverged
+    ));
+    Ok(s)
+}
+
+/// Figures 9-14: LAMB trust-ratio snapshots per layer over training.
+pub fn fig9_14(ctx: &ReproCtx) -> Result<String> {
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load(&ctx.artifacts)?;
+    let steps = ctx.steps(120);
+    let cfg = cfg_for(ctx, "lamb", 64, steps);
+    let mut tr = BertTrainer::new(&engine, &manifest, cfg)?;
+    tr.ratio_every = (steps / 10).max(1);
+    let sched = Schedule::untuned_bert(paper_batch(64), steps);
+    let stage = Stage { seq: 32, global_batch: 64, steps, schedule: sched };
+    let log = tr.train(&[stage])?;
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    log.write_ratios_csv(ctx.csv_path("fig9_14_trust_ratios.csv"))?;
+
+    // Summarize the spread across layers at the last snapshot.
+    let names: Vec<&str> =
+        tr.meta.params.iter().map(|p| p.name.as_str()).collect();
+    let mut rows = Vec::new();
+    if let Some((step, ratios)) = log.trust_ratios.last() {
+        let adapted: Vec<f32> = ratios
+            .iter()
+            .zip(&tr.meta.params)
+            .filter(|(_, p)| p.adapt)
+            .map(|(r, _)| *r)
+            .collect();
+        let min = adapted.iter().cloned().fold(f32::MAX, f32::min);
+        let max = adapted.iter().cloned().fold(f32::MIN, f32::max);
+        let (mut imin, mut imax) = (0usize, 0usize);
+        for (i, r) in ratios.iter().enumerate() {
+            if tr.meta.params[i].adapt {
+                if *r == min {
+                    imin = i;
+                }
+                if *r == max {
+                    imax = i;
+                }
+            }
+        }
+        rows.push(vec!["step".into(), step.to_string()]);
+        rows.push(vec!["min ratio".into(), format!("{min:.4} ({})", names[imin])]);
+        rows.push(vec!["max ratio".into(), format!("{max:.4} ({})", names[imax])]);
+        rows.push(vec!["spread".into(), format!("{:.1}x", max / min.max(1e-9))]);
+    }
+    let mut s = String::from(
+        "== Figures 9-14: trust ratios differ strongly across layers ==\n\
+         (paper: ratios span orders of magnitude; LAMB boosts slow learners)\n",
+    );
+    s.push_str(&render_table(&["stat", "value"], &rows));
+    s.push_str("full dump: results/fig9_14_trust_ratios.csv\n");
+    Ok(s)
+}

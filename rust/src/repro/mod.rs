@@ -1,0 +1,89 @@
+//! Reproduction drivers: one entry point per table / figure of the paper
+//! (see DESIGN.md's experiment index). Each driver trains whatever it
+//! needs, prints a paper-style table to stdout, and writes CSV series
+//! under the output directory for the figure-shaped results.
+//!
+//! `run("all", ...)` regenerates everything (EXPERIMENTS.md records one
+//! such run).
+
+pub mod bert_exps;
+pub mod native_exps;
+pub mod pod_exps;
+
+use anyhow::{bail, Result};
+
+pub struct ReproCtx {
+    /// Output directory for CSVs (`results/` by default).
+    pub out_dir: String,
+    /// Artifact directory (for the BERT-path experiments).
+    pub artifacts: String,
+    /// Scale factor for step counts (1 = the defaults used in
+    /// EXPERIMENTS.md; smaller for smoke tests).
+    pub scale: f64,
+    pub seed: u64,
+}
+
+impl Default for ReproCtx {
+    fn default() -> Self {
+        ReproCtx {
+            out_dir: "results".into(),
+            artifacts: "artifacts".into(),
+            scale: 1.0,
+            seed: 42,
+        }
+    }
+}
+
+impl ReproCtx {
+    pub fn steps(&self, base: u64) -> u64 {
+        ((base as f64) * self.scale).round().max(2.0) as u64
+    }
+
+    pub fn csv_path(&self, name: &str) -> String {
+        format!("{}/{}", self.out_dir, name)
+    }
+}
+
+pub const EXPERIMENTS: &[&str] = &[
+    "table1", "table2", "table3", "table4", "table5", "table6", "table7",
+    "table8", "grids", "fig1", "fig2", "fig3", "fig5", "fig6", "fig7",
+    "fig8", "fig9_14",
+];
+
+/// Run one experiment (or "all"). Returns the rendered report text.
+pub fn run(which: &str, ctx: &ReproCtx) -> Result<String> {
+    let mut out = String::new();
+    let list: Vec<&str> = if which == "all" {
+        EXPERIMENTS.to_vec()
+    } else {
+        vec![which]
+    };
+    for exp in list {
+        let section = match exp {
+            "table1" => bert_exps::table1(ctx)?,
+            "table2" => bert_exps::table2(ctx)?,
+            "table3" => native_exps::table3(ctx)?,
+            "table4" => bert_exps::table4(ctx)?,
+            "table5" => native_exps::table5(ctx)?,
+            "table6" => native_exps::table6(ctx)?,
+            "table7" => native_exps::table7(ctx)?,
+            "table8" => bert_exps::table8(ctx)?,
+            "grids" => native_exps::grids(ctx)?,
+            "fig1" => native_exps::fig1(ctx)?,
+            "fig2" => native_exps::fig2(ctx)?,
+            "fig3" => native_exps::fig3(ctx)?,
+            "fig5" => native_exps::fig5(ctx)?,
+            "fig6" => bert_exps::fig6(ctx)?,
+            "fig7" => bert_exps::fig7(ctx)?,
+            "fig8" => pod_exps::fig8(ctx)?,
+            "fig9_14" => bert_exps::fig9_14(ctx)?,
+            other => bail!(
+                "unknown experiment {other:?}; expected one of {EXPERIMENTS:?} or 'all'"
+            ),
+        };
+        println!("{section}");
+        out.push_str(&section);
+        out.push('\n');
+    }
+    Ok(out)
+}

@@ -1,0 +1,109 @@
+//! Pod-model reproductions: Figure 8 (scaling efficiency) and supporting
+//! sweeps. Pure performance-model accounting at the paper's exact scale.
+
+use std::io::Write as _;
+
+use anyhow::Result;
+
+use crate::cluster::Pod;
+use crate::metrics::render_table;
+
+use super::bert_exps::bert_large_meta;
+use super::ReproCtx;
+
+/// Figure 8: speedup / scaling efficiency from 16 to 1024 chips, batch
+/// scaled with the slice (weak scaling), plus the mixed-batch point.
+pub fn fig8(ctx: &ReproCtx) -> Result<String> {
+    let meta = bert_large_meta();
+    let base = Pod::tpu_v3(16);
+    let base_batch = 512usize;
+    // Baseline step time weighted over the two-phase schedule.
+    let phase_time = |pod: &Pod, batch: usize| {
+        0.9 * pod.step_time(&meta, batch, 128)
+            + 0.1 * pod.step_time(&meta, batch, 512)
+    };
+    let t_base = phase_time(&base, base_batch);
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    let mut f = std::fs::File::create(ctx.csv_path("fig8_scaling.csv"))?;
+    writeln!(f, "chips,batch,speedup,ideal,efficiency")?;
+    let mut rows = Vec::new();
+    for chips in [16usize, 32, 64, 128, 256, 512, 1024] {
+        let pod = Pod::tpu_v3(chips);
+        let batch = base_batch * chips / 16;
+        // Same total work => speedup = (t_base / t) * (batch / base_batch)
+        let t = phase_time(&pod, batch);
+        let speedup = t_base / t * (batch as f64 / base_batch as f64);
+        let ideal = chips as f64 / 16.0;
+        let eff = speedup / ideal;
+        writeln!(f, "{chips},{batch},{speedup:.2},{ideal},{eff:.4}")?;
+        rows.push(vec![
+            chips.to_string(),
+            batch.to_string(),
+            format!("{speedup:.1}x"),
+            format!("{ideal:.0}x"),
+            format!("{:.1}%", eff * 100.0),
+        ]);
+    }
+    // Mixed-batch point: stage 1 runs at 2x the seq-128 batch (65536),
+    // halving stage-1 steps — same total samples.
+    {
+        let pod = Pod::tpu_v3(1024);
+        // time per unit work: weight phases by their share of *samples*.
+        let t128 = pod.step_time(&meta, 65_536, 128) / 2.0; // per 32768-sample unit
+        let t512 = pod.step_time(&meta, 32_768, 512);
+        let t_mixed = 0.9 * t128 + 0.1 * t512;
+        let speedup = t_base / t_mixed * (32_768.0 / base_batch as f64);
+        let eff = speedup / 64.0;
+        writeln!(f, "1024,65536/32768,{speedup:.2},64,{eff:.4}")?;
+        rows.push(vec![
+            "1024-mixed".into(),
+            "64k/32k".into(),
+            format!("{speedup:.1}x"),
+            "64x".into(),
+            format!("{:.1}%", eff * 100.0),
+        ]);
+    }
+    let mut s = String::from(
+        "== Figure 8: weak-scaling efficiency, 16 -> 1024 chips ==\n\
+         (paper: 49.1x of 64x = 76.8%; mixed-batch 65.2x of 64x = 101.8%)\n",
+    );
+    s.push_str(&render_table(
+        &["chips", "batch", "speedup", "ideal", "efficiency"],
+        &rows,
+    ));
+    s.push_str("curve: results/fig8_scaling.csv\n");
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8_shape() {
+        let ctx = ReproCtx {
+            out_dir: std::env::temp_dir()
+                .join("lamb_fig8_test")
+                .to_string_lossy()
+                .into_owned(),
+            ..Default::default()
+        };
+        let report = fig8(&ctx).unwrap();
+        assert!(report.contains("1024-mixed"));
+        // efficiency at 1024 chips should be in the paper's ballpark and
+        // mixed should beat un-mixed.
+        let csv = std::fs::read_to_string(
+            std::path::Path::new(&ctx.out_dir).join("fig8_scaling.csv"),
+        )
+        .unwrap();
+        let effs: Vec<f64> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.rsplit(',').next().unwrap().parse::<f64>().unwrap())
+            .collect();
+        let eff_1024 = effs[6];
+        let eff_mixed = effs[7];
+        assert!((0.6..0.95).contains(&eff_1024), "eff1024 {eff_1024}");
+        assert!(eff_mixed > eff_1024, "{eff_mixed} vs {eff_1024}");
+    }
+}

@@ -1,0 +1,202 @@
+//! Learning-rate schedules — the exact rules of Section 4.3.
+//!
+//! * polynomial decay `eta_t = eta_0 * (1 - t/T)` (the BERT baseline);
+//! * linear warmup into the decay;
+//! * the **sqrt-LR scaling rule**: doubling the batch multiplies the LR by
+//!   sqrt(2) (Table 4: 5/2^3e3 at 512 ... 5/2^0e3 at 32K);
+//! * **linear-epoch warmup**: warmup duration proportional to batch size
+//!   (Table 4: warmup ratio 1/320 at 512 doubling to 1/5 at 32K);
+//! * the Goyal et al. (2017) recipe (5-epoch warmup, x0.1 at 30/60/80
+//!   epochs) used by the "+" baselines of Table 3;
+//! * **two-stage re-warmup** for mixed-batch training (Section 4.1: "ramp
+//!   up the learning rate from zero again in the second stage").
+
+/// A deterministic LR schedule over 1-based step indices.
+#[derive(Clone, Debug)]
+pub enum Schedule {
+    Constant {
+        lr: f32,
+    },
+    /// eta_0 * (1 - t/T)^power; paper uses power = 1.
+    Poly {
+        base: f32,
+        total: u64,
+        power: f32,
+    },
+    /// Linear ramp 0 -> base over `warmup`, then Poly on the remainder.
+    WarmupPoly {
+        base: f32,
+        warmup: u64,
+        total: u64,
+        power: f32,
+    },
+    /// Goyal step recipe: linear warmup then multiplicative drops at the
+    /// given step boundaries.
+    Step {
+        base: f32,
+        warmup: u64,
+        boundaries: Vec<(u64, f32)>,
+    },
+    /// Mixed-batch two-stage schedule: `stage1` until `switch`, then
+    /// `stage2` re-indexed from step 1 (the re-warm-up trick).
+    TwoStage {
+        stage1: Box<Schedule>,
+        stage2: Box<Schedule>,
+        switch: u64,
+    },
+}
+
+impl Schedule {
+    pub fn lr(&self, step: u64) -> f32 {
+        let t = step.max(1);
+        match self {
+            Schedule::Constant { lr } => *lr,
+            Schedule::Poly { base, total, power } => {
+                let frac = (t.min(*total) as f32) / (*total as f32);
+                base * (1.0 - frac).max(0.0).powf(*power)
+            }
+            Schedule::WarmupPoly { base, warmup, total, power } => {
+                if t <= *warmup {
+                    base * (t as f32) / (*warmup.max(&1) as f32)
+                } else {
+                    let done = t - warmup;
+                    let span = total.saturating_sub(*warmup).max(1);
+                    let frac = (done.min(span) as f32) / (span as f32);
+                    base * (1.0 - frac).max(0.0).powf(*power)
+                }
+            }
+            Schedule::Step { base, warmup, boundaries } => {
+                if t <= *warmup {
+                    return base * (t as f32) / (*warmup.max(&1) as f32);
+                }
+                let mut lr = *base;
+                for (b, mult) in boundaries {
+                    if t > *b {
+                        lr *= mult;
+                    }
+                }
+                lr
+            }
+            Schedule::TwoStage { stage1, stage2, switch } => {
+                if t <= *switch {
+                    stage1.lr(t)
+                } else {
+                    stage2.lr(t - switch)
+                }
+            }
+        }
+    }
+
+    /// The paper's untuned BERT recipe for a given batch size: sqrt-scaled
+    /// LR + linear-epoch warmup + poly decay over `total` steps.
+    pub fn untuned_bert(batch: usize, total: u64) -> Schedule {
+        let base = sqrt_scaled_lr(0.005, 32768, batch);
+        let warmup = ((total as f64) * warmup_ratio(batch)).round() as u64;
+        Schedule::WarmupPoly { base, warmup: warmup.max(1), total, power: 1.0 }
+    }
+}
+
+/// sqrt-LR scaling rule: `lr(ref_batch) * sqrt(batch / ref_batch)`.
+/// Table 4 anchor: 0.005 at batch 32768.
+pub fn sqrt_scaled_lr(lr_ref: f32, ref_batch: usize, batch: usize) -> f32 {
+    lr_ref * ((batch as f32) / (ref_batch as f32)).sqrt()
+}
+
+/// Linear-epoch warmup ratio (Table 4): 1/320 of total steps at batch 512,
+/// doubling with the batch size (1/5 at 32K).
+pub fn warmup_ratio(batch: usize) -> f64 {
+    (batch as f64) / (512.0 * 320.0)
+}
+
+/// Fixed-epoch step count: scaling batch B_0 -> B divides steps by B/B_0
+/// (Table 1: 1000k steps at 512 -> 15625 at 32K).
+pub fn steps_for_batch(base_steps: u64, base_batch: usize, batch: usize) -> u64 {
+    ((base_steps as u128 * base_batch as u128) / batch as u128).max(1) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poly_decays_to_zero() {
+        let s = Schedule::Poly { base: 1.0, total: 100, power: 1.0 };
+        assert!((s.lr(1) - 0.99).abs() < 1e-6);
+        assert!((s.lr(50) - 0.5).abs() < 1e-6);
+        assert_eq!(s.lr(100), 0.0);
+        assert_eq!(s.lr(200), 0.0); // clamped past T
+    }
+
+    #[test]
+    fn warmup_ramps_then_decays() {
+        let s = Schedule::WarmupPoly { base: 1.0, warmup: 10, total: 110, power: 1.0 };
+        assert!((s.lr(1) - 0.1).abs() < 1e-6);
+        assert!((s.lr(10) - 1.0).abs() < 1e-6);
+        assert!(s.lr(11) < 1.0);
+        assert!(s.lr(60) > s.lr(100));
+    }
+
+    #[test]
+    fn goyal_step_drops() {
+        let s = Schedule::Step {
+            base: 1.0,
+            warmup: 5,
+            boundaries: vec![(30, 0.1), (60, 0.1), (80, 0.1)],
+        };
+        assert!((s.lr(3) - 0.6).abs() < 1e-6);
+        assert!((s.lr(29) - 1.0).abs() < 1e-6);
+        assert!((s.lr(31) - 0.1).abs() < 1e-6);
+        assert!((s.lr(61) - 0.01).abs() < 1e-6);
+        assert!((s.lr(81) - 0.001).abs() < 1e-7);
+    }
+
+    #[test]
+    fn two_stage_rewarms() {
+        let mk = |total| Schedule::WarmupPoly { base: 1.0, warmup: 10, total, power: 1.0 };
+        let s = Schedule::TwoStage {
+            stage1: Box::new(mk(100)),
+            stage2: Box::new(mk(50)),
+            switch: 100,
+        };
+        // End of stage 1: decayed near zero. Start of stage 2: ramping again.
+        assert!(s.lr(99) < 0.05);
+        assert!((s.lr(101) - 0.1).abs() < 1e-6, "{}", s.lr(101));
+        assert!((s.lr(110) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sqrt_rule_matches_table4() {
+        // Table 4: batch 512 -> 5/(2^3 * 10^3) = 6.25e-4; 32K -> 5e-3.
+        assert!((sqrt_scaled_lr(0.005, 32768, 512) - 0.000625).abs() < 1e-9);
+        assert!((sqrt_scaled_lr(0.005, 32768, 32768) - 0.005).abs() < 1e-9);
+        // each doubling: x sqrt(2)
+        let r = sqrt_scaled_lr(0.005, 32768, 1024)
+            / sqrt_scaled_lr(0.005, 32768, 512);
+        assert!((r - std::f32::consts::SQRT_2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn warmup_ratio_matches_table4() {
+        assert!((warmup_ratio(512) - 1.0 / 320.0).abs() < 1e-12);
+        assert!((warmup_ratio(32768) - 1.0 / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fixed_epoch_steps_match_table1() {
+        assert_eq!(steps_for_batch(1_000_000, 512, 32768), 15625);
+        assert_eq!(steps_for_batch(1_000_000, 512, 16384), 31250);
+        assert_eq!(steps_for_batch(1_000_000, 512, 512), 1_000_000);
+    }
+
+    #[test]
+    fn untuned_bert_recipe() {
+        let s = Schedule::untuned_bert(32768, 15625);
+        // warmup = 0.2 * 15625 = 3125 steps (paper's example).
+        if let Schedule::WarmupPoly { warmup, base, .. } = s {
+            assert_eq!(warmup, 3125);
+            assert!((base - 0.005).abs() < 1e-9);
+        } else {
+            panic!("wrong variant");
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! Used by the `rust/benches/*.rs` targets (`cargo bench`): warmup, then
+//! repeated timed runs, reporting median / mean / p95 and derived
+//! throughput.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10} med {:>12?} mean {:>12?} p95 {:>12?}",
+            self.name, self.iters, self.median, self.mean, self.p95
+        );
+    }
+
+    /// Print with an items/sec throughput line (e.g. params/s, tokens/s).
+    pub fn print_throughput(&self, items: f64, unit: &str) {
+        let per_sec = items / self.median.as_secs_f64();
+        println!(
+            "{:<44} med {:>12?}  {:>14.3e} {unit}/s",
+            self.name, self.median, per_sec
+        );
+    }
+}
+
+/// Run `f` until ~`budget` has elapsed (at least 5 iterations), after a
+/// small warmup. Returns timing stats.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup: 2 runs or 10% of budget.
+    let warm_start = Instant::now();
+    for _ in 0..2 {
+        f();
+        if warm_start.elapsed() > budget / 10 {
+            break;
+        }
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 5 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    samples.sort();
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    let p95 = samples[(samples.len() * 95 / 100).min(samples.len() - 1)];
+    BenchResult { name: name.to_string(), iters: samples.len(), median, mean, p95 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_at_least_five_iters() {
+        let mut n = 0;
+        let r = bench("noop", Duration::from_millis(5), || n += 1);
+        assert!(r.iters >= 5);
+        assert!(n >= r.iters);
+        assert!(r.median <= r.p95);
+    }
+}

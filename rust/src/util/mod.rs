@@ -1,0 +1,11 @@
+//! Self-contained utilities: deterministic RNG, a minimal JSON parser for
+//! the artifact manifest, a micro-benchmark timer, and CLI helpers.
+//!
+//! The build is fully offline; these replace the usual `rand`,
+//! `serde_json` and `criterion` dependencies.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use rng::Rng;

@@ -1,0 +1,166 @@
+//! Deterministic pseudo-random numbers (SplitMix64 core) with the handful
+//! of distributions the trainer needs. Seeded everywhere from config so
+//! every experiment in EXPERIMENTS.md is exactly reproducible.
+
+/// SplitMix64: tiny, fast, passes BigCrush for our purposes, and —
+/// crucially — has no dependencies.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+    /// Cached second Box-Muller normal deviate.
+    spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15), spare: None }
+    }
+
+    /// Derive an independent stream (for per-worker / per-run seeding).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0xA24B_AED4_963E_E407))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's multiply-shift; bias negligible for our n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        let (u1, u2) = (self.uniform().max(1e-300), self.uniform());
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.spare = Some(r * s);
+        r * c
+    }
+
+    /// Normal with std `std` as f32 (parameter init).
+    pub fn normal_f32(&mut self, std: f32) -> f32 {
+        (self.normal() as f32) * std
+    }
+
+    /// Zipf-distributed rank in [0, n) with exponent `s` (synthetic
+    /// corpus token distribution). Uses the standard inverse-CDF
+    /// approximation for s != 1 and harmonic sampling cost O(1).
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        // Rejection-free approximation: inverse of the continuous CDF.
+        let u = self.uniform();
+        if (s - 1.0).abs() < 1e-9 {
+            let hn = (n as f64).ln();
+            return ((hn * u).exp() - 1.0).floor().min((n - 1) as f64) as u64;
+        }
+        let a = 1.0 - s;
+        let x = ((n as f64).powf(a) * u + (1.0 - u)).powf(1.0 / a) - 1.0;
+        (x.floor() as u64).min(n - 1)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Rng::new(1);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / 10_000.0 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn zipf_skewed_and_bounded() {
+        let mut r = Rng::new(4);
+        let n = 1000u64;
+        let mut counts = vec![0u32; n as usize];
+        for _ in 0..20_000 {
+            let k = r.zipf(n, 1.2);
+            assert!(k < n);
+            counts[k as usize] += 1;
+        }
+        // Head must dominate tail for a Zipfian draw.
+        let head: u32 = counts[..10].iter().sum();
+        let tail: u32 = counts[900..].iter().sum();
+        assert!(head > 10 * tail.max(1), "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let mut r = Rng::new(5);
+        let mut a = r.fork(0);
+        let mut b = r.fork(1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(6);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

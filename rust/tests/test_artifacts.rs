@@ -1,0 +1,284 @@
+//! Integration tests over the real AOT artifacts (require
+//! `make artifacts` to have run — they fail loudly with a pointer if the
+//! manifest is missing).
+//!
+//! The headline check: the native Rust LAMB step and the Pallas-kernel
+//! LAMB artifact produce the same update, on real BERT gradients.
+
+use lamb_train::data::{Corpus, MlmConfig, MlmGenerator};
+use lamb_train::manifest::Manifest;
+use lamb_train::model::ParamStore;
+use lamb_train::optim::{self, Hyper, Seg};
+use lamb_train::runtime::{self, Engine};
+
+const MODEL: &str = "bert-tiny";
+const SEQ: usize = 32;
+const MB: usize = 8;
+
+struct Fixture {
+    engine: Engine,
+    manifest: Manifest,
+}
+
+fn fixture() -> Fixture {
+    let manifest = Manifest::load("artifacts")
+        .expect("artifacts/manifest.json missing — run `make artifacts`");
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    Fixture { engine, manifest }
+}
+
+fn batch(f: &Fixture, seed: u64) -> lamb_train::data::Batch {
+    let meta = f.manifest.model(MODEL).unwrap();
+    MlmGenerator::new(Corpus::new(meta.vocab), MlmConfig::new(SEQ), seed, 0)
+        .next_batch(MB)
+}
+
+fn grads_for(f: &Fixture, params: &[f32], seed: u64) -> (f32, Vec<f32>) {
+    let grad = f
+        .engine
+        .load(f.manifest.path(f.manifest.grad(MODEL, SEQ).unwrap()))
+        .unwrap();
+    let b = batch(f, seed);
+    let out = grad
+        .run(&[
+            runtime::lit_f32(params),
+            runtime::lit_i32_2d(&b.tokens, MB, SEQ).unwrap(),
+            runtime::lit_i32_2d(&b.targets, MB, SEQ).unwrap(),
+            runtime::lit_f32_2d(&b.mask, MB, SEQ).unwrap(),
+        ])
+        .unwrap();
+    (
+        runtime::scalar_f32(&out[0]).unwrap(),
+        runtime::vec_f32(&out[1]).unwrap(),
+    )
+}
+
+#[test]
+fn grad_artifact_initial_loss_is_near_uniform() {
+    let f = fixture();
+    let meta = f.manifest.model(MODEL).unwrap();
+    let ps = ParamStore::init(meta, 42);
+    let (loss, grads) = grads_for(&f, &ps.flat, 0);
+    // Random init => loss ~ ln(vocab).
+    let expect = (meta.vocab as f32).ln();
+    assert!((loss - expect).abs() < 0.5, "loss {loss} vs ln(V) {expect}");
+    assert_eq!(grads.len(), meta.total_params);
+    assert!(grads.iter().all(|g| g.is_finite()));
+    let gnorm: f32 = grads.iter().map(|g| g * g).sum::<f32>().sqrt();
+    assert!(gnorm > 1e-3, "gradient should be nonzero: {gnorm}");
+}
+
+#[test]
+fn native_lamb_matches_pallas_artifact() {
+    let f = fixture();
+    let meta = f.manifest.model(MODEL).unwrap();
+    let ps = ParamStore::init(meta, 7);
+    let n = meta.total_params;
+    let (_, grads) = grads_for(&f, &ps.flat, 1);
+
+    // Artifact step.
+    let opt = f
+        .engine
+        .load(f.manifest.path(f.manifest.opt(MODEL, "lamb").unwrap()))
+        .unwrap();
+    let lr = 0.01f32;
+    let out = opt
+        .run(&[
+            runtime::lit_f32(&ps.flat),
+            runtime::lit_f32(&grads),
+            runtime::lit_f32(&vec![0.0; n]),
+            runtime::lit_f32(&vec![0.0; n]),
+            runtime::lit_scalar(lr),
+            runtime::lit_scalar(1.0),
+        ])
+        .unwrap();
+    let ap = runtime::vec_f32(&out[0]).unwrap();
+    let am = runtime::vec_f32(&out[1]).unwrap();
+    let av = runtime::vec_f32(&out[2]).unwrap();
+    let ar = runtime::vec_f32(&out[3]).unwrap();
+
+    // Native step (same defaults as optim.py / kernels/lamb.py).
+    let mut native = optim::Lamb::new(n, Hyper::default());
+    let mut np = ps.flat.clone();
+    let segs = Seg::from_manifest(&meta.params);
+    let nr = optim::Optimizer::step(&mut native, &mut np, &grads, lr, 1, &segs);
+
+    assert_eq!(ar.len(), nr.len());
+    for (i, (a, b)) in ar.iter().zip(&nr).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+            "trust ratio seg {i} ({}): artifact {a} vs native {b}",
+            meta.params[i].name
+        );
+    }
+    let mut max_rel = 0.0f32;
+    for i in 0..n {
+        let d = (ap[i] - np[i]).abs() / (1.0 + np[i].abs());
+        max_rel = max_rel.max(d);
+    }
+    assert!(max_rel < 1e-4, "param mismatch: max rel {max_rel}");
+    let (nm, nv) = native.state();
+    for i in (0..n).step_by(997) {
+        assert!((am[i] - nm[i]).abs() < 1e-5, "m mismatch at {i}");
+        assert!((av[i] - nv[i]).abs() < 1e-6, "v mismatch at {i}");
+    }
+}
+
+#[test]
+fn native_lars_matches_pallas_artifact() {
+    let f = fixture();
+    let meta = f.manifest.model(MODEL).unwrap();
+    let ps = ParamStore::init(meta, 8);
+    let n = meta.total_params;
+    let (_, grads) = grads_for(&f, &ps.flat, 2);
+    let opt = f
+        .engine
+        .load(f.manifest.path(f.manifest.opt(MODEL, "lars").unwrap()))
+        .unwrap();
+    let lr = 0.05f32;
+    let out = opt
+        .run(&[
+            runtime::lit_f32(&ps.flat),
+            runtime::lit_f32(&grads),
+            runtime::lit_f32(&vec![0.0; n]),
+            runtime::lit_f32(&vec![0.0; n]),
+            runtime::lit_scalar(lr),
+            runtime::lit_scalar(1.0),
+        ])
+        .unwrap();
+    let ap = runtime::vec_f32(&out[0]).unwrap();
+    let mut native = optim::Lars::new(n, Hyper::default());
+    let mut np = ps.flat.clone();
+    let segs = Seg::from_manifest(&meta.params);
+    optim::Optimizer::step(&mut native, &mut np, &grads, lr, 1, &segs);
+    let mut max_rel = 0.0f32;
+    for i in 0..n {
+        max_rel = max_rel.max((ap[i] - np[i]).abs() / (1.0 + np[i].abs()));
+    }
+    assert!(max_rel < 1e-4, "lars param mismatch: {max_rel}");
+}
+
+#[test]
+fn fused_step_equals_grad_then_opt() {
+    let f = fixture();
+    let meta = f.manifest.model(MODEL).unwrap();
+    let ps = ParamStore::init(meta, 9);
+    let n = meta.total_params;
+    let b = batch(&f, 3);
+    let lr = 0.01f32;
+
+    // Path A: fused train-step artifact.
+    let step = f
+        .engine
+        .load(f.manifest.path(f.manifest.step(MODEL, SEQ, "lamb").unwrap()))
+        .unwrap();
+    let out = step
+        .run(&[
+            runtime::lit_f32(&ps.flat),
+            runtime::lit_f32(&vec![0.0; n]),
+            runtime::lit_f32(&vec![0.0; n]),
+            runtime::lit_i32_2d(&b.tokens, MB, SEQ).unwrap(),
+            runtime::lit_i32_2d(&b.targets, MB, SEQ).unwrap(),
+            runtime::lit_f32_2d(&b.mask, MB, SEQ).unwrap(),
+            runtime::lit_scalar(lr),
+            runtime::lit_scalar(1.0),
+        ])
+        .unwrap();
+    let fused_params = runtime::vec_f32(&out[0]).unwrap();
+    let fused_loss = runtime::scalar_f32(&out[3]).unwrap();
+
+    // Path B: grad artifact then opt artifact.
+    let grad = f
+        .engine
+        .load(f.manifest.path(f.manifest.grad(MODEL, SEQ).unwrap()))
+        .unwrap();
+    let gout = grad
+        .run(&[
+            runtime::lit_f32(&ps.flat),
+            runtime::lit_i32_2d(&b.tokens, MB, SEQ).unwrap(),
+            runtime::lit_i32_2d(&b.targets, MB, SEQ).unwrap(),
+            runtime::lit_f32_2d(&b.mask, MB, SEQ).unwrap(),
+        ])
+        .unwrap();
+    let loss = runtime::scalar_f32(&gout[0]).unwrap();
+    let grads = runtime::vec_f32(&gout[1]).unwrap();
+    let opt = f
+        .engine
+        .load(f.manifest.path(f.manifest.opt(MODEL, "lamb").unwrap()))
+        .unwrap();
+    let oout = opt
+        .run(&[
+            runtime::lit_f32(&ps.flat),
+            runtime::lit_f32(&grads),
+            runtime::lit_f32(&vec![0.0; n]),
+            runtime::lit_f32(&vec![0.0; n]),
+            runtime::lit_scalar(lr),
+            runtime::lit_scalar(1.0),
+        ])
+        .unwrap();
+    let two_step_params = runtime::vec_f32(&oout[0]).unwrap();
+
+    assert!((fused_loss - loss).abs() < 1e-4, "{fused_loss} vs {loss}");
+    let mut max_abs = 0.0f32;
+    for i in 0..n {
+        max_abs = max_abs.max((fused_params[i] - two_step_params[i]).abs());
+    }
+    assert!(max_abs < 1e-4, "fused vs two-step params: {max_abs}");
+}
+
+#[test]
+fn eval_artifact_reports_loss_and_accuracy() {
+    let f = fixture();
+    let meta = f.manifest.model(MODEL).unwrap();
+    let ps = ParamStore::init(meta, 10);
+    let eval = f
+        .engine
+        .load(f.manifest.path(f.manifest.eval(MODEL, SEQ).unwrap()))
+        .unwrap();
+    let b = batch(&f, 4);
+    let out = eval
+        .run(&[
+            runtime::lit_f32(&ps.flat),
+            runtime::lit_i32_2d(&b.tokens, MB, SEQ).unwrap(),
+            runtime::lit_i32_2d(&b.targets, MB, SEQ).unwrap(),
+            runtime::lit_f32_2d(&b.mask, MB, SEQ).unwrap(),
+        ])
+        .unwrap();
+    let loss = runtime::scalar_f32(&out[0]).unwrap();
+    let acc = runtime::scalar_f32(&out[1]).unwrap();
+    assert!(loss > 0.0 && loss.is_finite());
+    assert!((0.0..=1.0).contains(&acc));
+    // Untrained model: near-chance accuracy.
+    assert!(acc < 0.2, "acc {acc}");
+}
+
+#[test]
+fn all_optimizer_artifacts_execute_and_make_progress() {
+    let f = fixture();
+    let meta = f.manifest.model(MODEL).unwrap();
+    let ps = ParamStore::init(meta, 11);
+    let n = meta.total_params;
+    let (_, grads) = grads_for(&f, &ps.flat, 5);
+    for opt_name in ["lamb", "lars", "adam", "adamw", "adagrad", "momentum", "nlamb", "nnlamb"] {
+        let a = f.manifest.opt(MODEL, opt_name).unwrap();
+        let exe = f.engine.load(f.manifest.path(a)).unwrap();
+        let out = exe
+            .run(&[
+                runtime::lit_f32(&ps.flat),
+                runtime::lit_f32(&grads),
+                runtime::lit_f32(&vec![0.0; n]),
+                runtime::lit_f32(&vec![0.0; n]),
+                runtime::lit_scalar(0.01),
+                runtime::lit_scalar(1.0),
+            ])
+            .unwrap();
+        let new_p = runtime::vec_f32(&out[0]).unwrap();
+        assert!(new_p.iter().all(|x| x.is_finite()), "{opt_name}");
+        let delta: f32 = new_p
+            .iter()
+            .zip(&ps.flat)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(delta > 0.0, "{opt_name} made no update");
+    }
+}

@@ -1,0 +1,241 @@
+//! Coordinator integration tests: full training loops over the artifacts
+//! (distributed and fused paths), determinism, divergence handling, and
+//! the multi-stage mixed-batch driver.
+
+use lamb_train::config::{StepPath, TrainConfig};
+use lamb_train::coordinator::{BertTrainer, Stage};
+use lamb_train::manifest::Manifest;
+use lamb_train::runtime::Engine;
+use lamb_train::schedule::Schedule;
+
+fn cfg(optimizer: &str, batch: usize, steps: u64) -> TrainConfig {
+    TrainConfig {
+        model: "bert-tiny".into(),
+        seq: 32,
+        optimizer: optimizer.into(),
+        global_batch: batch,
+        steps,
+        chips: 4,
+        ..TrainConfig::default()
+    }
+}
+
+fn stage(batch: usize, steps: u64, lr: f32) -> Stage {
+    Stage {
+        seq: 32,
+        global_batch: batch,
+        steps,
+        schedule: Schedule::WarmupPoly {
+            base: lr,
+            warmup: (steps / 10).max(1),
+            total: steps,
+            power: 1.0,
+        },
+    }
+}
+
+#[test]
+fn distributed_training_reduces_loss() {
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let mut tr = BertTrainer::new(&engine, &manifest, cfg("lamb", 32, 30)).unwrap();
+    let log = tr.train(&[stage(32, 30, 0.005)]).unwrap();
+    assert!(!log.diverged);
+    assert_eq!(log.records.len(), 30);
+    assert!(
+        log.tail_loss(5) < log.records[0].loss,
+        "{} -> {}",
+        log.records[0].loss,
+        log.tail_loss(5)
+    );
+    // microbatching: 32/8 = 4 micro-steps per step, all real executions
+    assert!(log.records.iter().all(|r| r.loss.is_finite()));
+    // simulated time advances monotonically
+    assert!(log.records.windows(2).all(|w| w[1].sim_time > w[0].sim_time));
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let run = || {
+        let mut tr =
+            BertTrainer::new(&engine, &manifest, cfg("lamb", 16, 8)).unwrap();
+        tr.train(&[stage(16, 8, 0.005)]).unwrap().losses()
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn fused_path_agrees_with_distributed_on_single_microbatch() {
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let mut c1 = cfg("lamb", 8, 6);
+    c1.step_path = StepPath::Fused;
+    let mut c2 = cfg("lamb", 8, 6);
+    c2.step_path = StepPath::Distributed;
+    let mut t1 = BertTrainer::new(&engine, &manifest, c1).unwrap();
+    let mut t2 = BertTrainer::new(&engine, &manifest, c2).unwrap();
+    let l1 = t1.train(&[stage(8, 6, 0.01)]).unwrap();
+    let l2 = t2.train(&[stage(8, 6, 0.01)]).unwrap();
+    for (a, b) in l1.losses().iter().zip(l2.losses().iter()) {
+        assert!((a - b).abs() < 1e-3, "fused {a} vs distributed {b}");
+    }
+    for (a, b) in t1.params.iter().zip(t2.params.iter()).step_by(991) {
+        assert!((a - b).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn mixed_batch_stage_switch_keeps_state() {
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let mut tr = BertTrainer::new(&engine, &manifest, cfg("lamb", 32, 20)).unwrap();
+    let stages = vec![
+        stage(32, 12, 0.005),
+        Stage {
+            seq: 128, // second stage switches sequence length
+            global_batch: 16,
+            steps: 8,
+            schedule: Schedule::WarmupPoly {
+                base: 0.003,
+                warmup: 2,
+                total: 8,
+                power: 1.0,
+            },
+        },
+    ];
+    let log = tr.train(&stages).unwrap();
+    assert!(!log.diverged);
+    assert_eq!(log.records.len(), 20);
+    // steps keep counting across the switch
+    assert_eq!(log.records.last().unwrap().step, 20);
+    // optimizer moments carried over (nonzero after stage 1)
+    assert!(tr.m.iter().any(|&x| x != 0.0));
+    // stage 2 loss should not blow up right after the switch (re-warmup)
+    let s1_last = log.records[11].loss;
+    let s2_max = log.records[12..].iter().map(|r| r.loss).fold(f32::MIN, f32::max);
+    assert!(s2_max < s1_last * 1.6, "post-switch blow-up: {s1_last} -> {s2_max}");
+}
+
+#[test]
+fn huge_lr_diverges_cleanly() {
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    // momentum with an absurd LR on raw gradients diverges fast
+    let mut tr =
+        BertTrainer::new(&engine, &manifest, cfg("momentum", 16, 60)).unwrap();
+    let log = tr
+        .train(&[Stage {
+            seq: 32,
+            global_batch: 16,
+            steps: 60,
+            schedule: Schedule::Constant { lr: 1e4 },
+        }])
+        .unwrap();
+    assert!(log.diverged);
+    // early-stopped, not the full 60 steps
+    assert!(log.records.len() < 60);
+}
+
+#[test]
+fn evaluate_improves_with_training() {
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let mut tr = BertTrainer::new(&engine, &manifest, cfg("lamb", 32, 40)).unwrap();
+    let (l0, _) = tr.evaluate(32, 4).unwrap();
+    tr.train(&[stage(32, 40, 0.005)]).unwrap();
+    let (l1, a1) = tr.evaluate(32, 4).unwrap();
+    assert!(l1 < l0, "dev loss should improve: {l0} -> {l1}");
+    assert!(a1 > 0.0);
+}
+
+#[test]
+fn rejects_bad_batch_multiple() {
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let mut tr = BertTrainer::new(&engine, &manifest, cfg("lamb", 12, 4)).unwrap();
+    // 12 is not a multiple of the artifact microbatch (8)
+    let r = tr.train(&[stage(12, 4, 0.005)]);
+    assert!(r.is_err());
+}
+
+#[test]
+fn native_fallback_when_no_opt_artifact() {
+    // bert-small has no "momentum" opt artifact: the trainer must fall
+    // back to the native optimizer and still train.
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let c = TrainConfig {
+        model: "bert-small".into(),
+        seq: 128,
+        optimizer: "momentum".into(),
+        global_batch: 4,
+        steps: 3,
+        chips: 2,
+        ..TrainConfig::default()
+    };
+    let mut tr = BertTrainer::new(&engine, &manifest, c).unwrap();
+    let log = tr
+        .train(&[Stage {
+            seq: 128,
+            global_batch: 4,
+            steps: 3,
+            schedule: Schedule::Constant { lr: 0.01 },
+        }])
+        .unwrap();
+    assert_eq!(log.records.len(), 3);
+    assert!(log.records.iter().all(|r| r.loss.is_finite()));
+}
+
+#[test]
+fn checkpoint_resume_reproduces_run() {
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let path = std::env::temp_dir().join("lamb_resume_test.ckpt");
+
+    // One continuous 12-step run...
+    let mut a = BertTrainer::new(&engine, &manifest, cfg("lamb", 16, 12)).unwrap();
+    let full = a.train(&[stage(16, 12, 0.005)]).unwrap();
+
+    // ...vs 6 steps, checkpoint, restore into a fresh trainer, 6 more.
+    let mut b1 = BertTrainer::new(&engine, &manifest, cfg("lamb", 16, 12)).unwrap();
+    b1.train(&[stage(16, 6, 0.005)]).unwrap();
+    b1.save_checkpoint(&path).unwrap();
+    let mut b2 = BertTrainer::new(&engine, &manifest, cfg("lamb", 16, 12)).unwrap();
+    b2.load_checkpoint(&path).unwrap();
+    assert_eq!(b2.step, 6);
+    for (x, y) in b2.params.iter().zip(a.params.iter()).step_by(1000) {
+        let _ = (x, y); // params compared at the end
+    }
+    assert_eq!(b1.params, b2.params);
+    assert_eq!(b1.m, b2.m);
+
+    // Note: the data stream restarts per train() call with the worker
+    // seed, so losses are not step-identical to the continuous run — but
+    // state restoration must be exact and training must continue sanely.
+    let resumed = b2.train(&[stage(16, 6, 0.005)]).unwrap();
+    assert!(!resumed.diverged);
+    assert_eq!(b2.step, 12);
+    assert!(resumed.tail_loss(3) < full.records[0].loss);
+}
+
+#[test]
+fn checkpoint_rejects_wrong_model() {
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let path = std::env::temp_dir().join("lamb_wrong_model.ckpt");
+    let tiny = BertTrainer::new(&engine, &manifest, cfg("lamb", 16, 4)).unwrap();
+    tiny.save_checkpoint(&path).unwrap();
+    let c = TrainConfig {
+        model: "bert-small".into(),
+        seq: 128,
+        optimizer: "lamb".into(),
+        global_batch: 4,
+        steps: 2,
+        chips: 2,
+        ..TrainConfig::default()
+    };
+    let mut small = BertTrainer::new(&engine, &manifest, c).unwrap();
+    assert!(small.load_checkpoint(&path).is_err());
+}

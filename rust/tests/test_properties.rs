@@ -1,0 +1,223 @@
+//! Property-based tests (hand-rolled generators — proptest is not
+//! available offline): randomized inputs over the coordinator invariants
+//! the paper's Section 3 relies on, the collective's exactness, and the
+//! data pipeline's distributional contracts.
+
+use lamb_train::collective::{reduce_mean, RingAllReduce, RingCost};
+use lamb_train::data::{Corpus, MlmConfig, MlmGenerator};
+use lamb_train::optim::{self, Hyper, Norm, Seg};
+use lamb_train::schedule::{sqrt_scaled_lr, steps_for_batch, Schedule};
+use lamb_train::util::Rng;
+
+fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32(scale)).collect()
+}
+
+/// Ring all-reduce computes exactly the worker mean (up to f32 division
+/// order), for random worker counts and lengths.
+#[test]
+fn prop_ring_allreduce_equals_mean() {
+    let mut rng = Rng::new(100);
+    for case in 0..30 {
+        let k = 1 + (rng.below(7) as usize);
+        let n = 1 + (rng.below(300) as usize);
+        let mut bufs: Vec<Vec<f32>> =
+            (0..k).map(|_| rand_vec(&mut rng, n, 2.0)).collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let mut want = vec![0.0f32; n];
+        reduce_mean(&refs, &mut want);
+        let phases = RingAllReduce::new(k).run(&mut bufs);
+        if k > 1 {
+            assert_eq!(phases, 2 * k * (k - 1), "case {case}");
+        }
+        for w in &bufs {
+            for i in 0..n {
+                assert!(
+                    (w[i] - want[i]).abs() < 1e-4 * (1.0 + want[i].abs()),
+                    "case {case} k={k} n={n} i={i}: {} vs {}",
+                    w[i],
+                    want[i]
+                );
+            }
+        }
+    }
+}
+
+/// Ring cost is monotone in workers, bytes, and latency.
+#[test]
+fn prop_ring_cost_monotone() {
+    let mut rng = Rng::new(101);
+    let c = RingCost { alpha: 1e-6, beta: 50e9 };
+    for _ in 0..50 {
+        let k = 2 + rng.below(1000) as usize;
+        let b = 1024 + rng.below(1 << 28) as usize;
+        assert!(c.time(k + 1, b) >= c.time(k, b) - 1e-12);
+        assert!(c.time(k, b * 2) > c.time(k, b));
+    }
+}
+
+/// LAMB step length per segment is exactly lr * phi(||x||) regardless of
+/// gradient magnitude (Section 3 normalization), for random segments.
+#[test]
+fn prop_lamb_step_length() {
+    let mut rng = Rng::new(102);
+    for case in 0..20 {
+        let n = 8 + rng.below(200) as usize;
+        let h = Hyper { weight_decay: 0.0, eps: 0.0, ..Hyper::default() };
+        let mut opt = optim::Lamb::new(n, h);
+        let x0: Vec<f32> = rand_vec(&mut rng, n, 1.0);
+        let mut x = x0.clone();
+        // strictly nonzero gradients
+        let g: Vec<f32> = (0..n)
+            .map(|_| {
+                let v = rng.normal_f32(1.0);
+                if v.abs() < 1e-3 { 1e-3 } else { v }
+            })
+            .collect();
+        let lr = 0.01 + rng.uniform() as f32 * 0.2;
+        optim::Optimizer::step(&mut opt, &mut x, &g, lr, 1, &Seg::whole(n));
+        let delta: f32 = x
+            .iter()
+            .zip(&x0)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt();
+        let expect = lr * Norm::L2.eval(&x0);
+        assert!(
+            (delta - expect).abs() < 2e-3 * expect.max(1e-6),
+            "case {case}: {delta} vs {expect}"
+        );
+    }
+}
+
+/// All optimizers are deterministic and finite on random problems.
+#[test]
+fn prop_optimizers_deterministic_and_finite() {
+    let mut rng = Rng::new(103);
+    for name in optim::ALL {
+        let n = 64;
+        let x0 = rand_vec(&mut rng, n, 1.0);
+        let gseq: Vec<Vec<f32>> =
+            (0..5).map(|_| rand_vec(&mut rng, n, 0.5)).collect();
+        let run = || {
+            let mut opt = optim::build(name, n, Hyper::default()).unwrap();
+            let mut x = x0.clone();
+            for (t, g) in gseq.iter().enumerate() {
+                opt.step(&mut x, g, 0.01, t as u64 + 1, &Seg::whole(n));
+            }
+            x
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "{name} not deterministic");
+        assert!(a.iter().all(|v| v.is_finite()), "{name} not finite");
+    }
+}
+
+/// Fixed-epoch step rule: total samples are invariant across the ladder.
+#[test]
+fn prop_fixed_epochs_invariant() {
+    let mut rng = Rng::new(104);
+    for _ in 0..50 {
+        let base_batch = 1usize << (5 + rng.below(5));
+        let base_steps = 1000 + rng.below(100_000);
+        let factor = 1u64 << rng.below(6);
+        let batch = base_batch * factor as usize;
+        let steps = steps_for_batch(base_steps, base_batch, batch);
+        let total0 = base_steps as u128 * base_batch as u128;
+        let total1 = steps as u128 * batch as u128;
+        // equal up to rounding of one batch
+        assert!((total0 as i128 - total1 as i128).unsigned_abs() < batch as u128);
+    }
+}
+
+/// sqrt-LR rule composes: scaling A->B then B->C equals A->C.
+#[test]
+fn prop_sqrt_rule_composes() {
+    let mut rng = Rng::new(105);
+    for _ in 0..50 {
+        let a = 1usize << (6 + rng.below(6));
+        let b = 1usize << (6 + rng.below(6));
+        let c = 1usize << (6 + rng.below(6));
+        let lr_a = 0.001 + rng.uniform() as f32 * 0.01;
+        let via_b = sqrt_scaled_lr(sqrt_scaled_lr(lr_a, a, b), b, c);
+        let direct = sqrt_scaled_lr(lr_a, a, c);
+        assert!((via_b - direct).abs() < 1e-6 * direct.max(1e-9));
+    }
+}
+
+/// Warmup schedules are non-decreasing during warmup and non-increasing
+/// after, for random configurations.
+#[test]
+fn prop_warmup_poly_shape() {
+    let mut rng = Rng::new(106);
+    for _ in 0..30 {
+        let total = 100 + rng.below(10_000);
+        let warmup = 1 + rng.below(total / 2);
+        let s = Schedule::WarmupPoly {
+            base: 0.001 + rng.uniform() as f32,
+            warmup,
+            total,
+            power: 1.0,
+        };
+        let mut prev = 0.0f32;
+        for t in 1..=warmup {
+            let lr = s.lr(t);
+            assert!(lr >= prev - 1e-9);
+            prev = lr;
+        }
+        for t in warmup + 1..=total {
+            let lr = s.lr(t);
+            assert!(lr <= prev + 1e-9, "t={t}");
+            prev = lr;
+        }
+    }
+}
+
+/// MLM batches: targets only differ from tokens at masked positions, and
+/// every masked target is a real (non-special) token.
+#[test]
+fn prop_mlm_masking_contract() {
+    let mut rng = Rng::new(107);
+    for _ in 0..10 {
+        let vocab = 64 + rng.below(2000) as usize;
+        let seq = 8 + rng.below(120) as usize;
+        let mut g = MlmGenerator::new(
+            Corpus::new(vocab),
+            MlmConfig::new(seq),
+            rng.next_u64(),
+            rng.below(8),
+        );
+        let b = g.next_batch(4);
+        for i in 0..b.tokens.len() {
+            if b.mask[i] == 0.0 {
+                assert_eq!(b.tokens[i], b.targets[i]);
+            } else {
+                assert!(b.targets[i] >= 4, "masked special token");
+            }
+            assert!((b.tokens[i] as usize) < vocab);
+            assert!((b.targets[i] as usize) < vocab);
+        }
+    }
+}
+
+/// Trust ratio: clipping phi can only reduce the ratio when norms exceed
+/// the cap, and the pinned segments always report 1.0.
+#[test]
+fn prop_phi_clip_bounds_ratio() {
+    let mut rng = Rng::new(108);
+    for _ in 0..20 {
+        let n = 32;
+        let x0: Vec<f32> = rand_vec(&mut rng, n, 5.0);
+        let g: Vec<f32> = rand_vec(&mut rng, n, 1.0);
+        let run = |phi_hi: Option<f32>| {
+            let h = Hyper { phi_hi, weight_decay: 0.0, ..Hyper::default() };
+            let mut opt = optim::Lamb::new(n, h);
+            let mut x = x0.clone();
+            optim::Optimizer::step(&mut opt, &mut x, &g, 0.01, 1, &Seg::whole(n))[0]
+        };
+        let unclipped = run(None);
+        let clipped = run(Some(0.5));
+        assert!(clipped <= unclipped + 1e-6);
+    }
+}

@@ -1,0 +1,77 @@
+#!/usr/bin/env python3
+"""Fill EXPERIMENTS.md placeholders from results/repro_report.txt.
+
+Each repro section starts with '== <title> ==' and runs until the next
+'==' header. Markers in EXPERIMENTS.md are <!--KEY--> comments.
+"""
+
+import re
+import sys
+
+MARKERS = {
+    "TABLE1A": "Table 1a",
+    "TABLE1B": "Table 1b",
+    "TABLE2": "Table 2",
+    "TABLE3": "Table 3",
+    "TABLE4": "Table 4",
+    "TABLE5": "Table 5",
+    "TABLE6": "Table 6",
+    "TABLE7": "Table 7",
+    "TABLE8": "Table 8",
+    "GRIDS": "Tables 9-25",
+    "FIG1": "Figure 1",
+    "FIG2": "Figure 2",
+    "FIG3": "Figure 3",
+    "FIG5": "Figure 5",
+    "FIG6": "Figure 6",
+    "FIG7": "Figure 7",
+    "FIG8": "Figure 8",
+    "FIG9_14": "Figures 9-14",
+}
+
+
+def sections(report: str):
+    out = {}
+    cur_title, cur_lines = None, []
+    for line in report.splitlines():
+        if line.startswith("== "):
+            if cur_title:
+                out[cur_title] = "\n".join(cur_lines).strip()
+            cur_title = line.strip("= ").strip()
+            cur_lines = [line]
+        elif cur_title:
+            cur_lines.append(line)
+    if cur_title:
+        out[cur_title] = "\n".join(cur_lines).strip()
+    return out
+
+
+def main():
+    report_path = sys.argv[1] if len(sys.argv) > 1 else "results/repro_report.txt"
+    md_path = sys.argv[2] if len(sys.argv) > 2 else "EXPERIMENTS.md"
+    report = open(report_path).read()
+    secs = sections(report)
+    md = open(md_path).read()
+    for key, prefix in MARKERS.items():
+        body = None
+        for title, text in secs.items():
+            if title.startswith(prefix):
+                body = text
+                break
+        marker = f"<!--{key}-->"
+        if marker not in md:
+            continue
+        if body:
+            md = md.replace(marker, "```\n" + body + "\n```")
+        else:
+            md = md.replace(
+                marker,
+                "*(not recorded in this pass — regenerate with "
+                f"`lamb-train repro {key.lower().replace('grids','grids')}`)*",
+            )
+    open(md_path, "w").write(md)
+    print(f"filled {md_path} from {report_path}")
+
+
+if __name__ == "__main__":
+    main()
