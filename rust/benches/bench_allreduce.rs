@@ -8,6 +8,22 @@ use lamb_train::collective::{reduce_mean, RingAllReduce, RingCost};
 use lamb_train::util::bench::bench;
 use lamb_train::util::Rng;
 
+/// The pre-optimization reduction (element-outer, worker-inner): gathers
+/// one element from every worker per iteration, defeating vectorization.
+/// Kept here as the baseline the chunked `reduce_mean` is measured
+/// against; both produce bit-identical output.
+fn reduce_mean_naive(workers: &[&[f32]], out: &mut [f32]) {
+    let k = workers.len();
+    let inv = 1.0f64 / k as f64;
+    for i in 0..out.len() {
+        let mut acc = 0.0f64;
+        for w in workers {
+            acc += w[i] as f64;
+        }
+        out[i] = (acc * inv) as f32;
+    }
+}
+
 fn main() {
     println!("== bench_allreduce ==");
     let mut rng = Rng::new(2);
@@ -19,11 +35,19 @@ fn main() {
         let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
         let mut out = vec![0.0f32; n];
         let r = bench(
-            &format!("reduce_mean k={k} n={n}"),
+            &format!("reduce_mean (naive) k={k} n={n}"),
             Duration::from_millis(400),
-            || reduce_mean(&refs, &mut out),
+            || reduce_mean_naive(&refs, &mut out),
         );
         r.print_throughput((n * k) as f64, "elem");
+        let mut out2 = vec![0.0f32; n];
+        let r = bench(
+            &format!("reduce_mean (chunked) k={k} n={n}"),
+            Duration::from_millis(400),
+            || reduce_mean(&refs, &mut out2),
+        );
+        r.print_throughput((n * k) as f64, "elem");
+        assert_eq!(out, out2, "chunked reduce must match naive bitwise");
     }
     for k in [4usize, 8] {
         let proto: Vec<Vec<f32>> = (0..k)

@@ -1,0 +1,80 @@
+//! Exec-engine throughput: serial vs parallel vs ZeRO-1 step loops on
+//! the native MLP workload at increasing worker counts — the host-side
+//! analogue of Figure 8's scaling curve, and the acceptance check that
+//! the thread-pool path actually beats the serial simulation.
+//!
+//!     cargo bench --bench bench_exec            # full sweep
+//!     cargo bench --bench bench_exec -- --smoke # CI smoke (seconds)
+//!
+//! (`--test` is accepted as an alias for `--smoke`.)
+
+use std::time::Instant;
+
+use lamb_train::coordinator::{NativeTask, NativeTrainer};
+use lamb_train::exec::{ExecConfig, ExecMode};
+use lamb_train::optim::Hyper;
+use lamb_train::schedule::Schedule;
+
+fn run_once(
+    spec: &NativeTask,
+    mode: ExecMode,
+    workers: usize,
+    steps: u64,
+    batch: usize,
+) -> f64 {
+    let cfg = ExecConfig { mode, workers, bucket_bytes: 1 << 14 };
+    let mut tr = NativeTrainer::with_exec(
+        spec,
+        "lamb",
+        Hyper::default(),
+        Schedule::Constant { lr: 0.01 },
+        1,
+        cfg,
+    );
+    let t0 = Instant::now();
+    let log = tr.train(steps, batch);
+    assert!(!log.diverged, "bench run diverged");
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let smoke =
+        std::env::args().any(|a| a == "--smoke" || a == "--test");
+    let (steps, batch, worker_counts): (u64, usize, &[usize]) = if smoke {
+        (3, 64, &[1, 2])
+    } else {
+        (20, 1024, &[1, 4, 8, 16])
+    };
+    let spec = NativeTask::imagenet_proxy();
+    println!(
+        "== bench_exec: native MLP, batch {batch}, {steps} steps/mode =="
+    );
+    println!(
+        "{:>8} {:>10} {:>10} {:>8} {:>10} {:>8}",
+        "workers", "serial", "parallel", "speedup", "zero1", "speedup"
+    );
+    let mut par_beats_serial_at_4plus = true;
+    for &k in worker_counts {
+        let t_ser = run_once(&spec, ExecMode::Serial, k, steps, batch);
+        let t_par = run_once(&spec, ExecMode::Parallel, k, steps, batch);
+        let t_z = run_once(&spec, ExecMode::Zero1, k, steps, batch);
+        println!(
+            "{:>8} {:>9.3}s {:>9.3}s {:>7.2}x {:>9.3}s {:>7.2}x",
+            k,
+            t_ser,
+            t_par,
+            t_ser / t_par,
+            t_z,
+            t_ser / t_z
+        );
+        if k >= 4 && t_par >= t_ser {
+            par_beats_serial_at_4plus = false;
+        }
+    }
+    if !smoke {
+        println!(
+            "parallel beats serial at >=4 workers: {}",
+            if par_beats_serial_at_4plus { "yes" } else { "NO" }
+        );
+    }
+}

@@ -9,7 +9,33 @@
 //! authors' testbed would.
 
 use crate::collective::RingCost;
+use crate::exec::BucketPlan;
 use crate::manifest::ModelMeta;
+
+/// How optimizer state is laid out across the data-parallel ranks —
+/// the memory-accounting side of the exec engine's modes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StatePartition {
+    /// Pure data parallelism: params, grads and both Adam/LAMB moments
+    /// replicated on every chip.
+    Replicated,
+    /// ZeRO-1 over `shards` ranks: params + grads replicated, moments
+    /// sharded 1/shards per chip.
+    Zero1 { shards: usize },
+}
+
+/// Per-bucket simulated schedule entry of one overlapped step (seconds
+/// from step start).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BucketCost {
+    /// When every worker has finished this bucket's gradient (backward
+    /// pass reaches the bucket's start offset).
+    pub ready: f64,
+    /// When the interconnect starts this bucket (after earlier buckets).
+    pub start: f64,
+    /// When the bucket's ring all-reduce completes.
+    pub done: f64,
+}
 
 /// One pod slice.
 #[derive(Clone, Copy, Debug)]
@@ -64,19 +90,60 @@ impl Pod {
     /// Optimizer + param + gradient state per chip (replicated under pure
     /// data parallelism): params, grads, m, v @ 4 bytes.
     pub fn state_bytes(model: &ModelMeta) -> usize {
-        model.total_params * 4 * 4
+        Self::state_bytes_partitioned(model, StatePartition::Replicated)
+    }
+
+    /// Per-chip state bytes under the given partition scheme. ZeRO-1
+    /// keeps params (4 B) and grads (4 B) replicated but holds only
+    /// 1/shards of the two moment buffers (8 B combined).
+    pub fn state_bytes_partitioned(
+        model: &ModelMeta,
+        part: StatePartition,
+    ) -> usize {
+        let n = model.total_params;
+        match part {
+            StatePartition::Replicated => n * 16,
+            StatePartition::Zero1 { shards } => {
+                let k = shards.max(1);
+                n * 8 + (n * 8 + k - 1) / k
+            }
+        }
     }
 
     /// Largest per-chip microbatch for `seq` (the paper's "memory limit of
     /// a TPUv3 Pod" that caps batch 32768 at seq 512 / 65536+ at 128).
     pub fn max_microbatch(&self, model: &ModelMeta, seq: usize) -> usize {
-        let free = self.hbm_bytes.saturating_sub(Self::state_bytes(model));
+        self.max_microbatch_partitioned(model, seq, StatePartition::Replicated)
+    }
+
+    /// Largest per-chip microbatch under a state-partition scheme:
+    /// sharding the moments frees HBM for activations, raising the cap.
+    pub fn max_microbatch_partitioned(
+        &self,
+        model: &ModelMeta,
+        seq: usize,
+        part: StatePartition,
+    ) -> usize {
+        let free = self
+            .hbm_bytes
+            .saturating_sub(Self::state_bytes_partitioned(model, part));
         free / Self::act_bytes_per_seq(model, seq).max(1)
     }
 
     /// Largest global batch for `seq`.
     pub fn max_global_batch(&self, model: &ModelMeta, seq: usize) -> usize {
         self.max_microbatch(model, seq) * self.chips
+    }
+
+    /// Largest global batch under a state-partition scheme — the memory
+    /// accounting path behind the exec engine's ZeRO-1 mode.
+    pub fn max_batch(
+        &self,
+        model: &ModelMeta,
+        seq: usize,
+        part: StatePartition,
+    ) -> usize {
+        self.max_microbatch_partitioned(model, seq, part) * self.chips
     }
 
     /// Simulated time for one synchronous data-parallel step at
@@ -88,15 +155,74 @@ impl Pod {
         global_batch: usize,
         seq: usize,
     ) -> f64 {
-        let per_chip = (global_batch + self.chips - 1) / self.chips;
-        let tokens = (per_chip * seq) as f64;
-        let compute = tokens * model.train_flops_per_token(seq)
-            / (self.peak_flops * self.mxu_efficiency);
+        let compute = self.compute_time(model, global_batch, seq);
         let grad_bytes = model.total_params * 4;
         let comm = self.ring.time(self.chips, grad_bytes);
         // Portion of comm hidden under backward compute.
         let hidden = (comm * self.overlap).min(compute * 0.5);
         compute + comm - hidden
+    }
+
+    /// Per-chip compute time of one step's forward+backward (the term the
+    /// bucketed schedule overlaps against).
+    pub fn compute_time(
+        &self,
+        model: &ModelMeta,
+        global_batch: usize,
+        seq: usize,
+    ) -> f64 {
+        let per_chip = (global_batch + self.chips - 1) / self.chips;
+        let tokens = (per_chip * seq) as f64;
+        tokens * model.train_flops_per_token(seq)
+            / (self.peak_flops * self.mxu_efficiency)
+    }
+
+    /// Simulated per-bucket schedule of one overlapped step: backward
+    /// retires parameters from the top of the flat vector down (last
+    /// layer first), so bucket `b` is ready at
+    /// `t_fwd + t_bwd * (n - start_b) / n`; the interconnect then runs
+    /// the buckets in readiness order, each paying the ring's alpha-beta
+    /// cost for its own bytes. Returns (per-bucket schedule, compute
+    /// time, step time).
+    pub fn bucket_timeline(
+        &self,
+        model: &ModelMeta,
+        global_batch: usize,
+        seq: usize,
+        plan: &BucketPlan,
+    ) -> (Vec<BucketCost>, f64, f64) {
+        let compute = self.compute_time(model, global_batch, seq);
+        let t_fwd = compute / 3.0;
+        let t_bwd = compute - t_fwd;
+        let n = plan.n.max(1) as f64;
+        let mut costs = vec![BucketCost::default(); plan.len()];
+        let mut free = 0.0f64;
+        // Buckets become ready in descending index order (backward pass).
+        for b in (0..plan.len()).rev() {
+            let bk = &plan.buckets[b];
+            let ready = t_fwd + t_bwd * ((n - bk.start as f64) / n);
+            let start = ready.max(free);
+            let done = start + self.ring.time(self.chips, bk.bytes());
+            costs[b] = BucketCost { ready, start, done };
+            free = done;
+        }
+        let step = compute.max(free);
+        (costs, compute, step)
+    }
+
+    /// Step time with the all-reduce priced from the actual bucket
+    /// schedule instead of the fixed `overlap` scalar of [`step_time`].
+    /// A single monolithic bucket recovers the zero-overlap bound
+    /// (compute + full comm); fine bucketing approaches
+    /// `max(compute, comm)` until per-bucket ring latency dominates.
+    pub fn step_time_bucketed(
+        &self,
+        model: &ModelMeta,
+        global_batch: usize,
+        seq: usize,
+        plan: &BucketPlan,
+    ) -> f64 {
+        self.bucket_timeline(model, global_batch, seq, plan).2
     }
 
     /// Simulated wall-clock for a whole run (steps uniform in batch/seq).
@@ -195,6 +321,86 @@ mod tests {
         let e32k = big.scaling_efficiency(&m, 32768, 128, &base, 512);
         let e64k = big.scaling_efficiency(&m, 65536, 128, &base, 512);
         assert!(e64k > e32k);
+    }
+
+    fn even_plan(n: usize, buckets: usize) -> BucketPlan {
+        use crate::optim::Seg;
+        let mut segs = Vec::new();
+        let mut off = 0;
+        let per = n / buckets;
+        for b in 0..buckets {
+            let size = if b + 1 == buckets { n - off } else { per };
+            segs.push(Seg { offset: off, size, decay: true, adapt: true });
+            off += size;
+        }
+        BucketPlan::from_segs(&segs, per * 4)
+    }
+
+    #[test]
+    fn bucketed_overlap_beats_monolithic_and_bounds_hold() {
+        let m = bert_large();
+        // 16 chips: per-phase latency is small against this slice's
+        // compute, so bucketing must win; at pod scale the calibrated
+        // 44 us alpha makes fine bucketing latency-bound instead (see
+        // extreme_bucketing_pays_latency).
+        let pod = Pod::tpu_v3(16);
+        let n = m.total_params;
+        let compute = pod.compute_time(&m, 8192, 128);
+        let comm = pod.ring.time(pod.chips, n * 4);
+
+        let mono = even_plan(n, 1);
+        let t_mono = pod.step_time_bucketed(&m, 8192, 128, &mono);
+        // one bucket is ready only when backward finishes: zero overlap
+        assert!((t_mono - (compute + comm)).abs() < 1e-9 * t_mono);
+
+        let fine = even_plan(n, 64);
+        let t_fine = pod.step_time_bucketed(&m, 8192, 128, &fine);
+        assert!(t_fine < t_mono, "{t_fine} vs {t_mono}");
+        // never better than the compute-bound / comm-bound floor
+        assert!(t_fine >= compute.max(comm) - 1e-12);
+
+        // timeline internally consistent: ready <= start <= done, and the
+        // interconnect never runs two buckets at once
+        let (costs, _, total) = pod.bucket_timeline(&m, 8192, 128, &fine);
+        let mut prev_done = f64::MAX;
+        for c in costs.iter().rev() {
+            assert!(c.ready <= c.start && c.start <= c.done);
+            if prev_done != f64::MAX {
+                assert!(c.start >= prev_done - 1e-12);
+            }
+            prev_done = c.done;
+            assert!(c.done <= total + 1e-12);
+        }
+    }
+
+    #[test]
+    fn extreme_bucketing_pays_latency() {
+        // Thousands of tiny buckets each pay the ring's 2(k-1) alpha
+        // phases: past the sweet spot the total grows again.
+        let m = bert_large();
+        let pod = Pod::tpu_v3(1024);
+        let t64 = pod.step_time_bucketed(&m, 32768, 128, &even_plan(m.total_params, 64));
+        let t4096 = pod.step_time_bucketed(&m, 32768, 128, &even_plan(m.total_params, 4096));
+        assert!(t4096 > t64, "{t4096} vs {t64}");
+    }
+
+    #[test]
+    fn zero1_state_accounting_raises_batch_cap() {
+        let m = bert_large();
+        let pod = Pod::tpu_v3(1024);
+        let rep = Pod::state_bytes_partitioned(&m, StatePartition::Replicated);
+        let z = Pod::state_bytes_partitioned(
+            &m,
+            StatePartition::Zero1 { shards: 1024 },
+        );
+        // moments (8/16 of state) shrink ~1024x: about half the state goes
+        assert!(z < rep * 9 / 16, "{z} vs {rep}");
+        assert!(z >= rep / 2, "{z} vs {rep}");
+        let cap_rep = pod.max_batch(&m, 512, StatePartition::Replicated);
+        let cap_z =
+            pod.max_batch(&m, 512, StatePartition::Zero1 { shards: 1024 });
+        assert!(cap_z >= cap_rep, "{cap_z} vs {cap_rep}");
+        assert_eq!(cap_rep, pod.max_global_batch(&m, 512));
     }
 
     #[test]

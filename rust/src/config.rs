@@ -157,6 +157,13 @@ pub struct TrainConfig {
     // cluster
     pub chips: usize,
     pub step_path: StepPath,
+    // execution engine ([exec] section)
+    /// serial | parallel | zero1 — how the step loop drives the workers.
+    pub exec_mode: crate::exec::ExecMode,
+    /// Gradient-phase worker count; 0 = auto (min(chips, microbatches)).
+    pub exec_workers: usize,
+    /// Bucket size for the overlapped all-reduce, in KiB.
+    pub bucket_kb: usize,
     // io
     pub artifacts: String,
     pub out_dir: String,
@@ -182,6 +189,9 @@ impl Default for TrainConfig {
             warmup_ratio: None,
             chips: 8,
             step_path: StepPath::Distributed,
+            exec_mode: crate::exec::ExecMode::Serial,
+            exec_workers: 0,
+            bucket_kb: 1024,
             artifacts: "artifacts".into(),
             out_dir: "results".into(),
             eval_every: 50,
@@ -239,6 +249,14 @@ impl TrainConfig {
                 other => bail!("unknown step_path {other:?}"),
             };
         }
+        if let Some(v) = gets("exec.mode") {
+            c.exec_mode = crate::exec::ExecMode::parse(&v)
+                .ok_or_else(|| anyhow!(
+                    "unknown exec mode {v:?} (expected serial|parallel|zero1)"
+                ))?;
+        }
+        if let Some(v) = geti("exec.workers") { c.exec_workers = v as usize; }
+        if let Some(v) = geti("exec.bucket_kb") { c.bucket_kb = v as usize; }
         if let Some(v) = gets("run.artifacts") { c.artifacts = v; }
         if let Some(v) = gets("run.out_dir") { c.out_dir = v; }
         if let Some(v) = geti("run.eval_every") { c.eval_every = v; }
@@ -260,6 +278,9 @@ impl TrainConfig {
         }
         if crate::optim::Norm::parse(&self.norm).is_none() {
             bail!("unknown norm {:?}", self.norm);
+        }
+        if self.bucket_kb == 0 {
+            bail!("exec.bucket_kb must be positive");
         }
         Ok(())
     }
@@ -342,6 +363,32 @@ betas = [0.9, 0.999]
             &[("optimizer.name".into(), "\"sgdx\"".into())],
         );
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn exec_knobs_parse_and_validate() {
+        let c = TrainConfig::load(
+            None,
+            &[
+                ("exec.mode".into(), "\"zero1\"".into()),
+                ("exec.workers".into(), "4".into()),
+                ("exec.bucket_kb".into(), "256".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.exec_mode, crate::exec::ExecMode::Zero1);
+        assert_eq!(c.exec_workers, 4);
+        assert_eq!(c.bucket_kb, 256);
+        // defaults: serial, auto workers
+        let d = TrainConfig::default();
+        assert_eq!(d.exec_mode, crate::exec::ExecMode::Serial);
+        assert_eq!(d.exec_workers, 0);
+        // bad mode rejected
+        assert!(TrainConfig::load(
+            None,
+            &[("exec.mode".into(), "\"async\"".into())]
+        )
+        .is_err());
     }
 
     #[test]

@@ -25,8 +25,9 @@ use crate::cluster::Pod;
 use crate::collective;
 use crate::config::{StepPath, TrainConfig};
 use crate::data::{Batch, Corpus, MlmConfig, MlmGenerator};
+use crate::exec::{bucketed_reduce, BucketPlan, ExecMode, Zero1State};
 use crate::manifest::{ArtifactKind, Manifest, ModelMeta};
-use crate::metrics::{DivergenceDetector, RunLog, StepRecord};
+use crate::metrics::{DivergenceDetector, RunLog, StepComm, StepRecord};
 use crate::model::ParamStore;
 use crate::optim::{self, Hyper, Optimizer, Seg};
 use crate::runtime::{self, Engine, Executable};
@@ -69,6 +70,14 @@ pub struct BertTrainer<'e> {
     pub pod: Pod,
     opt: OptPath<'e>,
     segs: Vec<Seg>,
+    /// Layer-aligned bucket partition (`[exec] bucket_kb`) — drives the
+    /// bucketed modes' reduce and the pod model's overlap pricing.
+    pub plan: BucketPlan,
+    /// ZeRO-1 sharded optimizer state (exec mode `zero1`); takes
+    /// precedence over `opt` when present.
+    zero1: Option<Zero1State>,
+    /// Per-worker gradient accumulators (bucketed modes; stage-sized).
+    worker_grads: Vec<Vec<f32>>,
     // flat state
     pub params: Vec<f32>,
     pub m: Vec<f32>,
@@ -109,6 +118,21 @@ impl<'e> BertTrainer<'e> {
             ),
         };
         let segs = Seg::from_manifest(&meta.params);
+        // Effective table for bucketing/sharding: a model without a
+        // segment table is treated as one whole-vector layer.
+        let plan_segs: Vec<Seg> =
+            if segs.is_empty() { Seg::whole(n) } else { segs.clone() };
+        let plan = BucketPlan::from_segs(&plan_segs, cfg.bucket_kb * 1024);
+        let zero1 = if cfg.exec_mode == ExecMode::Zero1 {
+            Some(
+                Zero1State::build(&cfg.optimizer, &plan, &plan_segs, hyper)
+                    .with_context(|| {
+                        format!("zero1 optimizer {}", cfg.optimizer)
+                    })?,
+            )
+        } else {
+            None
+        };
         let corpus = Corpus::new(meta.vocab);
         Ok(BertTrainer {
             engine,
@@ -116,6 +140,9 @@ impl<'e> BertTrainer<'e> {
             pod: Pod::tpu_v3(cfg.chips),
             opt,
             segs,
+            plan,
+            zero1,
+            worker_grads: Vec::new(),
             params: ps.flat,
             m: vec![0.0; n],
             v: vec![0.0; n],
@@ -161,7 +188,13 @@ impl<'e> BertTrainer<'e> {
             );
         }
         let n_micro = stage.global_batch / mb;
-        let workers = self.cfg.chips.min(n_micro.max(1));
+        // Gradient-phase worker count: explicit `exec.workers`, or auto
+        // (one per chip), both capped by the microbatch count.
+        let workers = if self.cfg.exec_workers > 0 {
+            self.cfg.exec_workers.min(n_micro.max(1))
+        } else {
+            self.cfg.chips.min(n_micro.max(1))
+        };
 
         // Fused path: single-worker single-microbatch steps with the
         // grad+opt fused artifact (quickstart / kernel benches).
@@ -195,8 +228,46 @@ impl<'e> BertTrainer<'e> {
             })
             .collect();
 
-        let step_sim = self.pod.step_time(&self.meta, stage.global_batch, stage.seq);
         let n = self.meta.total_params;
+        // Pricing: serial mode keeps the legacy fixed-overlap scalar;
+        // bucketed modes re-price the step from the simulated per-bucket
+        // schedule (communication overlapped under backward). The fused
+        // single-artifact path has no gradient exchange to bucket, so it
+        // always uses the legacy pricing — and it cannot honor ZeRO-1
+        // (the artifact applies the dense optimizer internally).
+        if fused_exe.is_some() && self.zero1.is_some() {
+            bail!(
+                "step_path = fused is incompatible with exec.mode = zero1 \
+                 (the fused artifact steps the dense optimizer); use the \
+                 distributed step path"
+            );
+        }
+        let bucketed =
+            self.cfg.exec_mode != ExecMode::Serial && fused_exe.is_none();
+        let (step_sim, comm_tpl) = if bucketed {
+            let (costs, compute, total) = self.pod.bucket_timeline(
+                &self.meta,
+                stage.global_batch,
+                stage.seq,
+                &self.plan,
+            );
+            let comm = StepComm {
+                buckets: costs.len(),
+                comm_time: costs.iter().map(|c| c.done - c.start).sum(),
+                exposed: (total - compute).max(0.0),
+                per_bucket: costs.iter().map(|c| (c.ready, c.done)).collect(),
+            };
+            (total, Some(comm))
+        } else {
+            (
+                self.pod.step_time(&self.meta, stage.global_batch, stage.seq),
+                None,
+            )
+        };
+        if bucketed && self.worker_grads.len() != workers {
+            self.worker_grads =
+                (0..workers).map(|_| vec![0.0f32; n]).collect();
+        }
 
         for local in 1..=stage.steps {
             self.step += 1;
@@ -204,6 +275,50 @@ impl<'e> BertTrainer<'e> {
             let (loss, ratios) = if let Some(exe) = &fused_exe {
                 let b = gens[0].next_batch(mb);
                 self.run_fused(exe, &b, lr)?
+            } else if bucketed {
+                // -------- gradient phase, sharded per worker --------
+                for wg in self.worker_grads.iter_mut() {
+                    wg.fill(0.0);
+                }
+                let mut loss_sum = 0.0f64;
+                for mi in 0..n_micro {
+                    let w = mi % workers;
+                    let b = gens[w].next_batch(mb);
+                    let out = grad_exe.as_ref().unwrap().run(&[
+                        runtime::lit_f32(&self.params),
+                        runtime::lit_i32_2d(&b.tokens, mb, stage.seq)?,
+                        runtime::lit_i32_2d(&b.targets, mb, stage.seq)?,
+                        runtime::lit_f32_2d(&b.mask, mb, stage.seq)?,
+                    ])?;
+                    loss_sum += runtime::scalar_f32(&out[0])? as f64;
+                    let g = runtime::vec_f32(&out[1])?;
+                    collective::accumulate(&mut self.worker_grads[w], &g);
+                }
+                // Local mean per worker, so the bucketed worker-mean
+                // equals the global microbatch mean.
+                let local_scale = workers as f32 / n_micro as f32;
+                for wg in self.worker_grads.iter_mut() {
+                    collective::scale(wg, local_scale);
+                }
+                // -------- bucketed all-reduce --------
+                let refs: Vec<&[f32]> =
+                    self.worker_grads.iter().map(|g| g.as_slice()).collect();
+                bucketed_reduce(&self.plan, &refs, &mut self.grad_acc);
+                let loss = (loss_sum / n_micro as f64) as f32;
+                // -------- optimizer phase (ZeRO-1 shards or dense) -----
+                let ratios = if self.zero1.is_some() {
+                    let z = self.zero1.as_mut().unwrap();
+                    z.step_all(
+                        &self.plan,
+                        &mut self.params,
+                        &self.grad_acc,
+                        lr,
+                        self.step,
+                    )
+                } else {
+                    self.apply_opt(lr)?
+                };
+                (loss, ratios)
             } else {
                 // -------- gradient phase over microbatches --------
                 self.grad_acc.fill(0.0);
@@ -238,11 +353,11 @@ impl<'e> BertTrainer<'e> {
                 loss,
                 sim_time,
                 host_time: t0.elapsed().as_secs_f64(),
+                comm: comm_tpl.clone(),
             });
             if div.observe(loss) {
                 break;
             }
-            let _ = n;
         }
         Ok(sim_time)
     }

@@ -10,6 +10,13 @@
 //!
 //! [`native::NativeTrainer`] is the same loop over the native MLP +
 //! Rust optimizers — the fast substrate for the appendix-scale sweeps.
+//!
+//! Both trainers sit on top of the `exec` layer: the native trainer can
+//! run its workers truly concurrently (`NativeTrainer::with_exec`) with
+//! the bucketed overlap all-reduce and optional ZeRO-1 state sharding,
+//! while the BERT trainer uses the same bucket partition with the serial
+//! drive (PJRT executables are not `Send`) and prices the overlap it
+//! would get on the pod via `cluster::Pod::step_time_bucketed`.
 
 pub mod bert;
 pub mod native;

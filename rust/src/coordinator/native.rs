@@ -1,11 +1,24 @@
 //! Native trainer: the MLP/image-task loop used by the appendix-scale
 //! experiments (Tables 3, 5-25; Figures 1-5). Thousands of full runs
 //! complete in seconds — which is what the tuning grids need.
+//!
+//! Two step paths:
+//!
+//! * the legacy single-stream loop (`new`) — one gradient over the whole
+//!   batch on the calling thread, bit-identical to the original sweeps;
+//! * the exec-engine loop (`with_exec`) — k data-parallel workers, each
+//!   with its own model replica and RNG stream, driven serially or on the
+//!   thread pool with the bucketed overlap all-reduce, optionally with
+//!   ZeRO-1 sharded optimizer state. Serial and parallel drives are
+//!   bitwise identical (`tests/test_exec.rs`).
 
 use std::time::Instant;
 
 use crate::data::image::ImageTask;
-use crate::metrics::{DivergenceDetector, RunLog, StepRecord};
+use crate::exec::{
+    ExecConfig, ExecMode, Executor, GradWorker, StepCtx, Zero1State,
+};
+use crate::metrics::{DivergenceDetector, RunLog, StepComm, StepRecord};
 use crate::nn::{Mlp, MlpConfig};
 use crate::optim::{build, Hyper, Optimizer, Seg};
 use crate::schedule::Schedule;
@@ -54,6 +67,45 @@ impl NativeTask {
     }
 }
 
+/// One data-parallel worker for the exec engine: its own MLP replica,
+/// task instance and RNG stream. Receives the parameter broadcast each
+/// step, samples its batch share, and backprops with segment-retirement
+/// callbacks so buckets stream out as soon as they are final.
+struct MlpWorker {
+    mlp: Mlp,
+    task: ImageTask,
+    rng: Rng,
+    x: Vec<f32>,
+    y: Vec<u32>,
+}
+
+impl GradWorker for MlpWorker {
+    fn n(&self) -> usize {
+        self.mlp.n_params()
+    }
+
+    fn compute(
+        &mut self,
+        ctx: &StepCtx,
+        grads: &mut [f32],
+        retired: &mut dyn FnMut(usize, &[f32]),
+    ) -> f32 {
+        self.mlp.params.copy_from_slice(&ctx.params);
+        self.task
+            .sample(&mut self.rng, ctx.batch_share, &mut self.x, &mut self.y);
+        let (loss, _) =
+            self.mlp.loss_grad_retiring(&self.x, &self.y, grads, retired);
+        loss
+    }
+}
+
+/// Exec-engine state attached to a trainer by [`NativeTrainer::with_exec`].
+struct NativeExec {
+    executor: Executor,
+    reduced: Vec<f32>,
+    zero1: Option<Zero1State>,
+}
+
 /// One full training run on the native substrate.
 pub struct NativeTrainer {
     pub task: ImageTask,
@@ -66,6 +118,7 @@ pub struct NativeTrainer {
     // held-out test set, generated once
     test_x: Vec<f32>,
     test_y: Vec<u32>,
+    exec: Option<NativeExec>,
 }
 
 impl NativeTrainer {
@@ -98,7 +151,86 @@ impl NativeTrainer {
             grads: vec![0.0; n],
             test_x: tx,
             test_y: ty,
+            exec: None,
         }
+    }
+
+    /// Build a trainer whose step loop runs through the exec engine with
+    /// `exec.workers` data-parallel workers. The global batch is split
+    /// evenly (`batch / workers` each; pick divisible batches). Serial
+    /// and parallel modes produce bitwise-identical runs; `Zero1`
+    /// additionally shards the optimizer state by bucket owner.
+    pub fn with_exec(
+        spec: &NativeTask,
+        optimizer: &str,
+        hyper: Hyper,
+        schedule: Schedule,
+        seed: u64,
+        exec: ExecConfig,
+    ) -> NativeTrainer {
+        let mut tr = NativeTrainer::new(spec, optimizer, hyper, schedule, seed);
+        let k = exec.workers.max(1);
+        // Worker streams fork from the same root the legacy loop seeds
+        // from, in worker order — identical for every exec mode.
+        let mut root = Rng::new(seed ^ 0xda7a);
+        let workers: Vec<Box<dyn GradWorker>> = (0..k)
+            .map(|w| {
+                Box::new(MlpWorker {
+                    mlp: Mlp::new(spec.mlp.clone(), seed),
+                    task: ImageTask::new(
+                        spec.task_dim,
+                        spec.classes,
+                        spec.task_seed,
+                    ),
+                    rng: root.fork(w as u64 + 1),
+                    x: Vec::new(),
+                    y: Vec::new(),
+                }) as Box<dyn GradWorker>
+            })
+            .collect();
+        let n = tr.mlp.n_params();
+        let executor = Executor::new(exec, &tr.segs, workers);
+        let zero1 = match exec.mode {
+            ExecMode::Zero1 => Some(
+                Zero1State::build(optimizer, executor.plan(), &tr.segs, hyper)
+                    .unwrap_or_else(|| panic!("unknown optimizer {optimizer}")),
+            ),
+            _ => None,
+        };
+        tr.exec = Some(NativeExec {
+            executor,
+            reduced: vec![0.0; n],
+            zero1,
+        });
+        tr
+    }
+
+    /// One exec-engine global step: broadcast params, per-worker grads,
+    /// bucketed reduce, optimizer (dense or ZeRO-1 sharded).
+    fn exec_step(
+        &mut self,
+        t: u64,
+        batch: usize,
+        lr: f32,
+    ) -> (f32, Vec<f32>, Option<StepComm>) {
+        let ex = self.exec.as_mut().expect("exec_step without exec engine");
+        let k = ex.executor.workers();
+        let share = (batch / k).max(1);
+        let out = ex.executor.step(t, share, &self.mlp.params, &mut ex.reduced);
+        let ratios = match ex.zero1.as_mut() {
+            Some(z) => {
+                let plan = ex.executor.plan().clone();
+                z.step_all(&plan, &mut self.mlp.params, &ex.reduced, lr, t)
+            }
+            None => self.opt.step(
+                &mut self.mlp.params,
+                &ex.reduced,
+                lr,
+                t,
+                &self.segs,
+            ),
+        };
+        (out.loss, ratios, Some(out.comm))
     }
 
     /// Train `steps` steps at `batch`; returns the run log with
@@ -122,11 +254,21 @@ impl NativeTrainer {
         let t0 = Instant::now();
         let (mut x, mut y) = (Vec::new(), Vec::new());
         for t in 1..=steps {
-            self.task.sample(&mut self.rng, batch, &mut x, &mut y);
-            let (loss, _) = self.mlp.loss_grad(&x, &y, &mut self.grads);
             let lr = self.schedule.lr(t);
-            let ratios =
-                self.opt.step(&mut self.mlp.params, &self.grads, lr, t, &self.segs);
+            let (loss, ratios, comm) = if self.exec.is_some() {
+                self.exec_step(t, batch, lr)
+            } else {
+                self.task.sample(&mut self.rng, batch, &mut x, &mut y);
+                let (loss, _) = self.mlp.loss_grad(&x, &y, &mut self.grads);
+                let ratios = self.opt.step(
+                    &mut self.mlp.params,
+                    &self.grads,
+                    lr,
+                    t,
+                    &self.segs,
+                );
+                (loss, ratios, None)
+            };
             if t % 50 == 0 || t == 1 {
                 log.trust_ratios.push((t, ratios));
             }
@@ -136,6 +278,7 @@ impl NativeTrainer {
                 loss,
                 sim_time: 0.0,
                 host_time: t0.elapsed().as_secs_f64(),
+                comm,
             });
             if eval_every > 0 && (t % eval_every == 0 || t == 1) {
                 let (tl, ta) = self.mlp.evaluate(&self.test_x, &self.test_y);
@@ -219,5 +362,64 @@ mod tests {
         let b = mk().train(50, 32);
         assert_eq!(a.losses(), b.losses());
         assert_eq!(a.final_metric, b.final_metric);
+    }
+
+    #[test]
+    fn exec_engine_trains_and_records_comm() {
+        let spec = NativeTask::mnist_proxy();
+        let sched = Schedule::WarmupPoly {
+            base: 0.02,
+            warmup: 20,
+            total: 400,
+            power: 1.0,
+        };
+        let cfg = ExecConfig {
+            mode: ExecMode::Parallel,
+            workers: 4,
+            bucket_bytes: 1 << 12,
+        };
+        let mut tr = NativeTrainer::with_exec(
+            &spec,
+            "lamb",
+            Hyper::default(),
+            sched,
+            0,
+            cfg,
+        );
+        let log = tr.train(400, 128);
+        assert!(!log.diverged);
+        let acc = log.final_metric.unwrap();
+        assert!(acc > 0.7, "acc {acc}");
+        // every step carries a bucketed comm record
+        let c = log.records[0].comm.as_ref().unwrap();
+        assert!(c.buckets >= 1);
+        assert_eq!(c.per_bucket.len(), c.buckets);
+    }
+
+    #[test]
+    fn zero1_exec_trains() {
+        let spec = NativeTask::mnist_proxy();
+        let sched = Schedule::WarmupPoly {
+            base: 0.02,
+            warmup: 10,
+            total: 200,
+            power: 1.0,
+        };
+        let cfg = ExecConfig {
+            mode: ExecMode::Zero1,
+            workers: 2,
+            bucket_bytes: 1 << 12,
+        };
+        let mut tr = NativeTrainer::with_exec(
+            &spec,
+            "lamb",
+            Hyper::default(),
+            sched,
+            3,
+            cfg,
+        );
+        let log = tr.train(200, 64);
+        assert!(!log.diverged);
+        assert!(log.tail_loss(20) < log.records[0].loss);
     }
 }

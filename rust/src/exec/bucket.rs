@@ -1,0 +1,201 @@
+//! Gradient bucket partition — the unit of overlapped communication.
+//!
+//! The flat gradient vector is cut into contiguous, layer-aligned buckets
+//! of roughly `bucket_bytes` each (a bucket always holds whole manifest
+//! segments, so layerwise optimizer semantics — trust ratios, decay
+//! flags — never straddle a bucket boundary). The same partition drives
+//! three things:
+//!
+//! * the bucketed all-reduce: each bucket reduces as soon as every worker
+//!   has produced it, overlapping with the rest of the backward pass;
+//! * ZeRO-1 state sharding: bucket `b` of `k` workers is owned by worker
+//!   `b % k`, which holds the optimizer moments for that range only;
+//! * the pod cost model's overlap pricing (`cluster::Pod::step_time_bucketed`).
+
+use crate::optim::Seg;
+
+/// One contiguous bucket of the flat parameter/gradient vector.
+#[derive(Clone, Copy, Debug)]
+pub struct Bucket {
+    /// Element range [start, end) of the flat vector.
+    pub start: usize,
+    pub end: usize,
+    /// Segment-index range [seg_lo, seg_hi) into the segment table.
+    pub seg_lo: usize,
+    pub seg_hi: usize,
+}
+
+impl Bucket {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.len() * 4
+    }
+}
+
+/// The full layer-aligned partition of an `n`-element flat vector.
+#[derive(Clone, Debug)]
+pub struct BucketPlan {
+    pub buckets: Vec<Bucket>,
+    /// Total flat-vector length covered.
+    pub n: usize,
+}
+
+impl BucketPlan {
+    /// Greedy layer-aligned partition: walk the segment table in order,
+    /// closing a bucket once it reaches `bucket_bytes`. Requires the
+    /// segment table to tile the vector contiguously from offset 0 (the
+    /// manifest and the native MLP both guarantee this).
+    pub fn from_segs(segs: &[Seg], bucket_bytes: usize) -> BucketPlan {
+        assert!(!segs.is_empty(), "empty segment table");
+        let mut off = 0;
+        for s in segs {
+            assert_eq!(s.offset, off, "segment table must tile contiguously");
+            off += s.size;
+        }
+        let target = bucket_bytes.max(4);
+        let mut buckets = Vec::new();
+        let mut seg_lo = 0;
+        let mut start = 0;
+        for (i, s) in segs.iter().enumerate() {
+            let end = s.offset + s.size;
+            if (end - start) * 4 >= target || i + 1 == segs.len() {
+                buckets.push(Bucket { start, end, seg_lo, seg_hi: i + 1 });
+                seg_lo = i + 1;
+                start = end;
+            }
+        }
+        BucketPlan { buckets, n: off }
+    }
+
+    /// Single-bucket plan (the unbucketed / monolithic baseline).
+    pub fn whole(segs: &[Seg]) -> BucketPlan {
+        BucketPlan::from_segs(segs, usize::MAX)
+    }
+
+    pub fn len(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+
+    /// ZeRO-1 owner of bucket `b` among `workers` ranks.
+    pub fn owner(&self, b: usize, workers: usize) -> usize {
+        b % workers.max(1)
+    }
+
+    /// Total optimizer-state elements owned by `worker` (the per-rank
+    /// ZeRO-1 share; ~n/k for balanced partitions).
+    pub fn owned_elems(&self, worker: usize, workers: usize) -> usize {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(b, _)| self.owner(*b, workers) == worker)
+            .map(|(_, bk)| bk.len())
+            .sum()
+    }
+
+    /// Segments of `segs` inside bucket `b`, offsets shifted so the
+    /// bucket's own range starts at 0 (for stepping a bucket-local
+    /// optimizer-state shard).
+    pub fn local_segs(&self, b: usize, segs: &[Seg]) -> Vec<Seg> {
+        let bk = &self.buckets[b];
+        segs[bk.seg_lo..bk.seg_hi]
+            .iter()
+            .map(|s| Seg { offset: s.offset - bk.start, ..*s })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn segs(sizes: &[usize]) -> Vec<Seg> {
+        let mut v = Vec::new();
+        let mut off = 0;
+        for &s in sizes {
+            v.push(Seg { offset: off, size: s, decay: true, adapt: true });
+            off += s;
+        }
+        v
+    }
+
+    #[test]
+    fn partition_tiles_and_aligns() {
+        let segs = segs(&[100, 4, 300, 8, 50, 2]);
+        let plan = BucketPlan::from_segs(&segs, 150 * 4);
+        assert_eq!(plan.n, 464);
+        // buckets tile [0, n) contiguously
+        let mut off = 0;
+        let mut seg_lo = 0;
+        for b in &plan.buckets {
+            assert_eq!(b.start, off);
+            assert_eq!(b.seg_lo, seg_lo);
+            assert!(b.seg_hi > b.seg_lo);
+            // layer alignment: bucket boundaries land on segment boundaries
+            assert_eq!(segs[b.seg_lo].offset, b.start);
+            let last = &segs[b.seg_hi - 1];
+            assert_eq!(last.offset + last.size, b.end);
+            off = b.end;
+            seg_lo = b.seg_hi;
+        }
+        assert_eq!(off, plan.n);
+        assert_eq!(seg_lo, segs.len());
+        assert!(plan.len() > 1);
+    }
+
+    #[test]
+    fn whole_is_one_bucket() {
+        let segs = segs(&[10, 20, 30]);
+        let plan = BucketPlan::whole(&segs);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan.buckets[0].start, 0);
+        assert_eq!(plan.buckets[0].end, 60);
+    }
+
+    #[test]
+    fn oversized_segment_gets_own_bucket() {
+        let segs = segs(&[5, 1000, 5]);
+        let plan = BucketPlan::from_segs(&segs, 64 * 4);
+        // the 1000-element segment exceeds the target alone; it must not
+        // be split, only closed early
+        for b in &plan.buckets {
+            assert!(b.seg_hi - b.seg_lo >= 1);
+        }
+        assert_eq!(plan.buckets.iter().map(Bucket::len).sum::<usize>(), 1010);
+    }
+
+    #[test]
+    fn zero1_ownership_balanced() {
+        let segs = segs(&[64; 16]);
+        let plan = BucketPlan::from_segs(&segs, 64 * 4);
+        assert_eq!(plan.len(), 16);
+        let k = 4;
+        let shares: Vec<usize> =
+            (0..k).map(|w| plan.owned_elems(w, k)).collect();
+        assert_eq!(shares.iter().sum::<usize>(), plan.n);
+        for s in &shares {
+            assert_eq!(*s, plan.n / k);
+        }
+    }
+
+    #[test]
+    fn local_segs_shifted() {
+        let segs = segs(&[10, 20, 30]);
+        let plan = BucketPlan::from_segs(&segs, 30 * 4);
+        let b1 = plan.len() - 1;
+        let local = plan.local_segs(b1, &segs);
+        assert_eq!(local[0].offset, 0);
+        let total: usize = local.iter().map(|s| s.size).sum();
+        assert_eq!(total, plan.buckets[b1].len());
+    }
+}

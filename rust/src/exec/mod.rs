@@ -1,0 +1,506 @@
+//! The parallel execution engine — layer 4 of the stack.
+//!
+//! The coordinator used to *simulate* the pod serially: one worker at a
+//! time, one monolithic all-reduce, fully replicated optimizer state.
+//! This module executes the same synchronous data-parallel step for real:
+//!
+//! * a persistent worker thread pool ([`pool::WorkerPool`], `std::thread`
+//!   + mpsc channels — no external deps) runs per-worker gradient
+//!   computation concurrently;
+//! * gradients are partitioned into layer-aligned buckets
+//!   ([`bucket::BucketPlan`]) that are emitted as backprop retires their
+//!   segments and reduced as soon as every worker has produced them —
+//!   overlapping "communication" (the copy + reduction) with the
+//!   remaining backward work, exactly the mechanism the paper's pod uses
+//!   to hide the 1.3 GB gradient all-reduce;
+//! * [`zero::Zero1State`] shards the optimizer moments over the same
+//!   bucket partition (ZeRO stage 1): each worker steps only the buckets
+//!   it owns and the updated parameters are broadcast, cutting
+//!   optimizer-state memory per worker to ~1/k.
+//!
+//! Serial mode drives the identical bucket/reduce data path on the
+//! calling thread and is bitwise-identical to parallel mode (asserted by
+//! `tests/test_exec.rs`), so sweeps stay reproducible across modes. The
+//! artifact coordinator (`coordinator::bert`), whose PJRT runtime is not
+//! `Send`, uses the serial drive plus [`bucketed_reduce`] and prices the
+//! overlap it *would* get on the pod with
+//! `cluster::Pod::step_time_bucketed`.
+
+pub mod bucket;
+pub mod pool;
+pub mod zero;
+
+pub use bucket::{Bucket, BucketPlan};
+pub use pool::WorkerPool;
+pub use zero::Zero1State;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::collective::reduce_mean;
+use crate::metrics::StepComm;
+use crate::optim::Seg;
+
+/// How the executor runs one global step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Workers driven sequentially on the calling thread. Bitwise
+    /// identical to `Parallel`; the reproducibility baseline.
+    Serial,
+    /// Workers run concurrently on the thread pool; dense (replicated)
+    /// optimizer state.
+    Parallel,
+    /// `Parallel` plus ZeRO-1: optimizer state sharded by bucket owner.
+    Zero1,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        match s {
+            "serial" => Some(ExecMode::Serial),
+            "parallel" => Some(ExecMode::Parallel),
+            "zero1" => Some(ExecMode::Zero1),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExecMode::Serial => "serial",
+            ExecMode::Parallel => "parallel",
+            ExecMode::Zero1 => "zero1",
+        }
+    }
+}
+
+/// Executor knobs (config section `[exec]`).
+#[derive(Clone, Copy, Debug)]
+pub struct ExecConfig {
+    pub mode: ExecMode,
+    /// Worker (simulated chip) count for the gradient phase.
+    pub workers: usize,
+    /// Target bucket size in bytes for the overlapped all-reduce.
+    pub bucket_bytes: usize,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig {
+            mode: ExecMode::Serial,
+            workers: 1,
+            bucket_bytes: 1 << 20,
+        }
+    }
+}
+
+/// Per-step broadcast to every worker: the step index, this worker's
+/// sample share, and a snapshot of the parameters (the all-gather /
+/// broadcast of the updated weights).
+#[derive(Clone)]
+pub struct StepCtx {
+    pub step: u64,
+    /// Samples this worker should draw for its microbatch.
+    pub batch_share: usize,
+    pub params: Arc<Vec<f32>>,
+}
+
+/// A data-parallel worker: owns its model replica, data shard and RNG
+/// stream, and produces its local gradient for each global step.
+pub trait GradWorker: Send {
+    /// Flat gradient length.
+    fn n(&self) -> usize;
+
+    /// Compute this worker's local (locally averaged) gradient into
+    /// `grads` (fully overwritten) and return its local mean loss.
+    ///
+    /// `retired(j, grads_so_far)` may be called as backprop proceeds to
+    /// declare that every segment with index `>= j` is final — retirement
+    /// must advance as a shrinking suffix (reverse layer order). Workers
+    /// that cannot report incremental progress may simply never call it;
+    /// all buckets are then emitted when `compute` returns.
+    fn compute(
+        &mut self,
+        ctx: &StepCtx,
+        grads: &mut [f32],
+        retired: &mut dyn FnMut(usize, &[f32]),
+    ) -> f32;
+}
+
+/// What one executor step produced (besides the reduced gradient).
+#[derive(Clone, Debug)]
+pub struct StepOutcome {
+    /// Mean of the per-worker local mean losses (worker-index order).
+    pub loss: f32,
+    /// Host wall-clock for the whole step (seconds).
+    pub total: f64,
+    /// Host-measured communication/overlap record.
+    pub comm: StepComm,
+}
+
+/// Run one worker's gradient computation, emitting finished buckets
+/// through `emit` in descending bucket order as their segments retire.
+pub(crate) fn drive_worker(
+    worker: &mut dyn GradWorker,
+    grads: &mut [f32],
+    plan: &BucketPlan,
+    ctx: &StepCtx,
+    emit: &mut dyn FnMut(usize, &[f32]),
+) -> f32 {
+    grads.fill(0.0);
+    let mut next_emit = plan.len();
+    let loss;
+    {
+        let mut retired = |j: usize, g: &[f32]| {
+            while next_emit > 0 && plan.buckets[next_emit - 1].seg_lo >= j {
+                next_emit -= 1;
+                let bk = &plan.buckets[next_emit];
+                emit(next_emit, &g[bk.start..bk.end]);
+            }
+        };
+        loss = worker.compute(ctx, grads, &mut retired);
+        retired(0, grads);
+    }
+    loss
+}
+
+/// Deterministic bucketed mean over per-worker gradient buffers, bucket
+/// by bucket in worker-index order. Bit-identical to one
+/// `collective::reduce_mean` over the whole buffers (the reduction is
+/// per-element), which is the serial↔parallel equivalence anchor.
+pub fn bucketed_reduce(plan: &BucketPlan, workers: &[&[f32]], out: &mut [f32]) {
+    assert_eq!(out.len(), plan.n, "output length != plan coverage");
+    for w in workers {
+        assert_eq!(w.len(), plan.n, "worker buffer length != plan coverage");
+    }
+    for bk in &plan.buckets {
+        let refs: Vec<&[f32]> =
+            workers.iter().map(|w| &w[bk.start..bk.end]).collect();
+        reduce_mean(&refs, &mut out[bk.start..bk.end]);
+    }
+}
+
+/// Collects per-(bucket, worker) payloads and reduces each bucket in
+/// fixed worker order once complete — arrival order (thread scheduling)
+/// never affects the result.
+pub(crate) struct Gather {
+    parts: Vec<Vec<Option<Vec<f32>>>>,
+    counts: Vec<usize>,
+    workers: usize,
+}
+
+impl Gather {
+    pub(crate) fn new(buckets: usize, workers: usize) -> Gather {
+        Gather {
+            parts: (0..buckets)
+                .map(|_| (0..workers).map(|_| None).collect())
+                .collect(),
+            counts: vec![0; buckets],
+            workers,
+        }
+    }
+
+    /// Store worker `w`'s payload for bucket `b`; true once every worker
+    /// has contributed `b`.
+    pub(crate) fn offer(&mut self, b: usize, w: usize, data: Vec<f32>) -> bool {
+        assert!(self.parts[b][w].is_none(), "duplicate part b={b} w={w}");
+        self.parts[b][w] = Some(data);
+        self.counts[b] += 1;
+        self.counts[b] == self.workers
+    }
+
+    pub(crate) fn reduce_into(
+        &self,
+        plan: &BucketPlan,
+        b: usize,
+        out: &mut [f32],
+    ) {
+        let bk = &plan.buckets[b];
+        let refs: Vec<&[f32]> = self.parts[b]
+            .iter()
+            .map(|p| p.as_deref().expect("incomplete bucket"))
+            .collect();
+        reduce_mean(&refs, &mut out[bk.start..bk.end]);
+    }
+}
+
+enum Backend {
+    /// (worker, its gradient buffer) driven on the calling thread.
+    Serial(Vec<(Box<dyn GradWorker>, Vec<f32>)>),
+    Pool(WorkerPool),
+}
+
+/// The execution engine: owns the workers (directly in serial mode, via
+/// the thread pool otherwise) and runs bucketed gradient steps.
+pub struct Executor {
+    cfg: ExecConfig,
+    plan: BucketPlan,
+    backend: Backend,
+    workers: usize,
+}
+
+impl Executor {
+    /// Build from the segment table and a set of workers (one per
+    /// simulated chip). `cfg.workers` is informational; the actual count
+    /// is `workers.len()`.
+    pub fn new(
+        cfg: ExecConfig,
+        segs: &[Seg],
+        workers: Vec<Box<dyn GradWorker>>,
+    ) -> Executor {
+        assert!(!workers.is_empty(), "need at least one worker");
+        let n = workers[0].n();
+        for w in &workers {
+            assert_eq!(w.n(), n, "workers disagree on gradient length");
+        }
+        let plan = BucketPlan::from_segs(segs, cfg.bucket_bytes);
+        assert_eq!(plan.n, n, "segment table does not cover the gradient");
+        let count = workers.len();
+        let backend = match cfg.mode {
+            ExecMode::Serial => Backend::Serial(
+                workers.into_iter().map(|w| (w, vec![0.0f32; n])).collect(),
+            ),
+            ExecMode::Parallel | ExecMode::Zero1 => {
+                Backend::Pool(WorkerPool::spawn(workers, plan.clone(), n))
+            }
+        };
+        Executor { cfg, plan, backend, workers: count }
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.cfg.mode
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn plan(&self) -> &BucketPlan {
+        &self.plan
+    }
+
+    /// One global gradient step: broadcast `params`, compute per-worker
+    /// gradients (concurrently unless serial), reduce each bucket as soon
+    /// as it is complete, and leave the averaged gradient in `reduced`.
+    pub fn step(
+        &mut self,
+        step: u64,
+        batch_share: usize,
+        params: &[f32],
+        reduced: &mut [f32],
+    ) -> StepOutcome {
+        assert_eq!(reduced.len(), self.plan.n);
+        let t0 = Instant::now();
+        let ctx = StepCtx {
+            step,
+            batch_share,
+            params: Arc::new(params.to_vec()),
+        };
+        let plan = self.plan.clone();
+        let k = self.workers;
+        let nb = plan.len();
+        let mut gather = Gather::new(nb, k);
+        let mut per_bucket = vec![(0.0f64, 0.0f64); nb];
+        let mut losses = vec![0.0f32; k];
+        let mut compute_done = 0.0f64;
+
+        match &mut self.backend {
+            Backend::Serial(slots) => {
+                for (w, slot) in slots.iter_mut().enumerate() {
+                    let (worker, grads) = slot;
+                    let loss = drive_worker(
+                        worker.as_mut(),
+                        grads,
+                        &plan,
+                        &ctx,
+                        &mut |b, payload| {
+                            if gather.offer(b, w, payload.to_vec()) {
+                                per_bucket[b].0 =
+                                    t0.elapsed().as_secs_f64();
+                                gather.reduce_into(&plan, b, reduced);
+                                per_bucket[b].1 =
+                                    t0.elapsed().as_secs_f64();
+                            }
+                        },
+                    );
+                    losses[w] = loss;
+                    compute_done = t0.elapsed().as_secs_f64();
+                }
+            }
+            Backend::Pool(pool) => {
+                pool.begin_step(&ctx);
+                let mut done = 0usize;
+                let mut reduced_n = 0usize;
+                while done < k || reduced_n < nb {
+                    match pool.recv() {
+                        pool::Msg::Bucket { worker, bucket, data, at } => {
+                            if gather.offer(bucket, worker, data) {
+                                per_bucket[bucket].0 = at
+                                    .saturating_duration_since(t0)
+                                    .as_secs_f64();
+                                gather.reduce_into(&plan, bucket, reduced);
+                                per_bucket[bucket].1 =
+                                    t0.elapsed().as_secs_f64();
+                                reduced_n += 1;
+                            }
+                        }
+                        pool::Msg::Done { worker, loss, at } => {
+                            losses[worker] = loss;
+                            let f = at
+                                .saturating_duration_since(t0)
+                                .as_secs_f64();
+                            compute_done = compute_done.max(f);
+                            done += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        // Mean of local mean losses, accumulated in fixed worker order so
+        // serial and parallel agree bitwise.
+        let mut lsum = 0.0f64;
+        for &l in &losses {
+            lsum += l as f64;
+        }
+        let loss = (lsum / k as f64) as f32;
+        let total = t0.elapsed().as_secs_f64();
+        let comm_time: f64 = per_bucket.iter().map(|(r, d)| d - r).sum();
+        StepOutcome {
+            loss,
+            total,
+            comm: StepComm {
+                buckets: nb,
+                comm_time,
+                exposed: (total - compute_done).max(0.0),
+                per_bucket,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tile(sizes: &[usize]) -> Vec<Seg> {
+        let mut v = Vec::new();
+        let mut off = 0;
+        for &s in sizes {
+            v.push(Seg { offset: off, size: s, decay: true, adapt: true });
+            off += s;
+        }
+        v
+    }
+
+    /// Deterministic toy worker: gradient element i is a pure function of
+    /// (worker id, step, i); retires segments in reverse halves to
+    /// exercise incremental emission.
+    struct ToyWorker {
+        id: u64,
+        n: usize,
+        segs: usize,
+    }
+
+    impl GradWorker for ToyWorker {
+        fn n(&self) -> usize {
+            self.n
+        }
+
+        fn compute(
+            &mut self,
+            ctx: &StepCtx,
+            grads: &mut [f32],
+            retired: &mut dyn FnMut(usize, &[f32]),
+        ) -> f32 {
+            let mut rng = Rng::new(self.id ^ (ctx.step << 20));
+            for g in grads.iter_mut() {
+                *g = rng.normal_f32(1.0) + ctx.params[0] * 1e-6;
+            }
+            // declare the back half of the segment table final mid-way
+            retired(self.segs / 2, grads);
+            self.id as f32 + ctx.step as f32
+        }
+    }
+
+    fn toy_workers(k: usize, n: usize, segs: usize) -> Vec<Box<dyn GradWorker>> {
+        (0..k)
+            .map(|id| {
+                Box::new(ToyWorker { id: id as u64, n, segs })
+                    as Box<dyn GradWorker>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in [ExecMode::Serial, ExecMode::Parallel, ExecMode::Zero1] {
+            assert_eq!(ExecMode::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(ExecMode::parse("async"), None);
+    }
+
+    #[test]
+    fn serial_and_parallel_steps_agree_bitwise() {
+        let segs = tile(&[96, 16, 128, 16, 64, 8]);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        let cfg = |mode| ExecConfig { mode, workers: 3, bucket_bytes: 100 * 4 };
+        let mut serial =
+            Executor::new(cfg(ExecMode::Serial), &segs, toy_workers(3, n, 6));
+        let mut par = Executor::new(
+            cfg(ExecMode::Parallel),
+            &segs,
+            toy_workers(3, n, 6),
+        );
+        let params = vec![0.5f32; n];
+        let mut ra = vec![0.0f32; n];
+        let mut rb = vec![0.0f32; n];
+        for t in 1..=4 {
+            let oa = serial.step(t, 8, &params, &mut ra);
+            let ob = par.step(t, 8, &params, &mut rb);
+            assert_eq!(ra, rb, "step {t}");
+            assert_eq!(oa.loss, ob.loss, "step {t}");
+        }
+    }
+
+    #[test]
+    fn reduced_matches_monolithic_reduce_mean() {
+        let segs = tile(&[40, 8, 60, 12]);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        let plan = BucketPlan::from_segs(&segs, 50 * 4);
+        let mut rng = Rng::new(3);
+        let bufs: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..n).map(|_| rng.normal_f32(1.0)).collect())
+            .collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let mut whole = vec![0.0f32; n];
+        crate::collective::reduce_mean(&refs, &mut whole);
+        let mut by_bucket = vec![0.0f32; n];
+        bucketed_reduce(&plan, &refs, &mut by_bucket);
+        for i in 0..n {
+            assert_eq!(whole[i].to_bits(), by_bucket[i].to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn timeline_is_sane() {
+        let segs = tile(&[64; 8]);
+        let n = 64 * 8;
+        let cfg = ExecConfig {
+            mode: ExecMode::Parallel,
+            workers: 2,
+            bucket_bytes: 64 * 4,
+        };
+        let mut ex = Executor::new(cfg, &segs, toy_workers(2, n, 8));
+        let params = vec![0.0f32; n];
+        let mut red = vec![0.0f32; n];
+        let out = ex.step(1, 4, &params, &mut red);
+        assert_eq!(out.comm.buckets, 8);
+        assert_eq!(out.comm.per_bucket.len(), 8);
+        for &(ready, done) in &out.comm.per_bucket {
+            assert!(done >= ready, "{ready} vs {done}");
+            assert!(done <= out.total + 1e-9);
+        }
+        assert!(out.comm.exposed >= 0.0);
+    }
+}

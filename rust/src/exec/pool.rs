@@ -1,0 +1,190 @@
+//! Persistent worker thread pool: `std::thread` + mpsc channels, no
+//! external dependencies.
+//!
+//! Each pool thread owns one [`GradWorker`] (its model replica, data
+//! stream and gradient buffer) for the lifetime of the pool — state is
+//! never re-shipped between steps. Per step the driver broadcasts a
+//! [`StepCtx`] (step index, batch share, parameter snapshot) down each
+//! worker's command channel; workers stream finished gradient buckets
+//! back over a shared result channel as backprop retires them, then
+//! report their loss. The driver reduces each bucket the moment its last
+//! piece arrives — reduction overlaps with workers still computing.
+//!
+//! Shutdown is by dropping the pool: command senders close, worker loops
+//! end, threads are joined.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::{Builder, JoinHandle};
+use std::time::Instant;
+
+use super::bucket::BucketPlan;
+use super::{drive_worker, GradWorker, StepCtx};
+
+/// Worker-to-driver traffic.
+pub enum Msg {
+    /// One worker's finished payload for one bucket.
+    Bucket {
+        worker: usize,
+        bucket: usize,
+        data: Vec<f32>,
+        /// When the payload left the worker (bucket "ready" instant).
+        at: Instant,
+    },
+    /// A worker finished its whole gradient computation.
+    Done { worker: usize, loss: f32, at: Instant },
+}
+
+pub struct WorkerPool {
+    cmd_txs: Vec<Sender<StepCtx>>,
+    msg_rx: Receiver<Msg>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Move each worker onto its own named thread.
+    pub fn spawn(
+        workers: Vec<Box<dyn GradWorker>>,
+        plan: BucketPlan,
+        n: usize,
+    ) -> WorkerPool {
+        let count = workers.len();
+        let (msg_tx, msg_rx) = channel::<Msg>();
+        let mut cmd_txs = Vec::with_capacity(count);
+        let mut handles = Vec::with_capacity(count);
+        for (wid, mut worker) in workers.into_iter().enumerate() {
+            let (cmd_tx, cmd_rx) = channel::<StepCtx>();
+            let plan = plan.clone();
+            let msg_tx = msg_tx.clone();
+            let handle = Builder::new()
+                .name(format!("exec-worker-{wid}"))
+                .spawn(move || {
+                    let mut grads = vec![0.0f32; n];
+                    while let Ok(ctx) = cmd_rx.recv() {
+                        let loss = drive_worker(
+                            worker.as_mut(),
+                            &mut grads,
+                            &plan,
+                            &ctx,
+                            &mut |bucket, payload| {
+                                let _ = msg_tx.send(Msg::Bucket {
+                                    worker: wid,
+                                    bucket,
+                                    data: payload.to_vec(),
+                                    at: Instant::now(),
+                                });
+                            },
+                        );
+                        let _ = msg_tx.send(Msg::Done {
+                            worker: wid,
+                            loss,
+                            at: Instant::now(),
+                        });
+                    }
+                })
+                .expect("spawning exec worker thread");
+            cmd_txs.push(cmd_tx);
+            handles.push(handle);
+        }
+        // Only the worker threads hold senders now: a recv error means
+        // every worker is gone (a bug), not a normal condition.
+        drop(msg_tx);
+        WorkerPool { cmd_txs, msg_rx, handles, workers: count }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Broadcast the step context to every worker.
+    pub fn begin_step(&self, ctx: &StepCtx) {
+        for tx in &self.cmd_txs {
+            tx.send(ctx.clone()).expect("exec worker thread died");
+        }
+    }
+
+    /// Blocking receive of the next worker message.
+    pub fn recv(&self) -> Msg {
+        self.msg_rx.recv().expect("all exec worker threads died")
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the command channels ends each worker loop.
+        self.cmd_txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::Seg;
+    use std::sync::Arc;
+
+    struct ConstWorker {
+        val: f32,
+        n: usize,
+    }
+
+    impl GradWorker for ConstWorker {
+        fn n(&self) -> usize {
+            self.n
+        }
+
+        fn compute(
+            &mut self,
+            ctx: &StepCtx,
+            grads: &mut [f32],
+            _retired: &mut dyn FnMut(usize, &[f32]),
+        ) -> f32 {
+            for g in grads.iter_mut() {
+                *g = self.val * ctx.step as f32;
+            }
+            self.val
+        }
+    }
+
+    #[test]
+    fn pool_round_trip_and_clean_shutdown() {
+        let n = 32;
+        let segs = Seg::whole(n);
+        let plan = BucketPlan::from_segs(&segs, 16 * 4);
+        let workers: Vec<Box<dyn GradWorker>> = (0..3)
+            .map(|i| {
+                Box::new(ConstWorker { val: (i + 1) as f32, n })
+                    as Box<dyn GradWorker>
+            })
+            .collect();
+        let pool = WorkerPool::spawn(workers, plan.clone(), n);
+        let ctx = StepCtx {
+            step: 2,
+            batch_share: 1,
+            params: Arc::new(vec![0.0; n]),
+        };
+        pool.begin_step(&ctx);
+        let mut buckets = 0;
+        let mut losses = vec![0.0f32; 3];
+        let mut done = 0;
+        while done < 3 {
+            match pool.recv() {
+                Msg::Bucket { worker, data, .. } => {
+                    buckets += 1;
+                    // worker i emits (i+1) * step everywhere
+                    let want = (worker + 1) as f32 * 2.0;
+                    assert!(data.iter().all(|&v| v == want));
+                }
+                Msg::Done { worker, loss, .. } => {
+                    losses[worker] = loss;
+                    done += 1;
+                }
+            }
+        }
+        assert_eq!(buckets, 3 * plan.len());
+        assert_eq!(losses, vec![1.0, 2.0, 3.0]);
+        drop(pool); // must join without hanging
+    }
+}

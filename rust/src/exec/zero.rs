@@ -1,0 +1,177 @@
+//! ZeRO-1 optimizer-state sharding over the bucket partition.
+//!
+//! Dense data parallelism replicates the full optimizer state (Adam/LAMB
+//! moments) on every worker. ZeRO stage 1 (Rajbhandari et al. 2020)
+//! instead gives each worker the moments for the bucket ranges it owns
+//! (`BucketPlan::owner`): after the all-reduce, the owner steps *its*
+//! parameter range with its local state shard and the updated parameters
+//! are all-gathered. Per-worker optimizer-state memory drops to ~1/k —
+//! the accounting that `cluster::Pod::max_batch` prices.
+//!
+//! Because every optimizer in `optim` is strictly per-segment (moments,
+//! trust ratio, decay are all computed within one segment) and buckets
+//! hold whole segments, a sharded step is *f32-exactly* equal to the
+//! dense step — `tests/test_exec.rs` asserts this property on random
+//! segment tables.
+
+use crate::exec::bucket::BucketPlan;
+use crate::optim::{build, Hyper, Optimizer, Seg};
+
+/// Optimizer state physically partitioned by bucket: one optimizer
+/// instance per bucket, sized for that bucket's range only, with segment
+/// offsets translated to bucket-local coordinates.
+pub struct Zero1State {
+    shards: Vec<Box<dyn Optimizer>>,
+    /// Bucket-local segment tables (offsets shifted to bucket start).
+    local_segs: Vec<Vec<Seg>>,
+    name: String,
+}
+
+impl Zero1State {
+    /// Build one state shard per bucket of `plan` for the named optimizer.
+    /// Returns `None` for an unknown optimizer name.
+    pub fn build(
+        optimizer: &str,
+        plan: &BucketPlan,
+        segs: &[Seg],
+        hyper: Hyper,
+    ) -> Option<Zero1State> {
+        let mut shards = Vec::with_capacity(plan.len());
+        let mut local_segs = Vec::with_capacity(plan.len());
+        for (b, bk) in plan.buckets.iter().enumerate() {
+            shards.push(build(optimizer, bk.len(), hyper)?);
+            local_segs.push(plan.local_segs(b, segs));
+        }
+        Some(Zero1State { shards, local_segs, name: optimizer.to_string() })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Step one bucket's parameter range in place using its local state
+    /// shard. Returns the trust ratios for the bucket's segments (in
+    /// global segment order within the bucket).
+    pub fn step_bucket(
+        &mut self,
+        plan: &BucketPlan,
+        b: usize,
+        params: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        step: u64,
+    ) -> Vec<f32> {
+        let bk = &plan.buckets[b];
+        self.shards[b].step(
+            &mut params[bk.start..bk.end],
+            &grads[bk.start..bk.end],
+            lr,
+            step,
+            &self.local_segs[b],
+        )
+    }
+
+    /// Step every bucket in order (the serial drive path). Returns the
+    /// concatenated per-segment trust ratios — identical layout to a
+    /// dense `Optimizer::step` over the full segment table.
+    pub fn step_all(
+        &mut self,
+        plan: &BucketPlan,
+        params: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        step: u64,
+    ) -> Vec<f32> {
+        let mut ratios = Vec::new();
+        for b in 0..plan.len() {
+            ratios.extend(self.step_bucket(plan, b, params, grads, lr, step));
+        }
+        ratios
+    }
+
+    /// Optimizer-state bytes held by `worker` of `workers` (ZeRO-1 share).
+    pub fn state_bytes_for(
+        &self,
+        plan: &BucketPlan,
+        worker: usize,
+        workers: usize,
+    ) -> usize {
+        self.shards
+            .iter()
+            .enumerate()
+            .filter(|(b, _)| plan.owner(*b, workers) == worker)
+            .map(|(_, s)| s.state_bytes())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tile(sizes: &[usize]) -> Vec<Seg> {
+        let mut v = Vec::new();
+        let mut off = 0;
+        for (i, &s) in sizes.iter().enumerate() {
+            v.push(Seg {
+                offset: off,
+                size: s,
+                decay: i % 2 == 0,
+                adapt: i % 3 != 2,
+            });
+            off += s;
+        }
+        v
+    }
+
+    #[test]
+    fn sharded_lamb_matches_dense_exactly() {
+        let segs = tile(&[40, 8, 120, 8, 64, 16]);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        let plan = BucketPlan::from_segs(&segs, 60 * 4);
+        assert!(plan.len() > 1);
+        let h = Hyper::default();
+        let mut dense = build("lamb", n, h).unwrap();
+        let mut sharded = Zero1State::build("lamb", &plan, &segs, h).unwrap();
+        let mut rng = Rng::new(7);
+        let mut xa: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+        let mut xb = xa.clone();
+        for t in 1..=5 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.3)).collect();
+            let ra = dense.step(&mut xa, &g, 0.01, t, &segs);
+            let rb = sharded.step_all(&plan, &mut xb, &g, 0.01, t);
+            assert_eq!(ra, rb, "trust ratios diverged at step {t}");
+            assert_eq!(xa, xb, "params diverged at step {t}");
+        }
+    }
+
+    #[test]
+    fn state_share_is_fraction_of_dense() {
+        let segs = tile(&[64; 12]);
+        let n = 64 * 12;
+        let plan = BucketPlan::from_segs(&segs, 64 * 4);
+        let h = Hyper::default();
+        let sharded = Zero1State::build("adam", &plan, &segs, h).unwrap();
+        let dense = build("adam", n, h).unwrap();
+        let k = 4;
+        let total: usize =
+            (0..k).map(|w| sharded.state_bytes_for(&plan, w, k)).sum();
+        assert_eq!(total, dense.state_bytes());
+        for w in 0..k {
+            assert_eq!(
+                sharded.state_bytes_for(&plan, w, k),
+                dense.state_bytes() / k
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_optimizer_rejected() {
+        let segs = tile(&[16]);
+        let plan = BucketPlan::whole(&segs);
+        assert!(
+            Zero1State::build("sgdx", &plan, &segs, Hyper::default()).is_none()
+        );
+    }
+}

@@ -2,25 +2,50 @@
 //!
 //! Full-system reproduction of **"Large Batch Optimization for Deep
 //! Learning: Training BERT in 76 minutes"** (You et al., ICLR 2020) as a
-//! three-layer Rust + JAX + Pallas stack.
+//! four-layer Rust + JAX + Pallas stack:
 //!
-//! This crate is Layer 3: the synchronous data-parallel training
-//! coordinator (the system behind the paper's headline result), plus every
-//! substrate it needs — native optimizer implementations (LAMB, LARS and
-//! the tuned baselines), LR schedules with the paper's sqrt-scaling and
-//! warmup rules, a ring all-reduce, a TPUv3-pod performance model, the
-//! synthetic corpus/MLM data pipeline, a native tiny-NN trainer for the
-//! appendix-scale sweeps, and the PJRT runtime that executes the
-//! AOT-compiled JAX/Pallas artifacts from `artifacts/`.
+//! * **L1 — kernels** (`python/compile/kernels`): the Pallas LAMB/LARS
+//!   optimizer kernels and their jnp references, AOT-lowered to HLO text.
+//! * **L2 — model graphs** (`python/compile`): BERT-family gradient /
+//!   eval / fused-step graphs, exported once via `make artifacts`; Python
+//!   never runs on the step path.
+//! * **L3 — coordinator** (this crate): the synchronous data-parallel
+//!   trainer behind the paper's headline result — microbatching, the
+//!   all-reduce contract ([`collective`]), native optimizers ([`optim`])
+//!   with the paper's sqrt-LR/warmup rules ([`schedule`]), the calibrated
+//!   TPUv3-pod performance model ([`cluster`]), the synthetic corpus/MLM
+//!   pipeline ([`data`]), and the PJRT runtime ([`runtime`], feature
+//!   `pjrt`; an offline stub otherwise).
+//! * **L4 — execution engine** ([`exec`]): the layer that makes the pod
+//!   *concurrent* instead of simulated-serial — a persistent worker
+//!   thread pool, a layer-aligned bucketed all-reduce that overlaps
+//!   communication with the backward pass (re-priced by the pod model
+//!   from the actual bucket timeline), and ZeRO-1 sharded optimizer
+//!   state cutting per-worker moment memory to ~1/k.
 //!
-//! Python never runs on the step path: `make artifacts` lowers the L2/L1
-//! graphs once; everything after that is this crate.
+//! Both trainers drive their step loops through the exec layer:
+//! [`coordinator::NativeTrainer`] runs workers truly in parallel for the
+//! appendix-scale sweeps, [`coordinator::BertTrainer`] uses the serial
+//! drive (PJRT executables are single-threaded) with the same bucket
+//! partition and pricing. Serial mode remains bitwise-identical to
+//! parallel mode, so sweep results stay reproducible across exec modes.
+
+// Lint allowances for the numeric kernels: index-based loops are
+// deliberate (explicit ranges mirror the Pallas kernels and keep the
+// reduction order obvious), and a few step entry points mirror the
+// paper's parameter lists.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_memcpy
+)]
 
 pub mod cluster;
 pub mod collective;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod manifest;
 pub mod metrics;
 pub mod model;

@@ -7,6 +7,20 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+/// Communication record of one bucketed-overlap step (simulated seconds
+/// for the pod-priced coordinator, host seconds for the exec engine).
+#[derive(Clone, Debug, Default)]
+pub struct StepComm {
+    /// Bucket count of the all-reduce partition.
+    pub buckets: usize,
+    /// Total wire/reduction time summed over buckets.
+    pub comm_time: f64,
+    /// Communication not hidden under compute (what extends the step).
+    pub exposed: f64,
+    /// Per-bucket (ready, done) offsets from step start.
+    pub per_bucket: Vec<(f64, f64)>,
+}
+
 /// One training step's observables.
 #[derive(Clone, Debug)]
 pub struct StepRecord {
@@ -17,6 +31,8 @@ pub struct StepRecord {
     pub sim_time: f64,
     /// Host wall-clock (seconds since run start).
     pub host_time: f64,
+    /// Bucketed all-reduce timing (None on unbucketed step paths).
+    pub comm: Option<StepComm>,
 }
 
 /// Divergence detector per Tables 2/8: non-finite loss, or loss exceeding
@@ -101,7 +117,7 @@ impl RunLog {
         self.records.last().map(|r| r.sim_time).unwrap_or(0.0)
     }
 
-    /// Write `step,lr,loss,sim_time,host_time` CSV.
+    /// Write `step,lr,loss,sim_time,host_time,buckets,comm_exposed` CSV.
     pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
         if let Some(dir) = path.parent() {
@@ -109,12 +125,16 @@ impl RunLog {
         }
         let mut f = std::fs::File::create(path)
             .with_context(|| format!("creating {path:?}"))?;
-        writeln!(f, "step,lr,loss,sim_time,host_time")?;
+        writeln!(f, "step,lr,loss,sim_time,host_time,buckets,comm_exposed")?;
         for r in &self.records {
+            let (b, exp) = match &r.comm {
+                Some(c) => (c.buckets, c.exposed),
+                None => (0, 0.0),
+            };
             writeln!(
                 f,
-                "{},{},{},{},{}",
-                r.step, r.lr, r.loss, r.sim_time, r.host_time
+                "{},{},{},{},{},{},{}",
+                r.step, r.lr, r.loss, r.sim_time, r.host_time, b, exp
             )?;
         }
         Ok(())
@@ -228,6 +248,7 @@ mod tests {
                 loss: *l,
                 sim_time: 0.0,
                 host_time: 0.0,
+                comm: None,
             });
         }
         assert_eq!(log.tail_loss(2), 1.5);

@@ -89,15 +89,37 @@ impl Mlp {
         y: &[u32],
         grads: &mut [f32],
     ) -> (f32, f32) {
-        self.run(x, y, Some(grads))
+        self.run(x, y, Some(grads), None)
+    }
+
+    /// As [`loss_grad`](Self::loss_grad), additionally invoking
+    /// `retired(seg_lo, grads)` as backprop retires each layer's weight
+    /// and bias gradients — after the call, every segment with index
+    /// `>= seg_lo` is final. Backprop walks layers last-to-first, so the
+    /// retired suffix grows downward: exactly the readiness order the
+    /// exec engine's bucketed all-reduce overlaps against.
+    pub fn loss_grad_retiring(
+        &self,
+        x: &[f32],
+        y: &[u32],
+        grads: &mut [f32],
+        retired: &mut dyn FnMut(usize, &[f32]),
+    ) -> (f32, f32) {
+        self.run(x, y, Some(grads), Some(retired))
     }
 
     /// Forward only.
     pub fn evaluate(&self, x: &[f32], y: &[u32]) -> (f32, f32) {
-        self.run(x, y, None)
+        self.run(x, y, None, None)
     }
 
-    fn run(&self, x: &[f32], y: &[u32], grads: Option<&mut [f32]>) -> (f32, f32) {
+    fn run(
+        &self,
+        x: &[f32],
+        y: &[u32],
+        grads: Option<&mut [f32]>,
+        mut retired: Option<&mut dyn FnMut(usize, &[f32])>,
+    ) -> (f32, f32) {
         let n = y.len();
         assert_eq!(x.len(), n * self.cfg.input);
         let nl = self.dims.len();
@@ -205,6 +227,9 @@ impl Mlp {
                     }
                 }
             }
+            if let Some(h) = retired.as_mut() {
+                h(2 * li, grads);
+            }
             if li == 0 {
                 break;
             }
@@ -287,6 +312,32 @@ mod tests {
                 g[idx]
             );
         }
+    }
+
+    #[test]
+    fn retiring_backward_matches_and_orders() {
+        let m = Mlp::new(MlpConfig { input: 6, hidden: vec![8, 5], classes: 3 }, 11);
+        let t = ImageTask::new(6, 3, 12);
+        let mut rng = Rng::new(13);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        t.sample(&mut rng, 16, &mut x, &mut y);
+        let mut ga = vec![0.0f32; m.n_params()];
+        let (la, _) = m.loss_grad(&x, &y, &mut ga);
+        let mut gb = vec![0.0f32; m.n_params()];
+        let mut seen: Vec<usize> = Vec::new();
+        let segs = m.segs().to_vec();
+        let (lb, _) = m.loss_grad_retiring(&x, &y, &mut gb, &mut |j, g| {
+            // the retired suffix must already hold its final values
+            let lo = segs[j].offset;
+            assert!(g[lo..].iter().zip(&ga[lo..]).all(|(a, b)| a == b));
+            seen.push(j);
+        });
+        assert_eq!(la, lb);
+        assert_eq!(ga, gb);
+        // one callback per layer, last layer first, down to segment 0
+        let nl = 3; // 2 hidden + head
+        let want: Vec<usize> = (0..nl).rev().map(|li| 2 * li).collect();
+        assert_eq!(seen, want);
     }
 
     #[test]

@@ -153,6 +153,32 @@ pub trait Optimizer {
         segs: &[Seg],
     ) -> Vec<f32>;
 
+    /// Range-restricted step: apply the update only to segments fully
+    /// contained in `[lo, hi)` of the flat vector — the ZeRO-1 shard
+    /// entry point (a state owner steps just its bucket range). Returns
+    /// trust ratios for the included segments, in table order.
+    ///
+    /// Because every optimizer here is strictly per-segment, stepping a
+    /// partition of `[0, n)` range by range is f32-exactly equal to one
+    /// dense `step` (asserted in `tests/test_exec.rs`).
+    fn step_range(
+        &mut self,
+        params: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        step: u64,
+        segs: &[Seg],
+        lo: usize,
+        hi: usize,
+    ) -> Vec<f32> {
+        let sub: Vec<Seg> = segs
+            .iter()
+            .filter(|s| s.offset >= lo && s.offset + s.size <= hi)
+            .copied()
+            .collect();
+        self.step(params, grads, lr, step, &sub)
+    }
+
     fn name(&self) -> &'static str;
 
     /// Moment buffer size (for state-size accounting in the pod model).
@@ -248,6 +274,45 @@ mod tests {
             let f1 = f(&x);
             assert!(f1 < 0.5 * f0, "{name}: {f0} -> {f1}");
             assert!(x.iter().all(|a| a.is_finite()), "{name} diverged");
+        }
+    }
+
+    /// Stepping a partition of the vector range by range must equal one
+    /// dense step exactly, for every optimizer (the ZeRO-1 shard
+    /// contract).
+    #[test]
+    fn step_range_partition_equals_dense() {
+        let sizes = [10usize, 6, 20, 4, 24];
+        let n: usize = sizes.iter().sum();
+        let mut segs = Vec::new();
+        let mut off = 0;
+        for (i, &s) in sizes.iter().enumerate() {
+            segs.push(Seg {
+                offset: off,
+                size: s,
+                decay: i % 2 == 0,
+                adapt: i != 3,
+            });
+            off += s;
+        }
+        let cut = 36; // boundary after segment 2
+        for name in ALL {
+            let h = Hyper::default();
+            let mut dense = build(name, n, h).unwrap();
+            let mut parted = build(name, n, h).unwrap();
+            let mut xa: Vec<f32> =
+                (0..n).map(|i| ((i * 7 % 13) as f32) - 6.0).collect();
+            let mut xb = xa.clone();
+            for t in 1..=3 {
+                let g: Vec<f32> =
+                    (0..n).map(|i| ((i * 5 % 11) as f32) * 0.1 - 0.5).collect();
+                let ra = dense.step(&mut xa, &g, 0.01, t, &segs);
+                let mut rb =
+                    parted.step_range(&mut xb, &g, 0.01, t, &segs, 0, cut);
+                rb.extend(parted.step_range(&mut xb, &g, 0.01, t, &segs, cut, n));
+                assert_eq!(ra, rb, "{name} ratios step {t}");
+                assert_eq!(xa, xb, "{name} params step {t}");
+            }
         }
     }
 

@@ -1,201 +1,23 @@
-//! PJRT runtime: loads the AOT-compiled HLO-text artifacts and executes
-//! them on the CPU PJRT client. This is the only place the `xla` crate is
-//! touched; the rest of the coordinator works with plain `Vec<f32>` /
-//! `Vec<i32>` host buffers.
+//! Artifact runtime: loads the AOT-compiled HLO-text artifacts and
+//! executes them. Two interchangeable backends behind one API:
 //!
-//! HLO *text* is the interchange format (not serialized protos): jax >= 0.5
-//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see python/compile/aot.py).
+//! * [`pjrt`] (feature `pjrt`) — the real thing: the `xla` crate's PJRT
+//!   CPU client. This is the only place that crate is touched; the rest
+//!   of the coordinator works with plain `Vec<f32>` / `Vec<i32>` host
+//!   buffers.
+//! * [`stub`] (default) — an offline stand-in with the identical surface
+//!   whose `Engine::cpu()` fails with a clear "rebuild with `--features
+//!   pjrt`" error. Everything that does not execute artifacts (the native
+//!   trainer, the exec engine, the pod model, the sweeps) works fully in
+//!   this configuration; the BERT-artifact paths fail at run time, not at
+//!   compile time.
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::Path;
-use std::rc::Rc;
-use std::time::{Duration, Instant};
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::*;
 
-use anyhow::{anyhow, Result};
-
-struct ExeInner {
-    exe: xla::PjRtLoadedExecutable,
-    name: String,
-    compile_time: Duration,
-}
-
-/// Wraps the process-wide PJRT CPU client plus cumulative execution stats
-/// and a compiled-executable cache (keyed by artifact path — compiling an
-/// artifact costs seconds; a multi-stage or repeated run must pay it
-/// once; see EXPERIMENTS.md §Perf iteration 1).
-pub struct Engine {
-    client: xla::PjRtClient,
-    cache: RefCell<HashMap<String, Rc<ExeInner>>>,
-    /// Cumulative wall time spent inside PJRT `execute` (profiling).
-    pub exec_time: std::cell::Cell<Duration>,
-    pub exec_count: std::cell::Cell<u64>,
-}
-
-impl Engine {
-    pub fn cpu() -> Result<Engine> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
-        Ok(Engine {
-            client,
-            cache: RefCell::new(HashMap::new()),
-            exec_time: std::cell::Cell::new(Duration::ZERO),
-            exec_count: std::cell::Cell::new(0),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load an HLO-text artifact and compile it for this client, reusing
-    /// the cached compilation when the same path was loaded before.
-    pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable<'_>> {
-        let path = path.as_ref();
-        let key = path.to_string_lossy().into_owned();
-        if let Some(inner) = self.cache.borrow().get(&key) {
-            return Ok(Executable { engine: self, inner: inner.clone() });
-        }
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {path:?}: {e}"))?;
-        let inner = Rc::new(ExeInner {
-            exe,
-            name: path
-                .file_name()
-                .map(|s| s.to_string_lossy().into_owned())
-                .unwrap_or_default(),
-            compile_time: t0.elapsed(),
-        });
-        self.cache.borrow_mut().insert(key, inner.clone());
-        Ok(Executable { engine: self, inner })
-    }
-
-    /// Number of distinct compiled artifacts currently cached.
-    pub fn cached_executables(&self) -> usize {
-        self.cache.borrow().len()
-    }
-}
-
-/// A (shared) compiled artifact. Outputs are always a single tuple
-/// (lowered with `return_tuple=True`); `run` unwraps it to a flat literal
-/// list.
-pub struct Executable<'a> {
-    engine: &'a Engine,
-    inner: Rc<ExeInner>,
-}
-
-impl<'a> Executable<'a> {
-    pub fn name(&self) -> &str {
-        &self.inner.name
-    }
-
-    /// Compile time of the cached executable (zero-cost on cache hits).
-    pub fn compile_time(&self) -> Duration {
-        self.inner.compile_time
-    }
-
-    /// Execute with host literals; returns the decomposed output tuple.
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let t0 = Instant::now();
-        let out = self
-            .inner
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("executing {}: {e}", self.inner.name))?;
-        let lit = out[0][0].to_literal_sync().map_err(|e| {
-            anyhow!("fetching result of {}: {e}", self.inner.name)
-        })?;
-        let e = self.engine;
-        e.exec_time.set(e.exec_time.get() + t0.elapsed());
-        e.exec_count.set(e.exec_count.get() + 1);
-        lit.to_tuple()
-            .map_err(|e| anyhow!("untupling {}: {e}", self.inner.name))
-    }
-
-    /// Execute with device-resident buffers (hot-path variant: state stays
-    /// on device between steps; see EXPERIMENTS.md §Perf).
-    pub fn run_b(
-        &self,
-        inputs: &[xla::PjRtBuffer],
-    ) -> Result<xla::PjRtBuffer> {
-        let t0 = Instant::now();
-        let mut out = self
-            .inner
-            .exe
-            .execute_b(inputs)
-            .map_err(|e| anyhow!("executing {}: {e}", self.inner.name))?;
-        let e = self.engine;
-        e.exec_time.set(e.exec_time.get() + t0.elapsed());
-        e.exec_count.set(e.exec_count.get() + 1);
-        Ok(out.remove(0).remove(0))
-    }
-}
-
-// ---------------------------------------------------------------------
-// Literal construction / extraction helpers
-// ---------------------------------------------------------------------
-
-/// 1-D f32 literal.
-pub fn lit_f32(data: &[f32]) -> xla::Literal {
-    xla::Literal::vec1(data)
-}
-
-/// 2-D i32 literal of shape [rows, cols].
-pub fn lit_i32_2d(data: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    anyhow::ensure!(data.len() == rows * cols, "shape mismatch");
-    xla::Literal::vec1(data)
-        .reshape(&[rows as i64, cols as i64])
-        .map_err(|e| anyhow!("reshape: {e}"))
-}
-
-/// 2-D f32 literal of shape [rows, cols].
-pub fn lit_f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    anyhow::ensure!(data.len() == rows * cols, "shape mismatch");
-    xla::Literal::vec1(data)
-        .reshape(&[rows as i64, cols as i64])
-        .map_err(|e| anyhow!("reshape: {e}"))
-}
-
-/// Rank-0 f32 literal.
-pub fn lit_scalar(x: f32) -> xla::Literal {
-    xla::Literal::scalar(x)
-}
-
-/// Extract a f32 vector.
-pub fn vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec<f32>: {e}"))
-}
-
-/// Extract a f32 scalar (rank-0 or single-element).
-pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
-    lit.get_first_element::<f32>()
-        .map_err(|e| anyhow!("scalar: {e}"))
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn literal_roundtrip() {
-        let l = lit_f32(&[1.0, 2.0, 3.0]);
-        assert_eq!(vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0]);
-        assert_eq!(scalar_f32(&lit_scalar(4.5)).unwrap(), 4.5);
-    }
-
-    #[test]
-    fn reshape_checks_size() {
-        assert!(lit_i32_2d(&[1, 2, 3], 2, 2).is_err());
-        let l = lit_i32_2d(&[1, 2, 3, 4], 2, 2).unwrap();
-        assert_eq!(l.element_count(), 4);
-    }
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::*;

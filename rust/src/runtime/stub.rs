@@ -1,0 +1,125 @@
+//! Offline stand-in for the PJRT runtime (default build, feature `pjrt`
+//! disabled). Mirrors `runtime::pjrt`'s public surface exactly so every
+//! caller compiles unchanged; any attempt to actually construct the
+//! engine or execute an artifact returns a runtime error pointing at the
+//! `pjrt` feature.
+
+use std::cell::Cell;
+use std::marker::PhantomData;
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{anyhow, Error, Result};
+
+fn no_pjrt(what: &str) -> Error {
+    anyhow!(
+        "{what} requires the PJRT runtime — rebuild with `--features pjrt` \
+         (needs the xla crate; this build is the offline stub)"
+    )
+}
+
+/// Host-side literal placeholder. Construction is allowed (so batch
+/// plumbing code is exercised even offline); only execution/extraction
+/// requires the real backend.
+pub struct Literal(());
+
+/// Stub of the process-wide PJRT engine. `cpu()` always fails; the
+/// fields exist for API parity with the real engine's profiling counters.
+pub struct Engine {
+    /// Cumulative wall time spent inside PJRT `execute` (always zero).
+    pub exec_time: Cell<Duration>,
+    pub exec_count: Cell<u64>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        Err(no_pjrt("runtime::Engine::cpu()"))
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".into()
+    }
+
+    pub fn load(&self, _path: impl AsRef<Path>) -> Result<Executable<'_>> {
+        Err(no_pjrt("loading an artifact"))
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        0
+    }
+}
+
+/// Stub compiled artifact (never actually constructible, since `Engine`
+/// itself cannot be built in the stub configuration).
+pub struct Executable<'a> {
+    _engine: PhantomData<&'a Engine>,
+}
+
+impl<'a> Executable<'a> {
+    pub fn name(&self) -> &str {
+        "stub"
+    }
+
+    pub fn compile_time(&self) -> Duration {
+        Duration::ZERO
+    }
+
+    pub fn run(&self, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+        Err(no_pjrt("executing an artifact"))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Literal construction / extraction helpers (same signatures as pjrt)
+// ---------------------------------------------------------------------
+
+/// 1-D f32 literal.
+pub fn lit_f32(_data: &[f32]) -> Literal {
+    Literal(())
+}
+
+/// 2-D i32 literal of shape [rows, cols].
+pub fn lit_i32_2d(data: &[i32], rows: usize, cols: usize) -> Result<Literal> {
+    anyhow::ensure!(data.len() == rows * cols, "shape mismatch");
+    Ok(Literal(()))
+}
+
+/// 2-D f32 literal of shape [rows, cols].
+pub fn lit_f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<Literal> {
+    anyhow::ensure!(data.len() == rows * cols, "shape mismatch");
+    Ok(Literal(()))
+}
+
+/// Rank-0 f32 literal.
+pub fn lit_scalar(_x: f32) -> Literal {
+    Literal(())
+}
+
+/// Extract a f32 vector.
+pub fn vec_f32(_lit: &Literal) -> Result<Vec<f32>> {
+    Err(no_pjrt("reading a literal"))
+}
+
+/// Extract a f32 scalar (rank-0 or single-element).
+pub fn scalar_f32(_lit: &Literal) -> Result<f32> {
+    Err(no_pjrt("reading a literal"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_cpu_points_at_pjrt_feature() {
+        let err = Engine::cpu().err().expect("stub must refuse");
+        let msg = err.to_string();
+        assert!(msg.contains("--features pjrt"), "{msg}");
+    }
+
+    #[test]
+    fn literal_shapes_still_checked() {
+        assert!(lit_i32_2d(&[1, 2, 3], 2, 2).is_err());
+        assert!(lit_i32_2d(&[1, 2, 3, 4], 2, 2).is_ok());
+        assert!(lit_f32_2d(&[1.0; 6], 2, 3).is_ok());
+    }
+}

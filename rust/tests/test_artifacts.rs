@@ -4,6 +4,11 @@
 //!
 //! The headline check: the native Rust LAMB step and the Pallas-kernel
 //! LAMB artifact produce the same update, on real BERT gradients.
+//!
+//! Requires the real PJRT runtime (`--features pjrt`); compiled out on
+//! the offline default build.
+
+#![cfg(feature = "pjrt")]
 
 use lamb_train::data::{Corpus, MlmConfig, MlmGenerator};
 use lamb_train::manifest::Manifest;

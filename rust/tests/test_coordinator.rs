@@ -1,6 +1,11 @@
 //! Coordinator integration tests: full training loops over the artifacts
 //! (distributed and fused paths), determinism, divergence handling, and
 //! the multi-stage mixed-batch driver.
+//!
+//! Requires the real PJRT runtime (`--features pjrt`) plus
+//! `make artifacts`; compiled out on the offline default build.
+
+#![cfg(feature = "pjrt")]
 
 use lamb_train::config::{StepPath, TrainConfig};
 use lamb_train::coordinator::{BertTrainer, Stage};

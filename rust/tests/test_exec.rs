@@ -1,0 +1,213 @@
+//! Equivalence guarantees of the exec engine (no artifacts or PJRT
+//! needed — runs on the offline default build):
+//!
+//! (a) parallel bucketed execution produces bitwise-identical averaged
+//!     gradients to a serial monolithic `reduce_mean`, both at the
+//!     reduction level (random segment tables) and end-to-end through
+//!     `NativeTrainer` (serial vs parallel vs zero1 full runs);
+//! (b) a ZeRO-1 sharded LAMB step matches the dense `Lamb::step` to
+//!     exact f32 equality on random segment tables, across steps
+//!     (stateful moments);
+//! (c) `RingAllReduce` agrees with the bucketed path for non-divisible
+//!     bucket/worker splits.
+
+use lamb_train::collective::{reduce_mean, RingAllReduce};
+use lamb_train::coordinator::{NativeTask, NativeTrainer};
+use lamb_train::exec::{bucketed_reduce, BucketPlan, ExecConfig, ExecMode, Zero1State};
+use lamb_train::optim::{self, Hyper, Optimizer, Seg};
+use lamb_train::schedule::Schedule;
+use lamb_train::util::Rng;
+
+/// Random contiguous segment table with `segs` segments and mixed
+/// decay/adapt flags.
+fn random_segs(rng: &mut Rng, segs: usize) -> Vec<Seg> {
+    let mut v = Vec::new();
+    let mut off = 0;
+    for i in 0..segs {
+        let size = 1 + rng.below(97) as usize;
+        v.push(Seg {
+            offset: off,
+            size,
+            decay: i % 2 == 0,
+            adapt: rng.below(4) != 0,
+        });
+        off += size;
+    }
+    v
+}
+
+fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32(scale)).collect()
+}
+
+// ------------------------------------------------------------------
+// (a) bucketed reduce == monolithic reduce_mean, bitwise
+// ------------------------------------------------------------------
+
+#[test]
+fn prop_bucketed_reduce_bitwise_equals_serial() {
+    let mut rng = Rng::new(2001);
+    for case in 0..25 {
+        let segs = random_segs(&mut rng, 2 + rng.below(12) as usize);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        let k = 1 + rng.below(6) as usize;
+        let bucket_bytes = 4 * (1 + rng.below(120) as usize);
+        let plan = BucketPlan::from_segs(&segs, bucket_bytes);
+        let bufs: Vec<Vec<f32>> =
+            (0..k).map(|_| rand_vec(&mut rng, n, 2.0)).collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let mut serial = vec![0.0f32; n];
+        reduce_mean(&refs, &mut serial);
+        let mut bucketed = vec![0.0f32; n];
+        bucketed_reduce(&plan, &refs, &mut bucketed);
+        for i in 0..n {
+            assert_eq!(
+                serial[i].to_bits(),
+                bucketed[i].to_bits(),
+                "case {case} i={i} ({} buckets, k={k})",
+                plan.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn native_serial_parallel_zero1_runs_bitwise_identical() {
+    let spec = NativeTask::cifar_proxy();
+    let sched = Schedule::WarmupPoly {
+        base: 0.02,
+        warmup: 5,
+        total: 60,
+        power: 1.0,
+    };
+    let run = |mode: ExecMode| {
+        let cfg = ExecConfig { mode, workers: 4, bucket_bytes: 1 << 12 };
+        let mut tr = NativeTrainer::with_exec(
+            &spec,
+            "lamb",
+            Hyper::default(),
+            sched.clone(),
+            11,
+            cfg,
+        );
+        let log = tr.train(60, 64);
+        (log.losses(), tr.mlp.params.clone(), log.final_metric)
+    };
+    let (l_ser, p_ser, m_ser) = run(ExecMode::Serial);
+    let (l_par, p_par, m_par) = run(ExecMode::Parallel);
+    assert_eq!(l_ser, l_par, "serial vs parallel losses");
+    assert_eq!(p_ser, p_par, "serial vs parallel params");
+    assert_eq!(m_ser, m_par);
+    // ZeRO-1 shards the optimizer state but must compute the exact same
+    // update (per-segment optimizers + bitwise-equal reduced gradients).
+    let (l_z, p_z, m_z) = run(ExecMode::Zero1);
+    assert_eq!(l_ser, l_z, "serial vs zero1 losses");
+    assert_eq!(p_ser, p_z, "serial vs zero1 params");
+    assert_eq!(m_ser, m_z);
+}
+
+// ------------------------------------------------------------------
+// (b) ZeRO-1 LAMB == dense LAMB, f32-exact, random segment tables
+// ------------------------------------------------------------------
+
+#[test]
+fn prop_zero1_lamb_matches_dense_exactly() {
+    let mut rng = Rng::new(2002);
+    for case in 0..15 {
+        let segs = random_segs(&mut rng, 2 + rng.below(10) as usize);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        let plan =
+            BucketPlan::from_segs(&segs, 4 * (1 + rng.below(150) as usize));
+        let h = Hyper::default();
+        let mut dense = optim::Lamb::new(n, h);
+        let mut sharded = Zero1State::build("lamb", &plan, &segs, h).unwrap();
+        let mut xa = rand_vec(&mut rng, n, 1.0);
+        let mut xb = xa.clone();
+        for t in 1..=4 {
+            let g = rand_vec(&mut rng, n, 0.5);
+            let lr = 0.005 + 0.01 * (t as f32);
+            let ra = Optimizer::step(&mut dense, &mut xa, &g, lr, t, &segs);
+            let rb = sharded.step_all(&plan, &mut xb, &g, lr, t);
+            assert_eq!(ra, rb, "case {case} ratios at step {t}");
+            for i in 0..n {
+                assert_eq!(
+                    xa[i].to_bits(),
+                    xb[i].to_bits(),
+                    "case {case} param {i} at step {t}"
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// (c) ring all-reduce agrees with the bucketed path on ragged splits
+// ------------------------------------------------------------------
+
+#[test]
+fn prop_ring_agrees_with_bucketed_on_ragged_splits() {
+    let mut rng = Rng::new(2003);
+    for case in 0..20 {
+        // deliberately non-divisible: odd segment sizes, worker counts
+        // that do not divide bucket lengths
+        let segs = random_segs(&mut rng, 3 + rng.below(6) as usize);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        let k = 2 + rng.below(5) as usize;
+        let plan = BucketPlan::from_segs(&segs, 4 * (3 + rng.below(50) as usize));
+        let bufs: Vec<Vec<f32>> =
+            (0..k).map(|_| rand_vec(&mut rng, n, 1.5)).collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let mut bucketed = vec![0.0f32; n];
+        bucketed_reduce(&plan, &refs, &mut bucketed);
+        // run the chunked ring schedule independently on every bucket
+        for bk in &plan.buckets {
+            let mut ring_bufs: Vec<Vec<f32>> =
+                bufs.iter().map(|b| b[bk.start..bk.end].to_vec()).collect();
+            let phases = RingAllReduce::new(k).run(&mut ring_bufs);
+            assert_eq!(phases, 2 * k * (k - 1), "case {case}");
+            for w in &ring_bufs {
+                for (i, &v) in w.iter().enumerate() {
+                    let want = bucketed[bk.start + i];
+                    assert!(
+                        (v - want).abs() < 1e-4 * (1.0 + want.abs()),
+                        "case {case} k={k} bucket [{},{}) i={i}: {v} vs {want}",
+                        bk.start,
+                        bk.end
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// step_range: the trait-level shard entry point composes to dense
+// ------------------------------------------------------------------
+
+#[test]
+fn prop_step_range_bucket_partition_equals_dense() {
+    let mut rng = Rng::new(2004);
+    for _ in 0..10 {
+        let segs = random_segs(&mut rng, 4 + rng.below(6) as usize);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        let plan =
+            BucketPlan::from_segs(&segs, 4 * (10 + rng.below(80) as usize));
+        let h = Hyper::default();
+        let mut dense = optim::build("lamb", n, h).unwrap();
+        let mut ranged = optim::build("lamb", n, h).unwrap();
+        let mut xa = rand_vec(&mut rng, n, 1.0);
+        let mut xb = xa.clone();
+        for t in 1..=3 {
+            let g = rand_vec(&mut rng, n, 0.4);
+            let ra = dense.step(&mut xa, &g, 0.01, t, &segs);
+            let mut rb = Vec::new();
+            for bk in &plan.buckets {
+                rb.extend(ranged.step_range(
+                    &mut xb, &g, 0.01, t, &segs, bk.start, bk.end,
+                ));
+            }
+            assert_eq!(ra, rb);
+            assert_eq!(xa, xb);
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Minimal offline-vendored subset of the `anyhow` error-handling API.
+//!
+//! The build environment for this repository is fully offline (no
+//! crates.io registry), so the crate graph must be self-contained. This
+//! shim provides the exact surface `lamb-train` uses — `Error`, `Result`,
+//! the `anyhow!` / `bail!` / `ensure!` macros and the `Context` extension
+//! trait — with the same semantics for message construction and context
+//! chaining. Error *messages* are preserved; the structured source chain
+//! and backtraces of the real crate are not (nothing here consumes them).
+
+use std::fmt::{self, Debug, Display};
+
+/// A string-backed error value, convertible from any `std::error::Error`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from any displayable message (what `anyhow!` expands to).
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Wrap with an outer context line, matching anyhow's
+    /// "context: cause" rendering in `{:#}` / `Debug` output.
+    pub fn context<C: Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> anyhow::Result<()>` prints errors via Debug; keep
+        // that output human-readable.
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with `Error` as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod ext {
+    /// Sealed unification of "things that can become `crate::Error`":
+    /// every std error plus `Error` itself. The concrete `Error` impl and
+    /// the blanket std-error impl are coherent because `Error`
+    /// (deliberately) does not implement `std::error::Error`.
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> crate::Error {
+            crate::Error::msg(self)
+        }
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` (any error type, including `anyhow::Error`) and `Option`.
+pub trait Context<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::IntoError> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or a single displayable).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`] built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"))
+    }
+
+    #[test]
+    fn macros_and_messages() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        let f = || -> Result<()> { bail!("no {}", "good") };
+        assert_eq!(f().unwrap_err().to_string(), "no good");
+        let g = |v: i32| -> Result<()> {
+            ensure!(v > 0, "v must be positive, got {v}");
+            Ok(())
+        };
+        assert!(g(1).is_ok());
+        assert_eq!(
+            g(-1).unwrap_err().to_string(),
+            "v must be positive, got -1"
+        );
+    }
+
+    #[test]
+    fn context_on_std_result_option_and_error() {
+        let e = io_err().context("reading file").unwrap_err();
+        assert_eq!(e.to_string(), "reading file: boom");
+        let e = None::<u32>.with_context(|| "missing key").unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+        // context on an already-anyhow Result (the chained case)
+        let inner: Result<()> = Err(anyhow!("inner"));
+        let e = inner.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let f = || -> Result<i32> {
+            let v: i32 = "12".parse()?;
+            Ok(v)
+        };
+        assert_eq!(f().unwrap(), 12);
+        let g = || -> Result<i32> {
+            let v: i32 = "nope".parse()?;
+            Ok(v)
+        };
+        assert!(g().is_err());
+    }
+}

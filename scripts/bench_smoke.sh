@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Keep the bench targets compiling and minimally executing on the
+# default (no-pjrt) feature set. The pjrt-gated benches (bench_e2e,
+# bench_kernel_step) are excluded by their required-features.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# Build every bench target that is available without the pjrt feature.
+cargo build --release --benches
+
+# Run the exec-engine bench in smoke mode: a few tiny steps per
+# (mode, worker-count) cell, seconds total.
+cargo bench --bench bench_exec -- --smoke
