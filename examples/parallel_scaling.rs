@@ -1,5 +1,5 @@
 //! Parallel-scaling study on the exec engine: the same native MLP
-//! workload swept over worker counts in all three exec modes, printing
+//! workload swept over worker counts in all four exec modes, printing
 //! wall-clock, speedup over the 1-worker serial baseline, and the
 //! per-step bucket/overlap record — the host-side miniature of the
 //! paper's Figure 8, runnable fully offline (no artifacts, no PJRT).
@@ -55,7 +55,12 @@ fn main() -> Result<()> {
     let (t_base, _, _) = run(ExecMode::Serial, 1);
     let mut rows = Vec::new();
     for &k in &[1usize, 2, 4, 8] {
-        for mode in [ExecMode::Serial, ExecMode::Parallel, ExecMode::Zero1] {
+        for mode in [
+            ExecMode::Serial,
+            ExecMode::Parallel,
+            ExecMode::Zero1,
+            ExecMode::Zero2,
+        ] {
             let (t, loss, buckets) = run(mode, k);
             rows.push(vec![
                 k.to_string(),
@@ -75,9 +80,9 @@ fn main() -> Result<()> {
         )
     );
     println!(
-        "(serial/parallel/zero1 runs are bitwise-identical per worker \
-         count; the loss column only moves with the worker count's data \
-         sharding)"
+        "(serial/parallel/zero1/zero2 runs are bitwise-identical per \
+         worker count; the loss column only moves with the worker \
+         count's data sharding)"
     );
     Ok(())
 }

@@ -1,12 +1,17 @@
-//! Exec-engine throughput: serial vs parallel vs ZeRO-1 step loops on
-//! the native MLP workload at increasing worker counts — the host-side
-//! analogue of Figure 8's scaling curve, and the acceptance check that
-//! the thread-pool path actually beats the serial simulation.
+//! Exec-engine throughput: serial vs parallel vs ZeRO-1 vs ZeRO-2 step
+//! loops on the native MLP workload at increasing worker counts — the
+//! host-side analogue of Figure 8's scaling curve, and the acceptance
+//! check that the thread-pool path actually beats the serial simulation.
 //!
 //!     cargo bench --bench bench_exec            # full sweep
 //!     cargo bench --bench bench_exec -- --smoke # CI smoke (seconds)
+//!     cargo bench --bench bench_exec -- --json  # one JSON object/line
 //!
-//! (`--test` is accepted as an alias for `--smoke`.)
+//! (`--test` is accepted as an alias for `--smoke`.) With `--json` every
+//! measurement is emitted as one JSON line
+//! (`{"bench":"bench_exec","mode":...,"workers":...,"secs":...}`) so CI
+//! can archive the output as a `BENCH_*.json` artifact and diff the perf
+//! trajectory across commits; human-readable tables are suppressed.
 
 use std::time::Instant;
 
@@ -40,41 +45,80 @@ fn run_once(
 fn main() {
     let smoke =
         std::env::args().any(|a| a == "--smoke" || a == "--test");
+    let json = std::env::args().any(|a| a == "--json");
     let (steps, batch, worker_counts): (u64, usize, &[usize]) = if smoke {
         (3, 64, &[1, 2])
     } else {
         (20, 1024, &[1, 4, 8, 16])
     };
     let spec = NativeTask::imagenet_proxy();
-    println!(
-        "== bench_exec: native MLP, batch {batch}, {steps} steps/mode =="
-    );
-    println!(
-        "{:>8} {:>10} {:>10} {:>8} {:>10} {:>8}",
-        "workers", "serial", "parallel", "speedup", "zero1", "speedup"
-    );
+    if !json {
+        println!(
+            "== bench_exec: native MLP, batch {batch}, {steps} steps/mode =="
+        );
+        println!(
+            "{:>8} {:>10} {:>10} {:>8} {:>10} {:>8} {:>10} {:>8}",
+            "workers", "serial", "parallel", "speedup", "zero1", "speedup",
+            "zero2", "speedup"
+        );
+    }
+    let modes = [
+        ExecMode::Serial,
+        ExecMode::Parallel,
+        ExecMode::Zero1,
+        ExecMode::Zero2,
+    ];
     let mut par_beats_serial_at_4plus = true;
     for &k in worker_counts {
-        let t_ser = run_once(&spec, ExecMode::Serial, k, steps, batch);
-        let t_par = run_once(&spec, ExecMode::Parallel, k, steps, batch);
-        let t_z = run_once(&spec, ExecMode::Zero1, k, steps, batch);
-        println!(
-            "{:>8} {:>9.3}s {:>9.3}s {:>7.2}x {:>9.3}s {:>7.2}x",
-            k,
-            t_ser,
-            t_par,
-            t_ser / t_par,
-            t_z,
-            t_ser / t_z
-        );
+        let mut secs = [0.0f64; 4];
+        for (i, &mode) in modes.iter().enumerate() {
+            let t = run_once(&spec, mode, k, steps, batch);
+            secs[i] = t;
+            if json {
+                // machine-parsable perf record, one object per line
+                println!(
+                    "{{\"bench\":\"bench_exec\",\"mode\":\"{}\",\
+                     \"workers\":{k},\"steps\":{steps},\"batch\":{batch},\
+                     \"secs\":{t:.6}}}",
+                    mode.as_str()
+                );
+            }
+        }
+        let (t_ser, t_par, t_z1, t_z2) =
+            (secs[0], secs[1], secs[2], secs[3]);
+        if !json {
+            println!(
+                "{:>8} {:>9.3}s {:>9.3}s {:>7.2}x {:>9.3}s {:>7.2}x \
+                 {:>9.3}s {:>7.2}x",
+                k,
+                t_ser,
+                t_par,
+                t_ser / t_par,
+                t_z1,
+                t_ser / t_z1,
+                t_z2,
+                t_ser / t_z2
+            );
+        }
         if k >= 4 && t_par >= t_ser {
             par_beats_serial_at_4plus = false;
         }
     }
+    // The acceptance verdict (thread pool must beat the serial drive at
+    // >=4 workers) is only meaningful on the full sweep; emit it in both
+    // output modes so the CI artifact carries the signal too.
     if !smoke {
-        println!(
-            "parallel beats serial at >=4 workers: {}",
-            if par_beats_serial_at_4plus { "yes" } else { "NO" }
-        );
+        if json {
+            println!(
+                "{{\"bench\":\"bench_exec\",\"check\":\
+                 \"par_beats_serial_at_4plus\",\"pass\":{},\"secs\":0}}",
+                par_beats_serial_at_4plus
+            );
+        } else {
+            println!(
+                "parallel beats serial at >=4 workers: {}",
+                if par_beats_serial_at_4plus { "yes" } else { "NO" }
+            );
+        }
     }
 }

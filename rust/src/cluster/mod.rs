@@ -12,8 +12,10 @@ use crate::collective::RingCost;
 use crate::exec::BucketPlan;
 use crate::manifest::ModelMeta;
 
-/// How optimizer state is laid out across the data-parallel ranks —
-/// the memory-accounting side of the exec engine's modes.
+/// How optimizer state (and, at stage 2, the gradient buffers) is laid
+/// out across the data-parallel ranks — the memory-accounting side of
+/// the exec engine's modes, and the selector for the communication
+/// pattern [`Pod::bucket_timeline_partitioned`] prices.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StatePartition {
     /// Pure data parallelism: params, grads and both Adam/LAMB moments
@@ -22,6 +24,10 @@ pub enum StatePartition {
     /// ZeRO-1 over `shards` ranks: params + grads replicated, moments
     /// sharded 1/shards per chip.
     Zero1 { shards: usize },
+    /// ZeRO-2 over `shards` ranks: params replicated, gradients *and*
+    /// moments sharded 1/shards per chip (the gradient all-reduce becomes
+    /// a reduce-scatter; updated params are all-gathered after the step).
+    Zero2 { shards: usize },
 }
 
 /// Per-bucket simulated schedule entry of one overlapped step (seconds
@@ -95,7 +101,9 @@ impl Pod {
 
     /// Per-chip state bytes under the given partition scheme. ZeRO-1
     /// keeps params (4 B) and grads (4 B) replicated but holds only
-    /// 1/shards of the two moment buffers (8 B combined).
+    /// 1/shards of the two moment buffers (8 B combined). ZeRO-2
+    /// additionally shards the gradient buffer (4 B), leaving only the
+    /// parameters (4 B) replicated.
     pub fn state_bytes_partitioned(
         model: &ModelMeta,
         part: StatePartition,
@@ -106,6 +114,10 @@ impl Pod {
             StatePartition::Zero1 { shards } => {
                 let k = shards.max(1);
                 n * 8 + (n * 8 + k - 1) / k
+            }
+            StatePartition::Zero2 { shards } => {
+                let k = shards.max(1);
+                n * 4 + (n * 12 + k - 1) / k
             }
         }
     }
@@ -191,10 +203,43 @@ impl Pod {
         seq: usize,
         plan: &BucketPlan,
     ) -> (Vec<BucketCost>, f64, f64) {
+        self.bucket_timeline_partitioned(
+            model,
+            global_batch,
+            seq,
+            plan,
+            StatePartition::Replicated,
+        )
+    }
+
+    /// [`Self::bucket_timeline`] under a state-partition scheme — the
+    /// communication pattern follows the partition:
+    ///
+    /// * `Replicated` / `Zero1`: each bucket pays a full ring all-reduce
+    ///   (reduce-scatter + all-gather back to every rank), overlappable
+    ///   under the remaining backward compute. ZeRO-1's parameter
+    ///   broadcast rides the all-gather half, so its wire time is
+    ///   identical to dense.
+    /// * `Zero2`: each bucket pays only the reduce-scatter half under
+    ///   backward (gradients stay sharded at their owners), and the step
+    ///   ends with one parameter all-gather of the whole vector that
+    ///   starts only after both compute and the last reduce-scatter have
+    ///   finished — it is *never* hidden. Same total wire bytes as the
+    ///   all-reduce, strictly worse overlap: the memory-for-time trade
+    ///   ZeRO-2 makes.
+    pub fn bucket_timeline_partitioned(
+        &self,
+        model: &ModelMeta,
+        global_batch: usize,
+        seq: usize,
+        plan: &BucketPlan,
+        part: StatePartition,
+    ) -> (Vec<BucketCost>, f64, f64) {
         let compute = self.compute_time(model, global_batch, seq);
         let t_fwd = compute / 3.0;
         let t_bwd = compute - t_fwd;
         let n = plan.n.max(1) as f64;
+        let zero2 = matches!(part, StatePartition::Zero2 { .. });
         let mut costs = vec![BucketCost::default(); plan.len()];
         let mut free = 0.0f64;
         // Buckets become ready in descending index order (backward pass).
@@ -202,11 +247,20 @@ impl Pod {
             let bk = &plan.buckets[b];
             let ready = t_fwd + t_bwd * ((n - bk.start as f64) / n);
             let start = ready.max(free);
-            let done = start + self.ring.time(self.chips, bk.bytes());
+            let comm = if zero2 {
+                self.ring.reduce_scatter_time(self.chips, bk.bytes())
+            } else {
+                self.ring.time(self.chips, bk.bytes())
+            };
+            let done = start + comm;
             costs[b] = BucketCost { ready, start, done };
             free = done;
         }
-        let step = compute.max(free);
+        let mut step = compute.max(free);
+        if zero2 {
+            // Exposed parameter all-gather after the owners' step.
+            step += self.ring.all_gather_time(self.chips, plan.n * 4);
+        }
         (costs, compute, step)
     }
 
@@ -223,6 +277,21 @@ impl Pod {
         plan: &BucketPlan,
     ) -> f64 {
         self.bucket_timeline(model, global_batch, seq, plan).2
+    }
+
+    /// [`Self::step_time_bucketed`] under a state-partition scheme (see
+    /// [`Self::bucket_timeline_partitioned`] for the per-partition
+    /// communication patterns).
+    pub fn step_time_bucketed_partitioned(
+        &self,
+        model: &ModelMeta,
+        global_batch: usize,
+        seq: usize,
+        plan: &BucketPlan,
+        part: StatePartition,
+    ) -> f64 {
+        self.bucket_timeline_partitioned(model, global_batch, seq, plan, part)
+            .2
     }
 
     /// Simulated wall-clock for a whole run (steps uniform in batch/seq).
@@ -401,6 +470,84 @@ mod tests {
             pod.max_batch(&m, 512, StatePartition::Zero1 { shards: 1024 });
         assert!(cap_z >= cap_rep, "{cap_z} vs {cap_rep}");
         assert_eq!(cap_rep, pod.max_global_batch(&m, 512));
+    }
+
+    #[test]
+    fn zero2_sharding_frees_more_memory_monotonically() {
+        let m = bert_large();
+        let pod = Pod::tpu_v3(1024);
+        let k = 1024;
+        let rep = Pod::state_bytes_partitioned(&m, StatePartition::Replicated);
+        let z1 = Pod::state_bytes_partitioned(
+            &m,
+            StatePartition::Zero1 { shards: k },
+        );
+        let z2 = Pod::state_bytes_partitioned(
+            &m,
+            StatePartition::Zero2 { shards: k },
+        );
+        // Sharding can only shrink the per-chip footprint, and ZeRO-2
+        // approaches params-only (4 of 16 bytes/param) at pod scale.
+        assert!(z2 < z1 && z1 < rep, "{z2} vs {z1} vs {rep}");
+        assert!(z2 < rep * 5 / 16, "{z2} vs {rep}");
+        assert!(z2 >= rep / 4, "{z2} vs {rep}");
+        let cap_rep = pod.max_batch(&m, 512, StatePartition::Replicated);
+        let cap_z1 =
+            pod.max_batch(&m, 512, StatePartition::Zero1 { shards: k });
+        let cap_z2 =
+            pod.max_batch(&m, 512, StatePartition::Zero2 { shards: k });
+        assert!(cap_z2 >= cap_z1 && cap_z1 >= cap_rep);
+        // Degenerate single-shard partitions reduce to replicated.
+        assert_eq!(
+            Pod::state_bytes_partitioned(
+                &m,
+                StatePartition::Zero2 { shards: 1 }
+            ),
+            rep
+        );
+    }
+
+    #[test]
+    fn zero2_pricing_pays_exposed_all_gather() {
+        let m = bert_large();
+        let pod = Pod::tpu_v3(64);
+        let plan = even_plan(m.total_params, 64);
+        let t_dense =
+            pod.step_time_bucketed(&m, 8192, 128, &plan);
+        let t_z1 = pod.step_time_bucketed_partitioned(
+            &m,
+            8192,
+            128,
+            &plan,
+            StatePartition::Zero1 { shards: 64 },
+        );
+        let t_z2 = pod.step_time_bucketed_partitioned(
+            &m,
+            8192,
+            128,
+            &plan,
+            StatePartition::Zero2 { shards: 64 },
+        );
+        // ZeRO-1 changes no wire traffic: identical to dense.
+        assert_eq!(t_dense, t_z1);
+        // ZeRO-2's trailing param all-gather is exposed: the step can
+        // never be cheaper than compute + that all-gather.
+        let ag = pod.ring.all_gather_time(pod.chips, m.total_params * 4);
+        let compute = pod.compute_time(&m, 8192, 128);
+        assert!(t_z2 >= compute + ag - 1e-12);
+        // ...and each overlapped bucket pays only the reduce-scatter
+        // half, so the pre-gather portion is no worse than dense.
+        let (costs_z2, _, _) = pod.bucket_timeline_partitioned(
+            &m,
+            8192,
+            128,
+            &plan,
+            StatePartition::Zero2 { shards: 64 },
+        );
+        let (costs_d, _, _) = pod.bucket_timeline(&m, 8192, 128, &plan);
+        for (cz, cd) in costs_z2.iter().zip(costs_d.iter()) {
+            assert!(cz.done - cz.start <= cd.done - cd.start + 1e-15);
+        }
     }
 
     #[test]

@@ -1,14 +1,32 @@
-//! Synchronous gradient all-reduce.
+//! Synchronous gradient collectives.
 //!
-//! Two faces, one contract:
+//! Three faces, one contract:
 //!
 //! * [`reduce_mean`] — the numeric hot path: average the per-worker
 //!   gradient shards into one buffer (what the TPU interconnect computes).
+//! * [`reduce_scatter_mean`] / [`all_gather`] — the ZeRO-2 halves of the
+//!   same reduction: each rank receives only the averaged chunk it owns,
+//!   and updated chunks are later stitched back into the replicated
+//!   vector. Per element the arithmetic is identical to [`reduce_mean`],
+//!   so the split pipeline is bitwise-equal to the monolithic one
+//!   (asserted by `tests/test_exec.rs`).
 //! * [`RingAllReduce`] — a faithful chunked ring simulation
 //!   (reduce-scatter + all-gather over 2(k-1) phases) used by tests to
 //!   prove the hot path computes exactly what a ring would, and by the
 //!   pod model to price each phase with the alpha-beta cost model that
 //!   Figure 8's scaling-efficiency curve comes from.
+//!
+//! ## Ring cost model
+//!
+//! A ring all-reduce over `k` ranks is a reduce-scatter followed by an
+//! all-gather, each of `k-1` phases moving `bytes/k` per link per phase —
+//! `(k-1)/k` of the buffer per half. [`RingCost::time`] prices the full
+//! pair; [`RingCost::reduce_scatter_time`] and
+//! [`RingCost::all_gather_time`] price each half alone (what ZeRO-2 pays
+//! at distinct points of the step: gradients are reduce-scattered under
+//! the backward pass, updated parameters are all-gathered after the
+//! owner's optimizer step). The two halves sum exactly to the all-reduce
+//! time.
 
 /// Elements per chunk of the reduction working set. 4096 f64 = 32 KiB —
 /// fits L1d alongside one worker slice, large enough to amortize the
@@ -55,6 +73,49 @@ pub fn reduce_mean(workers: &[&[f32]], out: &mut [f32]) {
     }
 }
 
+/// Reduce-scatter (mean): average the flat range `[start, end)` of every
+/// worker buffer into the range-local `out` (length `end - start`) — the
+/// chunk its owner keeps under ZeRO-2.
+///
+/// Delegates to [`reduce_mean`] over the worker sub-slices, so element
+/// `start + i` of the result is bitwise-identical to element `start + i`
+/// of a monolithic `reduce_mean` over the full buffers (the reduction is
+/// strictly per-element).
+pub fn reduce_scatter_mean(
+    workers: &[&[f32]],
+    start: usize,
+    end: usize,
+    out: &mut [f32],
+) {
+    assert!(start <= end, "inverted range");
+    assert_eq!(out.len(), end - start, "output length != range length");
+    let slices: Vec<&[f32]> = workers
+        .iter()
+        .map(|w| {
+            assert!(end <= w.len(), "range exceeds worker buffer");
+            &w[start..end]
+        })
+        .collect();
+    reduce_mean(&slices, out);
+}
+
+/// All-gather: stitch per-owner chunks back into the full flat vector.
+/// `shards` is a list of `(start_offset, chunk)` pairs; each chunk is
+/// copied into `out[start..start + chunk.len()]`. Chunks must not exceed
+/// `out`; overlapping chunks are allowed but last-writer-wins (the exec
+/// engine always passes a disjoint bucket partition).
+pub fn all_gather(shards: &[(usize, &[f32])], out: &mut [f32]) {
+    for &(start, chunk) in shards {
+        assert!(
+            start + chunk.len() <= out.len(),
+            "shard [{start}, {}) exceeds output length {}",
+            start + chunk.len(),
+            out.len()
+        );
+        out[start..start + chunk.len()].copy_from_slice(chunk);
+    }
+}
+
 /// Sum-accumulate `src` into `acc` (microbatch gradient accumulation).
 pub fn accumulate(acc: &mut [f32], src: &[f32]) {
     assert_eq!(acc.len(), src.len());
@@ -84,13 +145,32 @@ pub struct RingCost {
 }
 
 impl RingCost {
+    /// Full all-reduce: exactly two equal ring halves, so the invariant
+    /// `reduce_scatter_time + all_gather_time == time` holds by
+    /// construction (doubling is exact in f64).
     pub fn time(&self, k: usize, bytes: usize) -> f64 {
+        2.0 * self.reduce_scatter_time(k, bytes)
+    }
+
+    /// One half of the ring: `k-1` phases moving `(k-1)/k * bytes` total
+    /// per link — `time = (k-1)*alpha + (k-1)/k * bytes / beta`. This is
+    /// the reduce-scatter a ZeRO-2 step pays per gradient bucket (and it
+    /// overlaps with the backward pass exactly like the all-reduce).
+    pub fn reduce_scatter_time(&self, k: usize, bytes: usize) -> f64 {
         if k <= 1 {
             return 0.0;
         }
-        let phases = 2.0 * (k as f64 - 1.0);
+        let phases = k as f64 - 1.0;
         phases * self.alpha
             + (phases / k as f64) * (bytes as f64) / self.beta
+    }
+
+    /// The other half of the ring — identical wire profile to
+    /// [`Self::reduce_scatter_time`]. Under ZeRO-2 this is the parameter
+    /// all-gather after the owners' optimizer step, which cannot hide
+    /// under backward compute (the step is already over).
+    pub fn all_gather_time(&self, k: usize, bytes: usize) -> f64 {
+        self.reduce_scatter_time(k, bytes)
     }
 }
 
@@ -216,6 +296,46 @@ mod tests {
         }
     }
 
+    /// Reduce-scatter of a range must reproduce that range of the
+    /// monolithic reduce bitwise, and all-gather must stitch a disjoint
+    /// partition back losslessly.
+    #[test]
+    fn scatter_then_gather_matches_reduce_mean_bitwise() {
+        let mut rng = crate::util::Rng::new(17);
+        let n = 257; // deliberately odd: ragged against any chunking
+        let k = 3;
+        let bufs: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..n).map(|_| rng.normal_f32(1.5)).collect())
+            .collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let mut whole = vec![0.0f32; n];
+        reduce_mean(&refs, &mut whole);
+        // ragged 3-way partition of [0, n)
+        let cuts = [0usize, 100, 101, n];
+        let mut shards: Vec<Vec<f32>> = Vec::new();
+        for w in cuts.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            let mut s = vec![0.0f32; b - a];
+            reduce_scatter_mean(&refs, a, b, &mut s);
+            shards.push(s);
+        }
+        for (i, w) in cuts.windows(2).enumerate() {
+            for (j, &v) in shards[i].iter().enumerate() {
+                assert_eq!(v.to_bits(), whole[w[0] + j].to_bits());
+            }
+        }
+        let parts: Vec<(usize, &[f32])> = cuts
+            .windows(2)
+            .zip(&shards)
+            .map(|(w, s)| (w[0], s.as_slice()))
+            .collect();
+        let mut gathered = vec![0.0f32; n];
+        all_gather(&parts, &mut gathered);
+        for i in 0..n {
+            assert_eq!(gathered[i].to_bits(), whole[i].to_bits(), "i={i}");
+        }
+    }
+
     #[test]
     fn cost_model_shape() {
         let c = RingCost { alpha: 1e-6, beta: 70e9 };
@@ -229,5 +349,23 @@ mod tests {
         // Latency term linear in k.
         let lat_only = RingCost { alpha: 1e-6, beta: f64::INFINITY };
         assert!((lat_only.time(11, 1) - 20e-6).abs() < 1e-12);
+    }
+
+    /// The two ring halves partition the all-reduce cost exactly
+    /// (`time` is defined as the doubled half, so this is bit-exact).
+    #[test]
+    fn halves_sum_to_all_reduce() {
+        let c = RingCost { alpha: 4.4e-5, beta: 70e9 };
+        for &k in &[2usize, 16, 1024] {
+            for &bytes in &[4096usize, 1 << 20, 1_336_000_000] {
+                let rs = c.reduce_scatter_time(k, bytes);
+                let ag = c.all_gather_time(k, bytes);
+                let ar = c.time(k, bytes);
+                assert!(rs > 0.0 && ag > 0.0);
+                assert_eq!(rs + ag, ar, "k={k} bytes={bytes}");
+            }
+        }
+        assert_eq!(c.reduce_scatter_time(1, 1 << 20), 0.0);
+        assert_eq!(c.all_gather_time(1, 1 << 20), 0.0);
     }
 }

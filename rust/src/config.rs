@@ -158,7 +158,10 @@ pub struct TrainConfig {
     pub chips: usize,
     pub step_path: StepPath,
     // execution engine ([exec] section)
-    /// serial | parallel | zero1 — how the step loop drives the workers.
+    /// serial | parallel | zero1 | zero2 — how the step loop drives the
+    /// workers. `[exec] zero_stage = 0|1|2` is an equivalent spelling
+    /// (0 keeps the non-ZeRO mode, 1 → zero1, 2 → zero2) and wins when
+    /// both keys are given.
     pub exec_mode: crate::exec::ExecMode,
     /// Gradient-phase worker count; 0 = auto (min(chips, microbatches)).
     pub exec_workers: usize,
@@ -252,8 +255,30 @@ impl TrainConfig {
         if let Some(v) = gets("exec.mode") {
             c.exec_mode = crate::exec::ExecMode::parse(&v)
                 .ok_or_else(|| anyhow!(
-                    "unknown exec mode {v:?} (expected serial|parallel|zero1)"
+                    "unknown exec mode {v:?} \
+                     (expected serial|parallel|zero1|zero2)"
                 ))?;
+        }
+        if let Some(raw) = doc.get("exec.zero_stage") {
+            use crate::exec::ExecMode;
+            // Hard-error on a mistyped value (float/string/bool) instead
+            // of silently running the wrong mode, mirroring exec.mode.
+            let v = raw.as_i64().ok_or_else(|| {
+                anyhow!("exec.zero_stage must be an integer 0|1|2 (got {raw:?})")
+            })?;
+            c.exec_mode = match v {
+                // Stage 0 keeps a non-ZeRO drive: downgrade a ZeRO mode
+                // to the plain pool, leave serial/parallel untouched.
+                0 => match c.exec_mode {
+                    ExecMode::Zero1 | ExecMode::Zero2 => ExecMode::Parallel,
+                    other => other,
+                },
+                1 => ExecMode::Zero1,
+                2 => ExecMode::Zero2,
+                other => bail!(
+                    "exec.zero_stage must be 0, 1 or 2 (got {other})"
+                ),
+            };
         }
         if let Some(v) = geti("exec.workers") { c.exec_workers = v as usize; }
         if let Some(v) = geti("exec.bucket_kb") { c.bucket_kb = v as usize; }
@@ -389,6 +414,52 @@ betas = [0.9, 0.999]
             &[("exec.mode".into(), "\"async\"".into())]
         )
         .is_err());
+    }
+
+    #[test]
+    fn zero_stage_knob_maps_to_exec_mode() {
+        use crate::exec::ExecMode;
+        let stage = |n: &str| {
+            TrainConfig::load(None, &[("exec.zero_stage".into(), n.into())])
+                .map(|c| c.exec_mode)
+        };
+        assert_eq!(stage("1").unwrap(), ExecMode::Zero1);
+        assert_eq!(stage("2").unwrap(), ExecMode::Zero2);
+        // stage 0 on the default (serial) config keeps serial
+        assert_eq!(stage("0").unwrap(), ExecMode::Serial);
+        assert!(stage("3").is_err());
+        // mistyped values are errors, not silently-ignored keys
+        assert!(stage("2.0").is_err());
+        assert!(stage("\"2\"").is_err());
+        assert!(stage("true").is_err());
+        // zero_stage wins over exec.mode when both are given
+        let c = TrainConfig::load(
+            None,
+            &[
+                ("exec.mode".into(), "\"zero1\"".into()),
+                ("exec.zero_stage".into(), "2".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.exec_mode, ExecMode::Zero2);
+        // ...including the downgrade direction: stage 0 over a ZeRO mode
+        // falls back to the plain parallel pool
+        let c = TrainConfig::load(
+            None,
+            &[
+                ("exec.mode".into(), "\"zero2\"".into()),
+                ("exec.zero_stage".into(), "0".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.exec_mode, ExecMode::Parallel);
+        // "zero2" parses as a plain mode string too
+        let c = TrainConfig::load(
+            None,
+            &[("exec.mode".into(), "\"zero2\"".into())],
+        )
+        .unwrap();
+        assert_eq!(c.exec_mode, ExecMode::Zero2);
     }
 
     #[test]

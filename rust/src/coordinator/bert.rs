@@ -21,11 +21,13 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::cluster::Pod;
+use crate::cluster::{Pod, StatePartition};
 use crate::collective;
 use crate::config::{StepPath, TrainConfig};
 use crate::data::{Batch, Corpus, MlmConfig, MlmGenerator};
-use crate::exec::{bucketed_reduce, BucketPlan, ExecMode, Zero1State};
+use crate::exec::{
+    bucketed_reduce, BucketPlan, ExecMode, Zero1State, Zero2State,
+};
 use crate::manifest::{ArtifactKind, Manifest, ModelMeta};
 use crate::metrics::{DivergenceDetector, RunLog, StepComm, StepRecord};
 use crate::model::ParamStore;
@@ -76,6 +78,11 @@ pub struct BertTrainer<'e> {
     /// ZeRO-1 sharded optimizer state (exec mode `zero1`); takes
     /// precedence over `opt` when present.
     zero1: Option<Zero1State>,
+    /// ZeRO-2 sharded step (exec mode `zero2` / `zero_stage = 2`):
+    /// gradients reduce-scattered by bucket owner, owners step via
+    /// `Optimizer::step_range`, parameters all-gathered. Takes precedence
+    /// over `opt` when present.
+    zero2: Option<Zero2State>,
     /// Per-worker gradient accumulators (bucketed modes; stage-sized).
     worker_grads: Vec<Vec<f32>>,
     // flat state
@@ -133,6 +140,16 @@ impl<'e> BertTrainer<'e> {
         } else {
             None
         };
+        let zero2 = if cfg.exec_mode == ExecMode::Zero2 {
+            Some(
+                Zero2State::build(&cfg.optimizer, n, &plan_segs, hyper)
+                    .with_context(|| {
+                        format!("zero2 optimizer {}", cfg.optimizer)
+                    })?,
+            )
+        } else {
+            None
+        };
         let corpus = Corpus::new(meta.vocab);
         Ok(BertTrainer {
             engine,
@@ -142,6 +159,7 @@ impl<'e> BertTrainer<'e> {
             segs,
             plan,
             zero1,
+            zero2,
             worker_grads: Vec::new(),
             params: ps.flat,
             m: vec![0.0; n],
@@ -231,26 +249,44 @@ impl<'e> BertTrainer<'e> {
         let n = self.meta.total_params;
         // Pricing: serial mode keeps the legacy fixed-overlap scalar;
         // bucketed modes re-price the step from the simulated per-bucket
-        // schedule (communication overlapped under backward). The fused
-        // single-artifact path has no gradient exchange to bucket, so it
-        // always uses the legacy pricing — and it cannot honor ZeRO-1
-        // (the artifact applies the dense optimizer internally).
-        if fused_exe.is_some() && self.zero1.is_some() {
+        // schedule (communication overlapped under backward), with the
+        // collective pattern picked by the ZeRO stage: all-reduce per
+        // bucket (dense / zero1), or reduce-scatter per bucket plus one
+        // exposed parameter all-gather (zero2). The fused single-artifact
+        // path has no gradient exchange to bucket, so it always uses the
+        // legacy pricing — and it cannot honor ZeRO sharding (the
+        // artifact applies the dense optimizer internally).
+        if fused_exe.is_some() && (self.zero1.is_some() || self.zero2.is_some())
+        {
             bail!(
-                "step_path = fused is incompatible with exec.mode = zero1 \
+                "step_path = fused is incompatible with exec.mode = {} \
                  (the fused artifact steps the dense optimizer); use the \
-                 distributed step path"
+                 distributed step path",
+                self.cfg.exec_mode.as_str()
             );
         }
+        let part = match self.cfg.exec_mode {
+            ExecMode::Zero1 => {
+                StatePartition::Zero1 { shards: self.cfg.chips }
+            }
+            ExecMode::Zero2 => {
+                StatePartition::Zero2 { shards: self.cfg.chips }
+            }
+            _ => StatePartition::Replicated,
+        };
         let bucketed =
             self.cfg.exec_mode != ExecMode::Serial && fused_exe.is_none();
         let (step_sim, comm_tpl) = if bucketed {
-            let (costs, compute, total) = self.pod.bucket_timeline(
+            let (costs, compute, total) = self.pod.bucket_timeline_partitioned(
                 &self.meta,
                 stage.global_batch,
                 stage.seq,
                 &self.plan,
+                part,
             );
+            // comm_time is per-bucket wire time by contract (StepComm
+            // docs); zero2's trailing parameter all-gather is not a
+            // bucket and shows up in `exposed` (and step_sim) instead.
             let comm = StepComm {
                 buckets: costs.len(),
                 comm_time: costs.iter().map(|c| c.done - c.start).sum(),
@@ -305,9 +341,21 @@ impl<'e> BertTrainer<'e> {
                     self.worker_grads.iter().map(|g| g.as_slice()).collect();
                 bucketed_reduce(&self.plan, &refs, &mut self.grad_acc);
                 let loss = (loss_sum / n_micro as f64) as f32;
-                // -------- optimizer phase (ZeRO-1 shards or dense) -----
+                // -------- optimizer phase (ZeRO shards or dense) -----
                 let ratios = if self.zero1.is_some() {
                     let z = self.zero1.as_mut().unwrap();
+                    z.step_all(
+                        &self.plan,
+                        &mut self.params,
+                        &self.grad_acc,
+                        lr,
+                        self.step,
+                    )
+                } else if self.zero2.is_some() {
+                    // Owners step their reduce-scattered shards; the
+                    // parameter all-gather is the shared-buffer no-op
+                    // (priced in step_sim, not recomputed here).
+                    let z = self.zero2.as_mut().unwrap();
                     z.step_all(
                         &self.plan,
                         &mut self.params,

@@ -17,6 +17,7 @@ use std::time::Instant;
 use crate::data::image::ImageTask;
 use crate::exec::{
     ExecConfig, ExecMode, Executor, GradWorker, StepCtx, Zero1State,
+    Zero2State,
 };
 use crate::metrics::{DivergenceDetector, RunLog, StepComm, StepRecord};
 use crate::nn::{Mlp, MlpConfig};
@@ -104,6 +105,9 @@ struct NativeExec {
     executor: Executor,
     reduced: Vec<f32>,
     zero1: Option<Zero1State>,
+    /// ZeRO-2 sharded step (gradient reduce-scatter + `step_range` by
+    /// bucket owner + parameter all-gather).
+    zero2: Option<Zero2State>,
 }
 
 /// One full training run on the native substrate.
@@ -159,7 +163,9 @@ impl NativeTrainer {
     /// `exec.workers` data-parallel workers. The global batch is split
     /// evenly (`batch / workers` each; pick divisible batches). Serial
     /// and parallel modes produce bitwise-identical runs; `Zero1`
-    /// additionally shards the optimizer state by bucket owner.
+    /// additionally shards the optimizer state by bucket owner, and
+    /// `Zero2` shards the gradients too (reduce-scatter instead of
+    /// all-reduce) — both still bitwise-identical to the dense run.
     pub fn with_exec(
         spec: &NativeTask,
         optimizer: &str,
@@ -197,16 +203,25 @@ impl NativeTrainer {
             ),
             _ => None,
         };
+        let zero2 = match exec.mode {
+            ExecMode::Zero2 => Some(
+                Zero2State::build(optimizer, n, &tr.segs, hyper)
+                    .unwrap_or_else(|| panic!("unknown optimizer {optimizer}")),
+            ),
+            _ => None,
+        };
         tr.exec = Some(NativeExec {
             executor,
             reduced: vec![0.0; n],
             zero1,
+            zero2,
         });
         tr
     }
 
     /// One exec-engine global step: broadcast params, per-worker grads,
-    /// bucketed reduce, optimizer (dense or ZeRO-1 sharded).
+    /// bucketed reduce (all-reduce, or reduce-scatter under ZeRO-2),
+    /// optimizer (dense, ZeRO-1 or ZeRO-2 sharded).
     fn exec_step(
         &mut self,
         t: u64,
@@ -217,18 +232,22 @@ impl NativeTrainer {
         let k = ex.executor.workers();
         let share = (batch / k).max(1);
         let out = ex.executor.step(t, share, &self.mlp.params, &mut ex.reduced);
-        let ratios = match ex.zero1.as_mut() {
-            Some(z) => {
-                let plan = ex.executor.plan().clone();
-                z.step_all(&plan, &mut self.mlp.params, &ex.reduced, lr, t)
-            }
-            None => self.opt.step(
+        let ratios = if let Some(z) = ex.zero1.as_mut() {
+            let plan = ex.executor.plan().clone();
+            z.step_all(&plan, &mut self.mlp.params, &ex.reduced, lr, t)
+        } else if let Some(z) = ex.zero2.as_mut() {
+            // Owners step their reduce-scattered shards via step_range;
+            // the parameter all-gather is the shared-buffer no-op.
+            let plan = ex.executor.plan().clone();
+            z.step_all(&plan, &mut self.mlp.params, &ex.reduced, lr, t)
+        } else {
+            self.opt.step(
                 &mut self.mlp.params,
                 &ex.reduced,
                 lr,
                 t,
                 &self.segs,
-            ),
+            )
         };
         (out.loss, ratios, Some(out.comm))
     }
@@ -407,6 +426,33 @@ mod tests {
         };
         let cfg = ExecConfig {
             mode: ExecMode::Zero1,
+            workers: 2,
+            bucket_bytes: 1 << 12,
+        };
+        let mut tr = NativeTrainer::with_exec(
+            &spec,
+            "lamb",
+            Hyper::default(),
+            sched,
+            3,
+            cfg,
+        );
+        let log = tr.train(200, 64);
+        assert!(!log.diverged);
+        assert!(log.tail_loss(20) < log.records[0].loss);
+    }
+
+    #[test]
+    fn zero2_exec_trains() {
+        let spec = NativeTask::mnist_proxy();
+        let sched = Schedule::WarmupPoly {
+            base: 0.02,
+            warmup: 10,
+            total: 200,
+            power: 1.0,
+        };
+        let cfg = ExecConfig {
+            mode: ExecMode::Zero2,
             workers: 2,
             bucket_bytes: 1 << 12,
         };

@@ -8,8 +8,11 @@
 //!
 //! * the bucketed all-reduce: each bucket reduces as soon as every worker
 //!   has produced it, overlapping with the rest of the backward pass;
-//! * ZeRO-1 state sharding: bucket `b` of `k` workers is owned by worker
-//!   `b % k`, which holds the optimizer moments for that range only;
+//! * ZeRO sharding: bucket `b` of `k` workers is owned by worker `b % k`.
+//!   Under ZeRO-1 the owner holds the optimizer moments for that range
+//!   only; under ZeRO-2 it additionally keeps the *reduced gradient* for
+//!   the range (the reduce-scatter output), so per-worker gradient memory
+//!   also drops to ~1/k ([`BucketPlan::owned_bytes`]);
 //! * the pod cost model's overlap pricing (`cluster::Pod::step_time_bucketed`).
 
 use crate::optim::Seg;
@@ -87,13 +90,16 @@ impl BucketPlan {
         self.buckets.is_empty()
     }
 
-    /// ZeRO-1 owner of bucket `b` among `workers` ranks.
+    /// ZeRO owner of bucket `b` among `workers` ranks (stages 1 and 2
+    /// share the same ownership map).
     pub fn owner(&self, b: usize, workers: usize) -> usize {
         b % workers.max(1)
     }
 
-    /// Total optimizer-state elements owned by `worker` (the per-rank
-    /// ZeRO-1 share; ~n/k for balanced partitions).
+    /// Total flat-vector elements owned by `worker` (the per-rank ZeRO
+    /// share; ~n/k for balanced partitions). Under ZeRO-1 this sizes the
+    /// optimizer-state shard; under ZeRO-2 it additionally sizes the
+    /// reduced-gradient shard.
     pub fn owned_elems(&self, worker: usize, workers: usize) -> usize {
         self.buckets
             .iter()
@@ -101,6 +107,12 @@ impl BucketPlan {
             .filter(|(b, _)| self.owner(*b, workers) == worker)
             .map(|(_, bk)| bk.len())
             .sum()
+    }
+
+    /// Gradient-shard bytes `worker` retains after the ZeRO-2
+    /// reduce-scatter (f32 elements of its owned buckets).
+    pub fn owned_bytes(&self, worker: usize, workers: usize) -> usize {
+        self.owned_elems(worker, workers) * 4
     }
 
     /// Segments of `segs` inside bucket `b`, offsets shifted so the
@@ -186,6 +198,11 @@ mod tests {
         for s in &shares {
             assert_eq!(*s, plan.n / k);
         }
+        // ZeRO-2 gradient shards: 4 bytes per owned element, and the
+        // shards tile the full gradient buffer.
+        let bytes: usize = (0..k).map(|w| plan.owned_bytes(w, k)).sum();
+        assert_eq!(bytes, plan.n * 4);
+        assert_eq!(plan.owned_bytes(0, k), plan.owned_elems(0, k) * 4);
     }
 
     #[test]

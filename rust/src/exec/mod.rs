@@ -16,7 +16,16 @@
 //! * [`zero::Zero1State`] shards the optimizer moments over the same
 //!   bucket partition (ZeRO stage 1): each worker steps only the buckets
 //!   it owns and the updated parameters are broadcast, cutting
-//!   optimizer-state memory per worker to ~1/k.
+//!   optimizer-state memory per worker to ~1/k;
+//! * [`zero::Zero2State`] extends the ownership map to the gradients
+//!   themselves (ZeRO stage 2): each bucket is **reduce-scattered** to
+//!   its owner (`collective::reduce_scatter_mean`) instead of
+//!   all-reduced everywhere, the owner steps its shard via
+//!   `Optimizer::step_range`, and updated parameters are all-gathered
+//!   back (`collective::all_gather`) — cutting per-worker gradient memory
+//!   to ~1/k as well, at the price of a parameter all-gather that cannot
+//!   hide under the backward pass (`cluster::Pod::step_time_bucketed`
+//!   prices exactly that trade under `StatePartition::Zero2`).
 //!
 //! Serial mode drives the identical bucket/reduce data path on the
 //! calling thread and is bitwise-identical to parallel mode (asserted by
@@ -32,12 +41,12 @@ pub mod zero;
 
 pub use bucket::{Bucket, BucketPlan};
 pub use pool::WorkerPool;
-pub use zero::Zero1State;
+pub use zero::{Zero1State, Zero2State};
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::collective::reduce_mean;
+use crate::collective::{all_gather, reduce_mean};
 use crate::metrics::StepComm;
 use crate::optim::Seg;
 
@@ -52,6 +61,10 @@ pub enum ExecMode {
     Parallel,
     /// `Parallel` plus ZeRO-1: optimizer state sharded by bucket owner.
     Zero1,
+    /// `Zero1` plus ZeRO-2: gradients reduce-scattered to bucket owners
+    /// (each worker retains only its owned shards) and parameters
+    /// all-gathered after the sharded optimizer step.
+    Zero2,
 }
 
 impl ExecMode {
@@ -60,6 +73,7 @@ impl ExecMode {
             "serial" => Some(ExecMode::Serial),
             "parallel" => Some(ExecMode::Parallel),
             "zero1" => Some(ExecMode::Zero1),
+            "zero2" => Some(ExecMode::Zero2),
             _ => None,
         }
     }
@@ -69,6 +83,17 @@ impl ExecMode {
             ExecMode::Serial => "serial",
             ExecMode::Parallel => "parallel",
             ExecMode::Zero1 => "zero1",
+            ExecMode::Zero2 => "zero2",
+        }
+    }
+
+    /// The ZeRO stage this mode implies (0 for dense modes) — the
+    /// config-file spelling `[exec] zero_stage = 0|1|2`.
+    pub fn zero_stage(&self) -> u8 {
+        match self {
+            ExecMode::Serial | ExecMode::Parallel => 0,
+            ExecMode::Zero1 => 1,
+            ExecMode::Zero2 => 2,
         }
     }
 }
@@ -76,6 +101,9 @@ impl ExecMode {
 /// Executor knobs (config section `[exec]`).
 #[derive(Clone, Copy, Debug)]
 pub struct ExecConfig {
+    /// Drive mode. In config files either `mode = "serial|parallel|
+    /// zero1|zero2"` or the stage spelling `zero_stage = 0|1|2`
+    /// (0 keeps the non-ZeRO drive, 1 → `zero1`, 2 → `zero2`).
     pub mode: ExecMode,
     /// Worker (simulated chip) count for the gradient phase.
     pub workers: usize,
@@ -221,6 +249,26 @@ impl Gather {
             .collect();
         reduce_mean(&refs, &mut out[bk.start..bk.end]);
     }
+
+    /// ZeRO-2 completion: reduce-scatter bucket `b` into the owner's
+    /// bucket-local shard instead of the full buffer. The payloads are
+    /// already bucket-local, so the owner's chunk is the whole range and
+    /// the scatter is one `reduce_mean` into the shard — bitwise-identical
+    /// to the same range of [`Gather::reduce_into`].
+    pub(crate) fn scatter_into(
+        &self,
+        plan: &BucketPlan,
+        b: usize,
+        shard: &mut [f32],
+    ) {
+        let bk = &plan.buckets[b];
+        assert_eq!(shard.len(), bk.len(), "shard length != bucket length");
+        let refs: Vec<&[f32]> = self.parts[b]
+            .iter()
+            .map(|p| p.as_deref().expect("incomplete bucket"))
+            .collect();
+        reduce_mean(&refs, shard);
+    }
 }
 
 enum Backend {
@@ -236,6 +284,9 @@ pub struct Executor {
     plan: BucketPlan,
     backend: Backend,
     workers: usize,
+    /// Per-bucket owner shards of the ZeRO-2 reduce-scatter (empty in
+    /// other modes); allocated once and reused across steps.
+    shards: Vec<Vec<f32>>,
 }
 
 impl Executor {
@@ -259,11 +310,16 @@ impl Executor {
             ExecMode::Serial => Backend::Serial(
                 workers.into_iter().map(|w| (w, vec![0.0f32; n])).collect(),
             ),
-            ExecMode::Parallel | ExecMode::Zero1 => {
+            ExecMode::Parallel | ExecMode::Zero1 | ExecMode::Zero2 => {
                 Backend::Pool(WorkerPool::spawn(workers, plan.clone(), n))
             }
         };
-        Executor { cfg, plan, backend, workers: count }
+        let shards = if cfg.mode == ExecMode::Zero2 {
+            plan.buckets.iter().map(|bk| vec![0.0f32; bk.len()]).collect()
+        } else {
+            Vec::new()
+        };
+        Executor { cfg, plan, backend, workers: count, shards }
     }
 
     pub fn mode(&self) -> ExecMode {
@@ -281,6 +337,13 @@ impl Executor {
     /// One global gradient step: broadcast `params`, compute per-worker
     /// gradients (concurrently unless serial), reduce each bucket as soon
     /// as it is complete, and leave the averaged gradient in `reduced`.
+    ///
+    /// In `Zero2` mode the per-bucket reduction is a reduce-scatter into
+    /// the owner's bucket-local shard; the shards are then all-gathered
+    /// into `reduced` so the executor's output contract is unchanged (the
+    /// full buffer is the union of every rank's shard — on the modeled
+    /// pod only the owned shards exist, which is what `cluster::Pod`
+    /// accounts and prices). Both pipelines are bitwise-identical.
     pub fn step(
         &mut self,
         step: u64,
@@ -298,6 +361,10 @@ impl Executor {
         let plan = self.plan.clone();
         let k = self.workers;
         let nb = plan.len();
+        let zero2 = self.cfg.mode == ExecMode::Zero2;
+        // Owner shards of the reduce-scatter (Zero2 only; pre-allocated
+        // by the constructor, overwritten in full by each scatter).
+        let shards = &mut self.shards;
         let mut gather = Gather::new(nb, k);
         let mut per_bucket = vec![(0.0f64, 0.0f64); nb];
         let mut losses = vec![0.0f32; k];
@@ -316,7 +383,15 @@ impl Executor {
                             if gather.offer(b, w, payload.to_vec()) {
                                 per_bucket[b].0 =
                                     t0.elapsed().as_secs_f64();
-                                gather.reduce_into(&plan, b, reduced);
+                                if zero2 {
+                                    gather.scatter_into(
+                                        &plan,
+                                        b,
+                                        &mut shards[b],
+                                    );
+                                } else {
+                                    gather.reduce_into(&plan, b, reduced);
+                                }
                                 per_bucket[b].1 =
                                     t0.elapsed().as_secs_f64();
                             }
@@ -337,7 +412,17 @@ impl Executor {
                                 per_bucket[bucket].0 = at
                                     .saturating_duration_since(t0)
                                     .as_secs_f64();
-                                gather.reduce_into(&plan, bucket, reduced);
+                                if zero2 {
+                                    gather.scatter_into(
+                                        &plan,
+                                        bucket,
+                                        &mut shards[bucket],
+                                    );
+                                } else {
+                                    gather.reduce_into(
+                                        &plan, bucket, reduced,
+                                    );
+                                }
                                 per_bucket[bucket].1 =
                                     t0.elapsed().as_secs_f64();
                                 reduced_n += 1;
@@ -354,6 +439,18 @@ impl Executor {
                     }
                 }
             }
+        }
+
+        if zero2 {
+            // All-gather the owner shards into the full buffer — the
+            // union of every simulated rank's view.
+            let parts: Vec<(usize, &[f32])> = plan
+                .buckets
+                .iter()
+                .zip(self.shards.iter())
+                .map(|(bk, s)| (bk.start, s.as_slice()))
+                .collect();
+            all_gather(&parts, reduced);
         }
 
         // Mean of local mean losses, accumulated in fixed worker order so
@@ -434,10 +531,19 @@ mod tests {
 
     #[test]
     fn mode_parse_roundtrip() {
-        for m in [ExecMode::Serial, ExecMode::Parallel, ExecMode::Zero1] {
+        for m in [
+            ExecMode::Serial,
+            ExecMode::Parallel,
+            ExecMode::Zero1,
+            ExecMode::Zero2,
+        ] {
             assert_eq!(ExecMode::parse(m.as_str()), Some(m));
         }
         assert_eq!(ExecMode::parse("async"), None);
+        assert_eq!(ExecMode::Serial.zero_stage(), 0);
+        assert_eq!(ExecMode::Parallel.zero_stage(), 0);
+        assert_eq!(ExecMode::Zero1.zero_stage(), 1);
+        assert_eq!(ExecMode::Zero2.zero_stage(), 2);
     }
 
     #[test]
@@ -459,6 +565,36 @@ mod tests {
             let oa = serial.step(t, 8, &params, &mut ra);
             let ob = par.step(t, 8, &params, &mut rb);
             assert_eq!(ra, rb, "step {t}");
+            assert_eq!(oa.loss, ob.loss, "step {t}");
+        }
+    }
+
+    /// The ZeRO-2 reduce-scatter + all-gather pipeline leaves the exact
+    /// bits the dense all-reduce pipeline leaves.
+    #[test]
+    fn zero2_step_bitwise_equals_parallel() {
+        let segs = tile(&[96, 16, 128, 16, 64, 8]);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        let cfg = |mode| ExecConfig { mode, workers: 3, bucket_bytes: 100 * 4 };
+        let mut par = Executor::new(
+            cfg(ExecMode::Parallel),
+            &segs,
+            toy_workers(3, n, 6),
+        );
+        let mut z2 = Executor::new(
+            cfg(ExecMode::Zero2),
+            &segs,
+            toy_workers(3, n, 6),
+        );
+        let params = vec![0.5f32; n];
+        let mut ra = vec![0.0f32; n];
+        let mut rb = vec![0.0f32; n];
+        for t in 1..=4 {
+            let oa = par.step(t, 8, &params, &mut ra);
+            let ob = z2.step(t, 8, &params, &mut rb);
+            for i in 0..n {
+                assert_eq!(ra[i].to_bits(), rb[i].to_bits(), "step {t} i={i}");
+            }
             assert_eq!(oa.loss, ob.loss, "step {t}");
         }
     }

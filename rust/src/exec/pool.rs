@@ -7,8 +7,12 @@
 //! [`StepCtx`] (step index, batch share, parameter snapshot) down each
 //! worker's command channel; workers stream finished gradient buckets
 //! back over a shared result channel as backprop retires them, then
-//! report their loss. The driver reduces each bucket the moment its last
-//! piece arrives — reduction overlaps with workers still computing.
+//! report their loss. The driver — standing in for the interconnect —
+//! consumes each bucket the moment its last piece arrives, so reduction
+//! overlaps with workers still computing. What "consume" means is the
+//! exec mode's choice: an all-reduce into the full gradient buffer
+//! (dense / ZeRO-1), or a reduce-scatter into the owning worker's shard
+//! (ZeRO-2); the worker side of the protocol is identical either way.
 //!
 //! Shutdown is by dropping the pool: command senders close, worker loops
 //! end, threads are joined.

@@ -1,4 +1,4 @@
-//! ZeRO-1 optimizer-state sharding over the bucket partition.
+//! ZeRO sharding (stages 1 and 2) over the bucket partition.
 //!
 //! Dense data parallelism replicates the full optimizer state (Adam/LAMB
 //! moments) on every worker. ZeRO stage 1 (Rajbhandari et al. 2020)
@@ -8,11 +8,20 @@
 //! are all-gathered. Per-worker optimizer-state memory drops to ~1/k —
 //! the accounting that `cluster::Pod::max_batch` prices.
 //!
+//! ZeRO stage 2 ([`Zero2State`]) extends the same ownership map to the
+//! gradient buffers: the all-reduce becomes a **reduce-scatter**
+//! (`collective::reduce_scatter_mean`), each worker keeps only the
+//! averaged gradient shards for its owned buckets, steps those parameter
+//! ranges through [`crate::optim::Optimizer::step_range`], and the
+//! updated parameters are all-gathered back
+//! (`collective::all_gather`). Per-worker gradient memory also drops to
+//! ~1/k — `cluster::StatePartition::Zero2` accounts both shards.
+//!
 //! Because every optimizer in `optim` is strictly per-segment (moments,
 //! trust ratio, decay are all computed within one segment) and buckets
-//! hold whole segments, a sharded step is *f32-exactly* equal to the
-//! dense step — `tests/test_exec.rs` asserts this property on random
-//! segment tables.
+//! hold whole segments, a sharded step — stage 1 or stage 2 — is
+//! *f32-exactly* equal to the dense step; `tests/test_exec.rs` asserts
+//! this property on random segment tables.
 
 use crate::exec::bucket::BucketPlan;
 use crate::optim::{build, Hyper, Optimizer, Seg};
@@ -105,6 +114,133 @@ impl Zero1State {
     }
 }
 
+/// ZeRO-2: gradient + optimizer-state sharding over the bucket owner map,
+/// built on [`Optimizer::step_range`].
+///
+/// One logical optimizer spans the flat vector; each bucket's owner steps
+/// its range through `step_range` against the reduce-scattered gradient.
+/// In this single-process simulation the moment buffers live in one
+/// allocation — what each simulated rank would physically hold is
+/// reported by [`Zero2State::state_bytes_for`] (moments) and
+/// [`Zero2State::grad_bytes_for`] (gradient shard), the quantities
+/// `cluster::Pod::max_batch` prices under `StatePartition::Zero2`.
+///
+/// Stepping the buckets of a partition range-by-range is f32-exactly
+/// equal to one dense `Optimizer::step` (the per-segment property the
+/// `step_range` contract documents), so dense ↔ ZeRO-2 runs are
+/// bitwise-identical end to end.
+pub struct Zero2State {
+    opt: Box<dyn Optimizer>,
+    segs: Vec<Seg>,
+    name: String,
+}
+
+impl Zero2State {
+    /// Build the sharded-step state for the named optimizer over an
+    /// `n`-element flat vector. Returns `None` for an unknown optimizer.
+    pub fn build(
+        optimizer: &str,
+        n: usize,
+        segs: &[Seg],
+        hyper: Hyper,
+    ) -> Option<Zero2State> {
+        Some(Zero2State {
+            opt: build(optimizer, n, hyper)?,
+            segs: segs.to_vec(),
+            name: optimizer.to_string(),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Step one bucket's parameter range in place (what the bucket's
+    /// owner does with its reduce-scattered gradient shard). `grads` is
+    /// the flat gradient view; only `[bucket.start, bucket.end)` is read.
+    /// Returns the trust ratios for the bucket's segments.
+    pub fn step_bucket(
+        &mut self,
+        plan: &BucketPlan,
+        b: usize,
+        params: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        step: u64,
+    ) -> Vec<f32> {
+        let bk = &plan.buckets[b];
+        self.opt.step_range(
+            params, grads, lr, step, &self.segs, bk.start, bk.end,
+        )
+    }
+
+    /// Step every bucket owned by `worker` of `workers` — one simulated
+    /// rank's share of the optimizer phase. Returns that rank's trust
+    /// ratios in bucket order.
+    pub fn step_owned(
+        &mut self,
+        plan: &BucketPlan,
+        worker: usize,
+        workers: usize,
+        params: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        step: u64,
+    ) -> Vec<f32> {
+        let mut ratios = Vec::new();
+        for b in 0..plan.len() {
+            if plan.owner(b, workers) == worker {
+                ratios.extend(
+                    self.step_bucket(plan, b, params, grads, lr, step),
+                );
+            }
+        }
+        ratios
+    }
+
+    /// Step every bucket in order (the full simulated collective step:
+    /// all owners act, then the parameter all-gather — a no-op on the
+    /// single shared buffer). Returns the concatenated per-segment trust
+    /// ratios — identical layout to a dense `Optimizer::step`.
+    pub fn step_all(
+        &mut self,
+        plan: &BucketPlan,
+        params: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        step: u64,
+    ) -> Vec<f32> {
+        let mut ratios = Vec::new();
+        for b in 0..plan.len() {
+            ratios.extend(self.step_bucket(plan, b, params, grads, lr, step));
+        }
+        ratios
+    }
+
+    /// Optimizer-state bytes one rank holds under ZeRO-2 — the dense
+    /// moment footprint prorated to its owned elements (every optimizer's
+    /// state is a fixed number of f32 buffers over the vector, so the
+    /// per-element cost divides exactly).
+    pub fn state_bytes_for(
+        &self,
+        plan: &BucketPlan,
+        worker: usize,
+        workers: usize,
+    ) -> usize {
+        let per_elem = self.opt.state_bytes() / plan.n.max(1);
+        per_elem * plan.owned_elems(worker, workers)
+    }
+
+    /// Reduced-gradient bytes one rank retains after the reduce-scatter.
+    pub fn grad_bytes_for(
+        plan: &BucketPlan,
+        worker: usize,
+        workers: usize,
+    ) -> usize {
+        plan.owned_bytes(worker, workers)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -173,5 +309,63 @@ mod tests {
         assert!(
             Zero1State::build("sgdx", &plan, &segs, Hyper::default()).is_none()
         );
+        assert!(
+            Zero2State::build("sgdx", 16, &segs, Hyper::default()).is_none()
+        );
+    }
+
+    /// ZeRO-2's step_range pipeline must match the dense step exactly,
+    /// whether buckets are stepped in order (step_all) or grouped by
+    /// owner (step_owned) — bucket state is disjoint, so owner grouping
+    /// cannot change the result.
+    #[test]
+    fn zero2_lamb_matches_dense_exactly() {
+        let segs = tile(&[40, 8, 120, 8, 64, 16]);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        let plan = BucketPlan::from_segs(&segs, 60 * 4);
+        assert!(plan.len() > 1);
+        let h = Hyper::default();
+        let mut dense = build("lamb", n, h).unwrap();
+        let mut z_all = Zero2State::build("lamb", n, &segs, h).unwrap();
+        let mut z_own = Zero2State::build("lamb", n, &segs, h).unwrap();
+        let workers = 3;
+        let mut rng = Rng::new(8);
+        let mut xa: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+        let mut xb = xa.clone();
+        let mut xc = xa.clone();
+        for t in 1..=5 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.3)).collect();
+            let ra = dense.step(&mut xa, &g, 0.01, t, &segs);
+            let rb = z_all.step_all(&plan, &mut xb, &g, 0.01, t);
+            assert_eq!(ra, rb, "trust ratios diverged at step {t}");
+            assert_eq!(xa, xb, "params diverged at step {t}");
+            for w in 0..workers {
+                z_own.step_owned(&plan, w, workers, &mut xc, &g, 0.01, t);
+            }
+            assert_eq!(xa, xc, "owner-grouped params diverged at step {t}");
+        }
+    }
+
+    /// ZeRO-2 memory shares: moments and gradient shards both prorate by
+    /// owned elements and tile the dense footprints.
+    #[test]
+    fn zero2_shares_tile_dense_footprint() {
+        let segs = tile(&[64; 12]);
+        let n = 64 * 12;
+        let plan = BucketPlan::from_segs(&segs, 64 * 4);
+        let h = Hyper::default();
+        let z = Zero2State::build("adam", n, &segs, h).unwrap();
+        let dense = build("adam", n, h).unwrap();
+        let k = 4;
+        let state: usize =
+            (0..k).map(|w| z.state_bytes_for(&plan, w, k)).sum();
+        assert_eq!(state, dense.state_bytes());
+        let grads: usize =
+            (0..k).map(|w| Zero2State::grad_bytes_for(&plan, w, k)).sum();
+        assert_eq!(grads, n * 4);
+        for w in 0..k {
+            assert_eq!(z.state_bytes_for(&plan, w, k), dense.state_bytes() / k);
+            assert_eq!(Zero2State::grad_bytes_for(&plan, w, k), n * 4 / k);
+        }
     }
 }

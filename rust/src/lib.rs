@@ -20,8 +20,11 @@
 //!   *concurrent* instead of simulated-serial — a persistent worker
 //!   thread pool, a layer-aligned bucketed all-reduce that overlaps
 //!   communication with the backward pass (re-priced by the pod model
-//!   from the actual bucket timeline), and ZeRO-1 sharded optimizer
-//!   state cutting per-worker moment memory to ~1/k.
+//!   from the actual bucket timeline), and ZeRO sharding over the bucket
+//!   owner map: stage 1 cuts per-worker moment memory to ~1/k, stage 2
+//!   swaps the all-reduce for a reduce-scatter + parameter all-gather so
+//!   per-worker gradient memory drops to ~1/k as well
+//!   (`[exec] zero_stage = 0|1|2`).
 //!
 //! Both trainers drive their step loops through the exec layer:
 //! [`coordinator::NativeTrainer`] runs workers truly in parallel for the

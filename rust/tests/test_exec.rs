@@ -4,16 +4,26 @@
 //! (a) parallel bucketed execution produces bitwise-identical averaged
 //!     gradients to a serial monolithic `reduce_mean`, both at the
 //!     reduction level (random segment tables) and end-to-end through
-//!     `NativeTrainer` (serial vs parallel vs zero1 full runs);
+//!     `NativeTrainer` (serial vs parallel vs zero1 vs zero2 full runs);
 //! (b) a ZeRO-1 sharded LAMB step matches the dense `Lamb::step` to
 //!     exact f32 equality on random segment tables, across steps
-//!     (stateful moments);
+//!     (stateful moments); likewise the ZeRO-2 `step_range` pipeline;
 //! (c) `RingAllReduce` agrees with the bucketed path for non-divisible
-//!     bucket/worker splits.
+//!     bucket/worker splits;
+//! (d) the ZeRO-2 reduce-scatter + all-gather pair is bitwise-identical
+//!     to the dense all-reduce on ragged bucket splits, and the pod's
+//!     memory accounting is monotone in the sharding stage
+//!     (`max_batch(Zero2) >= max_batch(Zero1) >= max_batch(Replicated)`).
 
-use lamb_train::collective::{reduce_mean, RingAllReduce};
+use lamb_train::cluster::{Pod, StatePartition};
+use lamb_train::collective::{
+    all_gather, reduce_mean, reduce_scatter_mean, RingAllReduce,
+};
 use lamb_train::coordinator::{NativeTask, NativeTrainer};
-use lamb_train::exec::{bucketed_reduce, BucketPlan, ExecConfig, ExecMode, Zero1State};
+use lamb_train::exec::{
+    bucketed_reduce, BucketPlan, ExecConfig, ExecMode, Zero1State, Zero2State,
+};
+use lamb_train::manifest::ModelMeta;
 use lamb_train::optim::{self, Hyper, Optimizer, Seg};
 use lamb_train::schedule::Schedule;
 use lamb_train::util::Rng;
@@ -72,7 +82,7 @@ fn prop_bucketed_reduce_bitwise_equals_serial() {
 }
 
 #[test]
-fn native_serial_parallel_zero1_runs_bitwise_identical() {
+fn native_serial_parallel_zero1_zero2_runs_bitwise_identical() {
     let spec = NativeTask::cifar_proxy();
     let sched = Schedule::WarmupPoly {
         base: 0.02,
@@ -80,8 +90,10 @@ fn native_serial_parallel_zero1_runs_bitwise_identical() {
         total: 60,
         power: 1.0,
     };
+    // Deliberately ragged bucket size (not a power of two, not a multiple
+    // of any layer size) so bucket boundaries fall unevenly.
     let run = |mode: ExecMode| {
-        let cfg = ExecConfig { mode, workers: 4, bucket_bytes: 1 << 12 };
+        let cfg = ExecConfig { mode, workers: 4, bucket_bytes: 4444 };
         let mut tr = NativeTrainer::with_exec(
             &spec,
             "lamb",
@@ -104,6 +116,12 @@ fn native_serial_parallel_zero1_runs_bitwise_identical() {
     assert_eq!(l_ser, l_z, "serial vs zero1 losses");
     assert_eq!(p_ser, p_z, "serial vs zero1 params");
     assert_eq!(m_ser, m_z);
+    // ZeRO-2 swaps the all-reduce for reduce-scatter + all-gather and
+    // steps through step_range — still the exact same parameters.
+    let (l_z2, p_z2, m_z2) = run(ExecMode::Zero2);
+    assert_eq!(l_ser, l_z2, "serial vs zero2 losses");
+    assert_eq!(p_ser, p_z2, "serial vs zero2 params");
+    assert_eq!(m_ser, m_z2);
 }
 
 // ------------------------------------------------------------------
@@ -183,6 +201,131 @@ fn prop_ring_agrees_with_bucketed_on_ragged_splits() {
 // ------------------------------------------------------------------
 // step_range: the trait-level shard entry point composes to dense
 // ------------------------------------------------------------------
+
+// ------------------------------------------------------------------
+// (d) ZeRO-2: reduce-scatter + all-gather == dense all-reduce, bitwise,
+//     on ragged bucket splits; sharded LAMB == dense LAMB exactly;
+//     memory accounting monotone in the sharding stage
+// ------------------------------------------------------------------
+
+#[test]
+fn prop_zero2_scatter_gather_bitwise_equals_all_reduce() {
+    let mut rng = Rng::new(2005);
+    for case in 0..25 {
+        // ragged everywhere: odd segment sizes, bucket targets that do
+        // not divide them, worker counts that do not divide bucket sizes
+        let segs = random_segs(&mut rng, 2 + rng.below(12) as usize);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        let k = 1 + rng.below(6) as usize;
+        let plan =
+            BucketPlan::from_segs(&segs, 4 * (1 + rng.below(120) as usize));
+        let bufs: Vec<Vec<f32>> =
+            (0..k).map(|_| rand_vec(&mut rng, n, 2.0)).collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        // dense all-reduce path
+        let mut dense = vec![0.0f32; n];
+        reduce_mean(&refs, &mut dense);
+        // zero2 path: reduce-scatter each bucket to its owner's shard,
+        // then all-gather the shards
+        let shards: Vec<Vec<f32>> = plan
+            .buckets
+            .iter()
+            .map(|bk| {
+                let mut s = vec![0.0f32; bk.len()];
+                reduce_scatter_mean(&refs, bk.start, bk.end, &mut s);
+                s
+            })
+            .collect();
+        let parts: Vec<(usize, &[f32])> = plan
+            .buckets
+            .iter()
+            .zip(&shards)
+            .map(|(bk, s)| (bk.start, s.as_slice()))
+            .collect();
+        let mut gathered = vec![0.0f32; n];
+        all_gather(&parts, &mut gathered);
+        for i in 0..n {
+            assert_eq!(
+                dense[i].to_bits(),
+                gathered[i].to_bits(),
+                "case {case} i={i} ({} buckets, k={k})",
+                plan.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_zero2_lamb_matches_dense_exactly() {
+    let mut rng = Rng::new(2006);
+    for case in 0..15 {
+        let segs = random_segs(&mut rng, 2 + rng.below(10) as usize);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        let plan =
+            BucketPlan::from_segs(&segs, 4 * (1 + rng.below(150) as usize));
+        let h = Hyper::default();
+        let mut dense = optim::Lamb::new(n, h);
+        let mut sharded = Zero2State::build("lamb", n, &segs, h).unwrap();
+        let workers = 1 + rng.below(5) as usize;
+        let mut xa = rand_vec(&mut rng, n, 1.0);
+        let mut xb = xa.clone();
+        for t in 1..=4 {
+            let g = rand_vec(&mut rng, n, 0.5);
+            let lr = 0.005 + 0.01 * (t as f32);
+            Optimizer::step(&mut dense, &mut xa, &g, lr, t, &segs);
+            // every owner steps its shards (order across owners is free:
+            // bucket state is disjoint)
+            for w in 0..workers {
+                sharded.step_owned(&plan, w, workers, &mut xb, &g, lr, t);
+            }
+            for i in 0..n {
+                assert_eq!(
+                    xa[i].to_bits(),
+                    xb[i].to_bits(),
+                    "case {case} param {i} at step {t} (k={workers})"
+                );
+            }
+        }
+    }
+}
+
+/// BERT-Large-like stand-in (the paper's 300M-parameter model).
+fn bert_large_meta() -> ModelMeta {
+    ModelMeta {
+        name: "bert-large-like".into(),
+        vocab: 30522,
+        hidden: 1024,
+        layers: 24,
+        heads: 16,
+        ff: 4096,
+        max_seq: 512,
+        total_params: 334_000_000,
+        params: vec![],
+    }
+}
+
+#[test]
+fn max_batch_monotone_in_zero_stage() {
+    let m = bert_large_meta();
+    for &chips in &[16usize, 256, 1024] {
+        let pod = Pod::tpu_v3(chips);
+        for &seq in &[128usize, 512] {
+            let rep = pod.max_batch(&m, seq, StatePartition::Replicated);
+            let z1 =
+                pod.max_batch(&m, seq, StatePartition::Zero1 { shards: chips });
+            let z2 =
+                pod.max_batch(&m, seq, StatePartition::Zero2 { shards: chips });
+            assert!(
+                z2 >= z1 && z1 >= rep,
+                "chips={chips} seq={seq}: {z2} vs {z1} vs {rep}"
+            );
+            // at real pod scale the gradient shard is a strict win
+            if chips >= 256 && seq == 512 {
+                assert!(z2 > rep, "chips={chips}: {z2} vs {rep}");
+            }
+        }
+    }
+}
 
 #[test]
 fn prop_step_range_bucket_partition_equals_dense() {

@@ -1,13 +1,48 @@
 #!/usr/bin/env bash
 # Keep the bench targets compiling and minimally executing on the
-# default (no-pjrt) feature set. The pjrt-gated benches (bench_e2e,
-# bench_kernel_step) are excluded by their required-features.
+# default (no-pjrt) feature set, and emit the measurements as
+# machine-parsable JSON lines so CI can archive them as a BENCH_*.json
+# artifact (the perf trajectory across commits). The pjrt-gated benches
+# (bench_e2e, bench_kernel_step) are excluded by their required-features.
+#
+# Usage: scripts/bench_smoke.sh [out.json]
+#   out.json defaults to BENCH_smoke.json in the repo root. Every line of
+#   the file is one JSON object; the script fails (nonzero exit) if any
+#   bench errors or emits a line that does not parse as JSON.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+OUT="${1:-BENCH_smoke.json}"
 
 # Build every bench target that is available without the pjrt feature.
 cargo build --release --benches
 
 # Run the exec-engine bench in smoke mode: a few tiny steps per
-# (mode, worker-count) cell, seconds total.
-cargo bench --bench bench_exec -- --smoke
+# (mode, worker-count) cell, seconds total. --json prints one object per
+# measurement; tee preserves them on stdout for the CI log.
+cargo bench --bench bench_exec -- --smoke --json | tee "$OUT"
+
+# The artifact must be non-empty, line-delimited JSON. Validate with
+# python3 (present on CI runners and dev boxes); skip gracefully if not.
+if [ ! -s "$OUT" ]; then
+    echo "bench_smoke: $OUT is empty — no measurements emitted" >&2
+    exit 1
+fi
+if command -v python3 >/dev/null 2>&1; then
+    python3 - "$OUT" <<'EOF'
+import json, sys
+path = sys.argv[1]
+with open(path) as f:
+    lines = [l for l in f.read().splitlines() if l.strip()]
+for i, line in enumerate(lines, 1):
+    try:
+        obj = json.loads(line)
+    except ValueError as e:
+        sys.exit(f"{path}:{i}: not valid JSON: {e}")
+    if "bench" not in obj or "secs" not in obj:
+        sys.exit(f"{path}:{i}: missing bench/secs keys: {line}")
+    if not (obj["secs"] >= 0):
+        sys.exit(f"{path}:{i}: bad secs value: {line}")
+print(f"bench_smoke: {len(lines)} JSON measurements in {path}")
+EOF
+fi
