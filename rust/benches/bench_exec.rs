@@ -12,12 +12,20 @@
 //! (`{"bench":"bench_exec","mode":...,"workers":...,"secs":...}`) so CI
 //! can archive the output as a `BENCH_*.json` artifact and diff the perf
 //! trajectory across commits; human-readable tables are suppressed.
+//!
+//! The sweep ends with a pod-model section pricing the paper's
+//! batch-32k BERT-Large step on a 1024-chip pod (128 nodes x 8 chips):
+//! the schedule the topology picks per gradient bucket
+//! (`"kind":"bucket_schedule"`) and a flat-ring vs hierarchical vs auto
+//! step-time comparison (`"kind":"sched_compare"`).
 
 use std::time::Instant;
 
+use lamb_train::cluster::{Pod, StatePartition};
 use lamb_train::coordinator::{NativeTask, NativeTrainer};
-use lamb_train::exec::{ExecConfig, ExecMode};
+use lamb_train::exec::{BucketPlan, ExecConfig, ExecMode};
 use lamb_train::optim::Hyper;
+use lamb_train::repro::bert_exps::bert_large_meta;
 use lamb_train::schedule::Schedule;
 
 fn run_once(
@@ -27,7 +35,12 @@ fn run_once(
     steps: u64,
     batch: usize,
 ) -> f64 {
-    let cfg = ExecConfig { mode, workers, bucket_bytes: 1 << 14 };
+    let cfg = ExecConfig {
+        mode,
+        workers,
+        bucket_bytes: 1 << 14,
+        ..ExecConfig::default()
+    };
     let mut tr = NativeTrainer::with_exec(
         spec,
         "lamb",
@@ -40,6 +53,78 @@ fn run_once(
     let log = tr.train(steps, batch);
     assert!(!log.diverged, "bench run diverged");
     t0.elapsed().as_secs_f64()
+}
+
+/// Pod-model records: per-bucket schedule choice on the hierarchical
+/// 1024-chip pod, plus the ring/hierarchical/auto step-time comparison
+/// for the paper's batch-32k config. Pure cost-model arithmetic — cheap
+/// enough for the CI smoke artifact.
+fn emit_pod_schedules(json: bool) {
+    use lamb_train::collective::{ScheduleKind, SchedulePolicy};
+    let meta = bert_large_meta();
+    let plan = BucketPlan::even(meta.total_params, 24);
+    let hier = Pod::tpu_v3_nodes(1024, 8);
+    let part = StatePartition::Zero2 { shards: 1024 };
+    let (costs, _, t_auto) =
+        hier.bucket_timeline_partitioned(&meta, 32_768, 128, &plan, part);
+    // (Forcing `ring` on the hierarchical topology is bitwise-identical
+    // to the flat pod — the inter-node link *is* the calibrated ring —
+    // so only the flat cell is emitted.)
+    let flat = Pod::tpu_v3(1024);
+    let t_flat =
+        flat.step_time_bucketed_partitioned(&meta, 32_768, 128, &plan, part);
+    let mut hier_only = hier;
+    hier_only.topology.policy =
+        SchedulePolicy::Fixed(ScheduleKind::Hierarchical);
+    let t_hier = hier_only
+        .step_time_bucketed_partitioned(&meta, 32_768, 128, &plan, part);
+    if json {
+        for (b, c) in costs.iter().enumerate() {
+            println!(
+                "{{\"bench\":\"bench_exec\",\"kind\":\"bucket_schedule\",\
+                 \"bucket\":{b},\"bytes\":{},\"schedule\":\"{}\",\
+                 \"secs\":{:.9}}}",
+                plan.buckets[b].bytes(),
+                c.schedule.as_str(),
+                c.done - c.start
+            );
+        }
+        // One record per schedule with a stable identity key (only
+        // "secs" varies), so the CI trend diff actually compares the
+        // same cell across runs.
+        for (sched, secs) in [
+            ("flat_ring", t_flat),
+            ("hierarchical", t_hier),
+            ("auto", t_auto),
+        ] {
+            println!(
+                "{{\"bench\":\"bench_exec\",\"kind\":\"sched_compare\",\
+                 \"config\":\"bert-32k-zero2\",\"schedule\":\"{sched}\",\
+                 \"secs\":{secs:.6}}}"
+            );
+        }
+    } else {
+        println!(
+            "== pod model: BERT batch-32k zero2 on 1024 chips \
+             (128 nodes x 8) =="
+        );
+        let mut counts = [0usize; 3];
+        for c in &costs {
+            match c.schedule {
+                ScheduleKind::Ring => counts[0] += 1,
+                ScheduleKind::Hierarchical => counts[1] += 1,
+                ScheduleKind::Tree => counts[2] += 1,
+            }
+        }
+        println!(
+            "bucket schedules (auto): ring {} | hierarchical {} | tree {}",
+            counts[0], counts[1], counts[2]
+        );
+        println!(
+            "step time: flat ring {t_flat:.4}s | hierarchical {t_hier:.4}s \
+             | auto {t_auto:.4}s"
+        );
+    }
 }
 
 fn main() {
@@ -121,4 +206,7 @@ fn main() {
             );
         }
     }
+    // Pod-model schedule records (cheap; emitted in smoke mode too so
+    // the CI artifact tracks the schedule choices across commits).
+    emit_pod_schedules(json);
 }

@@ -16,6 +16,14 @@
 //!   pod model to price each phase with the alpha-beta cost model that
 //!   Figure 8's scaling-efficiency curve comes from.
 //!
+//! The [`topology`] submodule generalizes the flat ring into pluggable
+//! reduction schedules ([`ScheduleKind`]: ring / hierarchical two-level /
+//! latency-optimal tree) priced over a [`Topology`] with distinct
+//! intra-/inter-node links, plus the [`ReduceSchedule`] numeric dispatch
+//! the exec engine uses — every schedule's numeric path is
+//! bitwise-identical to [`reduce_mean`], so schedule choice is a pure
+//! performance decision.
+//!
 //! ## Ring cost model
 //!
 //! A ring all-reduce over `k` ranks is a reduce-scatter followed by an
@@ -28,10 +36,16 @@
 //! owner's optimizer step). The two halves sum exactly to the all-reduce
 //! time.
 
+pub mod topology;
+
+pub use topology::{
+    CollOp, ReduceSchedule, ScheduleKind, SchedulePolicy, Topology,
+};
+
 /// Elements per chunk of the reduction working set. 4096 f64 = 32 KiB —
 /// fits L1d alongside one worker slice, large enough to amortize the
 /// per-chunk loop overhead.
-const REDUCE_CHUNK: usize = 4096;
+pub(crate) const REDUCE_CHUNK: usize = 4096;
 
 /// Average `workers` gradient buffers into `out` (all same length).
 /// Accumulates in f64 — the same reduction order for any worker count, so
@@ -148,7 +162,16 @@ impl RingCost {
     /// Full all-reduce: exactly two equal ring halves, so the invariant
     /// `reduce_scatter_time + all_gather_time == time` holds by
     /// construction (doubling is exact in f64).
+    ///
+    /// A single chip (`k <= 1`) communicates with nobody: the cost is
+    /// exactly `0.0`, guarded here explicitly rather than relying on the
+    /// `k - 1` phase count degenerating (the [`topology`] schedules all
+    /// share this contract — see
+    /// `single_chip_costs_exactly_zero_in_all_schedules`).
     pub fn time(&self, k: usize, bytes: usize) -> f64 {
+        if k <= 1 {
+            return 0.0;
+        }
         2.0 * self.reduce_scatter_time(k, bytes)
     }
 
@@ -333,6 +356,20 @@ mod tests {
         all_gather(&parts, &mut gathered);
         for i in 0..n {
             assert_eq!(gathered[i].to_bits(), whole[i].to_bits(), "i={i}");
+        }
+    }
+
+    /// Regression (ISSUE 3): a single chip pays exactly zero in every
+    /// entry point of the ring cost model, for any payload.
+    #[test]
+    fn single_chip_ring_cost_is_exactly_zero() {
+        let c = RingCost { alpha: 4.4e-5, beta: 70e9 };
+        for &bytes in &[0usize, 1, 1 << 20, 1_336_000_000] {
+            for k in [0usize, 1] {
+                assert_eq!(c.time(k, bytes), 0.0);
+                assert_eq!(c.reduce_scatter_time(k, bytes), 0.0);
+                assert_eq!(c.all_gather_time(k, bytes), 0.0);
+            }
         }
     }
 

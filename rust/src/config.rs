@@ -127,6 +127,81 @@ pub fn parse_toml(text: &str) -> Result<TomlDoc> {
 // Typed training configuration
 // ---------------------------------------------------------------------
 
+/// Interconnect topology + collective-schedule knobs (config section
+/// `[topology]`). Link parameters default to the pod model's calibrated
+/// flat ring (44 us/phase, 70 GB/s), so an absent table — or one that
+/// only sets `schedule` — reprices nothing: `schedule = "ring"` on the
+/// default topology is bitwise-identical to the pre-topology model.
+///
+/// ```toml
+/// [topology]
+/// node_size = 8          # chips per node (1 = flat)
+/// intra_gbps = 600.0     # intra-node link bandwidth, GB/s
+/// inter_gbps = 70.0      # inter-node link bandwidth, GB/s
+/// intra_us = 1.0         # intra-node per-phase latency, us
+/// inter_us = 44.0        # inter-node per-phase latency, us
+/// schedule = "auto"      # auto | ring | hierarchical | tree
+/// cross_step = true      # pipeline ZeRO-2's param gather into the
+///                        # next step's forward pass
+/// ```
+///
+/// Mistyped values hard-error like `exec.zero_stage` (a string where a
+/// number belongs, a float `node_size`, an unknown `schedule` name)
+/// instead of silently pricing the wrong machine.
+#[derive(Clone, Copy, Debug)]
+pub struct TopologyConfig {
+    /// Chips per node; 1 = flat topology.
+    pub node_size: usize,
+    /// Intra-node link bandwidth in GB/s (None = pod default).
+    pub intra_gbps: Option<f64>,
+    /// Inter-node link bandwidth in GB/s (None = pod default).
+    pub inter_gbps: Option<f64>,
+    /// Intra-node per-phase latency in microseconds (None = pod default).
+    pub intra_us: Option<f64>,
+    /// Inter-node per-phase latency in microseconds (None = pod default).
+    pub inter_us: Option<f64>,
+    /// Schedule selection: `auto` or a fixed kind.
+    pub policy: crate::collective::SchedulePolicy,
+    /// Overlap ZeRO-2's trailing parameter all-gather with the next
+    /// step's forward pass (steady-state pipelining).
+    pub cross_step: bool,
+}
+
+impl Default for TopologyConfig {
+    fn default() -> Self {
+        TopologyConfig {
+            node_size: 1,
+            intra_gbps: None,
+            inter_gbps: None,
+            intra_us: None,
+            inter_us: None,
+            policy: crate::collective::SchedulePolicy::default(),
+            cross_step: false,
+        }
+    }
+}
+
+impl TopologyConfig {
+    /// Materialize into a `collective::Topology`, inheriting any unset
+    /// link parameter from `base` (the pod's calibrated ring) *as-is* —
+    /// no unit round-trip, so the default table reproduces the flat
+    /// model bit-for-bit.
+    pub fn build(&self, base: crate::collective::RingCost) -> crate::collective::Topology {
+        use crate::collective::{RingCost, Topology};
+        let link = |us: Option<f64>, gbps: Option<f64>| RingCost {
+            alpha: us.map_or(base.alpha, |u| u * 1e-6),
+            beta: gbps.map_or(base.beta, |g| g * 1e9),
+        };
+        Topology {
+            node_size: self.node_size.max(1),
+            intra: link(self.intra_us, self.intra_gbps),
+            inter: link(self.inter_us, self.inter_gbps),
+            policy: self.policy,
+            cross_step: self.cross_step,
+        }
+    }
+}
+
 /// Which step path the coordinator uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StepPath {
@@ -167,6 +242,8 @@ pub struct TrainConfig {
     pub exec_workers: usize,
     /// Bucket size for the overlapped all-reduce, in KiB.
     pub bucket_kb: usize,
+    // interconnect topology ([topology] section)
+    pub topology: TopologyConfig,
     // io
     pub artifacts: String,
     pub out_dir: String,
@@ -195,6 +272,7 @@ impl Default for TrainConfig {
             exec_mode: crate::exec::ExecMode::Serial,
             exec_workers: 0,
             bucket_kb: 1024,
+            topology: TopologyConfig::default(),
             artifacts: "artifacts".into(),
             out_dir: "results".into(),
             eval_every: 50,
@@ -282,6 +360,76 @@ impl TrainConfig {
         }
         if let Some(v) = geti("exec.workers") { c.exec_workers = v as usize; }
         if let Some(v) = geti("exec.bucket_kb") { c.bucket_kb = v as usize; }
+        // ---- [topology] table: every key hard-errors on a mistyped
+        // value (mirroring exec.zero_stage) instead of silently pricing
+        // the wrong interconnect. ----
+        if let Some(raw) = doc.get("topology.node_size") {
+            let v = raw.as_i64().ok_or_else(|| {
+                anyhow!("topology.node_size must be an integer (got {raw:?})")
+            })?;
+            if v < 1 {
+                bail!("topology.node_size must be >= 1 (got {v})");
+            }
+            c.topology.node_size = v as usize;
+        }
+        // Bandwidths must be strictly positive; latencies may be 0.
+        let get_link_f64 =
+            |key: &str, strictly_positive: bool| -> Result<Option<f64>> {
+                match doc.get(key) {
+                    None => Ok(None),
+                    Some(raw) => {
+                        let v = raw.as_f64().ok_or_else(|| {
+                            anyhow!("{key} must be a number (got {raw:?})")
+                        })?;
+                        if v.is_nan()
+                            || v < 0.0
+                            || (strictly_positive && v == 0.0)
+                        {
+                            bail!(
+                                "{key} must be {} (got {v})",
+                                if strictly_positive {
+                                    "positive"
+                                } else {
+                                    ">= 0"
+                                }
+                            );
+                        }
+                        Ok(Some(v))
+                    }
+                }
+            };
+        if let Some(v) = get_link_f64("topology.intra_gbps", true)? {
+            c.topology.intra_gbps = Some(v);
+        }
+        if let Some(v) = get_link_f64("topology.inter_gbps", true)? {
+            c.topology.inter_gbps = Some(v);
+        }
+        if let Some(v) = get_link_f64("topology.intra_us", false)? {
+            c.topology.intra_us = Some(v);
+        }
+        if let Some(v) = get_link_f64("topology.inter_us", false)? {
+            c.topology.inter_us = Some(v);
+        }
+        if let Some(raw) = doc.get("topology.schedule") {
+            let s = raw.as_str().ok_or_else(|| {
+                anyhow!(
+                    "topology.schedule must be a string \
+                     \"auto\"|\"ring\"|\"hierarchical\"|\"tree\" (got {raw:?})"
+                )
+            })?;
+            c.topology.policy = crate::collective::SchedulePolicy::parse(s)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "unknown topology.schedule {s:?} \
+                         (expected auto|ring|hierarchical|tree)"
+                    )
+                })?;
+        }
+        if let Some(raw) = doc.get("topology.cross_step") {
+            c.topology.cross_step = raw.as_bool().ok_or_else(|| {
+                anyhow!("topology.cross_step must be a boolean (got {raw:?})")
+            })?;
+        }
         if let Some(v) = gets("run.artifacts") { c.artifacts = v; }
         if let Some(v) = gets("run.out_dir") { c.out_dir = v; }
         if let Some(v) = geti("run.eval_every") { c.eval_every = v; }
@@ -460,6 +608,87 @@ betas = [0.9, 0.999]
         )
         .unwrap();
         assert_eq!(c.exec_mode, ExecMode::Zero2);
+    }
+
+    #[test]
+    fn topology_table_parses_and_builds() {
+        use crate::collective::{RingCost, ScheduleKind, SchedulePolicy};
+        let c = TrainConfig::load(
+            None,
+            &[
+                ("topology.node_size".into(), "8".into()),
+                ("topology.intra_gbps".into(), "600.0".into()),
+                ("topology.inter_gbps".into(), "70.0".into()),
+                ("topology.intra_us".into(), "1.0".into()),
+                ("topology.schedule".into(), "\"auto\"".into()),
+                ("topology.cross_step".into(), "true".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.topology.node_size, 8);
+        assert_eq!(c.topology.policy, SchedulePolicy::Auto);
+        assert!(c.topology.cross_step);
+        let base = RingCost { alpha: 4.4e-5, beta: 70e9 };
+        let topo = c.topology.build(base);
+        assert_eq!(topo.node_size, 8);
+        assert_eq!(topo.intra.beta, 600e9);
+        assert_eq!(topo.intra.alpha, 1e-6);
+        // unset inter latency inherits the base link bit-for-bit
+        assert_eq!(topo.inter.alpha.to_bits(), base.alpha.to_bits());
+        assert_eq!(topo.inter.beta, 70e9);
+
+        // Defaults: absent table = flat ring over the base link, exactly.
+        let d = TrainConfig::default();
+        let flat = d.topology.build(base);
+        assert_eq!(flat.node_size, 1);
+        assert_eq!(flat.policy, SchedulePolicy::Fixed(ScheduleKind::Ring));
+        assert!(!flat.cross_step);
+        assert_eq!(flat.intra.alpha.to_bits(), base.alpha.to_bits());
+        assert_eq!(flat.inter.beta.to_bits(), base.beta.to_bits());
+
+        // fixed kinds parse too
+        for kind in ["ring", "hierarchical", "tree"] {
+            let c = TrainConfig::load(
+                None,
+                &[("topology.schedule".into(), format!("\"{kind}\""))],
+            )
+            .unwrap();
+            assert_eq!(c.topology.policy.as_str(), kind);
+        }
+    }
+
+    /// Mistyped `[topology]` values are hard errors (like
+    /// `exec.zero_stage`), never silently-ignored keys.
+    #[test]
+    fn topology_table_rejects_mistyped_values() {
+        let bad = |k: &str, v: &str| {
+            TrainConfig::load(None, &[(k.into(), v.into())]).is_err()
+        };
+        // wrong type
+        assert!(bad("topology.node_size", "8.0"));
+        assert!(bad("topology.node_size", "\"8\""));
+        assert!(bad("topology.node_size", "true"));
+        assert!(bad("topology.intra_gbps", "\"600\""));
+        assert!(bad("topology.inter_gbps", "false"));
+        assert!(bad("topology.intra_us", "\"1us\""));
+        assert!(bad("topology.schedule", "2"));
+        assert!(bad("topology.schedule", "true"));
+        assert!(bad("topology.cross_step", "1"));
+        assert!(bad("topology.cross_step", "\"yes\""));
+        // wrong value
+        assert!(bad("topology.node_size", "0"));
+        assert!(bad("topology.node_size", "-8"));
+        assert!(bad("topology.intra_gbps", "0"));
+        assert!(bad("topology.inter_gbps", "-70.0"));
+        assert!(bad("topology.inter_us", "-1.0"));
+        assert!(bad("topology.schedule", "\"mesh\""));
+        // integers are fine where floats are expected
+        let c = TrainConfig::load(
+            None,
+            &[("topology.inter_gbps".into(), "70".into())],
+        )
+        .unwrap();
+        assert_eq!(c.topology.inter_gbps, Some(70.0));
     }
 
     #[test]

@@ -22,11 +22,11 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::{Pod, StatePartition};
-use crate::collective;
+use crate::collective::{self, CollOp, ReduceSchedule, SchedulePolicy};
 use crate::config::{StepPath, TrainConfig};
 use crate::data::{Batch, Corpus, MlmConfig, MlmGenerator};
 use crate::exec::{
-    bucketed_reduce, BucketPlan, ExecMode, Zero1State, Zero2State,
+    bucketed_reduce_with, BucketPlan, ExecMode, Zero1State, Zero2State,
 };
 use crate::manifest::{ArtifactKind, Manifest, ModelMeta};
 use crate::metrics::{DivergenceDetector, RunLog, StepComm, StepRecord};
@@ -75,6 +75,13 @@ pub struct BertTrainer<'e> {
     /// Layer-aligned bucket partition (`[exec] bucket_kb`) — drives the
     /// bucketed modes' reduce and the pod model's overlap pricing.
     pub plan: BucketPlan,
+    /// Numeric staging schedule for the bucketed reduce, resolved from
+    /// `[topology]` (an `auto` policy resolves to whatever the pod's
+    /// topology picks for the whole-gradient reduction). Bitwise-
+    /// invariant across kinds by the `collective::ReduceSchedule`
+    /// contract; the per-bucket *pricing* choice is made independently
+    /// by `Pod::bucket_timeline_partitioned`.
+    pub reduce: ReduceSchedule,
     /// ZeRO-1 sharded optimizer state (exec mode `zero1`); takes
     /// precedence over `opt` when present.
     zero1: Option<Zero1State>,
@@ -130,6 +137,20 @@ impl<'e> BertTrainer<'e> {
         let plan_segs: Vec<Seg> =
             if segs.is_empty() { Seg::whole(n) } else { segs.clone() };
         let plan = BucketPlan::from_segs(&plan_segs, cfg.bucket_kb * 1024);
+        // Interconnect model: the calibrated TPUv3 slice refined by the
+        // `[topology]` table (absent table = flat ring, bit-identical to
+        // the pre-topology pod).
+        let mut pod = Pod::tpu_v3(cfg.chips);
+        pod.topology = cfg.topology.build(pod.ring);
+        // Numeric staging schedule: a fixed policy is taken as-is; auto
+        // resolves to the topology's pick for the whole flat gradient.
+        let reduce_kind = match cfg.topology.policy {
+            SchedulePolicy::Fixed(kind) => kind,
+            SchedulePolicy::Auto => {
+                pod.topology.pick(CollOp::AllReduce, cfg.chips, n * 4).0
+            }
+        };
+        let reduce = ReduceSchedule::new(reduce_kind, cfg.topology.node_size);
         let zero1 = if cfg.exec_mode == ExecMode::Zero1 {
             Some(
                 Zero1State::build(&cfg.optimizer, &plan, &plan_segs, hyper)
@@ -154,10 +175,11 @@ impl<'e> BertTrainer<'e> {
         Ok(BertTrainer {
             engine,
             manifest,
-            pod: Pod::tpu_v3(cfg.chips),
+            pod,
             opt,
             segs,
             plan,
+            reduce,
             zero1,
             zero2,
             worker_grads: Vec::new(),
@@ -336,10 +358,15 @@ impl<'e> BertTrainer<'e> {
                 for wg in self.worker_grads.iter_mut() {
                     collective::scale(wg, local_scale);
                 }
-                // -------- bucketed all-reduce --------
+                // -------- bucketed all-reduce (schedule-staged) --------
                 let refs: Vec<&[f32]> =
                     self.worker_grads.iter().map(|g| g.as_slice()).collect();
-                bucketed_reduce(&self.plan, &refs, &mut self.grad_acc);
+                bucketed_reduce_with(
+                    &self.reduce,
+                    &self.plan,
+                    &refs,
+                    &mut self.grad_acc,
+                );
                 let loss = (loss_sum / n_micro as f64) as f32;
                 // -------- optimizer phase (ZeRO shards or dense) -----
                 let ratios = if self.zero1.is_some() {

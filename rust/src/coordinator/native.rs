@@ -396,6 +396,7 @@ mod tests {
             mode: ExecMode::Parallel,
             workers: 4,
             bucket_bytes: 1 << 12,
+            ..ExecConfig::default()
         };
         let mut tr = NativeTrainer::with_exec(
             &spec,
@@ -428,6 +429,7 @@ mod tests {
             mode: ExecMode::Zero1,
             workers: 2,
             bucket_bytes: 1 << 12,
+            ..ExecConfig::default()
         };
         let mut tr = NativeTrainer::with_exec(
             &spec,
@@ -455,6 +457,7 @@ mod tests {
             mode: ExecMode::Zero2,
             workers: 2,
             bucket_bytes: 1 << 12,
+            ..ExecConfig::default()
         };
         let mut tr = NativeTrainer::with_exec(
             &spec,

@@ -82,6 +82,23 @@ impl BucketPlan {
         BucketPlan::from_segs(segs, usize::MAX)
     }
 
+    /// `buckets` equal buckets tiling an `n`-element vector (the last
+    /// takes the remainder) — the synthetic partition the pod-pricing
+    /// benches, examples and tests share for models without a real
+    /// segment table.
+    pub fn even(n: usize, buckets: usize) -> BucketPlan {
+        let buckets = buckets.clamp(1, n.max(1));
+        let per = n / buckets;
+        let mut segs = Vec::with_capacity(buckets);
+        let mut off = 0;
+        for b in 0..buckets {
+            let size = if b + 1 == buckets { n - off } else { per };
+            segs.push(Seg { offset: off, size, decay: true, adapt: true });
+            off += size;
+        }
+        BucketPlan::from_segs(&segs, per.max(1) * 4)
+    }
+
     pub fn len(&self) -> usize {
         self.buckets.len()
     }
@@ -163,6 +180,18 @@ mod tests {
         assert_eq!(off, plan.n);
         assert_eq!(seg_lo, segs.len());
         assert!(plan.len() > 1);
+    }
+
+    #[test]
+    fn even_plan_tiles_with_remainder() {
+        let plan = BucketPlan::even(103, 4);
+        assert_eq!(plan.len(), 4);
+        assert_eq!(plan.n, 103);
+        let sizes: Vec<usize> = plan.buckets.iter().map(Bucket::len).collect();
+        assert_eq!(sizes, vec![25, 25, 25, 28]);
+        // degenerate shapes stay valid
+        assert_eq!(BucketPlan::even(5, 64).n, 5);
+        assert_eq!(BucketPlan::even(7, 1).len(), 1);
     }
 
     #[test]

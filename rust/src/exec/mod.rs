@@ -46,7 +46,7 @@ pub use zero::{Zero1State, Zero2State};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::collective::{all_gather, reduce_mean};
+use crate::collective::ReduceSchedule;
 use crate::metrics::StepComm;
 use crate::optim::Seg;
 
@@ -109,6 +109,11 @@ pub struct ExecConfig {
     pub workers: usize,
     /// Target bucket size in bytes for the overlapped all-reduce.
     pub bucket_bytes: usize,
+    /// Reduction schedule for the reduce paths (`[topology]` section).
+    /// Every kind is bitwise-identical numerically
+    /// (`collective::ReduceSchedule` runs one rank-order kernel); the
+    /// choice records which schedule the pod model prices.
+    pub reduce: ReduceSchedule,
 }
 
 impl Default for ExecConfig {
@@ -117,6 +122,7 @@ impl Default for ExecConfig {
             mode: ExecMode::Serial,
             workers: 1,
             bucket_bytes: 1 << 20,
+            reduce: ReduceSchedule::default(),
         }
     }
 }
@@ -196,6 +202,20 @@ pub(crate) fn drive_worker(
 /// `collective::reduce_mean` over the whole buffers (the reduction is
 /// per-element), which is the serial↔parallel equivalence anchor.
 pub fn bucketed_reduce(plan: &BucketPlan, workers: &[&[f32]], out: &mut [f32]) {
+    bucketed_reduce_with(&ReduceSchedule::default(), plan, workers, out);
+}
+
+/// [`bucketed_reduce`] through an explicit reduction schedule (ring /
+/// hierarchical / tree). Every schedule runs the same rank-order kernel
+/// (bitwise-identical by the `collective::ReduceSchedule` contract);
+/// the dispatch carries which schedule the pod model priced alongside
+/// the data path.
+pub fn bucketed_reduce_with(
+    sched: &ReduceSchedule,
+    plan: &BucketPlan,
+    workers: &[&[f32]],
+    out: &mut [f32],
+) {
     assert_eq!(out.len(), plan.n, "output length != plan coverage");
     for w in workers {
         assert_eq!(w.len(), plan.n, "worker buffer length != plan coverage");
@@ -203,7 +223,7 @@ pub fn bucketed_reduce(plan: &BucketPlan, workers: &[&[f32]], out: &mut [f32]) {
     for bk in &plan.buckets {
         let refs: Vec<&[f32]> =
             workers.iter().map(|w| &w[bk.start..bk.end]).collect();
-        reduce_mean(&refs, &mut out[bk.start..bk.end]);
+        sched.reduce_mean(&refs, &mut out[bk.start..bk.end]);
     }
 }
 
@@ -236,30 +256,34 @@ impl Gather {
         self.counts[b] == self.workers
     }
 
+    /// Reduce bucket `b` into the full output buffer through the
+    /// configured reduction schedule (bitwise-identical across kinds).
     pub(crate) fn reduce_into(
         &self,
         plan: &BucketPlan,
         b: usize,
         out: &mut [f32],
+        sched: &ReduceSchedule,
     ) {
         let bk = &plan.buckets[b];
         let refs: Vec<&[f32]> = self.parts[b]
             .iter()
             .map(|p| p.as_deref().expect("incomplete bucket"))
             .collect();
-        reduce_mean(&refs, &mut out[bk.start..bk.end]);
+        sched.reduce_mean(&refs, &mut out[bk.start..bk.end]);
     }
 
     /// ZeRO-2 completion: reduce-scatter bucket `b` into the owner's
     /// bucket-local shard instead of the full buffer. The payloads are
     /// already bucket-local, so the owner's chunk is the whole range and
-    /// the scatter is one `reduce_mean` into the shard — bitwise-identical
-    /// to the same range of [`Gather::reduce_into`].
+    /// the scatter is one schedule-dispatched mean into the shard —
+    /// bitwise-identical to the same range of [`Gather::reduce_into`].
     pub(crate) fn scatter_into(
         &self,
         plan: &BucketPlan,
         b: usize,
         shard: &mut [f32],
+        sched: &ReduceSchedule,
     ) {
         let bk = &plan.buckets[b];
         assert_eq!(shard.len(), bk.len(), "shard length != bucket length");
@@ -267,7 +291,7 @@ impl Gather {
             .iter()
             .map(|p| p.as_deref().expect("incomplete bucket"))
             .collect();
-        reduce_mean(&refs, shard);
+        sched.reduce_mean(&refs, shard);
     }
 }
 
@@ -362,6 +386,9 @@ impl Executor {
         let k = self.workers;
         let nb = plan.len();
         let zero2 = self.cfg.mode == ExecMode::Zero2;
+        // Staging schedule for every reduction below (bitwise-invariant
+        // across kinds; see `collective::ReduceSchedule`).
+        let sched = self.cfg.reduce;
         // Owner shards of the reduce-scatter (Zero2 only; pre-allocated
         // by the constructor, overwritten in full by each scatter).
         let shards = &mut self.shards;
@@ -388,9 +415,12 @@ impl Executor {
                                         &plan,
                                         b,
                                         &mut shards[b],
+                                        &sched,
                                     );
                                 } else {
-                                    gather.reduce_into(&plan, b, reduced);
+                                    gather.reduce_into(
+                                        &plan, b, reduced, &sched,
+                                    );
                                 }
                                 per_bucket[b].1 =
                                     t0.elapsed().as_secs_f64();
@@ -417,10 +447,11 @@ impl Executor {
                                         &plan,
                                         bucket,
                                         &mut shards[bucket],
+                                        &sched,
                                     );
                                 } else {
                                     gather.reduce_into(
-                                        &plan, bucket, reduced,
+                                        &plan, bucket, reduced, &sched,
                                     );
                                 }
                                 per_bucket[bucket].1 =
@@ -450,7 +481,7 @@ impl Executor {
                 .zip(self.shards.iter())
                 .map(|(bk, s)| (bk.start, s.as_slice()))
                 .collect();
-            all_gather(&parts, reduced);
+            sched.all_gather(&parts, reduced);
         }
 
         // Mean of local mean losses, accumulated in fixed worker order so
@@ -550,7 +581,12 @@ mod tests {
     fn serial_and_parallel_steps_agree_bitwise() {
         let segs = tile(&[96, 16, 128, 16, 64, 8]);
         let n: usize = segs.iter().map(|s| s.size).sum();
-        let cfg = |mode| ExecConfig { mode, workers: 3, bucket_bytes: 100 * 4 };
+        let cfg = |mode| ExecConfig {
+            mode,
+            workers: 3,
+            bucket_bytes: 100 * 4,
+            ..ExecConfig::default()
+        };
         let mut serial =
             Executor::new(cfg(ExecMode::Serial), &segs, toy_workers(3, n, 6));
         let mut par = Executor::new(
@@ -575,7 +611,12 @@ mod tests {
     fn zero2_step_bitwise_equals_parallel() {
         let segs = tile(&[96, 16, 128, 16, 64, 8]);
         let n: usize = segs.iter().map(|s| s.size).sum();
-        let cfg = |mode| ExecConfig { mode, workers: 3, bucket_bytes: 100 * 4 };
+        let cfg = |mode| ExecConfig {
+            mode,
+            workers: 3,
+            bucket_bytes: 100 * 4,
+            ..ExecConfig::default()
+        };
         let mut par = Executor::new(
             cfg(ExecMode::Parallel),
             &segs,
@@ -596,6 +637,50 @@ mod tests {
                 assert_eq!(ra[i].to_bits(), rb[i].to_bits(), "step {t} i={i}");
             }
             assert_eq!(oa.loss, ob.loss, "step {t}");
+        }
+    }
+
+    /// Swapping the reduction schedule (ring / hierarchical / tree, any
+    /// node grouping) never changes a single bit of the executor's
+    /// output — schedule choice is a pure performance decision.
+    #[test]
+    fn reduce_schedule_dispatch_is_bitwise_invariant() {
+        use crate::collective::ScheduleKind;
+        let segs = tile(&[96, 16, 128, 16, 64, 8]);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        let run = |mode, reduce| {
+            let cfg = ExecConfig {
+                mode,
+                workers: 3,
+                bucket_bytes: 100 * 4,
+                reduce,
+            };
+            let mut ex = Executor::new(cfg, &segs, toy_workers(3, n, 6));
+            let params = vec![0.5f32; n];
+            let mut red = vec![0.0f32; n];
+            let mut losses = Vec::new();
+            for t in 1..=3 {
+                losses.push(ex.step(t, 8, &params, &mut red).loss);
+            }
+            (red, losses)
+        };
+        let (base_red, base_loss) =
+            run(ExecMode::Parallel, ReduceSchedule::default());
+        for mode in [ExecMode::Serial, ExecMode::Parallel, ExecMode::Zero2] {
+            for kind in ScheduleKind::ALL {
+                for node in [1usize, 2, 4] {
+                    let (red, loss) =
+                        run(mode, ReduceSchedule::new(kind, node));
+                    for i in 0..n {
+                        assert_eq!(
+                            red[i].to_bits(),
+                            base_red[i].to_bits(),
+                            "{mode:?} {kind:?} node={node} i={i}"
+                        );
+                    }
+                    assert_eq!(loss, base_loss, "{mode:?} {kind:?}");
+                }
+            }
         }
     }
 
@@ -626,6 +711,7 @@ mod tests {
             mode: ExecMode::Parallel,
             workers: 2,
             bucket_bytes: 64 * 4,
+            ..ExecConfig::default()
         };
         let mut ex = Executor::new(cfg, &segs, toy_workers(2, n, 8));
         let params = vec![0.0f32; n];

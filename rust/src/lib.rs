@@ -11,11 +11,14 @@
 //!   never runs on the step path.
 //! * **L3 — coordinator** (this crate): the synchronous data-parallel
 //!   trainer behind the paper's headline result — microbatching, the
-//!   all-reduce contract ([`collective`]), native optimizers ([`optim`])
-//!   with the paper's sqrt-LR/warmup rules ([`schedule`]), the calibrated
-//!   TPUv3-pod performance model ([`cluster`]), the synthetic corpus/MLM
-//!   pipeline ([`data`]), and the PJRT runtime ([`runtime`], feature
-//!   `pjrt`; an offline stub otherwise).
+//!   all-reduce contract ([`collective`]) with topology-aware pluggable
+//!   reduction schedules ([`collective::topology`]: flat ring /
+//!   hierarchical two-level / latency-optimal tree, picked per gradient
+//!   bucket under `[topology] schedule = "auto"`), native optimizers
+//!   ([`optim`]) with the paper's sqrt-LR/warmup rules ([`schedule`]),
+//!   the calibrated TPUv3-pod performance model ([`cluster`]), the
+//!   synthetic corpus/MLM pipeline ([`data`]), and the PJRT runtime
+//!   ([`runtime`], feature `pjrt`; an offline stub otherwise).
 //! * **L4 — execution engine** ([`exec`]): the layer that makes the pod
 //!   *concurrent* instead of simulated-serial — a persistent worker
 //!   thread pool, a layer-aligned bucketed all-reduce that overlaps

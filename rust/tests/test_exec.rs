@@ -93,7 +93,12 @@ fn native_serial_parallel_zero1_zero2_runs_bitwise_identical() {
     // Deliberately ragged bucket size (not a power of two, not a multiple
     // of any layer size) so bucket boundaries fall unevenly.
     let run = |mode: ExecMode| {
-        let cfg = ExecConfig { mode, workers: 4, bucket_bytes: 4444 };
+        let cfg = ExecConfig {
+            mode,
+            workers: 4,
+            bucket_bytes: 4444,
+            ..ExecConfig::default()
+        };
         let mut tr = NativeTrainer::with_exec(
             &spec,
             "lamb",

@@ -1,0 +1,107 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_*.json artifacts (JSON lines) and warn on regressions.
+
+Usage: bench_trend_diff.py PREV.json CURR.json [--warn-pct 10]
+
+Each line of either file is one JSON object with at least a "bench" and
+a "secs" field (scripts/bench_smoke.sh validates this invariant before
+the artifact is uploaded). Records are keyed by every field except the
+measurement itself ("secs") so the same (bench, mode, workers, ...) cell
+is compared across the two runs; step-time cells slower by more than
+--warn-pct percent produce a GitHub `::warning::` annotation.
+
+The diff is advisory by design: CI-runner noise makes small swings
+routine, so the script always exits 0 (the CI step is additionally
+`continue-on-error`). It exists so the perf trajectory the bench-smoke
+artifact records is actually *consumed* — a >10% jump in a step-time
+column shows up on the commit instead of only in an artifact nobody
+downloads.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    """Parse one JSON-lines bench artifact into {key: secs}."""
+    out = {}
+    try:
+        with open(path) as f:
+            lines = [l for l in f.read().splitlines() if l.strip()]
+    except OSError as e:
+        print(f"bench_trend_diff: cannot read {path}: {e}")
+        return None
+    for i, line in enumerate(lines, 1):
+        try:
+            obj = json.loads(line)
+        except ValueError as e:
+            print(f"bench_trend_diff: {path}:{i}: bad JSON ({e}); skipping")
+            continue
+        if "bench" not in obj or "secs" not in obj:
+            continue
+        secs = obj.pop("secs")
+        # Identity of the measurement cell: every non-measurement field.
+        key = tuple(sorted((k, str(v)) for k, v in obj.items()))
+        if not isinstance(secs, (int, float)) or secs < 0:
+            continue
+        out[key] = float(secs)
+    return out
+
+
+def fmt_key(key):
+    return " ".join(f"{k}={v}" for k, v in key)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("prev")
+    ap.add_argument("curr")
+    ap.add_argument("--warn-pct", type=float, default=10.0)
+    args = ap.parse_args()
+
+    prev = load(args.prev)
+    curr = load(args.curr)
+    if prev is None or curr is None or not prev:
+        # First push, expired artifact, or download failure: nothing to
+        # diff against — not an error.
+        print("bench_trend_diff: no previous measurements; skipping diff")
+        return 0
+
+    regressions = []
+    improvements = 0
+    compared = 0
+    for key, now in sorted(curr.items()):
+        was = prev.get(key)
+        if was is None:
+            continue
+        compared += 1
+        if was <= 0.0:
+            # Zero-cost cells (pure pass/fail records): nothing to diff.
+            continue
+        pct = (now - was) / was * 100.0
+        if pct > args.warn_pct:
+            regressions.append((key, was, now, pct))
+        elif pct < -args.warn_pct:
+            improvements += 1
+
+    print(
+        f"bench_trend_diff: compared {compared} cells "
+        f"({len(prev)} previous, {len(curr)} current); "
+        f"{len(regressions)} regression(s) > {args.warn_pct:.0f}%, "
+        f"{improvements} improvement(s)"
+    )
+    for key, was, now, pct in regressions:
+        msg = (
+            f"bench regression +{pct:.1f}%: {fmt_key(key)} "
+            f"({was:.6f}s -> {now:.6f}s)"
+        )
+        # GitHub annotation (shows on the commit / PR checks page).
+        print(f"::warning title=bench regression::{msg}")
+
+    # Advisory only: never fail the build on perf noise.
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
