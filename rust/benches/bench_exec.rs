@@ -1,5 +1,5 @@
-//! Exec-engine throughput: serial vs parallel vs ZeRO-1 vs ZeRO-2 step
-//! loops on the native MLP workload at increasing worker counts — the
+//! Exec-engine throughput: serial vs parallel vs ZeRO-1/2/3 step loops
+//! on the native MLP workload at increasing worker counts — the
 //! host-side analogue of Figure 8's scaling curve, and the acceptance
 //! check that the thread-pool path actually beats the serial simulation.
 //!
@@ -16,8 +16,11 @@
 //! The sweep ends with a pod-model section pricing the paper's
 //! batch-32k BERT-Large step on a 1024-chip pod (128 nodes x 8 chips):
 //! the schedule the topology picks per gradient bucket
-//! (`"kind":"bucket_schedule"`) and a flat-ring vs hierarchical vs auto
-//! step-time comparison (`"kind":"sched_compare"`).
+//! (`"kind":"bucket_schedule"`), a flat-ring vs hierarchical vs auto
+//! step-time comparison for both the zero2 and zero3 partitions
+//! (`"kind":"sched_compare"`), and the per-bucket just-in-time
+//! parameter all-gathers of the zero3 timeline
+//! (`"kind":"param_gather"`, one record per bucket and pass).
 
 use std::time::Instant;
 
@@ -78,6 +81,15 @@ fn emit_pod_schedules(json: bool) {
         SchedulePolicy::Fixed(ScheduleKind::Hierarchical);
     let t_hier = hier_only
         .step_time_bucketed_partitioned(&meta, 32_768, 128, &plan, part);
+    // ZeRO-3: the same cells for the parameter-sharded partition, plus
+    // the per-bucket just-in-time parameter gathers of its timeline.
+    let z3 = StatePartition::Zero3 { shards: 1024 };
+    let (costs_z3, _, t3_auto) =
+        hier.bucket_timeline_partitioned(&meta, 32_768, 128, &plan, z3);
+    let t3_flat =
+        flat.step_time_bucketed_partitioned(&meta, 32_768, 128, &plan, z3);
+    let t3_hier = hier_only
+        .step_time_bucketed_partitioned(&meta, 32_768, 128, &plan, z3);
     if json {
         for (b, c) in costs.iter().enumerate() {
             println!(
@@ -89,17 +101,37 @@ fn emit_pod_schedules(json: bool) {
                 c.done - c.start
             );
         }
+        // Per-bucket param-gather records of the zero3 timeline: one
+        // record per (bucket, pass), stable identity key.
+        for (b, c) in costs_z3.iter().enumerate() {
+            let g = c.gather.expect("zero3 buckets carry gather records");
+            for (pass, secs) in [
+                ("fwd", g.fwd_done - g.fwd_start),
+                ("bwd", g.bwd_done - g.bwd_start),
+            ] {
+                println!(
+                    "{{\"bench\":\"bench_exec\",\"kind\":\"param_gather\",\
+                     \"bucket\":{b},\"bytes\":{},\"pass\":\"{pass}\",\
+                     \"schedule\":\"{}\",\"secs\":{secs:.9}}}",
+                    plan.buckets[b].bytes(),
+                    g.schedule.as_str(),
+                );
+            }
+        }
         // One record per schedule with a stable identity key (only
         // "secs" varies), so the CI trend diff actually compares the
         // same cell across runs.
-        for (sched, secs) in [
-            ("flat_ring", t_flat),
-            ("hierarchical", t_hier),
-            ("auto", t_auto),
+        for (config, sched, secs) in [
+            ("bert-32k-zero2", "flat_ring", t_flat),
+            ("bert-32k-zero2", "hierarchical", t_hier),
+            ("bert-32k-zero2", "auto", t_auto),
+            ("bert-32k-zero3", "flat_ring", t3_flat),
+            ("bert-32k-zero3", "hierarchical", t3_hier),
+            ("bert-32k-zero3", "auto", t3_auto),
         ] {
             println!(
                 "{{\"bench\":\"bench_exec\",\"kind\":\"sched_compare\",\
-                 \"config\":\"bert-32k-zero2\",\"schedule\":\"{sched}\",\
+                 \"config\":\"{config}\",\"schedule\":\"{sched}\",\
                  \"secs\":{secs:.6}}}"
             );
         }
@@ -124,6 +156,16 @@ fn emit_pod_schedules(json: bool) {
             "step time: flat ring {t_flat:.4}s | hierarchical {t_hier:.4}s \
              | auto {t_auto:.4}s"
         );
+        let gather_wire: f64 = costs_z3
+            .iter()
+            .filter_map(|c| c.gather)
+            .map(|g| (g.fwd_done - g.fwd_start) + (g.bwd_done - g.bwd_start))
+            .sum();
+        println!(
+            "zero3: flat ring {t3_flat:.4}s | hierarchical {t3_hier:.4}s \
+             | auto {t3_auto:.4}s (param-gather wire {gather_wire:.4}s \
+             overlapped under fwd/bwd)"
+        );
     }
 }
 
@@ -142,9 +184,9 @@ fn main() {
             "== bench_exec: native MLP, batch {batch}, {steps} steps/mode =="
         );
         println!(
-            "{:>8} {:>10} {:>10} {:>8} {:>10} {:>8} {:>10} {:>8}",
+            "{:>8} {:>10} {:>10} {:>8} {:>10} {:>8} {:>10} {:>8} {:>10} {:>8}",
             "workers", "serial", "parallel", "speedup", "zero1", "speedup",
-            "zero2", "speedup"
+            "zero2", "speedup", "zero3", "speedup"
         );
     }
     let modes = [
@@ -152,10 +194,11 @@ fn main() {
         ExecMode::Parallel,
         ExecMode::Zero1,
         ExecMode::Zero2,
+        ExecMode::Zero3,
     ];
     let mut par_beats_serial_at_4plus = true;
     for &k in worker_counts {
-        let mut secs = [0.0f64; 4];
+        let mut secs = [0.0f64; 5];
         for (i, &mode) in modes.iter().enumerate() {
             let t = run_once(&spec, mode, k, steps, batch);
             secs[i] = t;
@@ -169,21 +212,13 @@ fn main() {
                 );
             }
         }
-        let (t_ser, t_par, t_z1, t_z2) =
-            (secs[0], secs[1], secs[2], secs[3]);
+        let (t_ser, t_par) = (secs[0], secs[1]);
         if !json {
-            println!(
-                "{:>8} {:>9.3}s {:>9.3}s {:>7.2}x {:>9.3}s {:>7.2}x \
-                 {:>9.3}s {:>7.2}x",
-                k,
-                t_ser,
-                t_par,
-                t_ser / t_par,
-                t_z1,
-                t_ser / t_z1,
-                t_z2,
-                t_ser / t_z2
-            );
+            print!("{:>8} {:>9.3}s", k, t_ser);
+            for &t in &secs[1..] {
+                print!(" {:>9.3}s {:>7.2}x", t, t_ser / t);
+            }
+            println!();
         }
         if k >= 4 && t_par >= t_ser {
             par_beats_serial_at_4plus = false;

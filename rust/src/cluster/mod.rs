@@ -9,13 +9,14 @@
 //! authors' testbed would.
 
 use crate::collective::{CollOp, RingCost, ScheduleKind, Topology};
-use crate::exec::BucketPlan;
+use crate::exec::{stage_state_bytes, BucketPlan};
 use crate::manifest::ModelMeta;
 
-/// How optimizer state (and, at stage 2, the gradient buffers) is laid
-/// out across the data-parallel ranks — the memory-accounting side of
-/// the exec engine's modes, and the selector for the communication
-/// pattern [`Pod::bucket_timeline_partitioned`] prices.
+/// How optimizer state (and, at stage 2, the gradient buffers; at stage
+/// 3, the parameters themselves) is laid out across the data-parallel
+/// ranks — the memory-accounting side of the exec engine's modes, and
+/// the selector for the communication pattern
+/// [`Pod::bucket_timeline_partitioned`] prices.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StatePartition {
     /// Pure data parallelism: params, grads and both Adam/LAMB moments
@@ -28,6 +29,71 @@ pub enum StatePartition {
     /// moments sharded 1/shards per chip (the gradient all-reduce becomes
     /// a reduce-scatter; updated params are all-gathered after the step).
     Zero2 { shards: usize },
+    /// ZeRO-3 over `shards` ranks: params, gradients and moments all
+    /// sharded 1/shards per chip. Each bucket's parameters are
+    /// all-gathered just-in-time before its forward/backward segment and
+    /// dropped after use, so the only persistent parameter bytes are the
+    /// owned shards; stage 2's trailing whole-vector parameter all-gather
+    /// disappears (updated params stay sharded at their owners).
+    Zero3 { shards: usize },
+}
+
+impl StatePartition {
+    /// The ZeRO stage this partition implies (the row selector of
+    /// `exec::stage_state_bytes`, the shared 4/8/16-bytes-per-param
+    /// table).
+    pub fn stage(&self) -> u8 {
+        match self {
+            StatePartition::Replicated => 0,
+            StatePartition::Zero1 { .. } => 1,
+            StatePartition::Zero2 { .. } => 2,
+            StatePartition::Zero3 { .. } => 3,
+        }
+    }
+
+    /// Rank count the sharded state is split over (1 for `Replicated`).
+    pub fn shards(&self) -> usize {
+        match self {
+            StatePartition::Replicated => 1,
+            StatePartition::Zero1 { shards }
+            | StatePartition::Zero2 { shards }
+            | StatePartition::Zero3 { shards } => (*shards).max(1),
+        }
+    }
+}
+
+/// ZeRO-3 prefetch window, in buckets: a bucket's just-in-time parameter
+/// all-gather may run at most this many buckets ahead of the pass
+/// consuming it, so at any instant a worker holds at most ~(window + 1)
+/// buckets of gathered parameters beyond its owned shards. This is what
+/// keeps `StatePartition::Zero3`'s ~1/k accounting and the priced
+/// timeline mutually consistent: the transient residency the timeline
+/// creates is O(bucket_bytes), not O(model).
+pub const PREFETCH_BUCKETS: usize = 2;
+
+/// Canonical bucket count the model-level ZeRO-3 memory accounting
+/// sizes its transient gather reserve on — the 64-bucket partition
+/// every pricing table, bench and example in this repo uses
+/// (`BucketPlan::even(n, 64)`). Plan-exact per-worker numbers come from
+/// `exec::Zero3State` instead; this constant only feeds
+/// [`Pod::state_bytes_partitioned`], which has no plan in scope.
+pub const ZERO3_ACCOUNTING_BUCKETS: usize = 64;
+
+/// Wire schedule of one bucket's just-in-time parameter all-gathers
+/// under ZeRO-3 (seconds from step start): the forward-path gather
+/// before the bucket's forward segment and the re-gather before its
+/// backward segment (params are freed after each use, so backward pays
+/// the gather again — the memory-for-time trade).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ParamGather {
+    /// Forward-path gather (start, done) on the wire.
+    pub fwd_start: f64,
+    pub fwd_done: f64,
+    /// Backward-path re-gather (start, done) on the wire.
+    pub bwd_start: f64,
+    pub bwd_done: f64,
+    /// Schedule the topology picked for this bucket's gathers.
+    pub schedule: ScheduleKind,
 }
 
 /// Per-bucket simulated schedule entry of one overlapped step (seconds
@@ -44,6 +110,9 @@ pub struct BucketCost {
     /// Which reduction schedule the topology chose for this bucket
     /// (`auto` policies may pick differently per bucket size).
     pub schedule: ScheduleKind,
+    /// ZeRO-3 only: the bucket's just-in-time parameter all-gathers
+    /// (forward + backward re-gather). `None` for stages < 3.
+    pub gather: Option<ParamGather>,
 }
 
 /// One pod slice.
@@ -132,25 +201,62 @@ impl Pod {
 
     /// Per-chip state bytes under the given partition scheme. ZeRO-1
     /// keeps params (4 B) and grads (4 B) replicated but holds only
-    /// 1/shards of the two moment buffers (8 B combined). ZeRO-2
-    /// additionally shards the gradient buffer (4 B), leaving only the
-    /// parameters (4 B) replicated.
+    /// 1/shards of the two moment buffers (8 B combined); ZeRO-2
+    /// additionally shards the gradient buffer (4 B); ZeRO-3 shards the
+    /// parameters too, leaving nothing replicated. The arithmetic is the
+    /// shared stage table [`crate::exec::stage_state_bytes`] — one row
+    /// per stage, used by both this model-level accounting and the exec
+    /// shards' plan-exact per-worker shares.
+    ///
+    /// ZeRO-3 additionally reserves the transient gathered-view
+    /// residency its just-in-time pipeline needs:
+    /// `PREFETCH_BUCKETS + 1` buckets of parameters (in use + in
+    /// flight), sized on the canonical
+    /// [`ZERO3_ACCOUNTING_BUCKETS`]-bucket partition the pricing tables
+    /// use. Without this term the batch cap would credit parameter
+    /// bytes as freed that the priced timeline's own residency window
+    /// still occupies. A single shard gathers nothing (everything is
+    /// local), so the reserve vanishes at `shards <= 1` and every stage
+    /// degenerates to the same replicated footprint.
     pub fn state_bytes_partitioned(
         model: &ModelMeta,
         part: StatePartition,
     ) -> usize {
         let n = model.total_params;
-        match part {
-            StatePartition::Replicated => n * 16,
-            StatePartition::Zero1 { shards } => {
-                let k = shards.max(1);
-                n * 8 + (n * 8 + k - 1) / k
-            }
-            StatePartition::Zero2 { shards } => {
-                let k = shards.max(1);
-                n * 4 + (n * 12 + k - 1) / k
-            }
+        let canonical = (n * 4 + ZERO3_ACCOUNTING_BUCKETS - 1)
+            / ZERO3_ACCOUNTING_BUCKETS;
+        Self::state_bytes_with_gather_reserve(n, part, canonical)
+    }
+
+    /// [`Self::state_bytes_partitioned`] with the ZeRO-3 gather reserve
+    /// sized on the *actual* bucket partition (its largest bucket)
+    /// instead of the canonical plan — use this whenever a plan is in
+    /// scope: a coarse partition (few, large buckets) holds much more
+    /// transient parameter data per window slot, and the plan-less
+    /// accounting cannot see that.
+    pub fn state_bytes_planned(
+        model: &ModelMeta,
+        part: StatePartition,
+        plan: &BucketPlan,
+    ) -> usize {
+        let bucket =
+            plan.buckets.iter().map(|bk| bk.bytes()).max().unwrap_or(0);
+        Self::state_bytes_with_gather_reserve(model.total_params, part, bucket)
+    }
+
+    /// Shared body of the two accountings above: the stage table plus,
+    /// for ZeRO-3 over more than one shard, `PREFETCH_BUCKETS + 1`
+    /// windows of `bucket_bytes` transient gathered parameters.
+    fn state_bytes_with_gather_reserve(
+        n: usize,
+        part: StatePartition,
+        bucket_bytes: usize,
+    ) -> usize {
+        let mut bytes = stage_state_bytes(part.stage(), n, part.shards());
+        if matches!(part, StatePartition::Zero3 { .. }) && part.shards() > 1 {
+            bytes += (PREFETCH_BUCKETS + 1) * bucket_bytes;
         }
+        bytes
     }
 
     /// Largest per-chip microbatch for `seq` (the paper's "memory limit of
@@ -179,7 +285,10 @@ impl Pod {
     }
 
     /// Largest global batch under a state-partition scheme — the memory
-    /// accounting path behind the exec engine's ZeRO-1 mode.
+    /// accounting path behind the exec engine's ZeRO modes. ZeRO-3's
+    /// transient gather window is sized on the canonical plan
+    /// ([`ZERO3_ACCOUNTING_BUCKETS`]); prefer [`Self::max_batch_planned`]
+    /// when the actual bucket partition is in scope.
     pub fn max_batch(
         &self,
         model: &ModelMeta,
@@ -187,6 +296,23 @@ impl Pod {
         part: StatePartition,
     ) -> usize {
         self.max_microbatch_partitioned(model, seq, part) * self.chips
+    }
+
+    /// [`Self::max_batch`] with the ZeRO-3 gather reserve sized on the
+    /// actual bucket partition ([`Self::state_bytes_planned`]): a coarse
+    /// plan's larger transient window lowers the cap the plan-less
+    /// accounting would report.
+    pub fn max_batch_planned(
+        &self,
+        model: &ModelMeta,
+        seq: usize,
+        part: StatePartition,
+        plan: &BucketPlan,
+    ) -> usize {
+        let free = self
+            .hbm_bytes
+            .saturating_sub(Self::state_bytes_planned(model, part, plan));
+        free / Self::act_bytes_per_seq(model, seq).max(1) * self.chips
     }
 
     /// Simulated time for one synchronous data-parallel step at
@@ -271,6 +397,14 @@ impl Pod {
     ///     `t_gather` and the forward stalled to `max(t_fwd, t_gather)`;
     ///     nothing trails the step. Strictly cheaper than the exposed
     ///     variant whenever there is any forward compute to hide under.
+    /// * `Zero3`: the parameters themselves are sharded, so each bucket
+    ///   pays a just-in-time parameter all-gather before its *forward*
+    ///   segment and a re-gather before its *backward* segment (params
+    ///   are freed after each use), recorded in [`BucketCost::gather`];
+    ///   the gradient buckets reduce-scatter exactly as in `Zero2`, and
+    ///   stage 2's trailing whole-vector all-gather disappears (updated
+    ///   params stay sharded at their owners). See [`Self::zero3_timeline`]
+    ///   for the wire model.
     pub fn bucket_timeline_partitioned(
         &self,
         model: &ModelMeta,
@@ -282,6 +416,9 @@ impl Pod {
         let compute = self.compute_time(model, global_batch, seq);
         let t_fwd = compute / 3.0;
         let t_bwd = compute - t_fwd;
+        if matches!(part, StatePartition::Zero3 { .. }) {
+            return self.zero3_timeline(plan, compute, t_fwd, t_bwd);
+        }
         let n = plan.n.max(1) as f64;
         let zero2 = matches!(part, StatePartition::Zero2 { .. });
         let pipelined = zero2 && self.topology.cross_step;
@@ -310,7 +447,8 @@ impl Pod {
             let ready = fwd_end + t_bwd * ((n - bk.start as f64) / n);
             let start = ready.max(free);
             let done = start + comm;
-            costs[b] = BucketCost { ready, start, done, schedule: kind };
+            costs[b] =
+                BucketCost { ready, start, done, schedule: kind, gather: None };
             free = done;
         }
         let mut step = if pipelined {
@@ -324,6 +462,130 @@ impl Pod {
             step += gather;
         }
         (costs, compute, step)
+    }
+
+    /// ZeRO-3 wire model: a serial interconnect with **windowed
+    /// prefetch-priority gathers** — parameter all-gathers are issued in
+    /// need order ahead of the pass consuming them, but never more than
+    /// [`PREFETCH_BUCKETS`] buckets ahead, so the transient parameter
+    /// residency the gathers create stays bounded by a few buckets (the
+    /// consistency condition behind `StatePartition::Zero3`'s ~1/k
+    /// accounting in [`Pod::max_batch`]). Gradient reduce-scatters block
+    /// nothing within the step, so each is scheduled behind the *next*
+    /// pending gather (prefetch-priority FIFO).
+    ///
+    /// * Forward: buckets are consumed in ascending index order; bucket
+    ///   `b`'s gather may not start before the segment of bucket
+    ///   `b - PREFETCH_BUCKETS` retires (freeing its params), and the
+    ///   segment (a `len_b / n` slice of `t_fwd`) cannot start before
+    ///   its gather completes. With `topology.cross_step` the first
+    ///   window of buckets arrives prefetched from the previous step
+    ///   (steady state, within the same residency window), so their
+    ///   segments never stall — but their wire slots are still charged
+    ///   at the start of this step, standing for the *next* step's
+    ///   carried window (same bytes by symmetry), so wire time is
+    ///   conserved across steps, exactly like the stage-2 cross-step
+    ///   model.
+    /// * Backward: buckets are consumed in descending order; each pays a
+    ///   re-gather before its segment (params were freed after their
+    ///   forward use, so the re-gather may start no earlier than the
+    ///   bucket's forward segment end, and no more than the window ahead
+    ///   of the backward pass). After each gather the wire runs the
+    ///   youngest ready reduce-scatter, so the scatters hide in the
+    ///   gaps between gathers under backward compute.
+    /// * The step ends at `max(backward end, last reduce-scatter)` — no
+    ///   trailing parameter all-gather: owners step their shards locally
+    ///   and the next step's forward gathers pick up the new values.
+    fn zero3_timeline(
+        &self,
+        plan: &BucketPlan,
+        compute: f64,
+        t_fwd: f64,
+        t_bwd: f64,
+    ) -> (Vec<BucketCost>, f64, f64) {
+        let n = plan.n.max(1) as f64;
+        let nb = plan.len();
+        // Degenerate empty partition: nothing to gather or reduce, like
+        // the other partition paths (which just skip their loops).
+        if nb == 0 {
+            return (Vec::new(), compute, compute);
+        }
+        let k = self.chips;
+        let w = PREFETCH_BUCKETS;
+        let mut gathers = vec![ParamGather::default(); nb];
+        let mut free = 0.0f64;
+        // ---- forward: windowed JIT gathers ascending, segments stall
+        // on them ----
+        let mut fwd_done = vec![0.0f64; nb];
+        let mut fwd_cursor = 0.0f64;
+        for b in 0..nb {
+            let bk = &plan.buckets[b];
+            let (kind, ag) =
+                self.topology.pick(CollOp::AllGather, k, bk.bytes());
+            let earliest = if b >= w { fwd_done[b - w] } else { 0.0 };
+            let g_start = free.max(earliest);
+            let g_done = g_start + ag;
+            free = g_done;
+            gathers[b].fwd_start = g_start;
+            gathers[b].fwd_done = g_done;
+            gathers[b].schedule = kind;
+            // cross_step: the first window arrived prefetched from the
+            // previous step, so its segments do not stall; the wire slot
+            // just charged stands for the next step's carried window
+            // (wire time conserved across steps).
+            let seg_start = if self.topology.cross_step && b < w {
+                fwd_cursor
+            } else {
+                fwd_cursor.max(g_done)
+            };
+            fwd_cursor = seg_start + t_fwd * (bk.len() as f64 / n);
+            fwd_done[b] = fwd_cursor;
+        }
+        let fwd_end = fwd_cursor;
+        // ---- backward: windowed re-gathers descending, reduce-scatters
+        // interleaved behind them ----
+        let mut bwd_cursor = fwd_end;
+        let mut ready = vec![0.0f64; nb];
+        let mut costs = vec![BucketCost::default(); nb];
+        let mut sched_rs =
+            |b: usize, ready: &[f64], free: &mut f64, gathers: &[ParamGather]| {
+                let bk = &plan.buckets[b];
+                let (kind, rs) =
+                    self.topology.pick(CollOp::ReduceScatter, k, bk.bytes());
+                let start = ready[b].max(*free);
+                let done = start + rs;
+                *free = done;
+                costs[b] = BucketCost {
+                    ready: ready[b],
+                    start,
+                    done,
+                    schedule: kind,
+                    gather: Some(gathers[b]),
+                };
+            };
+        for b in (0..nb).rev() {
+            let bk = &plan.buckets[b];
+            let (_, ag) = self.topology.pick(CollOp::AllGather, k, bk.bytes());
+            // Freed after its forward use; re-gather at most `w` buckets
+            // ahead of the backward pass.
+            let mut earliest = fwd_done[b];
+            if b + w < nb {
+                earliest = earliest.max(ready[b + w]);
+            }
+            let g_start = free.max(earliest);
+            let g_done = g_start + ag;
+            free = g_done;
+            gathers[b].bwd_start = g_start;
+            gathers[b].bwd_done = g_done;
+            let seg_start = bwd_cursor.max(g_done);
+            bwd_cursor = seg_start + t_bwd * (bk.len() as f64 / n);
+            ready[b] = bwd_cursor;
+            if b + 1 < nb {
+                sched_rs(b + 1, &ready, &mut free, &gathers);
+            }
+        }
+        sched_rs(0, &ready, &mut free, &gathers);
+        (costs, compute, bwd_cursor.max(free))
     }
 
     /// Step time with the all-reduce priced from the actual bucket
@@ -675,6 +937,7 @@ mod tests {
             StatePartition::Replicated,
             StatePartition::Zero1 { shards: 1024 },
             StatePartition::Zero2 { shards: 1024 },
+            StatePartition::Zero3 { shards: 1024 },
         ] {
             let t_flat = flat
                 .step_time_bucketed_partitioned(&m, 32_768, 128, &plan, part);
@@ -772,6 +1035,224 @@ mod tests {
             }
             prev_done = c.done;
             assert!(c.done <= total + 1e-12);
+        }
+    }
+
+    /// ISSUE 4 acceptance: ZeRO-3 sheds the last replicated term (the
+    /// ~4/k params left after ZeRO-2), so `max_batch` strictly exceeds
+    /// ZeRO-2 for BERT-Large on the 1024-chip pod, and the per-chip
+    /// state approaches zero at pod scale. Degenerate single-shard
+    /// partitions still reduce to replicated exactly.
+    #[test]
+    fn zero3_sharding_beats_zero2_memory_strictly() {
+        let m = bert_large();
+        let pod = Pod::tpu_v3(1024);
+        let k = 1024;
+        let rep = Pod::state_bytes_partitioned(&m, StatePartition::Replicated);
+        let z2 = Pod::state_bytes_partitioned(
+            &m,
+            StatePartition::Zero2 { shards: k },
+        );
+        let z3 = Pod::state_bytes_partitioned(
+            &m,
+            StatePartition::Zero3 { shards: k },
+        );
+        assert!(z3 < z2, "{z3} vs {z2}");
+        // everything shards: z3 is the 1/k share plus the transient
+        // gather window (PREFETCH_BUCKETS + 1 canonical buckets), within
+        // ceil-rounding.
+        let reserve = (PREFETCH_BUCKETS + 1)
+            * ((m.total_params * 4 + ZERO3_ACCOUNTING_BUCKETS - 1)
+                / ZERO3_ACCOUNTING_BUCKETS);
+        assert!(z3 <= rep / k + reserve + 16, "{z3} vs {rep}/{k} + {reserve}");
+        assert!(z3 > rep / k, "{z3} must include the gather reserve");
+        for &seq in &[128usize, 512] {
+            let cap_z2 =
+                pod.max_batch(&m, seq, StatePartition::Zero2 { shards: k });
+            let cap_z3 =
+                pod.max_batch(&m, seq, StatePartition::Zero3 { shards: k });
+            assert!(cap_z3 > cap_z2, "seq {seq}: {cap_z3} vs {cap_z2}");
+        }
+        assert_eq!(
+            Pod::state_bytes_partitioned(
+                &m,
+                StatePartition::Zero3 { shards: 1 }
+            ),
+            rep
+        );
+        // Plan-aware accounting: the gather reserve follows the actual
+        // partition's largest bucket, so a coarse plan (few, huge
+        // buckets) reports a strictly lower cap than a fine one, the
+        // canonical 64-bucket plan reproduces the plan-less accounting
+        // exactly (n divides evenly), and the degenerate monolithic plan
+        // reserves the whole parameter vector per window slot.
+        let z3 = StatePartition::Zero3 { shards: k };
+        let fine = BucketPlan::even(m.total_params, 64);
+        let coarse = BucketPlan::even(m.total_params, 4);
+        assert_eq!(
+            Pod::state_bytes_planned(&m, z3, &fine),
+            Pod::state_bytes_partitioned(&m, z3)
+        );
+        assert!(
+            Pod::state_bytes_planned(&m, z3, &coarse)
+                > Pod::state_bytes_planned(&m, z3, &fine)
+        );
+        let cap_fine = pod.max_batch_planned(&m, 512, z3, &fine);
+        let cap_coarse = pod.max_batch_planned(&m, 512, z3, &coarse);
+        assert_eq!(cap_fine, pod.max_batch(&m, 512, z3));
+        assert!(cap_coarse < cap_fine, "{cap_coarse} vs {cap_fine}");
+        // Non-zero3 partitions ignore the plan entirely.
+        for part in [
+            StatePartition::Replicated,
+            StatePartition::Zero1 { shards: k },
+            StatePartition::Zero2 { shards: k },
+        ] {
+            assert_eq!(
+                Pod::state_bytes_planned(&m, part, &coarse),
+                Pod::state_bytes_partitioned(&m, part)
+            );
+        }
+    }
+
+    /// The ZeRO-3 timeline: internally consistent (gathers and
+    /// reduce-scatters serialize on the wire, segments never start
+    /// before their gather), param all-gathers overlap under compute
+    /// (the step costs far less than the unoverlapped sum), no trailing
+    /// whole-vector gather, and the single-chip pod pays exactly zero
+    /// communication.
+    #[test]
+    fn zero3_timeline_overlaps_gathers_under_compute() {
+        let m = bert_large();
+        let pod = Pod::tpu_v3_nodes(1024, 8);
+        let plan = even_plan(m.total_params, 64);
+        let z3 = StatePartition::Zero3 { shards: 1024 };
+        let (costs, compute, step) =
+            pod.bucket_timeline_partitioned(&m, 32_768, 128, &plan, z3);
+        // Wire serialization and per-bucket consistency.
+        let mut wire = 0.0f64; // total wire occupancy
+        let mut prev_fwd_done = 0.0f64;
+        for c in &costs {
+            let g = c.gather.expect("zero3 buckets carry gather records");
+            assert!(g.fwd_start <= g.fwd_done && g.bwd_start <= g.bwd_done);
+            assert!(c.ready <= c.start && c.start <= c.done);
+            // forward gathers run ascending on the wire
+            assert!(g.fwd_start >= prev_fwd_done - 1e-12);
+            prev_fwd_done = g.fwd_done;
+            // re-gathers precede the bucket's grad readiness
+            assert!(g.bwd_done <= c.ready + 1e-12);
+            assert!(c.done <= step + 1e-12);
+            wire += (g.fwd_done - g.fwd_start)
+                + (g.bwd_done - g.bwd_start)
+                + (c.done - c.start);
+        }
+        // Overlap: the step beats the no-overlap bound (gathers hide
+        // under compute where they can; at this batch the wire is the
+        // bottleneck and the remainder is exposed) and never beats the
+        // compute/wire floors.
+        assert!(step < compute + wire, "{step} vs {compute} + {wire}");
+        assert!(step >= compute - 1e-12);
+        assert!(step >= wire - 1e-12);
+        assert!(step - compute > 0.0, "exposed remainder must be positive");
+        // No trailing gather: the last wire event ends at the step end.
+        let last_done = costs
+            .iter()
+            .map(|c| c.done)
+            .fold(0.0f64, f64::max);
+        assert!(step >= last_done - 1e-12);
+        // cross_step prefetch never hurts: the wire schedule is
+        // identical (conserved — the charged slots stand for the next
+        // step's carried window), only the first window's segments stop
+        // stalling, so every compute event moves weakly earlier.
+        let mut piped = pod;
+        piped.topology.cross_step = true;
+        let (costs_piped, _, step_piped) =
+            piped.bucket_timeline_partitioned(&m, 32_768, 128, &plan, z3);
+        assert!(step_piped <= step + 1e-12, "{step_piped} vs {step}");
+        assert!(step_piped >= compute - 1e-12);
+        // Wire-time conservation: cross_step reschedules nothing on the
+        // wire, it only un-stalls the first window's segments — the
+        // summed wire occupancy must match the JIT run exactly.
+        let wire_piped: f64 = costs_piped
+            .iter()
+            .map(|c| {
+                let g = c.gather.unwrap();
+                (g.fwd_done - g.fwd_start)
+                    + (g.bwd_done - g.bwd_start)
+                    + (c.done - c.start)
+            })
+            .sum();
+        assert!(
+            (wire_piped - wire).abs() <= 1e-12,
+            "{wire_piped} vs {wire}"
+        );
+        // ...and is strictly cheaper in a compute-rich regime (seq 512:
+        // the forward has room to hide the gathers, so prefetching them
+        // across the step boundary removes the bucket-0 stall).
+        let (_, _, jit512) =
+            pod.bucket_timeline_partitioned(&m, 32_768, 512, &plan, z3);
+        let (_, _, piped512) =
+            piped.bucket_timeline_partitioned(&m, 32_768, 512, &plan, z3);
+        assert!(piped512 < jit512, "{piped512} vs {jit512}");
+        // Single chip: zero communication, step == compute (ulp slack:
+        // the per-bucket fwd/bwd slices re-sum to compute).
+        let one = Pod::tpu_v3(1);
+        let (costs1, compute1, step1) = one.bucket_timeline_partitioned(
+            &m,
+            32,
+            128,
+            &plan,
+            StatePartition::Zero3 { shards: 1 },
+        );
+        for c in &costs1 {
+            let g = c.gather.unwrap();
+            assert_eq!(c.done - c.start, 0.0);
+            assert_eq!(g.fwd_done - g.fwd_start, 0.0);
+            assert_eq!(g.bwd_done - g.bwd_start, 0.0);
+        }
+        assert!((step1 - compute1).abs() <= 1e-12 * compute1);
+    }
+
+    /// In compute-rich regimes ZeRO-3's overlapped forward/backward
+    /// gathers beat ZeRO-2's fully exposed trailing all-gather: on the
+    /// 64-chip slice (the zero2 pricing test's configuration) and at
+    /// pod scale with seq-512 compute. Stages below 3 carry no gather
+    /// records.
+    #[test]
+    fn zero3_beats_exposed_zero2_when_compute_rich() {
+        let m = bert_large();
+        let plan = even_plan(m.total_params, 64);
+        let pod = Pod::tpu_v3(64);
+        let z2 = StatePartition::Zero2 { shards: 64 };
+        let z3 = StatePartition::Zero3 { shards: 64 };
+        let t_z2 =
+            pod.step_time_bucketed_partitioned(&m, 8192, 128, &plan, z2);
+        let t_z3 =
+            pod.step_time_bucketed_partitioned(&m, 8192, 128, &plan, z3);
+        assert!(t_z3 < t_z2, "{t_z3} vs {t_z2}");
+        let hier = Pod::tpu_v3_nodes(1024, 8);
+        let t_z2 = hier.step_time_bucketed_partitioned(
+            &m,
+            32_768,
+            512,
+            &plan,
+            StatePartition::Zero2 { shards: 1024 },
+        );
+        let t_z3 = hier.step_time_bucketed_partitioned(
+            &m,
+            32_768,
+            512,
+            &plan,
+            StatePartition::Zero3 { shards: 1024 },
+        );
+        assert!(t_z3 < t_z2, "{t_z3} vs {t_z2}");
+        for part in [
+            StatePartition::Replicated,
+            StatePartition::Zero1 { shards: 1024 },
+            StatePartition::Zero2 { shards: 1024 },
+        ] {
+            let (costs, _, _) = hier
+                .bucket_timeline_partitioned(&m, 32_768, 128, &plan, part);
+            assert!(costs.iter().all(|c| c.gather.is_none()), "{part:?}");
         }
     }
 

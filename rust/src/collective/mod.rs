@@ -117,7 +117,11 @@ pub fn reduce_scatter_mean(
 /// `shards` is a list of `(start_offset, chunk)` pairs; each chunk is
 /// copied into `out[start..start + chunk.len()]`. Chunks must not exceed
 /// `out`; overlapping chunks are allowed but last-writer-wins (the exec
-/// engine always passes a disjoint bucket partition).
+/// engine always passes a disjoint bucket partition). This is also the
+/// numeric half of ZeRO-3's just-in-time parameter broadcast: gathering
+/// one bucket's owner shard into the transient view is a single-pair
+/// call (`exec::Zero3State::gather_bucket`), priced per bucket by the
+/// topology's `CollOp::AllGather`.
 pub fn all_gather(shards: &[(usize, &[f32])], out: &mut [f32]) {
     for &(start, chunk) in shards {
         assert!(

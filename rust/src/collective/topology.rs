@@ -28,9 +28,13 @@
 //!   leader chain folding node groups in rank order performs exactly
 //!   this op sequence anyway, so there is nothing schedule-specific to
 //!   stage on the host; the dispatch seam exists to carry the chosen
-//!   kind (and node grouping) alongside the data path — the hook where
-//!   genuinely staged execution (ZeRO-3's per-node just-in-time
-//!   parameter gathers) will plug in.
+//!   kind (and node grouping) alongside the data path. ZeRO-3's staged
+//!   execution plugs in exactly here: each parameter bucket's
+//!   just-in-time all-gather is priced per bucket through
+//!   [`Topology::pick`]`(CollOp::AllGather, ...)` before its
+//!   forward/backward segment (`cluster::Pod`'s zero3 timeline), while
+//!   the numeric gather stays the schedule-invariant
+//!   [`ReduceSchedule::all_gather`] copy.
 //!
 //! ## Cost models
 //!

@@ -233,10 +233,10 @@ pub struct TrainConfig {
     pub chips: usize,
     pub step_path: StepPath,
     // execution engine ([exec] section)
-    /// serial | parallel | zero1 | zero2 — how the step loop drives the
-    /// workers. `[exec] zero_stage = 0|1|2` is an equivalent spelling
-    /// (0 keeps the non-ZeRO mode, 1 → zero1, 2 → zero2) and wins when
-    /// both keys are given.
+    /// serial | parallel | zero1 | zero2 | zero3 — how the step loop
+    /// drives the workers. `[exec] zero_stage = 0|1|2|3` is an
+    /// equivalent spelling (0 keeps the non-ZeRO mode, 1 → zero1,
+    /// 2 → zero2, 3 → zero3) and wins when both keys are given.
     pub exec_mode: crate::exec::ExecMode,
     /// Gradient-phase worker count; 0 = auto (min(chips, microbatches)).
     pub exec_workers: usize,
@@ -334,7 +334,7 @@ impl TrainConfig {
             c.exec_mode = crate::exec::ExecMode::parse(&v)
                 .ok_or_else(|| anyhow!(
                     "unknown exec mode {v:?} \
-                     (expected serial|parallel|zero1|zero2)"
+                     (expected serial|parallel|zero1|zero2|zero3)"
                 ))?;
         }
         if let Some(raw) = doc.get("exec.zero_stage") {
@@ -342,19 +342,24 @@ impl TrainConfig {
             // Hard-error on a mistyped value (float/string/bool) instead
             // of silently running the wrong mode, mirroring exec.mode.
             let v = raw.as_i64().ok_or_else(|| {
-                anyhow!("exec.zero_stage must be an integer 0|1|2 (got {raw:?})")
+                anyhow!(
+                    "exec.zero_stage must be an integer 0|1|2|3 (got {raw:?})"
+                )
             })?;
             c.exec_mode = match v {
                 // Stage 0 keeps a non-ZeRO drive: downgrade a ZeRO mode
                 // to the plain pool, leave serial/parallel untouched.
                 0 => match c.exec_mode {
-                    ExecMode::Zero1 | ExecMode::Zero2 => ExecMode::Parallel,
+                    ExecMode::Zero1 | ExecMode::Zero2 | ExecMode::Zero3 => {
+                        ExecMode::Parallel
+                    }
                     other => other,
                 },
                 1 => ExecMode::Zero1,
                 2 => ExecMode::Zero2,
+                3 => ExecMode::Zero3,
                 other => bail!(
-                    "exec.zero_stage must be 0, 1 or 2 (got {other})"
+                    "exec.zero_stage must be 0, 1, 2 or 3 (got {other})"
                 ),
             };
         }
@@ -573,12 +578,15 @@ betas = [0.9, 0.999]
         };
         assert_eq!(stage("1").unwrap(), ExecMode::Zero1);
         assert_eq!(stage("2").unwrap(), ExecMode::Zero2);
+        assert_eq!(stage("3").unwrap(), ExecMode::Zero3);
         // stage 0 on the default (serial) config keeps serial
         assert_eq!(stage("0").unwrap(), ExecMode::Serial);
-        assert!(stage("3").is_err());
+        assert!(stage("4").is_err());
         // mistyped values are errors, not silently-ignored keys
         assert!(stage("2.0").is_err());
+        assert!(stage("3.0").is_err());
         assert!(stage("\"2\"").is_err());
+        assert!(stage("\"3\"").is_err());
         assert!(stage("true").is_err());
         // zero_stage wins over exec.mode when both are given
         let c = TrainConfig::load(
@@ -595,19 +603,25 @@ betas = [0.9, 0.999]
         let c = TrainConfig::load(
             None,
             &[
-                ("exec.mode".into(), "\"zero2\"".into()),
+                ("exec.mode".into(), "\"zero3\"".into()),
                 ("exec.zero_stage".into(), "0".into()),
             ],
         )
         .unwrap();
         assert_eq!(c.exec_mode, ExecMode::Parallel);
-        // "zero2" parses as a plain mode string too
+        // "zero2"/"zero3" parse as plain mode strings too
         let c = TrainConfig::load(
             None,
             &[("exec.mode".into(), "\"zero2\"".into())],
         )
         .unwrap();
         assert_eq!(c.exec_mode, ExecMode::Zero2);
+        let c = TrainConfig::load(
+            None,
+            &[("exec.mode".into(), "\"zero3\"".into())],
+        )
+        .unwrap();
+        assert_eq!(c.exec_mode, ExecMode::Zero3);
     }
 
     #[test]

@@ -27,6 +27,7 @@ use crate::config::{StepPath, TrainConfig};
 use crate::data::{Batch, Corpus, MlmConfig, MlmGenerator};
 use crate::exec::{
     bucketed_reduce_with, BucketPlan, ExecMode, Zero1State, Zero2State,
+    Zero3State,
 };
 use crate::manifest::{ArtifactKind, Manifest, ModelMeta};
 use crate::metrics::{DivergenceDetector, RunLog, StepComm, StepRecord};
@@ -90,6 +91,13 @@ pub struct BertTrainer<'e> {
     /// `Optimizer::step_range`, parameters all-gathered. Takes precedence
     /// over `opt` when present.
     zero2: Option<Zero2State>,
+    /// ZeRO-3 sharded step (exec mode `zero3` / `zero_stage = 3`): the
+    /// persistent parameters are this state's owner shards; each step
+    /// gathers them just-in-time into the transient `params` view
+    /// (bitwise a no-op on the shared buffer, priced per bucket by the
+    /// pod's zero3 timeline), owners step via `step_range` and write
+    /// their shards back. Takes precedence over `opt` when present.
+    zero3: Option<Zero3State>,
     /// Per-worker gradient accumulators (bucketed modes; stage-sized).
     worker_grads: Vec<Vec<f32>>,
     // flat state
@@ -171,6 +179,22 @@ impl<'e> BertTrainer<'e> {
         } else {
             None
         };
+        let zero3 = if cfg.exec_mode == ExecMode::Zero3 {
+            Some(
+                Zero3State::build(
+                    &cfg.optimizer,
+                    &plan,
+                    &ps.flat,
+                    &plan_segs,
+                    hyper,
+                )
+                .with_context(|| {
+                    format!("zero3 optimizer {}", cfg.optimizer)
+                })?,
+            )
+        } else {
+            None
+        };
         let corpus = Corpus::new(meta.vocab);
         Ok(BertTrainer {
             engine,
@@ -182,6 +206,7 @@ impl<'e> BertTrainer<'e> {
             reduce,
             zero1,
             zero2,
+            zero3,
             worker_grads: Vec::new(),
             params: ps.flat,
             m: vec![0.0; n],
@@ -273,12 +298,17 @@ impl<'e> BertTrainer<'e> {
         // bucketed modes re-price the step from the simulated per-bucket
         // schedule (communication overlapped under backward), with the
         // collective pattern picked by the ZeRO stage: all-reduce per
-        // bucket (dense / zero1), or reduce-scatter per bucket plus one
-        // exposed parameter all-gather (zero2). The fused single-artifact
-        // path has no gradient exchange to bucket, so it always uses the
-        // legacy pricing — and it cannot honor ZeRO sharding (the
-        // artifact applies the dense optimizer internally).
-        if fused_exe.is_some() && (self.zero1.is_some() || self.zero2.is_some())
+        // bucket (dense / zero1), reduce-scatter per bucket plus one
+        // exposed parameter all-gather (zero2), or just-in-time per-bucket
+        // parameter gathers before forward/backward plus the
+        // reduce-scatter and no trailing gather (zero3). The fused
+        // single-artifact path has no gradient exchange to bucket, so it
+        // always uses the legacy pricing — and it cannot honor ZeRO
+        // sharding (the artifact applies the dense optimizer internally).
+        if fused_exe.is_some()
+            && (self.zero1.is_some()
+                || self.zero2.is_some()
+                || self.zero3.is_some())
         {
             bail!(
                 "step_path = fused is incompatible with exec.mode = {} \
@@ -294,6 +324,9 @@ impl<'e> BertTrainer<'e> {
             ExecMode::Zero2 => {
                 StatePartition::Zero2 { shards: self.cfg.chips }
             }
+            ExecMode::Zero3 => {
+                StatePartition::Zero3 { shards: self.cfg.chips }
+            }
             _ => StatePartition::Replicated,
         };
         let bucketed =
@@ -307,11 +340,23 @@ impl<'e> BertTrainer<'e> {
                 part,
             );
             // comm_time is per-bucket wire time by contract (StepComm
-            // docs); zero2's trailing parameter all-gather is not a
-            // bucket and shows up in `exposed` (and step_sim) instead.
+            // docs): the grad collective plus, under zero3, the bucket's
+            // just-in-time parameter gathers (forward + backward) — all
+            // per-bucket wire records. Zero2's trailing whole-vector
+            // all-gather is not a bucket and shows up in `exposed` (and
+            // step_sim) instead, as do zero3's gather stalls.
             let comm = StepComm {
                 buckets: costs.len(),
-                comm_time: costs.iter().map(|c| c.done - c.start).sum(),
+                comm_time: costs
+                    .iter()
+                    .map(|c| {
+                        (c.done - c.start)
+                            + c.gather.map_or(0.0, |g| {
+                                (g.fwd_done - g.fwd_start)
+                                    + (g.bwd_done - g.bwd_start)
+                            })
+                    })
+                    .sum(),
                 exposed: (total - compute).max(0.0),
                 per_bucket: costs.iter().map(|c| (c.ready, c.done)).collect(),
             };
@@ -334,6 +379,14 @@ impl<'e> BertTrainer<'e> {
                 let b = gens[0].next_batch(mb);
                 self.run_fused(exe, &b, lr)?
             } else if bucketed {
+                // -------- zero3: just-in-time parameter gather -------
+                // Materialize the transient full view from the owners'
+                // shards (bitwise a no-op copy on the shared buffer;
+                // priced per bucket before each forward/backward segment
+                // in step_sim).
+                if let Some(z) = self.zero3.as_ref() {
+                    z.gather_into(&self.plan, &mut self.params);
+                }
                 // -------- gradient phase, sharded per worker --------
                 for wg in self.worker_grads.iter_mut() {
                     wg.fill(0.0);
@@ -383,6 +436,19 @@ impl<'e> BertTrainer<'e> {
                     // parameter all-gather is the shared-buffer no-op
                     // (priced in step_sim, not recomputed here).
                     let z = self.zero2.as_mut().unwrap();
+                    z.step_all(
+                        &self.plan,
+                        &mut self.params,
+                        &self.grad_acc,
+                        lr,
+                        self.step,
+                    )
+                } else if self.zero3.is_some() {
+                    // Owners step the gathered view and persist their
+                    // updated shards; the view is dead until the next
+                    // step's gather (no trailing all-gather — priced so
+                    // in step_sim).
+                    let z = self.zero3.as_mut().unwrap();
                     z.step_all(
                         &self.plan,
                         &mut self.params,

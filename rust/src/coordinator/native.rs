@@ -17,7 +17,7 @@ use std::time::Instant;
 use crate::data::image::ImageTask;
 use crate::exec::{
     ExecConfig, ExecMode, Executor, GradWorker, StepCtx, Zero1State,
-    Zero2State,
+    Zero2State, Zero3State,
 };
 use crate::metrics::{DivergenceDetector, RunLog, StepComm, StepRecord};
 use crate::nn::{Mlp, MlpConfig};
@@ -108,6 +108,11 @@ struct NativeExec {
     /// ZeRO-2 sharded step (gradient reduce-scatter + `step_range` by
     /// bucket owner + parameter all-gather).
     zero2: Option<Zero2State>,
+    /// ZeRO-3 sharded step: the persistent parameters live in this
+    /// state's owner shards; each step gathers them just-in-time into
+    /// the trainer's transient view (`mlp.params`), which is dead between
+    /// steps (gather → use → drop).
+    zero3: Option<Zero3State>,
 }
 
 /// One full training run on the native substrate.
@@ -163,9 +168,10 @@ impl NativeTrainer {
     /// `exec.workers` data-parallel workers. The global batch is split
     /// evenly (`batch / workers` each; pick divisible batches). Serial
     /// and parallel modes produce bitwise-identical runs; `Zero1`
-    /// additionally shards the optimizer state by bucket owner, and
-    /// `Zero2` shards the gradients too (reduce-scatter instead of
-    /// all-reduce) — both still bitwise-identical to the dense run.
+    /// additionally shards the optimizer state by bucket owner, `Zero2`
+    /// shards the gradients too (reduce-scatter instead of all-reduce),
+    /// and `Zero3` shards the parameters as well (just-in-time gathered
+    /// per step) — all still bitwise-identical to the dense run.
     pub fn with_exec(
         spec: &NativeTask,
         optimizer: &str,
@@ -210,18 +216,36 @@ impl NativeTrainer {
             ),
             _ => None,
         };
+        let zero3 = match exec.mode {
+            ExecMode::Zero3 => Some(
+                Zero3State::build(
+                    optimizer,
+                    executor.plan(),
+                    &tr.mlp.params,
+                    &tr.segs,
+                    hyper,
+                )
+                .unwrap_or_else(|| panic!("unknown optimizer {optimizer}")),
+            ),
+            _ => None,
+        };
         tr.exec = Some(NativeExec {
             executor,
             reduced: vec![0.0; n],
             zero1,
             zero2,
+            zero3,
         });
         tr
     }
 
     /// One exec-engine global step: broadcast params, per-worker grads,
-    /// bucketed reduce (all-reduce, or reduce-scatter under ZeRO-2),
-    /// optimizer (dense, ZeRO-1 or ZeRO-2 sharded).
+    /// bucketed reduce (all-reduce, or reduce-scatter under ZeRO-2/3),
+    /// optimizer (dense or ZeRO-sharded). Under ZeRO-3 the step is
+    /// book-ended by the parameter residency lifecycle: the persistent
+    /// copy is `Zero3State`'s owner shards, gathered just-in-time into
+    /// the transient `mlp.params` view, which is stale again once the
+    /// owners have stepped and written their shards back.
     fn exec_step(
         &mut self,
         t: u64,
@@ -231,6 +255,11 @@ impl NativeTrainer {
         let ex = self.exec.as_mut().expect("exec_step without exec engine");
         let k = ex.executor.workers();
         let share = (batch / k).max(1);
+        if let Some(z) = ex.zero3.as_ref() {
+            // gather: materialize the transient full view from the
+            // owners' shards (per bucket, just-in-time on the pod).
+            z.gather_into(ex.executor.plan(), &mut self.mlp.params);
+        }
         let out = ex.executor.step(t, share, &self.mlp.params, &mut ex.reduced);
         let ratios = if let Some(z) = ex.zero1.as_mut() {
             let plan = ex.executor.plan().clone();
@@ -238,6 +267,11 @@ impl NativeTrainer {
         } else if let Some(z) = ex.zero2.as_mut() {
             // Owners step their reduce-scattered shards via step_range;
             // the parameter all-gather is the shared-buffer no-op.
+            let plan = ex.executor.plan().clone();
+            z.step_all(&plan, &mut self.mlp.params, &ex.reduced, lr, t)
+        } else if let Some(z) = ex.zero3.as_mut() {
+            // use + drop: owners step the view and persist their updated
+            // shards; the view is dead until the next step's gather.
             let plan = ex.executor.plan().clone();
             z.step_all(&plan, &mut self.mlp.params, &ex.reduced, lr, t)
         } else {
@@ -455,6 +489,34 @@ mod tests {
         };
         let cfg = ExecConfig {
             mode: ExecMode::Zero2,
+            workers: 2,
+            bucket_bytes: 1 << 12,
+            ..ExecConfig::default()
+        };
+        let mut tr = NativeTrainer::with_exec(
+            &spec,
+            "lamb",
+            Hyper::default(),
+            sched,
+            3,
+            cfg,
+        );
+        let log = tr.train(200, 64);
+        assert!(!log.diverged);
+        assert!(log.tail_loss(20) < log.records[0].loss);
+    }
+
+    #[test]
+    fn zero3_exec_trains() {
+        let spec = NativeTask::mnist_proxy();
+        let sched = Schedule::WarmupPoly {
+            base: 0.02,
+            warmup: 10,
+            total: 200,
+            power: 1.0,
+        };
+        let cfg = ExecConfig {
+            mode: ExecMode::Zero3,
             workers: 2,
             bucket_bytes: 1 << 12,
             ..ExecConfig::default()

@@ -25,7 +25,21 @@
 //!   back (`collective::all_gather`) — cutting per-worker gradient memory
 //!   to ~1/k as well, at the price of a parameter all-gather that cannot
 //!   hide under the backward pass (`cluster::Pod::step_time_bucketed`
-//!   prices exactly that trade under `StatePartition::Zero2`).
+//!   prices exactly that trade under `StatePartition::Zero2`);
+//! * [`zero::Zero3State`] extends the ownership map to the **parameters**
+//!   (ZeRO stage 3): the only persistent parameter copy is the owners'
+//!   bucket shards. The implicit full-replica assumption of the step
+//!   loop is replaced by a residency lifecycle — **gather → use →
+//!   drop**: each step all-gathers every bucket's parameters
+//!   just-in-time into a transient view (`Zero3State::gather_into`;
+//!   priced per bucket before its forward/backward segment by
+//!   `cluster::Pod::bucket_timeline_partitioned`), the workers consume
+//!   the view through the ordinary [`StepCtx`] broadcast (whose `Arc`
+//!   snapshot is dropped when the step ends — nothing full-size
+//!   persists), gradients reduce-scatter as in stage 2, and the owners
+//!   step + write back their shards. Params, grads and moments are all
+//!   ~1/k per worker (`StatePartition::Zero3`), and the step remains
+//!   bitwise-identical to the dense pipeline.
 //!
 //! Serial mode drives the identical bucket/reduce data path on the
 //! calling thread and is bitwise-identical to parallel mode (asserted by
@@ -41,7 +55,7 @@ pub mod zero;
 
 pub use bucket::{Bucket, BucketPlan};
 pub use pool::WorkerPool;
-pub use zero::{Zero1State, Zero2State};
+pub use zero::{stage_state_bytes, Zero1State, Zero2State, Zero3State};
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -65,6 +79,11 @@ pub enum ExecMode {
     /// (each worker retains only its owned shards) and parameters
     /// all-gathered after the sharded optimizer step.
     Zero2,
+    /// `Zero2` plus ZeRO-3: parameters sharded to bucket owners too —
+    /// each bucket's params are all-gathered just-in-time before use
+    /// and dropped after (the persistent copy is the owners' shards,
+    /// `zero::Zero3State`).
+    Zero3,
 }
 
 impl ExecMode {
@@ -74,6 +93,7 @@ impl ExecMode {
             "parallel" => Some(ExecMode::Parallel),
             "zero1" => Some(ExecMode::Zero1),
             "zero2" => Some(ExecMode::Zero2),
+            "zero3" => Some(ExecMode::Zero3),
             _ => None,
         }
     }
@@ -84,17 +104,26 @@ impl ExecMode {
             ExecMode::Parallel => "parallel",
             ExecMode::Zero1 => "zero1",
             ExecMode::Zero2 => "zero2",
+            ExecMode::Zero3 => "zero3",
         }
     }
 
     /// The ZeRO stage this mode implies (0 for dense modes) — the
-    /// config-file spelling `[exec] zero_stage = 0|1|2`.
+    /// config-file spelling `[exec] zero_stage = 0|1|2|3`.
     pub fn zero_stage(&self) -> u8 {
         match self {
             ExecMode::Serial | ExecMode::Parallel => 0,
             ExecMode::Zero1 => 1,
             ExecMode::Zero2 => 2,
+            ExecMode::Zero3 => 3,
         }
+    }
+
+    /// Stages 2 and 3 shard the gradients: the executor's per-bucket
+    /// reduction is a reduce-scatter into the owner's shard instead of
+    /// an all-reduce into the full buffer.
+    pub fn shards_grads(&self) -> bool {
+        self.zero_stage() >= 2
     }
 }
 
@@ -102,8 +131,9 @@ impl ExecMode {
 #[derive(Clone, Copy, Debug)]
 pub struct ExecConfig {
     /// Drive mode. In config files either `mode = "serial|parallel|
-    /// zero1|zero2"` or the stage spelling `zero_stage = 0|1|2`
-    /// (0 keeps the non-ZeRO drive, 1 → `zero1`, 2 → `zero2`).
+    /// zero1|zero2|zero3"` or the stage spelling `zero_stage = 0|1|2|3`
+    /// (0 keeps the non-ZeRO drive, 1 → `zero1`, 2 → `zero2`,
+    /// 3 → `zero3`).
     pub mode: ExecMode,
     /// Worker (simulated chip) count for the gradient phase.
     pub workers: usize,
@@ -308,7 +338,7 @@ pub struct Executor {
     plan: BucketPlan,
     backend: Backend,
     workers: usize,
-    /// Per-bucket owner shards of the ZeRO-2 reduce-scatter (empty in
+    /// Per-bucket owner shards of the ZeRO-2/3 reduce-scatter (empty in
     /// other modes); allocated once and reused across steps.
     shards: Vec<Vec<f32>>,
 }
@@ -334,11 +364,14 @@ impl Executor {
             ExecMode::Serial => Backend::Serial(
                 workers.into_iter().map(|w| (w, vec![0.0f32; n])).collect(),
             ),
-            ExecMode::Parallel | ExecMode::Zero1 | ExecMode::Zero2 => {
+            ExecMode::Parallel
+            | ExecMode::Zero1
+            | ExecMode::Zero2
+            | ExecMode::Zero3 => {
                 Backend::Pool(WorkerPool::spawn(workers, plan.clone(), n))
             }
         };
-        let shards = if cfg.mode == ExecMode::Zero2 {
+        let shards = if cfg.mode.shards_grads() {
             plan.buckets.iter().map(|bk| vec![0.0f32; bk.len()]).collect()
         } else {
             Vec::new()
@@ -362,12 +395,18 @@ impl Executor {
     /// gradients (concurrently unless serial), reduce each bucket as soon
     /// as it is complete, and leave the averaged gradient in `reduced`.
     ///
-    /// In `Zero2` mode the per-bucket reduction is a reduce-scatter into
-    /// the owner's bucket-local shard; the shards are then all-gathered
-    /// into `reduced` so the executor's output contract is unchanged (the
-    /// full buffer is the union of every rank's shard — on the modeled
-    /// pod only the owned shards exist, which is what `cluster::Pod`
-    /// accounts and prices). Both pipelines are bitwise-identical.
+    /// In `Zero2` / `Zero3` modes the per-bucket reduction is a
+    /// reduce-scatter into the owner's bucket-local shard; the shards are
+    /// then all-gathered into `reduced` so the executor's output contract
+    /// is unchanged (the full buffer is the union of every rank's shard —
+    /// on the modeled pod only the owned shards exist, which is what
+    /// `cluster::Pod` accounts and prices). Both pipelines are
+    /// bitwise-identical. In `Zero3` mode the caller additionally owns the
+    /// parameter residency lifecycle: `params` is the transient
+    /// just-in-time gathered view (`zero::Zero3State::gather_into`), the
+    /// per-worker `Arc` snapshot of it dies with the step, and the owners
+    /// persist their updated shards afterwards — no full parameter
+    /// replica survives between steps.
     pub fn step(
         &mut self,
         step: u64,
@@ -385,11 +424,11 @@ impl Executor {
         let plan = self.plan.clone();
         let k = self.workers;
         let nb = plan.len();
-        let zero2 = self.cfg.mode == ExecMode::Zero2;
+        let shard_grads = self.cfg.mode.shards_grads();
         // Staging schedule for every reduction below (bitwise-invariant
         // across kinds; see `collective::ReduceSchedule`).
         let sched = self.cfg.reduce;
-        // Owner shards of the reduce-scatter (Zero2 only; pre-allocated
+        // Owner shards of the reduce-scatter (Zero2/Zero3; pre-allocated
         // by the constructor, overwritten in full by each scatter).
         let shards = &mut self.shards;
         let mut gather = Gather::new(nb, k);
@@ -410,7 +449,7 @@ impl Executor {
                             if gather.offer(b, w, payload.to_vec()) {
                                 per_bucket[b].0 =
                                     t0.elapsed().as_secs_f64();
-                                if zero2 {
+                                if shard_grads {
                                     gather.scatter_into(
                                         &plan,
                                         b,
@@ -442,7 +481,7 @@ impl Executor {
                                 per_bucket[bucket].0 = at
                                     .saturating_duration_since(t0)
                                     .as_secs_f64();
-                                if zero2 {
+                                if shard_grads {
                                     gather.scatter_into(
                                         &plan,
                                         bucket,
@@ -472,7 +511,7 @@ impl Executor {
             }
         }
 
-        if zero2 {
+        if shard_grads {
             // All-gather the owner shards into the full buffer — the
             // union of every simulated rank's view.
             let parts: Vec<(usize, &[f32])> = plan
@@ -567,6 +606,7 @@ mod tests {
             ExecMode::Parallel,
             ExecMode::Zero1,
             ExecMode::Zero2,
+            ExecMode::Zero3,
         ] {
             assert_eq!(ExecMode::parse(m.as_str()), Some(m));
         }
@@ -575,6 +615,10 @@ mod tests {
         assert_eq!(ExecMode::Parallel.zero_stage(), 0);
         assert_eq!(ExecMode::Zero1.zero_stage(), 1);
         assert_eq!(ExecMode::Zero2.zero_stage(), 2);
+        assert_eq!(ExecMode::Zero3.zero_stage(), 3);
+        assert!(!ExecMode::Zero1.shards_grads());
+        assert!(ExecMode::Zero2.shards_grads());
+        assert!(ExecMode::Zero3.shards_grads());
     }
 
     #[test]
@@ -605,10 +649,10 @@ mod tests {
         }
     }
 
-    /// The ZeRO-2 reduce-scatter + all-gather pipeline leaves the exact
-    /// bits the dense all-reduce pipeline leaves.
+    /// The ZeRO-2/3 reduce-scatter + all-gather pipeline leaves the
+    /// exact bits the dense all-reduce pipeline leaves.
     #[test]
-    fn zero2_step_bitwise_equals_parallel() {
+    fn zero2_and_zero3_steps_bitwise_equal_parallel() {
         let segs = tile(&[96, 16, 128, 16, 64, 8]);
         let n: usize = segs.iter().map(|s| s.size).sum();
         let cfg = |mode| ExecConfig {
@@ -622,21 +666,24 @@ mod tests {
             &segs,
             toy_workers(3, n, 6),
         );
-        let mut z2 = Executor::new(
-            cfg(ExecMode::Zero2),
-            &segs,
-            toy_workers(3, n, 6),
-        );
-        let params = vec![0.5f32; n];
-        let mut ra = vec![0.0f32; n];
-        let mut rb = vec![0.0f32; n];
-        for t in 1..=4 {
-            let oa = par.step(t, 8, &params, &mut ra);
-            let ob = z2.step(t, 8, &params, &mut rb);
-            for i in 0..n {
-                assert_eq!(ra[i].to_bits(), rb[i].to_bits(), "step {t} i={i}");
+        for mode in [ExecMode::Zero2, ExecMode::Zero3] {
+            let mut sharded =
+                Executor::new(cfg(mode), &segs, toy_workers(3, n, 6));
+            let params = vec![0.5f32; n];
+            let mut ra = vec![0.0f32; n];
+            let mut rb = vec![0.0f32; n];
+            for t in 1..=4 {
+                let oa = par.step(t, 8, &params, &mut ra);
+                let ob = sharded.step(t, 8, &params, &mut rb);
+                for i in 0..n {
+                    assert_eq!(
+                        ra[i].to_bits(),
+                        rb[i].to_bits(),
+                        "{mode:?} step {t} i={i}"
+                    );
+                }
+                assert_eq!(oa.loss, ob.loss, "{mode:?} step {t}");
             }
-            assert_eq!(oa.loss, ob.loss, "step {t}");
         }
     }
 
@@ -666,7 +713,12 @@ mod tests {
         };
         let (base_red, base_loss) =
             run(ExecMode::Parallel, ReduceSchedule::default());
-        for mode in [ExecMode::Serial, ExecMode::Parallel, ExecMode::Zero2] {
+        for mode in [
+            ExecMode::Serial,
+            ExecMode::Parallel,
+            ExecMode::Zero2,
+            ExecMode::Zero3,
+        ] {
             for kind in ScheduleKind::ALL {
                 for node in [1usize, 2, 4] {
                     let (red, loss) =

@@ -1,4 +1,4 @@
-//! ZeRO sharding (stages 1 and 2) over the bucket partition.
+//! ZeRO sharding (stages 1, 2 and 3) over the bucket partition.
 //!
 //! Dense data parallelism replicates the full optimizer state (Adam/LAMB
 //! moments) on every worker. ZeRO stage 1 (Rajbhandari et al. 2020)
@@ -17,14 +17,91 @@
 //! (`collective::all_gather`). Per-worker gradient memory also drops to
 //! ~1/k — `cluster::StatePartition::Zero2` accounts both shards.
 //!
+//! ZeRO stage 3 ([`Zero3State`]) finally shards the **parameters**
+//! themselves: the only persistent copy of bucket `b`'s parameters is
+//! its owner's shard. Each step gathers every bucket's parameters
+//! just-in-time into a transient full view (`gather_into` /
+//! `gather_bucket` — the all-gather the pod model prices per bucket
+//! under forward and backward), the workers use the view, the gradient
+//! buckets are reduce-scattered exactly as in stage 2, the owners step
+//! their ranges and write the updated values back into their shards
+//! ([`Zero3State::step_bucket`]), and the view is dropped — nothing
+//! full-size survives the step. Per-worker params, grads *and* moments
+//! all drop to ~1/k ([`stage_state_bytes`]), which is what turns the
+//! `Pod::max_batch` memory ceiling into overlappable communication.
+//!
 //! Because every optimizer in `optim` is strictly per-segment (moments,
 //! trust ratio, decay are all computed within one segment) and buckets
-//! hold whole segments, a sharded step — stage 1 or stage 2 — is
+//! hold whole segments, a sharded step — stage 1, 2 or 3 — is
 //! *f32-exactly* equal to the dense step; `tests/test_exec.rs` asserts
 //! this property on random segment tables.
 
+use crate::collective::all_gather;
 use crate::exec::bucket::BucketPlan;
 use crate::optim::{build, Hyper, Optimizer, Seg};
+
+// ---------------------------------------------------------------------
+// Per-stage byte accounting — the single source of the 4/8/16
+// bytes-per-param arithmetic shared by the exec shards (plan-exact,
+// prorated by owned elements) and `cluster::Pod::state_bytes_partitioned`
+// (model-level, n/k). Adding a ZeRO stage adds its row here and nowhere
+// else.
+// ---------------------------------------------------------------------
+
+/// Bytes per parameter of the replicated f32 parameter copy.
+pub const PARAM_BYTES_PER_ELEM: usize = 4;
+/// Bytes per parameter of the f32 gradient buffer.
+pub const GRAD_BYTES_PER_ELEM: usize = 4;
+/// Bytes per parameter of the two Adam/LAMB moment buffers (m + v).
+pub const MOMENT_BYTES_PER_ELEM: usize = 8;
+
+/// `(replicated, sharded)` bytes per parameter at a ZeRO stage: stage 1
+/// shards the moments, stage 2 additionally the gradients, stage 3
+/// additionally the parameters. The two halves always sum to the dense
+/// 16 bytes/param.
+pub fn stage_split(stage: u8) -> (usize, usize) {
+    let mut rep =
+        PARAM_BYTES_PER_ELEM + GRAD_BYTES_PER_ELEM + MOMENT_BYTES_PER_ELEM;
+    let mut sharded = 0;
+    if stage >= 1 {
+        rep -= MOMENT_BYTES_PER_ELEM;
+        sharded += MOMENT_BYTES_PER_ELEM;
+    }
+    if stage >= 2 {
+        rep -= GRAD_BYTES_PER_ELEM;
+        sharded += GRAD_BYTES_PER_ELEM;
+    }
+    if stage >= 3 {
+        rep -= PARAM_BYTES_PER_ELEM;
+        sharded += PARAM_BYTES_PER_ELEM;
+    }
+    (rep, sharded)
+}
+
+/// Per-rank training-state bytes for an `n`-parameter model sharded
+/// `stage`-deep over `shards` ranks (ceil division on the sharded half;
+/// `shards <= 1` degenerates to the dense replicated footprint).
+pub fn stage_state_bytes(stage: u8, n: usize, shards: usize) -> usize {
+    let (rep, sharded) = stage_split(stage);
+    let k = shards.max(1);
+    n * rep + (n * sharded + k - 1) / k
+}
+
+/// Optimizer-state bytes `worker` holds for a flat optimizer prorated to
+/// its owned elements (every optimizer's state is a fixed number of f32
+/// buffers over the vector, so the per-element cost divides exactly) —
+/// the stage-2/3 moment-share rule. The param and grad shares need no
+/// helper of their own: both are exactly the owned f32 elements,
+/// [`BucketPlan::owned_bytes`].
+pub fn owned_state_bytes(
+    opt: &dyn Optimizer,
+    plan: &BucketPlan,
+    worker: usize,
+    workers: usize,
+) -> usize {
+    let per_elem = opt.state_bytes() / plan.n.max(1);
+    per_elem * plan.owned_elems(worker, workers)
+}
 
 /// Optimizer state physically partitioned by bucket: one optimizer
 /// instance per bucket, sized for that bucket's range only, with segment
@@ -218,26 +295,201 @@ impl Zero2State {
     }
 
     /// Optimizer-state bytes one rank holds under ZeRO-2 — the dense
-    /// moment footprint prorated to its owned elements (every optimizer's
-    /// state is a fixed number of f32 buffers over the vector, so the
-    /// per-element cost divides exactly).
+    /// moment footprint prorated to its owned elements
+    /// ([`owned_state_bytes`]).
     pub fn state_bytes_for(
         &self,
         plan: &BucketPlan,
         worker: usize,
         workers: usize,
     ) -> usize {
-        let per_elem = self.opt.state_bytes() / plan.n.max(1);
-        per_elem * plan.owned_elems(worker, workers)
+        owned_state_bytes(self.opt.as_ref(), plan, worker, workers)
     }
 
-    /// Reduced-gradient bytes one rank retains after the reduce-scatter.
+    /// Reduced-gradient bytes one rank retains after the reduce-scatter
+    /// — its owned f32 elements ([`BucketPlan::owned_bytes`]).
     pub fn grad_bytes_for(
         plan: &BucketPlan,
         worker: usize,
         workers: usize,
     ) -> usize {
         plan.owned_bytes(worker, workers)
+    }
+}
+
+/// ZeRO-3: parameter + gradient + optimizer-state sharding over the
+/// bucket owner map — the full residency lifecycle **gather → use →
+/// drop**.
+///
+/// The shards in this struct are the *only persistent copy* of the
+/// parameters: bucket `b`'s values live on `plan.owner(b, k)`. A step
+/// materializes a transient full view just-in-time
+/// ([`Zero3State::gather_into`] — per bucket, the all-gather the pod
+/// model prices before each forward/backward segment), runs the workers
+/// and the stage-2-style gradient reduce-scatter against it, then each
+/// owner steps its ranges via [`crate::optim::Optimizer::step_range`]
+/// and writes the updated range back into its shard
+/// ([`Zero3State::step_bucket`]); the view is then dead. Because the
+/// gather is a bit-exact copy of the shards and `step_range` over a
+/// bucket partition equals one dense step f32-exactly, a ZeRO-3 run is
+/// bitwise-identical to the dense run end to end (`tests/test_exec.rs`).
+///
+/// As with [`Zero2State`], the single-process simulation keeps the
+/// moment buffers in one allocation; what each simulated rank would
+/// physically hold is reported by [`Zero3State::param_bytes_for`] /
+/// [`Zero3State::grad_bytes_for`] / [`Zero3State::state_bytes_for`] —
+/// all ~1/k, the `cluster::StatePartition::Zero3` accounting.
+pub struct Zero3State {
+    opt: Box<dyn Optimizer>,
+    segs: Vec<Seg>,
+    name: String,
+    /// Per-bucket owned parameter shards — the persistent parameters.
+    shards: Vec<Vec<f32>>,
+}
+
+impl Zero3State {
+    /// Build the sharded state for the named optimizer, splitting the
+    /// initial `params` (length `plan.n`) into per-bucket owner shards.
+    /// Returns `None` for an unknown optimizer.
+    pub fn build(
+        optimizer: &str,
+        plan: &BucketPlan,
+        params: &[f32],
+        segs: &[Seg],
+        hyper: Hyper,
+    ) -> Option<Zero3State> {
+        assert_eq!(params.len(), plan.n, "params length != plan coverage");
+        let shards = plan
+            .buckets
+            .iter()
+            .map(|bk| params[bk.start..bk.end].to_vec())
+            .collect();
+        Some(Zero3State {
+            opt: build(optimizer, plan.n, hyper)?,
+            segs: segs.to_vec(),
+            name: optimizer.to_string(),
+            shards,
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Just-in-time gather of bucket `b`'s parameters into the transient
+    /// full view (the per-bucket all-gather the pod prices before the
+    /// bucket's forward/backward segment).
+    pub fn gather_bucket(&self, plan: &BucketPlan, b: usize, view: &mut [f32]) {
+        let bk = &plan.buckets[b];
+        all_gather(&[(bk.start, self.shards[b].as_slice())], view);
+    }
+
+    /// Gather every bucket into the view (the serial simulation's step
+    /// prologue; on the modeled pod the gathers stream per bucket and
+    /// overlap under compute — `cluster::Pod::bucket_timeline_partitioned`
+    /// prices exactly that).
+    pub fn gather_into(&self, plan: &BucketPlan, view: &mut [f32]) {
+        assert_eq!(view.len(), plan.n, "view length != plan coverage");
+        for b in 0..plan.len() {
+            self.gather_bucket(plan, b, view);
+        }
+    }
+
+    /// Owner's step of bucket `b`: step the view range against the
+    /// reduce-scattered gradient, then persist the updated range into the
+    /// owner's shard (the view may be dropped afterwards). Returns the
+    /// trust ratios for the bucket's segments.
+    pub fn step_bucket(
+        &mut self,
+        plan: &BucketPlan,
+        b: usize,
+        view: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        step: u64,
+    ) -> Vec<f32> {
+        let bk = &plan.buckets[b];
+        let ratios = self.opt.step_range(
+            view, grads, lr, step, &self.segs, bk.start, bk.end,
+        );
+        self.shards[b].copy_from_slice(&view[bk.start..bk.end]);
+        ratios
+    }
+
+    /// Step every bucket owned by `worker` of `workers` — one simulated
+    /// rank's share of the optimizer phase. Returns that rank's trust
+    /// ratios in bucket order.
+    pub fn step_owned(
+        &mut self,
+        plan: &BucketPlan,
+        worker: usize,
+        workers: usize,
+        view: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        step: u64,
+    ) -> Vec<f32> {
+        let mut ratios = Vec::new();
+        for b in 0..plan.len() {
+            if plan.owner(b, workers) == worker {
+                ratios.extend(
+                    self.step_bucket(plan, b, view, grads, lr, step),
+                );
+            }
+        }
+        ratios
+    }
+
+    /// Step every bucket in order (the full simulated collective step).
+    /// Returns the concatenated per-segment trust ratios — identical
+    /// layout to a dense `Optimizer::step`.
+    pub fn step_all(
+        &mut self,
+        plan: &BucketPlan,
+        view: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        step: u64,
+    ) -> Vec<f32> {
+        let mut ratios = Vec::new();
+        for b in 0..plan.len() {
+            ratios.extend(self.step_bucket(plan, b, view, grads, lr, step));
+        }
+        ratios
+    }
+
+    /// Persistent parameter bytes one rank holds under ZeRO-3 — its
+    /// owned shards ([`BucketPlan::owned_bytes`]); transient gather
+    /// buffers are bounded by the pricing model's prefetch window of a
+    /// few buckets (`cluster::PREFETCH_BUCKETS`, reserved by the
+    /// cluster accounting).
+    pub fn param_bytes_for(
+        plan: &BucketPlan,
+        worker: usize,
+        workers: usize,
+    ) -> usize {
+        plan.owned_bytes(worker, workers)
+    }
+
+    /// Reduced-gradient bytes one rank retains after the reduce-scatter
+    /// ([`BucketPlan::owned_bytes`]; same ownership map as stage 2).
+    pub fn grad_bytes_for(
+        plan: &BucketPlan,
+        worker: usize,
+        workers: usize,
+    ) -> usize {
+        plan.owned_bytes(worker, workers)
+    }
+
+    /// Optimizer-state bytes one rank holds ([`owned_state_bytes`];
+    /// exactly stage 2's rule).
+    pub fn state_bytes_for(
+        &self,
+        plan: &BucketPlan,
+        worker: usize,
+        workers: usize,
+    ) -> usize {
+        owned_state_bytes(self.opt.as_ref(), plan, worker, workers)
     }
 }
 
@@ -312,6 +564,46 @@ mod tests {
         assert!(
             Zero2State::build("sgdx", 16, &segs, Hyper::default()).is_none()
         );
+        assert!(Zero3State::build(
+            "sgdx",
+            &plan,
+            &[0.0; 16],
+            &segs,
+            Hyper::default()
+        )
+        .is_none());
+    }
+
+    /// The shared stage table: halves always sum to the dense 16
+    /// bytes/param, stages strictly shed replicated bytes, and the
+    /// per-rank footprint is monotone non-increasing in the stage and
+    /// exactly dense at k = 1.
+    #[test]
+    fn stage_split_sums_and_is_monotone() {
+        for stage in 0..=3u8 {
+            let (rep, sharded) = stage_split(stage);
+            assert_eq!(
+                rep + sharded,
+                PARAM_BYTES_PER_ELEM
+                    + GRAD_BYTES_PER_ELEM
+                    + MOMENT_BYTES_PER_ELEM
+            );
+            assert_eq!(stage_state_bytes(stage, 1000, 1), 16_000);
+            assert_eq!(stage_state_bytes(stage, 1000, 0), 16_000);
+        }
+        assert_eq!(stage_split(0), (16, 0));
+        assert_eq!(stage_split(1), (8, 8));
+        assert_eq!(stage_split(2), (4, 12));
+        assert_eq!(stage_split(3), (0, 16));
+        for &k in &[2usize, 7, 1024] {
+            for stage in 1..=3u8 {
+                assert!(
+                    stage_state_bytes(stage, 334_000_000, k)
+                        < stage_state_bytes(stage - 1, 334_000_000, k),
+                    "stage {stage} k={k}"
+                );
+            }
+        }
     }
 
     /// ZeRO-2's step_range pipeline must match the dense step exactly,
@@ -343,6 +635,73 @@ mod tests {
                 z_own.step_owned(&plan, w, workers, &mut xc, &g, 0.01, t);
             }
             assert_eq!(xa, xc, "owner-grouped params diverged at step {t}");
+        }
+    }
+
+    /// ZeRO-3's gather → use → drop lifecycle must reproduce the dense
+    /// step bitwise: gathering the shards into a fresh view each step
+    /// and stepping through step_bucket (in order or grouped by owner)
+    /// leaves the exact bits of the dense optimizer.
+    #[test]
+    fn zero3_lamb_matches_dense_exactly() {
+        let segs = tile(&[40, 8, 120, 8, 64, 16]);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        let plan = BucketPlan::from_segs(&segs, 60 * 4);
+        assert!(plan.len() > 1);
+        let h = Hyper::default();
+        let mut rng = Rng::new(9);
+        let x0: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+        let mut dense = build("lamb", n, h).unwrap();
+        let mut z_all = Zero3State::build("lamb", &plan, &x0, &segs, h).unwrap();
+        let mut z_own = Zero3State::build("lamb", &plan, &x0, &segs, h).unwrap();
+        let workers = 3;
+        let mut xa = x0.clone();
+        for t in 1..=5 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.3)).collect();
+            let ra = dense.step(&mut xa, &g, 0.01, t, &segs);
+            // fresh transient views each step: the persistent copy is the
+            // shards, and the gather must reconstruct it bit-for-bit
+            let mut vb = vec![0.0f32; n];
+            z_all.gather_into(&plan, &mut vb);
+            let rb = z_all.step_all(&plan, &mut vb, &g, 0.01, t);
+            assert_eq!(ra, rb, "trust ratios diverged at step {t}");
+            assert_eq!(xa, vb, "params diverged at step {t}");
+            let mut vc = vec![0.0f32; n];
+            z_own.gather_into(&plan, &mut vc);
+            for w in 0..workers {
+                z_own.step_owned(&plan, w, workers, &mut vc, &g, 0.01, t);
+            }
+            assert_eq!(xa, vc, "owner-grouped params diverged at step {t}");
+        }
+    }
+
+    /// ZeRO-3 memory shares: params, grads and moments all prorate by
+    /// owned elements and tile the dense footprints.
+    #[test]
+    fn zero3_shares_tile_dense_footprint() {
+        let segs = tile(&[64; 12]);
+        let n = 64 * 12;
+        let plan = BucketPlan::from_segs(&segs, 64 * 4);
+        let h = Hyper::default();
+        let x0 = vec![1.0f32; n];
+        let z = Zero3State::build("adam", &plan, &x0, &segs, h).unwrap();
+        let dense = build("adam", n, h).unwrap();
+        let k = 4;
+        let params: usize =
+            (0..k).map(|w| Zero3State::param_bytes_for(&plan, w, k)).sum();
+        assert_eq!(params, n * PARAM_BYTES_PER_ELEM);
+        let grads: usize =
+            (0..k).map(|w| Zero3State::grad_bytes_for(&plan, w, k)).sum();
+        assert_eq!(grads, n * GRAD_BYTES_PER_ELEM);
+        let state: usize =
+            (0..k).map(|w| z.state_bytes_for(&plan, w, k)).sum();
+        assert_eq!(state, dense.state_bytes());
+        for w in 0..k {
+            assert_eq!(
+                Zero3State::param_bytes_for(&plan, w, k),
+                n * PARAM_BYTES_PER_ELEM / k
+            );
+            assert_eq!(z.state_bytes_for(&plan, w, k), dense.state_bytes() / k);
         }
     }
 

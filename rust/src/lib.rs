@@ -26,8 +26,11 @@
 //!   from the actual bucket timeline), and ZeRO sharding over the bucket
 //!   owner map: stage 1 cuts per-worker moment memory to ~1/k, stage 2
 //!   swaps the all-reduce for a reduce-scatter + parameter all-gather so
-//!   per-worker gradient memory drops to ~1/k as well
-//!   (`[exec] zero_stage = 0|1|2`).
+//!   per-worker gradient memory drops to ~1/k as well, and stage 3
+//!   shards the parameters themselves — each bucket's params are
+//!   all-gathered just-in-time before its forward/backward segment and
+//!   dropped after use, so params, grads and moments are all ~1/k
+//!   (`[exec] zero_stage = 0|1|2|3`).
 //!
 //! Both trainers drive their step loops through the exec layer:
 //! [`coordinator::NativeTrainer`] runs workers truly in parallel for the

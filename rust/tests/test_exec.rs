@@ -4,16 +4,19 @@
 //! (a) parallel bucketed execution produces bitwise-identical averaged
 //!     gradients to a serial monolithic `reduce_mean`, both at the
 //!     reduction level (random segment tables) and end-to-end through
-//!     `NativeTrainer` (serial vs parallel vs zero1 vs zero2 full runs);
+//!     `NativeTrainer` (serial vs parallel vs zero1 vs zero2 vs zero3
+//!     full runs);
 //! (b) a ZeRO-1 sharded LAMB step matches the dense `Lamb::step` to
 //!     exact f32 equality on random segment tables, across steps
-//!     (stateful moments); likewise the ZeRO-2 `step_range` pipeline;
+//!     (stateful moments); likewise the ZeRO-2 `step_range` pipeline and
+//!     ZeRO-3's gather → step → write-back lifecycle;
 //! (c) `RingAllReduce` agrees with the bucketed path for non-divisible
 //!     bucket/worker splits;
 //! (d) the ZeRO-2 reduce-scatter + all-gather pair is bitwise-identical
 //!     to the dense all-reduce on ragged bucket splits, and the pod's
 //!     memory accounting is monotone in the sharding stage
-//!     (`max_batch(Zero2) >= max_batch(Zero1) >= max_batch(Replicated)`).
+//!     (`max_batch(Zero3) >= max_batch(Zero2) >= max_batch(Zero1) >=
+//!     max_batch(Replicated)`).
 
 use lamb_train::cluster::{Pod, StatePartition};
 use lamb_train::collective::{
@@ -22,6 +25,7 @@ use lamb_train::collective::{
 use lamb_train::coordinator::{NativeTask, NativeTrainer};
 use lamb_train::exec::{
     bucketed_reduce, BucketPlan, ExecConfig, ExecMode, Zero1State, Zero2State,
+    Zero3State,
 };
 use lamb_train::manifest::ModelMeta;
 use lamb_train::optim::{self, Hyper, Optimizer, Seg};
@@ -82,7 +86,7 @@ fn prop_bucketed_reduce_bitwise_equals_serial() {
 }
 
 #[test]
-fn native_serial_parallel_zero1_zero2_runs_bitwise_identical() {
+fn native_serial_parallel_zero123_runs_bitwise_identical() {
     let spec = NativeTask::cifar_proxy();
     let sched = Schedule::WarmupPoly {
         base: 0.02,
@@ -127,6 +131,13 @@ fn native_serial_parallel_zero1_zero2_runs_bitwise_identical() {
     assert_eq!(l_ser, l_z2, "serial vs zero2 losses");
     assert_eq!(p_ser, p_z2, "serial vs zero2 params");
     assert_eq!(m_ser, m_z2);
+    // ZeRO-3 additionally shards the parameters: every step re-gathers
+    // the view from the owner shards just-in-time — still the exact
+    // same run on the same ragged buckets (ISSUE 4 acceptance).
+    let (l_z3, p_z3, m_z3) = run(ExecMode::Zero3);
+    assert_eq!(l_ser, l_z3, "serial vs zero3 losses");
+    assert_eq!(p_ser, p_z3, "serial vs zero3 params");
+    assert_eq!(m_ser, m_z3);
 }
 
 // ------------------------------------------------------------------
@@ -294,6 +305,48 @@ fn prop_zero2_lamb_matches_dense_exactly() {
     }
 }
 
+/// ISSUE 4 acceptance: ZeRO-3 LAMB == dense LAMB exactly, with the full
+/// residency lifecycle exercised — the persistent copy is the owner
+/// shards, every step gathers a *fresh* transient view (the previous
+/// view is thrown away, so any value not written back through the
+/// shards would be lost), owners step in owner-grouped order on ragged
+/// bucket splits.
+#[test]
+fn prop_zero3_lamb_matches_dense_exactly() {
+    let mut rng = Rng::new(2007);
+    for case in 0..15 {
+        let segs = random_segs(&mut rng, 2 + rng.below(10) as usize);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        let plan =
+            BucketPlan::from_segs(&segs, 4 * (1 + rng.below(150) as usize));
+        let h = Hyper::default();
+        let mut dense = optim::Lamb::new(n, h);
+        let x0 = rand_vec(&mut rng, n, 1.0);
+        let mut sharded =
+            Zero3State::build("lamb", &plan, &x0, &segs, h).unwrap();
+        let workers = 1 + rng.below(5) as usize;
+        let mut xa = x0;
+        for t in 1..=4 {
+            let g = rand_vec(&mut rng, n, 0.5);
+            let lr = 0.005 + 0.01 * (t as f32);
+            Optimizer::step(&mut dense, &mut xa, &g, lr, t, &segs);
+            // fresh view each step: gather → use → drop
+            let mut view = vec![0.0f32; n];
+            sharded.gather_into(&plan, &mut view);
+            for w in 0..workers {
+                sharded.step_owned(&plan, w, workers, &mut view, &g, lr, t);
+            }
+            for i in 0..n {
+                assert_eq!(
+                    xa[i].to_bits(),
+                    view[i].to_bits(),
+                    "case {case} param {i} at step {t} (k={workers})"
+                );
+            }
+        }
+    }
+}
+
 /// BERT-Large-like stand-in (the paper's 300M-parameter model).
 fn bert_large_meta() -> ModelMeta {
     ModelMeta {
@@ -320,13 +373,19 @@ fn max_batch_monotone_in_zero_stage() {
                 pod.max_batch(&m, seq, StatePartition::Zero1 { shards: chips });
             let z2 =
                 pod.max_batch(&m, seq, StatePartition::Zero2 { shards: chips });
+            let z3 =
+                pod.max_batch(&m, seq, StatePartition::Zero3 { shards: chips });
             assert!(
-                z2 >= z1 && z1 >= rep,
-                "chips={chips} seq={seq}: {z2} vs {z1} vs {rep}"
+                z3 >= z2 && z2 >= z1 && z1 >= rep,
+                "chips={chips} seq={seq}: {z3} vs {z2} vs {z1} vs {rep}"
             );
-            // at real pod scale the gradient shard is a strict win
+            // at real pod scale the gradient shard is a strict win, and
+            // the ZeRO-3 parameter shard strictly again (acceptance)
             if chips >= 256 && seq == 512 {
                 assert!(z2 > rep, "chips={chips}: {z2} vs {rep}");
+            }
+            if chips >= 1024 {
+                assert!(z3 > z2, "chips={chips} seq={seq}: {z3} vs {z2}");
             }
         }
     }

@@ -3,8 +3,10 @@
 //! the paper's Section 3 relies on, the collective's exactness, and the
 //! data pipeline's distributional contracts.
 
+use lamb_train::cluster::{Pod, StatePartition};
 use lamb_train::collective::{reduce_mean, RingAllReduce, RingCost};
 use lamb_train::data::{Corpus, MlmConfig, MlmGenerator};
+use lamb_train::manifest::ModelMeta;
 use lamb_train::optim::{self, Hyper, Norm, Seg};
 use lamb_train::schedule::{sqrt_scaled_lr, steps_for_batch, Schedule};
 use lamb_train::util::Rng;
@@ -197,6 +199,65 @@ fn prop_mlm_masking_contract() {
             }
             assert!((b.tokens[i] as usize) < vocab);
             assert!((b.targets[i] as usize) < vocab);
+        }
+    }
+}
+
+/// ISSUE 4 satellite: `Pod::max_batch` is monotone non-decreasing
+/// across the ZeRO ladder Replicated → Zero1 → Zero2 → Zero3 for a grid
+/// of (chips, node_size, model), and at k = 1 all four stages are
+/// *exactly* equal (a single shard replicates everything, so sharding
+/// must change nothing).
+#[test]
+fn prop_max_batch_monotone_across_zero_stages() {
+    let model = |name: &str, hidden: usize, layers: usize, heads: usize, total: usize| ModelMeta {
+        name: name.into(),
+        vocab: 30522,
+        hidden,
+        layers,
+        heads,
+        ff: hidden * 4,
+        max_seq: 512,
+        total_params: total,
+        params: vec![],
+    };
+    let models = [
+        model("bert-large-like", 1024, 24, 16, 334_000_000),
+        model("bert-base-like", 768, 12, 12, 110_000_000),
+        model("bert-tiny-like", 128, 2, 2, 4_400_000),
+    ];
+    for m in &models {
+        for &chips in &[1usize, 8, 64, 1024] {
+            for &node_size in &[1usize, 4, 8] {
+                let pod = Pod::tpu_v3_nodes(chips, node_size);
+                for &seq in &[128usize, 512] {
+                    let parts = [
+                        StatePartition::Replicated,
+                        StatePartition::Zero1 { shards: chips },
+                        StatePartition::Zero2 { shards: chips },
+                        StatePartition::Zero3 { shards: chips },
+                    ];
+                    let caps: Vec<usize> = parts
+                        .iter()
+                        .map(|&p| pod.max_batch(m, seq, p))
+                        .collect();
+                    for w in caps.windows(2) {
+                        assert!(
+                            w[1] >= w[0],
+                            "{} chips={chips} node={node_size} seq={seq}: \
+                             {caps:?}",
+                            m.name
+                        );
+                    }
+                    if chips == 1 {
+                        assert!(
+                            caps.iter().all(|&c| c == caps[0]),
+                            "{} seq={seq}: k=1 stages differ: {caps:?}",
+                            m.name
+                        );
+                    }
+                }
+            }
         }
     }
 }

@@ -212,11 +212,16 @@ fn single_chip_pod_pays_zero_communication_in_every_schedule() {
                 StatePartition::Replicated,
                 StatePartition::Zero1 { shards: 1 },
                 StatePartition::Zero2 { shards: 1 },
+                StatePartition::Zero3 { shards: 1 },
             ] {
                 let (costs, compute, step) = pod
                     .bucket_timeline_partitioned(&m, 32, 128, &plan, part);
                 for c in &costs {
                     assert_eq!(c.done - c.start, 0.0, "{policy:?} {part:?}");
+                    if let Some(g) = c.gather {
+                        assert_eq!(g.fwd_done - g.fwd_start, 0.0);
+                        assert_eq!(g.bwd_done - g.bwd_start, 0.0);
+                    }
                 }
                 // pure compute: no exposed tail, no gather (f64 ulp
                 // slack: the fwd/bwd split re-sums to compute)
@@ -265,7 +270,7 @@ fn native_runs_bitwise_identical_across_reduce_schedules() {
         (log.losses(), tr.mlp.params.clone(), log.final_metric)
     };
     let (l0, p0, m0) = run(ExecMode::Parallel, ReduceSchedule::default());
-    for mode in [ExecMode::Parallel, ExecMode::Zero2] {
+    for mode in [ExecMode::Parallel, ExecMode::Zero2, ExecMode::Zero3] {
         for kind in ScheduleKind::ALL {
             // node size 3 does not divide the 4 workers — ragged group
             for node in [1usize, 3] {
@@ -293,6 +298,7 @@ fn batch_32k_auto_hierarchical_strictly_beats_flat_ring() {
         StatePartition::Replicated,
         StatePartition::Zero1 { shards: 1024 },
         z2,
+        StatePartition::Zero3 { shards: 1024 },
     ] {
         let t_flat =
             flat.step_time_bucketed_partitioned(&m, 32_768, 128, &plan, part);

@@ -34,6 +34,7 @@ import json, sys
 path = sys.argv[1]
 with open(path) as f:
     lines = [l for l in f.read().splitlines() if l.strip()]
+objs = []
 for i, line in enumerate(lines, 1):
     try:
         obj = json.loads(line)
@@ -43,6 +44,18 @@ for i, line in enumerate(lines, 1):
         sys.exit(f"{path}:{i}: missing bench/secs keys: {line}")
     if not (obj["secs"] >= 0):
         sys.exit(f"{path}:{i}: bad secs value: {line}")
-print(f"bench_smoke: {len(lines)} JSON measurements in {path}")
+    objs.append(obj)
+# The zero3 column and its per-bucket param-gather records must be
+# present and parse: a schema regression here would silently drop the
+# ZeRO-3 perf trajectory from the artifact.
+if not any(o.get("mode") == "zero3" for o in objs):
+    sys.exit(f"{path}: no zero3 mode column in the bench artifact")
+gathers = [o for o in objs if o.get("kind") == "param_gather"]
+if not gathers:
+    sys.exit(f"{path}: no param_gather records in the bench artifact")
+if any(set(("bucket", "pass", "schedule")) - set(o) for o in gathers):
+    sys.exit(f"{path}: param_gather records missing bucket/pass/schedule keys")
+print(f"bench_smoke: {len(lines)} JSON measurements in {path} "
+      f"(zero3 column + {len(gathers)} param_gather records ok)")
 EOF
 fi

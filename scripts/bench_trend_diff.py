@@ -69,11 +69,16 @@ def main():
         return 0
 
     regressions = []
+    new_cells = []
     improvements = 0
     compared = 0
     for key, now in sorted(curr.items()):
         was = prev.get(key)
         if was is None:
+            # Schema growth (a new bench column, e.g. a new exec mode or
+            # record kind) is expected across commits: report it as
+            # "new", never as a diff error or a regression.
+            new_cells.append(key)
             continue
         compared += 1
         if was <= 0.0:
@@ -84,13 +89,26 @@ def main():
             regressions.append((key, was, now, pct))
         elif pct < -args.warn_pct:
             improvements += 1
+    removed = len(prev) - compared
 
     print(
         f"bench_trend_diff: compared {compared} cells "
         f"({len(prev)} previous, {len(curr)} current); "
         f"{len(regressions)} regression(s) > {args.warn_pct:.0f}%, "
-        f"{improvements} improvement(s)"
+        f"{improvements} improvement(s), {len(new_cells)} new cell(s), "
+        f"{removed} removed cell(s)"
     )
+    # Cap the listing: a schema change (e.g. a new per-bucket record
+    # kind) can add a hundred cells at once, and the regression warnings
+    # below are the signal this log exists for.
+    max_listed = 10
+    for key in new_cells[:max_listed]:
+        print(f"bench_trend_diff: new (no previous measurement): {fmt_key(key)}")
+    if len(new_cells) > max_listed:
+        print(
+            f"bench_trend_diff: ... and {len(new_cells) - max_listed} "
+            "more new cell(s)"
+        )
     for key, was, now, pct in regressions:
         msg = (
             f"bench regression +{pct:.1f}%: {fmt_key(key)} "
