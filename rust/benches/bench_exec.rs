@@ -18,9 +18,13 @@
 //! the schedule the topology picks per gradient bucket
 //! (`"kind":"bucket_schedule"`), a flat-ring vs hierarchical vs auto
 //! step-time comparison for both the zero2 and zero3 partitions
-//! (`"kind":"sched_compare"`), and the per-bucket just-in-time
+//! (`"kind":"sched_compare"`), the per-bucket just-in-time
 //! parameter all-gathers of the zero3 timeline
-//! (`"kind":"param_gather"`, one record per bucket and pass).
+//! (`"kind":"param_gather"`, one record per bucket and pass), and the
+//! precision columns (`"kind":"precision"`, one record per ZeRO stage
+//! x {f32, bf16} carrying the step time plus the seq-512 batch cap —
+//! the mixed cap must strictly exceed f32 at every stage, which
+//! `scripts/bench_smoke.sh` re-asserts from the artifact).
 
 use std::time::Instant;
 
@@ -169,6 +173,49 @@ fn emit_pod_schedules(json: bool) {
     }
 }
 
+/// Precision columns: per-ZeRO-stage step time and seq-512 batch cap
+/// for the f32 vs mixed (bf16 storage/wire + fp32 masters) pods. Pure
+/// cost-model arithmetic — cheap enough for the CI smoke artifact,
+/// which asserts the mixed cap strictly exceeds f32 per stage.
+fn emit_precision(json: bool) {
+    use lamb_train::collective::{Precision, PrecisionPlan};
+    let meta = bert_large_meta();
+    let plan = BucketPlan::even(meta.total_params, 24);
+    let parts = [
+        StatePartition::Replicated,
+        StatePartition::Zero1 { shards: 1024 },
+        StatePartition::Zero2 { shards: 1024 },
+        StatePartition::Zero3 { shards: 1024 },
+    ];
+    if !json {
+        println!("== pod model: precision ladder (stage x dtype) ==");
+    }
+    for (pname, prec) in [
+        ("f32", PrecisionPlan::F32),
+        ("bf16", PrecisionPlan::mixed(Precision::Bf16)),
+    ] {
+        let pod = Pod::tpu_v3_nodes(1024, 8).with_precision(prec);
+        for (stage, part) in parts.iter().enumerate() {
+            let cap = pod.max_batch(&meta, 512, *part);
+            let secs = pod.step_time_bucketed_partitioned(
+                &meta, 32_768, 128, &plan, *part,
+            );
+            if json {
+                println!(
+                    "{{\"bench\":\"bench_exec\",\"kind\":\"precision\",\
+                     \"precision\":\"{pname}\",\"zero_stage\":{stage},\
+                     \"max_batch_512\":{cap},\"secs\":{secs:.6}}}"
+                );
+            } else {
+                println!(
+                    "{pname:>5} stage {stage}: step {secs:.4}s | \
+                     max batch @512 = {cap}"
+                );
+            }
+        }
+    }
+}
+
 fn main() {
     let smoke =
         std::env::args().any(|a| a == "--smoke" || a == "--test");
@@ -241,7 +288,8 @@ fn main() {
             );
         }
     }
-    // Pod-model schedule records (cheap; emitted in smoke mode too so
-    // the CI artifact tracks the schedule choices across commits).
+    // Pod-model schedule + precision records (cheap; emitted in smoke
+    // mode too so the CI artifact tracks them across commits).
     emit_pod_schedules(json);
+    emit_precision(json);
 }

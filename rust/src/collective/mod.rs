@@ -24,6 +24,15 @@
 //! bitwise-identical to [`reduce_mean`], so schedule choice is a pure
 //! performance decision.
 //!
+//! The [`precision`] submodule adds the orthogonal axis: what *dtype*
+//! each element crosses the wire in. [`Precision`] (f32 / bf16 / f16)
+//! supplies deterministic software quantization,
+//! [`reduce_mean_quant`] / [`all_gather_quant`] are the
+//! quantize-on-wire collective variants (f32 mode is bitwise-identical
+//! to the plain kernels — it *is* the plain kernel), and
+//! [`ReduceSchedule::wire`] threads the choice through the exec
+//! engine's reduce paths while the topology prices the halved payload.
+//!
 //! ## Ring cost model
 //!
 //! A ring all-reduce over `k` ranks is a reduce-scatter followed by an
@@ -36,8 +45,13 @@
 //! owner's optimizer step). The two halves sum exactly to the all-reduce
 //! time.
 
+pub mod precision;
 pub mod topology;
 
+pub use precision::{
+    all_gather_quant, reduce_mean_quant, reduce_scatter_mean_quant,
+    Precision, PrecisionPlan,
+};
 pub use topology::{
     CollOp, ReduceSchedule, ScheduleKind, SchedulePolicy, Topology,
 };
@@ -59,6 +73,21 @@ pub(crate) const REDUCE_CHUNK: usize = 4096;
 /// still `(0 + w0 + w1 + ... + wk-1) * (1/k)` in worker order, so results
 /// are bit-identical to the pre-chunked implementation.
 pub fn reduce_mean(workers: &[&[f32]], out: &mut [f32]) {
+    reduce_mean_mapped(workers, out, |x| x);
+}
+
+/// The single chunked rank-order kernel behind [`reduce_mean`]
+/// (identity map) and the quantize-on-wire variant
+/// ([`precision::reduce_mean_quant`]): `map` is applied to every loaded
+/// contribution and to the stored mean. Sharing the kernel keeps the
+/// two paths provably in lockstep — same chunking, same f64
+/// worker-order accumulation — so the per-element map is the *only*
+/// numeric difference between them.
+pub(crate) fn reduce_mean_mapped(
+    workers: &[&[f32]],
+    out: &mut [f32],
+    map: impl Fn(f32) -> f32,
+) {
     let k = workers.len();
     assert!(k > 0, "no workers");
     for w in workers {
@@ -76,12 +105,12 @@ pub fn reduce_mean(workers: &[&[f32]], out: &mut [f32]) {
         for w in workers {
             let ws = &w[base..base + len];
             for (a, &x) in acc.iter_mut().zip(ws) {
-                *a += x as f64;
+                *a += map(x) as f64;
             }
         }
         let oc = &mut out[base..base + len];
         for (o, &a) in oc.iter_mut().zip(acc.iter()) {
-            *o = (a * inv) as f32;
+            *o = map((a * inv) as f32);
         }
         base += len;
     }

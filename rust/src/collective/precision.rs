@@ -1,0 +1,567 @@
+//! Numeric precision seam: half-width storage/wire dtypes as a
+//! first-class axis of the collective stack.
+//!
+//! The paper's headline 76-minute run is a **mixed-precision** TPU run,
+//! and the 54-minute follow-up trains in fp16 with fp32 master weights
+//! and dynamic loss scaling — yet until this module every byte the
+//! pricing stack accounted and every element the collectives moved was a
+//! 4-byte f32. [`Precision`] makes the dtype explicit:
+//!
+//! * **Storage/wire width** ([`Precision::bytes`]): what a parameter or
+//!   gradient element occupies resident in HBM and on the interconnect —
+//!   the quantity `exec::stage_split_prec` tables and
+//!   `cluster::Pod` prices (half the wire for every collective at
+//!   bf16/f16).
+//! * **Numerics** ([`Precision::quantize`]): software bf16/f16 via bit
+//!   manipulation — round-to-nearest-even, deterministic, and a pure
+//!   per-element function, so quantize-on-wire reductions stay
+//!   **rank-order invariant** exactly like [`super::reduce_mean`]
+//!   (every rank sees the same bits regardless of arrival order).
+//!   `Precision::F32` is the identity, so the f32 paths of
+//!   [`reduce_mean_quant`] / [`all_gather_quant`] are bitwise-identical
+//!   to the unquantized kernels by construction (they *are* the same
+//!   code path).
+//!
+//! [`PrecisionPlan`] bundles the per-tensor choices (`[precision]`
+//! config table): params dtype, grads dtype, and whether an fp32 master
+//! parameter copy exists (forced on whenever params are half-width —
+//! the optimizer must accumulate updates at full precision or tiny
+//! steps round away; see `optim::LossScaler` for the companion
+//! gradient-range machinery).
+
+use super::{all_gather, reduce_mean, reduce_mean_mapped};
+
+/// Storage/wire dtype of a tensor class (params or grads).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// IEEE binary32 — the baseline; quantization is the identity.
+    #[default]
+    F32,
+    /// bfloat16: f32's exponent range, 8-bit significand. The TPU-native
+    /// half type (what the paper's mixed run stores and moves).
+    Bf16,
+    /// IEEE binary16: 5-bit exponent, 11-bit significand. Narrow range —
+    /// the dtype that makes loss scaling mandatory.
+    F16,
+}
+
+impl Precision {
+    /// Every dtype, smallest-width last (table/census order).
+    pub const ALL: [Precision; 3] =
+        [Precision::F32, Precision::Bf16, Precision::F16];
+
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" | "fp32" | "float32" => Some(Precision::F32),
+            "bf16" | "bfloat16" => Some(Precision::Bf16),
+            "f16" | "fp16" | "float16" => Some(Precision::F16),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+            Precision::F16 => "f16",
+        }
+    }
+
+    /// Bytes one element occupies in storage and on the wire.
+    pub fn bytes(&self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::Bf16 | Precision::F16 => 2,
+        }
+    }
+
+    /// Round `x` through this storage dtype (round-to-nearest-even) and
+    /// widen back to f32 — the value a rank would actually read after
+    /// the element crossed the wire or was stored half-width.
+    ///
+    /// Pure and deterministic per element; idempotent
+    /// (`quantize(quantize(x)) == quantize(x)` bitwise). `F32` is the
+    /// identity.
+    pub fn quantize(&self, x: f32) -> f32 {
+        match self {
+            Precision::F32 => x,
+            Precision::Bf16 => bf16_round(x),
+            Precision::F16 => f16_bits_to_f32(f32_to_f16_bits(x)),
+        }
+    }
+}
+
+/// Round an f32 to the nearest bf16 (ties to even) and widen back:
+/// round-to-nearest-even on the top 16 bits. Overflow saturates to the
+/// infinity of the sign (max-f32 is above bf16's max finite + half ulp);
+/// NaN stays NaN (quieted), never rounds into an infinity.
+fn bf16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Keep the payload's top bits, force the quiet bit so the
+        // truncated mantissa cannot become all-zero (which would read
+        // back as an infinity).
+        return f32::from_bits((bits & 0xffff_0000) | 0x0040_0000);
+    }
+    // Classic RNE trick: adding 0x7fff plus the round bit's own value
+    // carries exactly when the tail is > half, or == half with an odd
+    // kept mantissa. Infinities are fixed points (tail is zero).
+    let round = 0x7fff + ((bits >> 16) & 1);
+    f32::from_bits(bits.wrapping_add(round) & 0xffff_0000)
+}
+
+/// f32 -> IEEE binary16 bit pattern, round-to-nearest-even, with
+/// subnormal and overflow handling (values at or above 65520 round to
+/// infinity; magnitudes below 2^-25 round to signed zero).
+pub(crate) fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp32 = ((bits >> 23) & 0xff) as i32;
+    let man32 = bits & 0x007f_ffff;
+    if exp32 == 0xff {
+        // Inf stays Inf; NaN stays (quiet) NaN.
+        return if man32 == 0 { sign | 0x7c00 } else { sign | 0x7e00 };
+    }
+    if exp32 == 0 {
+        // f32 subnormals are below 2^-126 — far under half of f16's
+        // smallest subnormal (2^-25): signed zero.
+        return sign;
+    }
+    let exp = exp32 - 127 + 15; // f16-biased exponent before rounding
+    let man = man32 | 0x0080_0000; // 24-bit significand, 1.23 fixed point
+    // Normals keep 11 significant bits (shift 13); f16-subnormal targets
+    // shift further so the unit lands on 2^-24.
+    let shift = if exp <= 0 { 14 - exp } else { 13 };
+    if shift > 24 {
+        return sign; // the whole significand rounds away
+    }
+    let shift = shift as u32;
+    let halfway = 1u32 << (shift - 1);
+    let rem = man & ((1u32 << shift) - 1);
+    let mut out = man >> shift;
+    if rem > halfway || (rem == halfway && (out & 1) == 1) {
+        out += 1;
+    }
+    if exp <= 0 {
+        // Subnormal result (out <= 0x400). A carry to exactly 0x400 is
+        // the smallest normal, whose bit pattern is literally sign|0x400
+        // (exponent 1, mantissa 0) — the encoding composes for free.
+        return sign | out as u16;
+    }
+    let mut exp = exp as u32;
+    if out >= 0x800 {
+        // Mantissa carry: 2.0 * 2^e == 1.0 * 2^(e+1).
+        out >>= 1;
+        exp += 1;
+    }
+    if exp >= 0x1f {
+        return sign | 0x7c00; // overflow -> Inf
+    }
+    sign | ((exp << 10) as u16) | ((out & 0x3ff) as u16)
+}
+
+/// IEEE binary16 bit pattern -> f32 (exact: every f16 value is
+/// representable in f32).
+pub(crate) fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    if exp == 0x1f {
+        return if man == 0 {
+            f32::from_bits(sign | 0x7f80_0000)
+        } else {
+            f32::from_bits(sign | 0x7fc0_0000 | (man << 13))
+        };
+    }
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // signed zero
+        }
+        // Subnormal: man * 2^-24, exact in f32 (man has 10 bits).
+        let mag = man as f32 * f32::from_bits(0x3380_0000); // 2^-24
+        return if sign != 0 { -mag } else { mag };
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+/// [`reduce_mean`] with the wire carrying `wire`-dtype elements: every
+/// per-worker contribution is rounded through the storage dtype before
+/// the f64 rank-order accumulation, and the mean is rounded back into
+/// the dtype the receiving buffer stores. `Precision::F32` takes the
+/// unquantized kernel itself, so it is bitwise-identical to
+/// [`reduce_mean`] by construction; the half dtypes remain deterministic
+/// and rank-order invariant (quantization is per-element, the
+/// accumulation order is unchanged).
+pub fn reduce_mean_quant(wire: Precision, workers: &[&[f32]], out: &mut [f32]) {
+    if wire == Precision::F32 {
+        // Literally the plain kernel (identity map) — bitwise-identical
+        // by construction, not by parallel implementation.
+        return reduce_mean(workers, out);
+    }
+    reduce_mean_mapped(workers, out, |x| wire.quantize(x));
+}
+
+/// [`super::reduce_scatter_mean`] through a wire dtype — the range-local
+/// half of [`reduce_mean_quant`], element-for-element bitwise equal to
+/// the same range of the monolithic quantized reduction.
+pub fn reduce_scatter_mean_quant(
+    wire: Precision,
+    workers: &[&[f32]],
+    start: usize,
+    end: usize,
+    out: &mut [f32],
+) {
+    assert!(start <= end, "inverted range");
+    assert_eq!(out.len(), end - start, "output length != range length");
+    let slices: Vec<&[f32]> = workers
+        .iter()
+        .map(|w| {
+            assert!(end <= w.len(), "range exceeds worker buffer");
+            &w[start..end]
+        })
+        .collect();
+    reduce_mean_quant(wire, &slices, out);
+}
+
+/// [`all_gather`] through a wire dtype: each gathered element is rounded
+/// through the storage dtype. For chunks that already hold
+/// storage-dtype values (the exec shards — quantization is idempotent)
+/// this is a plain copy; `F32` delegates to the unquantized gather
+/// bitwise.
+pub fn all_gather_quant(
+    wire: Precision,
+    shards: &[(usize, &[f32])],
+    out: &mut [f32],
+) {
+    if wire == Precision::F32 {
+        return all_gather(shards, out);
+    }
+    for &(start, chunk) in shards {
+        assert!(
+            start + chunk.len() <= out.len(),
+            "shard [{start}, {}) exceeds output length {}",
+            start + chunk.len(),
+            out.len()
+        );
+        for (o, &x) in out[start..start + chunk.len()].iter_mut().zip(chunk) {
+            *o = wire.quantize(x);
+        }
+    }
+}
+
+/// Resolved per-tensor precision choices — the `[precision]` config
+/// table as the numeric/accounting layers consume it. The derived
+/// default is [`PrecisionPlan::F32`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrecisionPlan {
+    /// Storage + wire dtype of the parameters (and their ZeRO-3
+    /// just-in-time gathers / ZeRO-2 trailing all-gather).
+    pub params: Precision,
+    /// Storage + wire dtype of the gradients (and every gradient
+    /// all-reduce / reduce-scatter).
+    pub grads: Precision,
+    /// Keep a 4-byte fp32 master parameter copy that the optimizer
+    /// steps (cast back to the storage dtype afterwards). Forced on via
+    /// [`PrecisionPlan::has_master`] whenever params are half-width.
+    pub master_weights: bool,
+}
+
+impl PrecisionPlan {
+    /// The all-f32 baseline: no master copy, every path bitwise-
+    /// identical to the pre-precision stack.
+    pub const F32: PrecisionPlan = PrecisionPlan {
+        params: Precision::F32,
+        grads: Precision::F32,
+        master_weights: false,
+    };
+
+    /// The paper's mixed recipe: half-width params + grads (storage and
+    /// wire), fp32 master weights.
+    pub fn mixed(half: Precision) -> PrecisionPlan {
+        PrecisionPlan { params: half, grads: half, master_weights: true }
+    }
+
+    /// Anything half-width anywhere?
+    pub fn is_mixed(&self) -> bool {
+        self.params != Precision::F32 || self.grads != Precision::F32
+    }
+
+    /// Whether an fp32 master parameter copy exists: explicit opt-in, or
+    /// forced by half-width params (the optimizer must accumulate at
+    /// full precision).
+    pub fn has_master(&self) -> bool {
+        self.master_weights || self.params != Precision::F32
+    }
+
+    /// Bytes per parameter element in storage / on the wire.
+    pub fn param_bytes(&self) -> usize {
+        self.params.bytes()
+    }
+
+    /// Bytes per gradient element in storage / on the wire.
+    pub fn grad_bytes(&self) -> usize {
+        self.grads.bytes()
+    }
+
+    /// Bytes per element of the fp32 master copy (0 when none exists).
+    pub fn master_bytes(&self) -> usize {
+        if self.has_master() {
+            4
+        } else {
+            0
+        }
+    }
+
+    /// Short table label, e.g. `f32` or `bf16/bf16+master`.
+    pub fn label(&self) -> String {
+        if !self.is_mixed() && !self.has_master() {
+            return self.params.as_str().to_string();
+        }
+        let mut s =
+            format!("{}/{}", self.params.as_str(), self.grads.as_str());
+        if self.has_master() {
+            s.push_str("+master");
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::REDUCE_CHUNK;
+    use crate::util::Rng;
+
+    #[test]
+    fn parse_roundtrip_and_bytes() {
+        for p in Precision::ALL {
+            assert_eq!(Precision::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Precision::parse("fp16"), Some(Precision::F16));
+        assert_eq!(Precision::parse("bfloat16"), Some(Precision::Bf16));
+        assert_eq!(Precision::parse("fp8"), None);
+        assert_eq!(Precision::F32.bytes(), 4);
+        assert_eq!(Precision::Bf16.bytes(), 2);
+        assert_eq!(Precision::F16.bytes(), 2);
+    }
+
+    #[test]
+    fn f32_quantize_is_identity_bitwise() {
+        let mut rng = Rng::new(41);
+        for _ in 0..1000 {
+            let x = rng.normal_f32(1e10);
+            assert_eq!(Precision::F32.quantize(x).to_bits(), x.to_bits());
+        }
+        for x in [0.0f32, -0.0, f32::INFINITY, f32::MIN_POSITIVE, f32::MAX] {
+            assert_eq!(Precision::F32.quantize(x).to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn bf16_known_values_and_rne() {
+        let q = |x: f32| Precision::Bf16.quantize(x);
+        // Exactly representable values are fixed points.
+        for x in [0.0f32, 1.0, -2.5, 256.0, 3.0e38, -1.0e-30] {
+            let once = q(x);
+            assert_eq!(q(once).to_bits(), once.to_bits(), "{x}");
+        }
+        assert_eq!(q(1.0), 1.0);
+        assert_eq!(q(-0.0).to_bits(), (-0.0f32).to_bits());
+        // bf16 ulp at 1.0 is 2^-7 = 0.0078125. Exactly halfway
+        // (1.00390625) ties to the even mantissa -> 1.0.
+        assert_eq!(q(1.00390625), 1.0);
+        // One bit above the tie rounds up.
+        assert_eq!(q(f32::from_bits(0x3f80_8001)), 1.0078125);
+        // Three quarters of an ulp rounds up too.
+        assert_eq!(q(1.005859375), 1.0078125);
+        // The next tie (1.01171875, kept mantissa odd) rounds away.
+        assert_eq!(q(1.01171875), 1.015625);
+        // Infinities are fixed points; f32::MAX overflows to +inf.
+        assert_eq!(q(f32::INFINITY), f32::INFINITY);
+        assert_eq!(q(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert_eq!(q(f32::MAX), f32::INFINITY);
+        assert_eq!(q(f32::MIN), f32::NEG_INFINITY);
+        // NaN stays NaN (never becomes an infinity).
+        assert!(q(f32::NAN).is_nan());
+        assert!(q(f32::from_bits(0x7f80_0001)).is_nan());
+    }
+
+    #[test]
+    fn f16_known_values() {
+        let q = |x: f32| Precision::F16.quantize(x);
+        assert_eq!(q(0.0).to_bits(), 0.0f32.to_bits());
+        assert_eq!(q(-0.0).to_bits(), (-0.0f32).to_bits());
+        assert_eq!(q(1.0), 1.0);
+        assert_eq!(q(-1.5), -1.5);
+        assert_eq!(q(65504.0), 65504.0); // f16 max finite
+        assert_eq!(q(65519.9), 65504.0); // below the rounding boundary
+        assert_eq!(q(65520.0), f32::INFINITY); // ties away to inf
+        assert_eq!(q(-65520.0), f32::NEG_INFINITY);
+        assert_eq!(q(f32::INFINITY), f32::INFINITY);
+        assert!(q(f32::NAN).is_nan());
+        // Smallest f16 normal and subnormal.
+        assert_eq!(q(6.103515625e-5), 6.103515625e-5); // 2^-14
+        assert_eq!(q(5.9604644775390625e-8), 5.9604644775390625e-8); // 2^-24
+        // Below half the smallest subnormal: rounds to signed zero.
+        assert_eq!(q(1.0e-8).to_bits(), 0.0f32.to_bits());
+        assert_eq!(q(-1.0e-8).to_bits(), (-0.0f32).to_bits());
+        // f16 ulp at 1.0 is 2^-10; halfway ties to even -> 1.0, one f32
+        // bit above the tie rounds up.
+        assert_eq!(q(1.0 + 0.00048828125), 1.0);
+        assert_eq!(q(f32::from_bits(0x3f80_1001)), 1.0009765625);
+        // Subnormal rounding: 1.5 * 2^-24 ties to even -> 2^-24 * 2.
+        let sub = f16_bits_to_f32(0x0002);
+        assert_eq!(q(1.5 * 5.9604644775390625e-8), sub);
+    }
+
+    /// Quantization is idempotent for both half dtypes on random values
+    /// across the full exponent range — the storage-dtype fixed-point
+    /// property the exec shards rely on (a stored value re-crossing the
+    /// wire is bit-identical).
+    #[test]
+    fn quantize_idempotent_on_random_values() {
+        let mut rng = Rng::new(42);
+        for p in [Precision::Bf16, Precision::F16] {
+            for _ in 0..2000 {
+                let scale = 10.0f32.powi((rng.below(60) as i32) - 30);
+                let x = rng.normal_f32(scale);
+                let once = p.quantize(x);
+                let twice = p.quantize(once);
+                assert_eq!(
+                    once.to_bits(),
+                    twice.to_bits(),
+                    "{p:?} x={x} once={once}"
+                );
+                // sign preserved, and the rounded value is within one
+                // ulp-ish relative distance for in-range normals
+                if x.is_finite() && once.is_finite() && once != 0.0 {
+                    assert_eq!(once.is_sign_negative(), x.is_sign_negative());
+                }
+            }
+        }
+    }
+
+    /// f16 roundtrip is exact over every one of the 65536 bit patterns:
+    /// widen-then-narrow returns the original bits (modulo NaN
+    /// quieting).
+    #[test]
+    fn f16_all_bit_patterns_roundtrip() {
+        for h in 0..=u16::MAX {
+            let x = f16_bits_to_f32(h);
+            let back = f32_to_f16_bits(x);
+            if x.is_nan() {
+                // NaNs stay NaNs; payload may quiet.
+                assert_eq!(back & 0x7c00, 0x7c00);
+                assert_ne!(back & 0x03ff, 0);
+            } else {
+                assert_eq!(back, h, "h={h:#06x} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_reduce_f32_is_bitwise_reduce_mean() {
+        let mut rng = Rng::new(43);
+        let n = REDUCE_CHUNK + 57;
+        let bufs: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..n).map(|_| rng.normal_f32(2.0)).collect())
+            .collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let mut plain = vec![0.0f32; n];
+        reduce_mean(&refs, &mut plain);
+        let mut quant = vec![0.0f32; n];
+        reduce_mean_quant(Precision::F32, &refs, &mut quant);
+        for i in 0..n {
+            assert_eq!(plain[i].to_bits(), quant[i].to_bits(), "i={i}");
+        }
+    }
+
+    /// The quantized reduction equals the definitional per-element
+    /// model — quantize every contribution, average in f64 worker
+    /// order, quantize the mean — and its scatter half reproduces the
+    /// monolithic result range-exactly (rank-order invariance is
+    /// inherited from the unchanged accumulation order).
+    #[test]
+    fn quantized_reduce_matches_reference_and_scatter() {
+        let mut rng = Rng::new(44);
+        for wire in [Precision::Bf16, Precision::F16] {
+            let n = 513;
+            let k = 3;
+            let bufs: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..n).map(|_| rng.normal_f32(1.5)).collect())
+                .collect();
+            let refs: Vec<&[f32]> =
+                bufs.iter().map(|b| b.as_slice()).collect();
+            let mut got = vec![0.0f32; n];
+            reduce_mean_quant(wire, &refs, &mut got);
+            let inv = 1.0f64 / k as f64;
+            for i in 0..n {
+                let mut acc = 0.0f64;
+                for w in &refs {
+                    acc += wire.quantize(w[i]) as f64;
+                }
+                let want = wire.quantize((acc * inv) as f32);
+                assert_eq!(got[i].to_bits(), want.to_bits(), "{wire:?} i={i}");
+                // the result is a storage-dtype value
+                assert_eq!(
+                    wire.quantize(got[i]).to_bits(),
+                    got[i].to_bits()
+                );
+            }
+            // scatter half == the same range of the monolithic reduce
+            let mut shard = vec![0.0f32; 100];
+            reduce_scatter_mean_quant(wire, &refs, 37, 137, &mut shard);
+            for (j, &v) in shard.iter().enumerate() {
+                assert_eq!(v.to_bits(), got[37 + j].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_gather_copies_storage_values_exactly() {
+        let mut rng = Rng::new(45);
+        for wire in [Precision::F32, Precision::Bf16, Precision::F16] {
+            let n = 64;
+            let raw: Vec<f32> = (0..n).map(|_| rng.normal_f32(3.0)).collect();
+            let stored: Vec<f32> =
+                raw.iter().map(|&x| wire.quantize(x)).collect();
+            let mut out = vec![0.0f32; n];
+            all_gather_quant(
+                wire,
+                &[(0, &stored[..40]), (40, &stored[40..])],
+                &mut out,
+            );
+            for i in 0..n {
+                assert_eq!(out[i].to_bits(), stored[i].to_bits(), "i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_flags_and_bytes() {
+        let f = PrecisionPlan::F32;
+        assert!(!f.is_mixed() && !f.has_master());
+        assert_eq!((f.param_bytes(), f.grad_bytes(), f.master_bytes()), (4, 4, 0));
+        assert_eq!(f.label(), "f32");
+        let m = PrecisionPlan::mixed(Precision::Bf16);
+        assert!(m.is_mixed() && m.has_master());
+        assert_eq!((m.param_bytes(), m.grad_bytes(), m.master_bytes()), (2, 2, 4));
+        assert_eq!(m.label(), "bf16/bf16+master");
+        // half params force the master copy even if the flag is off
+        let forced = PrecisionPlan {
+            params: Precision::F16,
+            grads: Precision::F32,
+            master_weights: false,
+        };
+        assert!(forced.has_master());
+        assert_eq!(forced.master_bytes(), 4);
+        // f32 params + explicit master is allowed (pure opt-in)
+        let optin = PrecisionPlan {
+            params: Precision::F32,
+            grads: Precision::Bf16,
+            master_weights: true,
+        };
+        assert!(optin.has_master() && optin.is_mixed());
+        assert_eq!(PrecisionPlan::default(), PrecisionPlan::F32);
+    }
+}

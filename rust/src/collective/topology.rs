@@ -57,7 +57,10 @@
 //!   wins below a crossover payload; its bandwidth term is
 //!   `log2(k) * b` instead of `~b`, so the ring wins above it.
 
-use super::{all_gather, reduce_mean, RingCost};
+use super::precision::{
+    all_gather_quant, reduce_mean_quant, Precision,
+};
+use super::RingCost;
 
 /// A concrete reduction schedule.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -311,27 +314,50 @@ pub struct ReduceSchedule {
     /// Node grouping of the worker ranks (the hierarchical schedule's
     /// wire pattern); informational on the host data path.
     pub node_size: usize,
+    /// Dtype the elements cross the wire in ([`Precision::F32`] keeps
+    /// the plain kernels bitwise; half dtypes round every contribution
+    /// and result through the storage dtype —
+    /// [`super::reduce_mean_quant`]). Unlike `kind`, this is a *numeric*
+    /// choice: half wire changes bits, deterministically and rank-order
+    /// invariantly.
+    pub wire: Precision,
 }
 
 impl Default for ReduceSchedule {
     fn default() -> Self {
-        ReduceSchedule { kind: ScheduleKind::Ring, node_size: 1 }
+        ReduceSchedule {
+            kind: ScheduleKind::Ring,
+            node_size: 1,
+            wire: Precision::F32,
+        }
     }
 }
 
 impl ReduceSchedule {
     pub fn new(kind: ScheduleKind, node_size: usize) -> ReduceSchedule {
-        ReduceSchedule { kind, node_size: node_size.max(1) }
+        ReduceSchedule {
+            kind,
+            node_size: node_size.max(1),
+            wire: Precision::F32,
+        }
+    }
+
+    /// Same schedule, elements crossing the wire in `wire` dtype.
+    pub fn with_wire(mut self, wire: Precision) -> ReduceSchedule {
+        self.wire = wire;
+        self
     }
 
     /// Average per-worker buffers into `out` — the single rank-order
     /// kernel for every kind, so this is bitwise-identical to
-    /// [`reduce_mean`] by construction (a ring streams the flat rank
-    /// order; a pipelined chain tree and a hierarchical leader chain
-    /// folding node groups in rank order perform the same op
-    /// sequence).
+    /// [`super::reduce_mean`] by construction at f32 wire (a ring
+    /// streams the flat rank order; a pipelined chain tree and a
+    /// hierarchical leader chain folding node groups in rank order
+    /// perform the same op sequence). A half-width wire quantizes each
+    /// contribution and the mean through the storage dtype — still one
+    /// deterministic rank-order kernel for every kind.
     pub fn reduce_mean(&self, workers: &[&[f32]], out: &mut [f32]) {
-        reduce_mean(workers, out);
+        reduce_mean_quant(self.wire, workers, out);
     }
 
     /// Reduce-scatter (mean) of the flat range `[start, end)` — the
@@ -355,18 +381,21 @@ impl ReduceSchedule {
         self.reduce_mean(&slices, out);
     }
 
-    /// All-gather: stitch owner chunks back into the flat vector. A pure
-    /// copy — identical for every kind (the schedule only changes the
-    /// wire pattern, which the cost model prices).
+    /// All-gather: stitch owner chunks back into the flat vector —
+    /// identical for every kind (the schedule only changes the wire
+    /// pattern, which the cost model prices). At f32 wire a pure copy;
+    /// a half wire rounds each element through the storage dtype (a
+    /// no-op for chunks already holding storage-dtype values —
+    /// quantization is idempotent).
     pub fn all_gather(&self, shards: &[(usize, &[f32])], out: &mut [f32]) {
-        all_gather(shards, out);
+        all_gather_quant(self.wire, shards, out);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::collective::REDUCE_CHUNK;
+    use crate::collective::{reduce_mean, REDUCE_CHUNK};
 
     fn tpu_link() -> RingCost {
         RingCost { alpha: 4.4e-5, beta: 70e9 }

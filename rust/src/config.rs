@@ -202,6 +202,85 @@ impl TopologyConfig {
     }
 }
 
+/// Storage/wire precision + loss scaling (config section `[precision]`).
+///
+/// ```toml
+/// [precision]
+/// params = "bf16"        # f32 | bf16 | f16 — storage + wire dtype
+/// grads  = "bf16"        # f32 | bf16 | f16 — gradient wire dtype
+/// master_weights = true  # default: forced on when params are half
+/// loss_scale = "dynamic" # "none" | "dynamic" | a fixed scale >= 1
+/// ```
+///
+/// Mistyped values hard-error like `exec.zero_stage` (a number where a
+/// dtype string belongs, an unknown dtype name, a boolean loss scale)
+/// instead of silently training the wrong numerics. Half-width params
+/// additionally require `zero_stage >= 2`: the fp32 master-weight step
+/// path lives in the ZeRO-2/3 sharded states.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrecisionConfig {
+    /// Parameter storage + wire dtype.
+    pub params: crate::collective::Precision,
+    /// Gradient storage + wire dtype.
+    pub grads: crate::collective::Precision,
+    /// fp32 master-weight copy; `None` = auto (on iff params are
+    /// half-width). Explicitly disabling it with half params is a
+    /// config error.
+    pub master_weights: Option<bool>,
+    /// Gradient loss scaling (`optim::LossScaler`).
+    pub loss_scale: LossScaleConfig,
+}
+
+/// `[precision] loss_scale` spellings.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LossScaleConfig {
+    /// No scaling (the f32 default).
+    None,
+    /// Dynamic: start at 2^16, skip-and-halve on non-finite, double
+    /// after a stable window.
+    Dynamic,
+    /// Fixed scale (still skip-and-halves on overflow so training can
+    /// recover).
+    Fixed(f32),
+}
+
+impl Default for PrecisionConfig {
+    fn default() -> Self {
+        PrecisionConfig {
+            params: crate::collective::Precision::F32,
+            grads: crate::collective::Precision::F32,
+            master_weights: None,
+            loss_scale: LossScaleConfig::None,
+        }
+    }
+}
+
+impl PrecisionConfig {
+    /// Resolve into the plan the numeric/accounting layers consume.
+    pub fn plan(&self) -> crate::collective::PrecisionPlan {
+        crate::collective::PrecisionPlan {
+            params: self.params,
+            grads: self.grads,
+            master_weights: self.master_weights.unwrap_or(
+                self.params != crate::collective::Precision::F32,
+            ),
+        }
+    }
+
+    /// Build the configured loss scaler, if any.
+    pub fn scaler(&self) -> Option<crate::optim::LossScaler> {
+        match self.loss_scale {
+            LossScaleConfig::None => None,
+            LossScaleConfig::Dynamic => {
+                Some(crate::optim::LossScaler::dynamic())
+            }
+            LossScaleConfig::Fixed(s) => {
+                Some(crate::optim::LossScaler::fixed(s))
+            }
+        }
+    }
+}
+
 /// Which step path the coordinator uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StepPath {
@@ -244,6 +323,8 @@ pub struct TrainConfig {
     pub bucket_kb: usize,
     // interconnect topology ([topology] section)
     pub topology: TopologyConfig,
+    // storage/wire precision ([precision] section)
+    pub precision: PrecisionConfig,
     // io
     pub artifacts: String,
     pub out_dir: String,
@@ -273,6 +354,7 @@ impl Default for TrainConfig {
             exec_workers: 0,
             bucket_kb: 1024,
             topology: TopologyConfig::default(),
+            precision: PrecisionConfig::default(),
             artifacts: "artifacts".into(),
             out_dir: "results".into(),
             eval_every: 50,
@@ -435,6 +517,87 @@ impl TrainConfig {
                 anyhow!("topology.cross_step must be a boolean (got {raw:?})")
             })?;
         }
+        // ---- [precision] table: mistyped values hard-error (mirroring
+        // exec.zero_stage) instead of silently training the wrong
+        // numerics. ----
+        let get_precision = |key: &str| -> Result<Option<crate::collective::Precision>> {
+            match doc.get(key) {
+                None => Ok(None),
+                Some(raw) => {
+                    let s = raw.as_str().ok_or_else(|| {
+                        anyhow!(
+                            "{key} must be a string \
+                             \"f32\"|\"bf16\"|\"f16\" (got {raw:?})"
+                        )
+                    })?;
+                    Ok(Some(
+                        crate::collective::Precision::parse(s).ok_or_else(
+                            || {
+                                anyhow!(
+                                    "unknown {key} {s:?} \
+                                     (expected f32|bf16|f16)"
+                                )
+                            },
+                        )?,
+                    ))
+                }
+            }
+        };
+        if let Some(p) = get_precision("precision.params")? {
+            c.precision.params = p;
+        }
+        if let Some(p) = get_precision("precision.grads")? {
+            c.precision.grads = p;
+        }
+        if let Some(raw) = doc.get("precision.master_weights") {
+            c.precision.master_weights = Some(raw.as_bool().ok_or_else(
+                || {
+                    anyhow!(
+                        "precision.master_weights must be a boolean \
+                         (got {raw:?})"
+                    )
+                },
+            )?);
+        }
+        if let Some(raw) = doc.get("precision.loss_scale") {
+            c.precision.loss_scale = match raw {
+                TomlValue::Str(s) if s.as_str() == "none" => {
+                    LossScaleConfig::None
+                }
+                TomlValue::Str(s) if s.as_str() == "dynamic" => {
+                    LossScaleConfig::Dynamic
+                }
+                TomlValue::Str(s) => bail!(
+                    "unknown precision.loss_scale {s:?} \
+                     (expected \"none\", \"dynamic\" or a number >= 1)"
+                ),
+                other => {
+                    let v = other.as_f64().ok_or_else(|| {
+                        anyhow!(
+                            "precision.loss_scale must be \"none\", \
+                             \"dynamic\" or a number >= 1 (got {other:?})"
+                        )
+                    })?;
+                    if !v.is_finite() || v < 1.0 {
+                        bail!(
+                            "precision.loss_scale must be >= 1 (got {v})"
+                        );
+                    }
+                    // A value above f32 range would pass the f64 check
+                    // but become inf at the cast and panic inside
+                    // LossScaler later — hard-error at load time.
+                    let f = v as f32;
+                    if !f.is_finite() {
+                        bail!(
+                            "precision.loss_scale {v} overflows f32 \
+                             (max {:e})",
+                            f32::MAX
+                        );
+                    }
+                    LossScaleConfig::Fixed(f)
+                }
+            };
+        }
         if let Some(v) = gets("run.artifacts") { c.artifacts = v; }
         if let Some(v) = gets("run.out_dir") { c.out_dir = v; }
         if let Some(v) = geti("run.eval_every") { c.eval_every = v; }
@@ -459,6 +622,63 @@ impl TrainConfig {
         }
         if self.bucket_kb == 0 {
             bail!("exec.bucket_kb must be positive");
+        }
+        use crate::collective::Precision;
+        if self.precision.params != Precision::F32
+            && self.exec_mode.zero_stage() < 2
+        {
+            bail!(
+                "[precision] params = \"{}\" requires zero_stage >= 2: the \
+                 fp32 master-weight step path lives in the ZeRO-2/3 \
+                 sharded states (set [exec] zero_stage = 2 or 3, or keep \
+                 params = \"f32\")",
+                self.precision.params.as_str()
+            );
+        }
+        if self.precision.master_weights == Some(false)
+            && self.precision.params != Precision::F32
+        {
+            bail!(
+                "half-width params require fp32 master weights \
+                 (master_weights = false is only valid with \
+                 params = \"f32\")"
+            );
+        }
+        // The fused single-artifact path steps the dense optimizer
+        // inside the artifact: no gradient wire to quantize, no seam
+        // for the scaler's skip-and-halve gate, and no way to honor
+        // ZeRO sharding (the trainer would also checkpoint the
+        // never-stepped shard state instead of the artifact-held
+        // moments) — reject the dead knobs instead of silently
+        // ignoring them. Rejecting zero_stage >= 1 here also closes
+        // the fused + half-params hole: half params require stage >= 2.
+        if self.step_path == StepPath::Fused {
+            if self.exec_mode.zero_stage() >= 1 {
+                bail!(
+                    "step_path = \"fused\" is incompatible with \
+                     exec mode {} (the fused artifact steps the dense \
+                     optimizer; ZeRO shard state would never be \
+                     stepped); use the distributed step path",
+                    self.exec_mode.as_str()
+                );
+            }
+            if self.precision.loss_scale != LossScaleConfig::None {
+                bail!(
+                    "step_path = \"fused\" is incompatible with \
+                     precision.loss_scale (the fused artifact steps the \
+                     optimizer internally, bypassing the scaler gate); \
+                     use the distributed step path"
+                );
+            }
+            if self.precision.grads != Precision::F32 {
+                bail!(
+                    "step_path = \"fused\" is incompatible with \
+                     precision.grads = \"{}\" (the single fused worker \
+                     has no gradient wire); use the distributed step \
+                     path",
+                    self.precision.grads.as_str()
+                );
+            }
         }
         Ok(())
     }
@@ -703,6 +923,141 @@ betas = [0.9, 0.999]
         )
         .unwrap();
         assert_eq!(c.topology.inter_gbps, Some(70.0));
+    }
+
+    #[test]
+    fn precision_table_parses_and_resolves() {
+        use crate::collective::Precision;
+        let c = TrainConfig::load(
+            None,
+            &[
+                ("exec.zero_stage".into(), "3".into()),
+                ("precision.params".into(), "\"bf16\"".into()),
+                ("precision.grads".into(), "\"bf16\"".into()),
+                ("precision.loss_scale".into(), "\"dynamic\"".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.precision.params, Precision::Bf16);
+        assert_eq!(c.precision.grads, Precision::Bf16);
+        assert_eq!(c.precision.master_weights, None);
+        assert_eq!(c.precision.loss_scale, LossScaleConfig::Dynamic);
+        let plan = c.precision.plan();
+        assert!(plan.has_master(), "half params force the master copy");
+        assert!(plan.is_mixed());
+        assert_eq!(c.precision.scaler().unwrap().scale(), 65536.0);
+        // fixed scale spelled as a number (integers work like floats)
+        let c = TrainConfig::load(
+            None,
+            &[("precision.loss_scale".into(), "1024".into())],
+        )
+        .unwrap();
+        assert_eq!(c.precision.loss_scale, LossScaleConfig::Fixed(1024.0));
+        assert_eq!(c.precision.scaler().unwrap().scale(), 1024.0);
+        // defaults: pure f32, no scaler, plan == F32 baseline
+        let d = TrainConfig::default();
+        assert_eq!(d.precision.plan(), crate::collective::PrecisionPlan::F32);
+        assert!(d.precision.scaler().is_none());
+        // grads-only mixed works at any stage (wire quantization needs
+        // no master copy)
+        let c = TrainConfig::load(
+            None,
+            &[("precision.grads".into(), "\"f16\"".into())],
+        )
+        .unwrap();
+        assert_eq!(c.precision.grads, Precision::F16);
+        assert!(!c.precision.plan().has_master());
+    }
+
+    /// Mistyped `[precision]` values are hard errors (like
+    /// `exec.zero_stage`), never silently-ignored keys — including the
+    /// consistency rules (half params need stage >= 2 and masters).
+    #[test]
+    fn precision_table_rejects_mistypes_and_inconsistency() {
+        let bad = |kv: &[(&str, &str)]| {
+            let kv: Vec<(String, String)> = kv
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect();
+            TrainConfig::load(None, &kv).is_err()
+        };
+        // wrong type
+        assert!(bad(&[("precision.params", "16")]));
+        assert!(bad(&[("precision.params", "true")]));
+        assert!(bad(&[("precision.grads", "2.0")]));
+        assert!(bad(&[("precision.master_weights", "\"yes\"")]));
+        assert!(bad(&[("precision.master_weights", "1")]));
+        assert!(bad(&[("precision.loss_scale", "true")]));
+        // wrong value
+        assert!(bad(&[("precision.params", "\"fp8\"")]));
+        assert!(bad(&[("precision.grads", "\"half\"")]));
+        assert!(bad(&[("precision.loss_scale", "\"auto\"")]));
+        assert!(bad(&[("precision.loss_scale", "0.5")]));
+        assert!(bad(&[("precision.loss_scale", "-2")]));
+        // above f32 range: would become inf at the cast and panic in
+        // LossScaler — must hard-error at load time instead
+        assert!(bad(&[("precision.loss_scale", "1e39")]));
+        // the fused step path has no wire, no scaler seam, and steps
+        // the dense optimizer (ZeRO shard state would rot unstepped —
+        // which also closes the fused + half-params route, since half
+        // params require stage >= 2)
+        assert!(bad(&[
+            ("run.step_path", "\"fused\""),
+            ("precision.loss_scale", "\"dynamic\""),
+        ]));
+        assert!(bad(&[
+            ("run.step_path", "\"fused\""),
+            ("precision.grads", "\"bf16\""),
+        ]));
+        for stage in ["1", "2", "3"] {
+            assert!(bad(&[
+                ("run.step_path", "\"fused\""),
+                ("exec.zero_stage", stage),
+            ]));
+        }
+        assert!(bad(&[
+            ("run.step_path", "\"fused\""),
+            ("exec.zero_stage", "2"),
+            ("precision.params", "\"bf16\""),
+        ]));
+        // ...but fused + pure f32 stays accepted
+        let c = TrainConfig::load(
+            None,
+            &[("run.step_path".into(), "\"fused\"".into())],
+        )
+        .unwrap();
+        assert_eq!(c.step_path, StepPath::Fused);
+        // half params below stage 2: no master step path exists there
+        assert!(bad(&[("precision.params", "\"bf16\"")]));
+        assert!(bad(&[
+            ("precision.params", "\"f16\""),
+            ("exec.zero_stage", "1"),
+        ]));
+        // ...but stage 2 and 3 accept them
+        for stage in ["2", "3"] {
+            let c = TrainConfig::load(
+                None,
+                &[
+                    ("precision.params".into(), "\"bf16\"".into()),
+                    ("exec.zero_stage".into(), stage.into()),
+                ],
+            )
+            .unwrap();
+            assert!(c.precision.plan().has_master());
+        }
+        // explicitly disabling masters with half params is inconsistent
+        assert!(bad(&[
+            ("precision.params", "\"bf16\""),
+            ("exec.zero_stage", "3"),
+            ("precision.master_weights", "false"),
+        ]));
+        // explicit opt-in with f32 params is fine
+        let c = TrainConfig::load(
+            None,
+            &[("precision.master_weights".into(), "true".into())],
+        )
+        .unwrap();
+        assert!(c.precision.plan().has_master());
     }
 
     #[test]

@@ -22,7 +22,9 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::{Pod, StatePartition};
-use crate::collective::{self, CollOp, ReduceSchedule, SchedulePolicy};
+use crate::collective::{
+    self, CollOp, Precision, ReduceSchedule, SchedulePolicy,
+};
 use crate::config::{StepPath, TrainConfig};
 use crate::data::{Batch, Corpus, MlmConfig, MlmGenerator};
 use crate::exec::{
@@ -31,8 +33,8 @@ use crate::exec::{
 };
 use crate::manifest::{ArtifactKind, Manifest, ModelMeta};
 use crate::metrics::{DivergenceDetector, RunLog, StepComm, StepRecord};
-use crate::model::ParamStore;
-use crate::optim::{self, Hyper, Optimizer, Seg};
+use crate::model::{Checkpoint, ParamStore};
+use crate::optim::{self, Hyper, LossScaler, Optimizer, Seg};
 use crate::runtime::{self, Engine, Executable};
 use crate::schedule::Schedule;
 
@@ -100,7 +102,14 @@ pub struct BertTrainer<'e> {
     zero3: Option<Zero3State>,
     /// Per-worker gradient accumulators (bucketed modes; stage-sized).
     worker_grads: Vec<Vec<f32>>,
-    // flat state
+    /// Gradient loss scaler (`[precision] loss_scale`): the per-worker
+    /// gradients are scaled *before* they cross the (possibly
+    /// half-width) wire, unscaled from the reduced gradient before the
+    /// optimizer step; non-finite values skip the step and halve the
+    /// scale.
+    scaler: Option<LossScaler>,
+    // flat state — under mixed precision `params` holds the
+    // storage-dtype cast; the fp32 masters live in the ZeRO-2/3 state.
     pub params: Vec<f32>,
     pub m: Vec<f32>,
     pub v: Vec<f32>,
@@ -147,18 +156,26 @@ impl<'e> BertTrainer<'e> {
         let plan = BucketPlan::from_segs(&plan_segs, cfg.bucket_kb * 1024);
         // Interconnect model: the calibrated TPUv3 slice refined by the
         // `[topology]` table (absent table = flat ring, bit-identical to
-        // the pre-topology pod).
+        // the pre-topology pod) and the `[precision]` plan (f32 default
+        // = bit-identical pricing; mixed halves every wire payload).
+        let prec = cfg.precision.plan();
         let mut pod = Pod::tpu_v3(cfg.chips);
         pod.topology = cfg.topology.build(pod.ring);
+        pod.precision = prec;
         // Numeric staging schedule: a fixed policy is taken as-is; auto
-        // resolves to the topology's pick for the whole flat gradient.
+        // resolves to the topology's pick for the whole flat gradient
+        // (priced at the gradient wire dtype). The wire dtype itself
+        // comes from `[precision] grads`.
         let reduce_kind = match cfg.topology.policy {
             SchedulePolicy::Fixed(kind) => kind,
             SchedulePolicy::Auto => {
-                pod.topology.pick(CollOp::AllReduce, cfg.chips, n * 4).0
+                pod.topology
+                    .pick(CollOp::AllReduce, cfg.chips, n * prec.grad_bytes())
+                    .0
             }
         };
-        let reduce = ReduceSchedule::new(reduce_kind, cfg.topology.node_size);
+        let reduce = ReduceSchedule::new(reduce_kind, cfg.topology.node_size)
+            .with_wire(prec.grads);
         let zero1 = if cfg.exec_mode == ExecMode::Zero1 {
             Some(
                 Zero1State::build(&cfg.optimizer, &plan, &plan_segs, hyper)
@@ -171,22 +188,29 @@ impl<'e> BertTrainer<'e> {
         };
         let zero2 = if cfg.exec_mode == ExecMode::Zero2 {
             Some(
-                Zero2State::build(&cfg.optimizer, n, &plan_segs, hyper)
-                    .with_context(|| {
-                        format!("zero2 optimizer {}", cfg.optimizer)
-                    })?,
+                Zero2State::build_prec(
+                    &cfg.optimizer,
+                    &ps.flat,
+                    &plan_segs,
+                    hyper,
+                    prec,
+                )
+                .with_context(|| {
+                    format!("zero2 optimizer {}", cfg.optimizer)
+                })?,
             )
         } else {
             None
         };
         let zero3 = if cfg.exec_mode == ExecMode::Zero3 {
             Some(
-                Zero3State::build(
+                Zero3State::build_prec(
                     &cfg.optimizer,
                     &plan,
                     &ps.flat,
                     &plan_segs,
                     hyper,
+                    prec,
                 )
                 .with_context(|| {
                     format!("zero3 optimizer {}", cfg.optimizer)
@@ -195,6 +219,18 @@ impl<'e> BertTrainer<'e> {
         } else {
             None
         };
+        // The trainer-held flat params are the storage copy: cast the
+        // fp32 initialization through the storage dtype (the masters —
+        // seeded above from the same fp32 values — keep full
+        // precision). Config validation restricts half params to the
+        // ZeRO-2/3 modes, where that master path exists.
+        let mut flat = ps.flat;
+        if prec.params != Precision::F32 {
+            for x in flat.iter_mut() {
+                *x = prec.params.quantize(*x);
+            }
+        }
+        let scaler = cfg.precision.scaler();
         let corpus = Corpus::new(meta.vocab);
         Ok(BertTrainer {
             engine,
@@ -208,7 +244,8 @@ impl<'e> BertTrainer<'e> {
             zero2,
             zero3,
             worker_grads: Vec::new(),
-            params: ps.flat,
+            scaler,
+            params: flat,
             m: vec![0.0; n],
             v: vec![0.0; n],
             step: 0,
@@ -411,6 +448,18 @@ impl<'e> BertTrainer<'e> {
                 for wg in self.worker_grads.iter_mut() {
                     collective::scale(wg, local_scale);
                 }
+                // -------- loss scaling ([precision] loss_scale): the
+                // workers backprop `scale * loss`, so their local
+                // gradients reach the (possibly half-width) wire
+                // already scaled — small components survive the wire
+                // dtype's underflow, and a wire overflow is cured by
+                // the skip-and-halve below shrinking the *next* step's
+                // pre-wire values. --------
+                if let Some(sc) = self.scaler.as_ref() {
+                    for wg in self.worker_grads.iter_mut() {
+                        sc.apply(wg);
+                    }
+                }
                 // -------- bucketed all-reduce (schedule-staged) --------
                 let refs: Vec<&[f32]> =
                     self.worker_grads.iter().map(|g| g.as_slice()).collect();
@@ -421,8 +470,18 @@ impl<'e> BertTrainer<'e> {
                     &mut self.grad_acc,
                 );
                 let loss = (loss_sum / n_micro as f64) as f32;
+                // -------- unscale gate: divide the scale back out of
+                // the reduced gradient before the optimizer step, or
+                // skip the step and halve on non-finite values. -------
+                let step_ok = match self.scaler.as_mut() {
+                    Some(sc) => sc.unscale(&mut self.grad_acc),
+                    None => true,
+                };
                 // -------- optimizer phase (ZeRO shards or dense) -----
-                let ratios = if self.zero1.is_some() {
+                let ratios = if !step_ok {
+                    // skipped step: params untouched, scale halved
+                    Vec::new()
+                } else if self.zero1.is_some() {
                     let z = self.zero1.as_mut().unwrap();
                     z.step_all(
                         &self.plan,
@@ -479,8 +538,34 @@ impl<'e> BertTrainer<'e> {
                 // -------- all-reduce (mean) --------
                 collective::scale(&mut self.grad_acc, 1.0 / n_micro as f32);
                 let loss = (loss_sum / n_micro as f64) as f32;
-                // -------- optimizer phase --------
-                let ratios = self.apply_opt(lr)?;
+                // -------- wire dtype + loss-scaling gate: this path
+                // simulates one monolithic all-reduce, and that reduce
+                // still crosses the interconnect in the grads dtype
+                // (what the pod's step_time prices). Scale before the
+                // wire so small components survive it; at f32 wire the
+                // scale round-trip is exact, so only the non-finite
+                // gate runs. --------
+                let wire = self.reduce.wire;
+                let step_ok = match self.scaler.as_mut() {
+                    Some(sc) if wire != Precision::F32 => {
+                        sc.apply(&mut self.grad_acc);
+                        for g in self.grad_acc.iter_mut() {
+                            *g = wire.quantize(*g);
+                        }
+                        sc.unscale(&mut self.grad_acc)
+                    }
+                    Some(sc) => sc.observe(&self.grad_acc),
+                    None => {
+                        if wire != Precision::F32 {
+                            for g in self.grad_acc.iter_mut() {
+                                *g = wire.quantize(*g);
+                            }
+                        }
+                        true
+                    }
+                };
+                let ratios =
+                    if step_ok { self.apply_opt(lr)? } else { Vec::new() };
                 (loss, ratios)
             };
 
@@ -588,19 +673,49 @@ impl<'e> BertTrainer<'e> {
 
     /// Save params + moments + step (resume support for the two-stage
     /// recipe, which on the paper's pod ran as separate jobs).
+    ///
+    /// Shard-aware: under a ZeRO mode the owners contribute their
+    /// moment / master / parameter shards (the on-disk format stays
+    /// dense fp32, so checkpoints move freely between stages and
+    /// precisions); the dense native path exports the optimizer's
+    /// moments; the artifact path uses the trainer-held `m`/`v`.
+    ///
+    /// Known limitation (ROADMAP follow-up): the dynamic loss-scaler
+    /// state is *not* part of the format — a resumed scaled run
+    /// restarts at the configured initial scale and re-converges via
+    /// skip-and-halve (a handful of skipped steps), so scaled resumes
+    /// are correct but not step-identical to the uninterrupted run.
     pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
-        crate::model::Checkpoint {
-            step: self.step,
-            params: self.params.clone(),
-            m: self.m.clone(),
-            v: self.v.clone(),
+        self.to_checkpoint().save(path)
+    }
+
+    fn to_checkpoint(&self) -> Checkpoint {
+        if let Some(z) = &self.zero3 {
+            z.checkpoint(&self.plan, self.step)
+        } else if let Some(z) = &self.zero2 {
+            z.checkpoint(self.step, &self.params)
+        } else if let Some(z) = &self.zero1 {
+            z.checkpoint(&self.plan, self.step, &self.params)
+        } else if let OptPath::Native(opt) = &self.opt {
+            Checkpoint::capture(self.step, &self.params, opt.as_ref())
+        } else {
+            Checkpoint {
+                step: self.step,
+                params: self.params.clone(),
+                m: self.m.clone(),
+                v: self.v.clone(),
+            }
         }
-        .save(path)
     }
 
     /// Restore state saved by `save_checkpoint`; step counting resumes.
+    /// The dense checkpoint scatters back into whatever sharding this
+    /// trainer runs (dense-save → zero3-restore → train is
+    /// bitwise-identical to the uninterrupted dense run,
+    /// `tests/test_exec.rs`); under mixed precision the masters take
+    /// the fp32 values and the storage params are re-cast.
     pub fn load_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
-        let c = crate::model::Checkpoint::load(path)?;
+        let c = Checkpoint::load(path)?;
         anyhow::ensure!(
             c.params.len() == self.meta.total_params,
             "checkpoint is for a different model ({} vs {} params)",
@@ -608,9 +723,24 @@ impl<'e> BertTrainer<'e> {
             self.meta.total_params
         );
         self.step = c.step;
-        self.params = c.params;
-        self.m = c.m;
-        self.v = c.v;
+        if let Some(z) = self.zero3.as_mut() {
+            z.restore(&self.plan, &c);
+            // refresh the transient view so anything inspecting params
+            // before the next step's gather sees the restored values
+            z.gather_into(&self.plan, &mut self.params);
+        } else if let Some(z) = self.zero2.as_mut() {
+            z.restore(&c, &mut self.params);
+        } else if let Some(z) = self.zero1.as_mut() {
+            z.restore(&self.plan, &c);
+            self.params = c.params;
+        } else if let OptPath::Native(opt) = &mut self.opt {
+            c.apply_moments(opt.as_mut());
+            self.params = c.params;
+        } else {
+            self.params = c.params;
+            self.m = c.m;
+            self.v = c.v;
+        }
         Ok(())
     }
 

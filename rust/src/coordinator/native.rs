@@ -14,6 +14,7 @@
 
 use std::time::Instant;
 
+use crate::collective::Precision;
 use crate::data::image::ImageTask;
 use crate::exec::{
     ExecConfig, ExecMode, Executor, GradWorker, StepCtx, Zero1State,
@@ -180,6 +181,18 @@ impl NativeTrainer {
         seed: u64,
         exec: ExecConfig,
     ) -> NativeTrainer {
+        // The gradient wire dtype is derived from `exec.prec.grads` by
+        // `Executor::new` — nothing to resolve here. Half-width params
+        // do need the fp32 master step path, which lives in the
+        // ZeRO-2/3 states (same rule the config layer enforces).
+        assert!(
+            exec.prec.params == Precision::F32
+                || matches!(exec.mode, ExecMode::Zero2 | ExecMode::Zero3),
+            "half-width params require exec mode zero2 or zero3 \
+             (got {:?} with params = {})",
+            exec.mode,
+            exec.prec.params.as_str()
+        );
         let mut tr = NativeTrainer::new(spec, optimizer, hyper, schedule, seed);
         let k = exec.workers.max(1);
         // Worker streams fork from the same root the legacy loop seeds
@@ -211,24 +224,38 @@ impl NativeTrainer {
         };
         let zero2 = match exec.mode {
             ExecMode::Zero2 => Some(
-                Zero2State::build(optimizer, n, &tr.segs, hyper)
-                    .unwrap_or_else(|| panic!("unknown optimizer {optimizer}")),
-            ),
-            _ => None,
-        };
-        let zero3 = match exec.mode {
-            ExecMode::Zero3 => Some(
-                Zero3State::build(
+                Zero2State::build_prec(
                     optimizer,
-                    executor.plan(),
                     &tr.mlp.params,
                     &tr.segs,
                     hyper,
+                    exec.prec,
                 )
                 .unwrap_or_else(|| panic!("unknown optimizer {optimizer}")),
             ),
             _ => None,
         };
+        let zero3 = match exec.mode {
+            ExecMode::Zero3 => Some(
+                Zero3State::build_prec(
+                    optimizer,
+                    executor.plan(),
+                    &tr.mlp.params,
+                    &tr.segs,
+                    hyper,
+                    exec.prec,
+                )
+                .unwrap_or_else(|| panic!("unknown optimizer {optimizer}")),
+            ),
+            _ => None,
+        };
+        // The trainer's resident params are the storage copy (the fp32
+        // masters were seeded above from the same initialization).
+        if exec.prec.params != Precision::F32 {
+            for x in tr.mlp.params.iter_mut() {
+                *x = exec.prec.params.quantize(*x);
+            }
+        }
         tr.exec = Some(NativeExec {
             executor,
             reduced: vec![0.0; n],
@@ -504,6 +531,52 @@ mod tests {
         let log = tr.train(200, 64);
         assert!(!log.diverged);
         assert!(log.tail_loss(20) < log.records[0].loss);
+    }
+
+    /// Mixed precision end to end on the native trainer: bf16 storage
+    /// params + bf16 gradient wire + fp32 masters still train (the loss
+    /// falls), and the resident parameters stay storage-dtype values
+    /// every step (the masters absorb the full-precision updates).
+    #[test]
+    fn mixed_precision_zero2_and_zero3_train() {
+        use crate::collective::PrecisionPlan;
+        let spec = NativeTask::mnist_proxy();
+        let sched = Schedule::WarmupPoly {
+            base: 0.02,
+            warmup: 10,
+            total: 200,
+            power: 1.0,
+        };
+        for mode in [ExecMode::Zero2, ExecMode::Zero3] {
+            let cfg = ExecConfig {
+                mode,
+                workers: 2,
+                bucket_bytes: 1 << 12,
+                prec: PrecisionPlan::mixed(Precision::Bf16),
+                ..ExecConfig::default()
+            };
+            let mut tr = NativeTrainer::with_exec(
+                &spec,
+                "lamb",
+                Hyper::default(),
+                sched.clone(),
+                3,
+                cfg,
+            );
+            let log = tr.train(200, 64);
+            assert!(!log.diverged, "{mode:?}");
+            assert!(
+                log.tail_loss(20) < log.records[0].loss,
+                "{mode:?}: loss did not fall"
+            );
+            for &x in &tr.mlp.params {
+                assert_eq!(
+                    Precision::Bf16.quantize(x).to_bits(),
+                    x.to_bits(),
+                    "{mode:?}: resident params must be storage-dtype"
+                );
+            }
+        }
     }
 
     #[test]

@@ -41,6 +41,15 @@
 //!   ~1/k per worker (`StatePartition::Zero3`), and the step remains
 //!   bitwise-identical to the dense pipeline.
 //!
+//! Orthogonally to the mode ladder, a
+//! [`crate::collective::PrecisionPlan`] (config `[precision]`) sets
+//! what dtype the storage and wire carry:
+//! half-width params/grads halve every collective payload the pod
+//! prices and shrink the resident shards, the ZeRO-2/3 states keep
+//! fp32 master weights the owners step ([`zero::Zero2State::build_prec`]),
+//! and `optim::LossScaler` guards the f16 gradient range. The f32 plan
+//! is bitwise-identical to the pre-precision engine.
+//!
 //! Serial mode drives the identical bucket/reduce data path on the
 //! calling thread and is bitwise-identical to parallel mode (asserted by
 //! `tests/test_exec.rs`), so sweeps stay reproducible across modes. The
@@ -55,12 +64,15 @@ pub mod zero;
 
 pub use bucket::{Bucket, BucketPlan};
 pub use pool::WorkerPool;
-pub use zero::{stage_state_bytes, Zero1State, Zero2State, Zero3State};
+pub use zero::{
+    stage_split, stage_split_prec, stage_state_bytes, stage_state_bytes_prec,
+    Zero1State, Zero2State, Zero3State,
+};
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::collective::ReduceSchedule;
+use crate::collective::{PrecisionPlan, ReduceSchedule};
 use crate::metrics::StepComm;
 use crate::optim::Seg;
 
@@ -142,8 +154,19 @@ pub struct ExecConfig {
     /// Reduction schedule for the reduce paths (`[topology]` section).
     /// Every kind is bitwise-identical numerically
     /// (`collective::ReduceSchedule` runs one rank-order kernel); the
-    /// choice records which schedule the pod model prices.
+    /// choice records which schedule the pod model prices. The
+    /// schedule's *wire dtype* is **derived state**: [`Executor::new`]
+    /// overwrites it from `prec.grads` (a half wire quantizes
+    /// deterministically, unlike the kind, which never changes bits).
     pub reduce: ReduceSchedule,
+    /// Storage/wire precision plan (`[precision]` section) — the single
+    /// source of the wire dtype ([`Executor::new`] stamps it into
+    /// `reduce`) and of the trainers' master-weight paths. `F32` keeps
+    /// every path bitwise-identical to the pre-precision engine; a
+    /// mixed plan halves the wire and storage of params/grads and adds
+    /// the fp32 master-weight step path (stages 2/3 only — the masters
+    /// live with the sharded optimizer state).
+    pub prec: PrecisionPlan,
 }
 
 impl Default for ExecConfig {
@@ -153,6 +176,7 @@ impl Default for ExecConfig {
             workers: 1,
             bucket_bytes: 1 << 20,
             reduce: ReduceSchedule::default(),
+            prec: PrecisionPlan::F32,
         }
     }
 }
@@ -346,12 +370,17 @@ pub struct Executor {
 impl Executor {
     /// Build from the segment table and a set of workers (one per
     /// simulated chip). `cfg.workers` is informational; the actual count
-    /// is `workers.len()`.
+    /// is `workers.len()`. The reduce schedule's wire dtype is derived
+    /// here from `cfg.prec.grads` — the precision plan is the single
+    /// source of what the wire carries, so callers cannot end up with
+    /// mixed accounting over an f32 wire (or vice versa).
     pub fn new(
         cfg: ExecConfig,
         segs: &[Seg],
         workers: Vec<Box<dyn GradWorker>>,
     ) -> Executor {
+        let mut cfg = cfg;
+        cfg.reduce = cfg.reduce.with_wire(cfg.prec.grads);
         assert!(!workers.is_empty(), "need at least one worker");
         let n = workers[0].n();
         for w in &workers {
@@ -701,6 +730,7 @@ mod tests {
                 workers: 3,
                 bucket_bytes: 100 * 4,
                 reduce,
+                ..ExecConfig::default()
             };
             let mut ex = Executor::new(cfg, &segs, toy_workers(3, n, 6));
             let params = vec![0.5f32; n];
@@ -731,6 +761,61 @@ mod tests {
                         );
                     }
                     assert_eq!(loss, base_loss, "{mode:?} {kind:?}");
+                }
+            }
+        }
+    }
+
+    /// A half-width wire is a *numeric* choice, but a deterministic
+    /// one: with the same wire dtype, the dense all-reduce pipeline and
+    /// the zero2/zero3 reduce-scatter + gather pipelines still agree
+    /// bitwise (quantization is per-element and the rank order is
+    /// unchanged), and every reduced element is a storage-dtype value.
+    #[test]
+    fn mixed_wire_zero_modes_bitwise_equal_parallel() {
+        use crate::collective::{Precision, PrecisionPlan};
+        let segs = tile(&[96, 16, 128, 16, 64, 8]);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        for wire in [Precision::Bf16, Precision::F16] {
+            // the wire dtype is derived from the precision plan by
+            // Executor::new — setting prec.grads is all it takes
+            let cfg = |mode| ExecConfig {
+                mode,
+                workers: 3,
+                bucket_bytes: 100 * 4,
+                prec: PrecisionPlan {
+                    params: Precision::F32,
+                    grads: wire,
+                    master_weights: false,
+                },
+                ..ExecConfig::default()
+            };
+            let mut par = Executor::new(
+                cfg(ExecMode::Parallel),
+                &segs,
+                toy_workers(3, n, 6),
+            );
+            for mode in [ExecMode::Zero2, ExecMode::Zero3] {
+                let mut sharded =
+                    Executor::new(cfg(mode), &segs, toy_workers(3, n, 6));
+                let params = vec![0.5f32; n];
+                let mut ra = vec![0.0f32; n];
+                let mut rb = vec![0.0f32; n];
+                for t in 1..=3 {
+                    par.step(t, 8, &params, &mut ra);
+                    sharded.step(t, 8, &params, &mut rb);
+                    for i in 0..n {
+                        assert_eq!(
+                            ra[i].to_bits(),
+                            rb[i].to_bits(),
+                            "{wire:?} {mode:?} step {t} i={i}"
+                        );
+                        assert_eq!(
+                            wire.quantize(ra[i]).to_bits(),
+                            ra[i].to_bits(),
+                            "{wire:?}: reduced grad must be storage-dtype"
+                        );
+                    }
                 }
             }
         }

@@ -35,17 +35,34 @@
 //! hold whole segments, a sharded step — stage 1, 2 or 3 — is
 //! *f32-exactly* equal to the dense step; `tests/test_exec.rs` asserts
 //! this property on random segment tables.
+//!
+//! **Mixed precision** threads through the same seams
+//! ([`crate::collective::PrecisionPlan`]): [`Zero2State::build_prec`] /
+//! [`Zero3State::build_prec`] keep the storage params half-width (what
+//! the wire moves and the gathers materialize) plus an **fp32 master
+//! copy** that the owner's `step_range` updates before casting the
+//! range back to the storage dtype — the master shards with the
+//! optimizer state, so [`stage_split_prec`]'s mixed column frees
+//! strictly more replicated bytes per stage than the f32 row. All three
+//! states save/restore through plain dense [`Checkpoint`]s: owners
+//! contribute their moment (and master) shards on save, and a restore
+//! scatters them back — so a dense-f32 save resumes a ZeRO-3 run
+//! bitwise-identically and a mixed save carries the fp32 truth.
 
-use crate::collective::all_gather;
+use crate::collective::{all_gather, PrecisionPlan};
 use crate::exec::bucket::BucketPlan;
+use crate::model::Checkpoint;
 use crate::optim::{build, Hyper, Optimizer, Seg};
 
 // ---------------------------------------------------------------------
-// Per-stage byte accounting — the single source of the 4/8/16
-// bytes-per-param arithmetic shared by the exec shards (plan-exact,
-// prorated by owned elements) and `cluster::Pod::state_bytes_partitioned`
-// (model-level, n/k). Adding a ZeRO stage adds its row here and nowhere
-// else.
+// Per-stage byte accounting — the single source of the bytes-per-param
+// arithmetic shared by the exec shards (plan-exact, prorated by owned
+// elements) and `cluster::Pod::state_bytes_partitioned` (model-level,
+// n/k). Adding a ZeRO stage — or a precision column — changes this
+// table and nowhere else. The classic f32 row is 4/4/8 = 16 B/param;
+// the mixed row is 2 (params) + 2 (grads) + 4 (fp32 master) + 8
+// (moments) — the same 16 B dense, but distributed so that sharding
+// frees far more (the master joins the optimizer-state column).
 // ---------------------------------------------------------------------
 
 /// Bytes per parameter of the replicated f32 parameter copy.
@@ -55,34 +72,66 @@ pub const GRAD_BYTES_PER_ELEM: usize = 4;
 /// Bytes per parameter of the two Adam/LAMB moment buffers (m + v).
 pub const MOMENT_BYTES_PER_ELEM: usize = 8;
 
-/// `(replicated, sharded)` bytes per parameter at a ZeRO stage: stage 1
-/// shards the moments, stage 2 additionally the gradients, stage 3
-/// additionally the parameters. The two halves always sum to the dense
-/// 16 bytes/param.
+/// `(replicated, sharded)` bytes per parameter at a ZeRO stage for the
+/// f32 baseline: stage 1 shards the moments, stage 2 additionally the
+/// gradients, stage 3 additionally the parameters. The two halves
+/// always sum to the dense 16 bytes/param.
 pub fn stage_split(stage: u8) -> (usize, usize) {
-    let mut rep =
-        PARAM_BYTES_PER_ELEM + GRAD_BYTES_PER_ELEM + MOMENT_BYTES_PER_ELEM;
+    stage_split_prec(stage, &PrecisionPlan::F32)
+}
+
+/// `(replicated, sharded)` bytes per parameter at a ZeRO stage under a
+/// precision plan. Columns:
+///
+/// * storage params (`prec.param_bytes()`, 2 at bf16/f16) — join the
+///   sharded half at stage >= 3;
+/// * gradients (`prec.grad_bytes()`) — stage >= 2;
+/// * optimizer state: the two 4-byte moments **plus** the fp32 master
+///   copy when one exists (`prec.master_bytes()`). The master is
+///   stepped only by the range's owner, exactly like the moments, so it
+///   shards with the optimizer state at stage >= 1 — which is what
+///   makes mixed precision compound with the ZeRO ladder instead of
+///   merely relabeling bytes (at stage 2 the replicated residue is the
+///   2-byte storage params alone).
+///
+/// The halves always sum to the plan's dense bytes/param.
+pub fn stage_split_prec(stage: u8, prec: &PrecisionPlan) -> (usize, usize) {
+    let param = prec.param_bytes();
+    let grad = prec.grad_bytes();
+    let opt_state = MOMENT_BYTES_PER_ELEM + prec.master_bytes();
+    let mut rep = param + grad + opt_state;
     let mut sharded = 0;
     if stage >= 1 {
-        rep -= MOMENT_BYTES_PER_ELEM;
-        sharded += MOMENT_BYTES_PER_ELEM;
+        rep -= opt_state;
+        sharded += opt_state;
     }
     if stage >= 2 {
-        rep -= GRAD_BYTES_PER_ELEM;
-        sharded += GRAD_BYTES_PER_ELEM;
+        rep -= grad;
+        sharded += grad;
     }
     if stage >= 3 {
-        rep -= PARAM_BYTES_PER_ELEM;
-        sharded += PARAM_BYTES_PER_ELEM;
+        rep -= param;
+        sharded += param;
     }
     (rep, sharded)
 }
 
 /// Per-rank training-state bytes for an `n`-parameter model sharded
 /// `stage`-deep over `shards` ranks (ceil division on the sharded half;
-/// `shards <= 1` degenerates to the dense replicated footprint).
+/// `shards <= 1` degenerates to the dense replicated footprint) — f32
+/// baseline.
 pub fn stage_state_bytes(stage: u8, n: usize, shards: usize) -> usize {
-    let (rep, sharded) = stage_split(stage);
+    stage_state_bytes_prec(stage, n, shards, &PrecisionPlan::F32)
+}
+
+/// [`stage_state_bytes`] under a precision plan.
+pub fn stage_state_bytes_prec(
+    stage: u8,
+    n: usize,
+    shards: usize,
+    prec: &PrecisionPlan,
+) -> usize {
+    let (rep, sharded) = stage_split_prec(stage, prec);
     let k = shards.max(1);
     n * rep + (n * sharded + k - 1) / k
 }
@@ -100,7 +149,20 @@ pub fn owned_state_bytes(
     workers: usize,
 ) -> usize {
     let per_elem = opt.state_bytes() / plan.n.max(1);
-    per_elem * plan.owned_elems(worker, workers)
+    owned_shard_bytes(plan, worker, workers, per_elem)
+}
+
+/// Plan-exact bytes `worker` owns at `bytes_per_elem` width — the one
+/// owner-share rule behind every per-rank shard accessor (gradient /
+/// parameter / master / moment shares all differ only in the width,
+/// keeping the byte accounting in a single place).
+pub fn owned_shard_bytes(
+    plan: &BucketPlan,
+    worker: usize,
+    workers: usize,
+    bytes_per_elem: usize,
+) -> usize {
+    plan.owned_elems(worker, workers) * bytes_per_elem
 }
 
 /// Optimizer state physically partitioned by bucket: one optimizer
@@ -189,6 +251,48 @@ impl Zero1State {
             .map(|(_, s)| s.state_bytes())
             .sum()
     }
+
+    /// Assemble a dense checkpoint from the sharded run: every bucket
+    /// owner contributes its bucket-local moments into the flat `m`/`v`
+    /// buffers (the gather a real pod would run at save time; in this
+    /// single-process simulation the shards are local). The result is
+    /// byte-for-byte a plain dense checkpoint — restorable into any
+    /// stage, including stage 0.
+    pub fn checkpoint(
+        &self,
+        plan: &BucketPlan,
+        step: u64,
+        params: &[f32],
+    ) -> Checkpoint {
+        assert_eq!(params.len(), plan.n, "params length != plan coverage");
+        let mut m = vec![0.0f32; plan.n];
+        let mut v = vec![0.0f32; plan.n];
+        let mut tm = Vec::new();
+        let mut tv = Vec::new();
+        for (b, shard) in self.shards.iter().enumerate() {
+            let bk = &plan.buckets[b];
+            tm.resize(bk.len(), 0.0);
+            tv.resize(bk.len(), 0.0);
+            shard.export_moments(&mut tm, &mut tv);
+            m[bk.start..bk.end].copy_from_slice(&tm);
+            v[bk.start..bk.end].copy_from_slice(&tv);
+        }
+        Checkpoint { step, params: params.to_vec(), m, v }
+    }
+
+    /// Restore a dense checkpoint into the sharded run: each bucket
+    /// owner scatters its moment ranges back into its local shard. The
+    /// parameter vector is the caller's (replicated at stage 1).
+    pub fn restore(&mut self, plan: &BucketPlan, c: &Checkpoint) {
+        assert_eq!(c.params.len(), plan.n, "checkpoint/plan length mismatch");
+        for (b, shard) in self.shards.iter_mut().enumerate() {
+            let bk = &plan.buckets[b];
+            shard.import_moments(
+                &c.m[bk.start..bk.end],
+                &c.v[bk.start..bk.end],
+            );
+        }
+    }
 }
 
 /// ZeRO-2: gradient + optimizer-state sharding over the bucket owner map,
@@ -210,11 +314,18 @@ pub struct Zero2State {
     opt: Box<dyn Optimizer>,
     segs: Vec<Seg>,
     name: String,
+    /// fp32 master parameter copy (mixed precision): the optimizer
+    /// steps these and the storage params are re-cast per bucket. Like
+    /// the moments, the single allocation stands for per-owner shards —
+    /// what each rank physically holds is `master_bytes_for`.
+    masters: Option<Vec<f32>>,
+    prec: PrecisionPlan,
 }
 
 impl Zero2State {
     /// Build the sharded-step state for the named optimizer over an
-    /// `n`-element flat vector. Returns `None` for an unknown optimizer.
+    /// `n`-element flat vector (f32 baseline — no master copy). Returns
+    /// `None` for an unknown optimizer.
     pub fn build(
         optimizer: &str,
         n: usize,
@@ -225,16 +336,50 @@ impl Zero2State {
             opt: build(optimizer, n, hyper)?,
             segs: segs.to_vec(),
             name: optimizer.to_string(),
+            masters: None,
+            prec: PrecisionPlan::F32,
         })
+    }
+
+    /// [`Zero2State::build`] under a precision plan: pass the
+    /// **full-precision** initial `params` — when the plan carries an
+    /// fp32 master copy it is seeded from them verbatim (exactly like
+    /// [`Zero3State::build_prec`], so mixed zero2 and zero3 runs start
+    /// from identical masters). The caller keeps its own storage-dtype
+    /// parameter buffer (cast via
+    /// [`crate::collective::Precision::quantize`]); the optimizer steps
+    /// the masters and every updated range is cast back into that
+    /// buffer. `PrecisionPlan::F32` builds the exact baseline state.
+    pub fn build_prec(
+        optimizer: &str,
+        params: &[f32],
+        segs: &[Seg],
+        hyper: Hyper,
+        prec: PrecisionPlan,
+    ) -> Option<Zero2State> {
+        let mut z = Zero2State::build(optimizer, params.len(), segs, hyper)?;
+        z.prec = prec;
+        if prec.has_master() {
+            z.masters = Some(params.to_vec());
+        }
+        Some(z)
     }
 
     pub fn name(&self) -> &str {
         &self.name
     }
 
+    /// The precision plan this state steps under.
+    pub fn precision(&self) -> PrecisionPlan {
+        self.prec
+    }
+
     /// Step one bucket's parameter range in place (what the bucket's
     /// owner does with its reduce-scattered gradient shard). `grads` is
     /// the flat gradient view; only `[bucket.start, bucket.end)` is read.
+    /// Under mixed precision the optimizer updates the fp32 masters and
+    /// the storage `params` range is re-cast from them (the trust
+    /// ratios, moments and decay all see full-precision weights).
     /// Returns the trust ratios for the bucket's segments.
     pub fn step_bucket(
         &mut self,
@@ -246,9 +391,23 @@ impl Zero2State {
         step: u64,
     ) -> Vec<f32> {
         let bk = &plan.buckets[b];
-        self.opt.step_range(
-            params, grads, lr, step, &self.segs, bk.start, bk.end,
-        )
+        if let Some(masters) = self.masters.as_mut() {
+            let ratios = self.opt.step_range(
+                masters, grads, lr, step, &self.segs, bk.start, bk.end,
+            );
+            let p = self.prec.params;
+            for (dst, &src) in params[bk.start..bk.end]
+                .iter_mut()
+                .zip(&masters[bk.start..bk.end])
+            {
+                *dst = p.quantize(src);
+            }
+            ratios
+        } else {
+            self.opt.step_range(
+                params, grads, lr, step, &self.segs, bk.start, bk.end,
+            )
+        }
     }
 
     /// Step every bucket owned by `worker` of `workers` — one simulated
@@ -315,6 +474,70 @@ impl Zero2State {
     ) -> usize {
         plan.owned_bytes(worker, workers)
     }
+
+    /// Plan-exact gradient-shard bytes under this state's precision
+    /// (half-width storage halves the resident shard).
+    pub fn grad_shard_bytes(
+        &self,
+        plan: &BucketPlan,
+        worker: usize,
+        workers: usize,
+    ) -> usize {
+        owned_shard_bytes(plan, worker, workers, self.prec.grad_bytes())
+    }
+
+    /// fp32 master-weight bytes one rank owns (0 without a master copy;
+    /// the master shards with the optimizer state).
+    pub fn master_bytes_for(
+        &self,
+        plan: &BucketPlan,
+        worker: usize,
+        workers: usize,
+    ) -> usize {
+        if self.masters.is_some() {
+            owned_shard_bytes(plan, worker, workers, 4)
+        } else {
+            0
+        }
+    }
+
+    /// Assemble a dense checkpoint from the sharded run: the moment
+    /// owners contribute their ranges, and under mixed precision the
+    /// saved params are the fp32 masters (the truth the optimizer
+    /// steps), so a mixed save restores losslessly into an f32 run.
+    pub fn checkpoint(&self, step: u64, params: &[f32]) -> Checkpoint {
+        let n = params.len();
+        let mut m = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        self.opt.export_moments(&mut m, &mut v);
+        let params = match &self.masters {
+            Some(ms) => {
+                assert_eq!(ms.len(), n, "masters length mismatch");
+                ms.clone()
+            }
+            None => params.to_vec(),
+        };
+        Checkpoint { step, params, m, v }
+    }
+
+    /// Restore a dense checkpoint into the sharded run: moments scatter
+    /// back to their owners; under mixed precision the masters take the
+    /// checkpoint's fp32 params and the storage `params` are re-cast
+    /// from them (a dense f32 save restores into a mixed run and vice
+    /// versa).
+    pub fn restore(&mut self, c: &Checkpoint, params: &mut [f32]) {
+        assert_eq!(c.params.len(), params.len(), "checkpoint length mismatch");
+        self.opt.import_moments(&c.m, &c.v);
+        if let Some(masters) = self.masters.as_mut() {
+            masters.copy_from_slice(&c.params);
+            let p = self.prec.params;
+            for (dst, &src) in params.iter_mut().zip(masters.iter()) {
+                *dst = p.quantize(src);
+            }
+        } else {
+            params.copy_from_slice(&c.params);
+        }
+    }
 }
 
 /// ZeRO-3: parameter + gradient + optimizer-state sharding over the
@@ -343,14 +566,21 @@ pub struct Zero3State {
     opt: Box<dyn Optimizer>,
     segs: Vec<Seg>,
     name: String,
-    /// Per-bucket owned parameter shards — the persistent parameters.
+    /// Per-bucket owned parameter shards — the persistent parameters,
+    /// held in **storage precision** (the dtype the gathers move).
     shards: Vec<Vec<f32>>,
+    /// fp32 master copy (mixed precision), sharded with the optimizer
+    /// state: the owner steps its master ranges and re-casts the
+    /// storage shard. One allocation in this simulation;
+    /// [`Zero3State::master_bytes_for`] reports the per-rank share.
+    masters: Option<Vec<f32>>,
+    prec: PrecisionPlan,
 }
 
 impl Zero3State {
     /// Build the sharded state for the named optimizer, splitting the
-    /// initial `params` (length `plan.n`) into per-bucket owner shards.
-    /// Returns `None` for an unknown optimizer.
+    /// initial `params` (length `plan.n`) into per-bucket owner shards
+    /// (f32 baseline). Returns `None` for an unknown optimizer.
     pub fn build(
         optimizer: &str,
         plan: &BucketPlan,
@@ -358,22 +588,62 @@ impl Zero3State {
         segs: &[Seg],
         hyper: Hyper,
     ) -> Option<Zero3State> {
+        Zero3State::build_prec(
+            optimizer,
+            plan,
+            params,
+            segs,
+            hyper,
+            PrecisionPlan::F32,
+        )
+    }
+
+    /// [`Zero3State::build`] under a precision plan: the owner shards
+    /// hold `params` rounded through the storage dtype, and when the
+    /// plan carries a master copy the original fp32 values seed it.
+    /// `PrecisionPlan::F32` is exactly the baseline constructor.
+    pub fn build_prec(
+        optimizer: &str,
+        plan: &BucketPlan,
+        params: &[f32],
+        segs: &[Seg],
+        hyper: Hyper,
+        prec: PrecisionPlan,
+    ) -> Option<Zero3State> {
         assert_eq!(params.len(), plan.n, "params length != plan coverage");
+        let p = prec.params;
         let shards = plan
             .buckets
             .iter()
-            .map(|bk| params[bk.start..bk.end].to_vec())
+            .map(|bk| {
+                params[bk.start..bk.end]
+                    .iter()
+                    .map(|&x| p.quantize(x))
+                    .collect()
+            })
             .collect();
+        let masters = if prec.has_master() {
+            Some(params.to_vec())
+        } else {
+            None
+        };
         Some(Zero3State {
             opt: build(optimizer, plan.n, hyper)?,
             segs: segs.to_vec(),
             name: optimizer.to_string(),
             shards,
+            masters,
+            prec,
         })
     }
 
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// The precision plan this state steps under.
+    pub fn precision(&self) -> PrecisionPlan {
+        self.prec
     }
 
     /// Just-in-time gather of bucket `b`'s parameters into the transient
@@ -397,8 +667,10 @@ impl Zero3State {
 
     /// Owner's step of bucket `b`: step the view range against the
     /// reduce-scattered gradient, then persist the updated range into the
-    /// owner's shard (the view may be dropped afterwards). Returns the
-    /// trust ratios for the bucket's segments.
+    /// owner's shard (the view may be dropped afterwards). Under mixed
+    /// precision the optimizer steps the owner's fp32 master range and
+    /// both the shard and the view receive the storage-dtype cast.
+    /// Returns the trust ratios for the bucket's segments.
     pub fn step_bucket(
         &mut self,
         plan: &BucketPlan,
@@ -409,11 +681,23 @@ impl Zero3State {
         step: u64,
     ) -> Vec<f32> {
         let bk = &plan.buckets[b];
-        let ratios = self.opt.step_range(
-            view, grads, lr, step, &self.segs, bk.start, bk.end,
-        );
-        self.shards[b].copy_from_slice(&view[bk.start..bk.end]);
-        ratios
+        if let Some(masters) = self.masters.as_mut() {
+            let ratios = self.opt.step_range(
+                masters, grads, lr, step, &self.segs, bk.start, bk.end,
+            );
+            let p = self.prec.params;
+            for (i, dst) in self.shards[b].iter_mut().enumerate() {
+                *dst = p.quantize(masters[bk.start + i]);
+            }
+            view[bk.start..bk.end].copy_from_slice(&self.shards[b]);
+            ratios
+        } else {
+            let ratios = self.opt.step_range(
+                view, grads, lr, step, &self.segs, bk.start, bk.end,
+            );
+            self.shards[b].copy_from_slice(&view[bk.start..bk.end]);
+            ratios
+        }
     }
 
     /// Step every bucket owned by `worker` of `workers` — one simulated
@@ -491,11 +775,76 @@ impl Zero3State {
     ) -> usize {
         owned_state_bytes(self.opt.as_ref(), plan, worker, workers)
     }
+
+    /// Plan-exact persistent parameter-shard bytes under this state's
+    /// precision (half-width storage halves the resident shard and
+    /// every just-in-time gather's wire payload).
+    pub fn param_shard_bytes(
+        &self,
+        plan: &BucketPlan,
+        worker: usize,
+        workers: usize,
+    ) -> usize {
+        owned_shard_bytes(plan, worker, workers, self.prec.param_bytes())
+    }
+
+    /// fp32 master-weight bytes one rank owns (0 without a master copy;
+    /// the master shards with the optimizer state).
+    pub fn master_bytes_for(
+        &self,
+        plan: &BucketPlan,
+        worker: usize,
+        workers: usize,
+    ) -> usize {
+        if self.masters.is_some() {
+            owned_shard_bytes(plan, worker, workers, 4)
+        } else {
+            0
+        }
+    }
+
+    /// Assemble a dense checkpoint from the sharded run: the parameter
+    /// owners contribute their shards (the fp32 masters where they
+    /// exist — the optimizer's truth — otherwise the storage shards),
+    /// the moment owners their ranges. The result is byte-for-byte a
+    /// plain dense checkpoint, restorable into any stage.
+    pub fn checkpoint(&self, plan: &BucketPlan, step: u64) -> Checkpoint {
+        let mut params = vec![0.0f32; plan.n];
+        match &self.masters {
+            Some(ms) => params.copy_from_slice(ms),
+            None => self.gather_into(plan, &mut params),
+        }
+        let mut m = vec![0.0f32; plan.n];
+        let mut v = vec![0.0f32; plan.n];
+        self.opt.export_moments(&mut m, &mut v);
+        Checkpoint { step, params, m, v }
+    }
+
+    /// Restore a dense checkpoint into the sharded run: each parameter
+    /// owner scatters its ranges back into its shard (cast through the
+    /// storage dtype under mixed precision), the masters take the fp32
+    /// values, and the moment owners import their ranges — so a
+    /// dense-f32 save resumes a ZeRO-3 run bitwise-identically
+    /// (`tests/test_exec.rs` asserts the roundtrip).
+    pub fn restore(&mut self, plan: &BucketPlan, c: &Checkpoint) {
+        assert_eq!(c.params.len(), plan.n, "checkpoint/plan length mismatch");
+        self.opt.import_moments(&c.m, &c.v);
+        if let Some(masters) = self.masters.as_mut() {
+            masters.copy_from_slice(&c.params);
+        }
+        let p = self.prec.params;
+        for (b, bk) in plan.buckets.iter().enumerate() {
+            for (i, dst) in self.shards[b].iter_mut().enumerate() {
+                *dst = p.quantize(c.params[bk.start + i]);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collective::Precision;
     use crate::util::Rng;
 
     fn tile(sizes: &[usize]) -> Vec<Seg> {
@@ -703,6 +1052,176 @@ mod tests {
             );
             assert_eq!(z.state_bytes_for(&plan, w, k), dense.state_bytes() / k);
         }
+    }
+
+    /// The precision-aware stage table: the mixed row (2 B params, 2 B
+    /// grads, 4 B master, 8 B moments) still sums to 16 B dense, but
+    /// the master joins the sharded column with the optimizer state, so
+    /// every ZeRO stage keeps strictly fewer replicated bytes than the
+    /// f32 row — the compounding that raises `Pod::max_batch`.
+    #[test]
+    fn stage_split_prec_mixed_rows() {
+        let mixed = PrecisionPlan::mixed(Precision::Bf16);
+        assert_eq!(stage_split_prec(0, &mixed), (16, 0));
+        assert_eq!(stage_split_prec(1, &mixed), (4, 12));
+        assert_eq!(stage_split_prec(2, &mixed), (2, 14));
+        assert_eq!(stage_split_prec(3, &mixed), (0, 16));
+        for stage in 0..=3u8 {
+            let (rep_m, sh_m) = stage_split_prec(stage, &mixed);
+            assert_eq!(rep_m + sh_m, 16);
+            // f32 delegation is unchanged
+            let (rep_f, sh_f) = stage_split(stage);
+            assert_eq!(
+                (rep_f, sh_f),
+                stage_split_prec(stage, &PrecisionPlan::F32)
+            );
+            if stage >= 1 {
+                assert!(rep_m < rep_f, "stage {stage}: {rep_m} vs {rep_f}");
+            }
+            // per-rank bytes shrink accordingly at scale
+            if stage >= 1 {
+                assert!(
+                    stage_state_bytes_prec(stage, 1_000_000, 64, &mixed)
+                        < stage_state_bytes(stage, 1_000_000, 64),
+                    "stage {stage}"
+                );
+            }
+        }
+        // k = 1 degenerates to dense for every precision
+        assert_eq!(stage_state_bytes_prec(3, 1000, 1, &mixed), 16_000);
+        // grads-only mixed (f32 params, no master): 4 + 2 + 8
+        let gonly = PrecisionPlan {
+            params: Precision::F32,
+            grads: Precision::F16,
+            master_weights: false,
+        };
+        assert_eq!(stage_split_prec(0, &gonly), (14, 0));
+        assert_eq!(stage_split_prec(2, &gonly), (4, 10));
+    }
+
+    /// ZeRO-2 mixed: the storage params stay storage-dtype values, the
+    /// optimizer steps the fp32 masters, and a checkpoint carries the
+    /// masters — restoring reconstructs both copies and the run
+    /// continues bitwise-identically.
+    #[test]
+    fn zero2_mixed_masters_step_and_checkpoint_roundtrip() {
+        let segs = tile(&[40, 8, 64, 16]);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        let plan = BucketPlan::from_segs(&segs, 50 * 4);
+        assert!(plan.len() > 1);
+        let h = Hyper::default();
+        let prec = PrecisionPlan::mixed(Precision::Bf16);
+        let mut rng = Rng::new(21);
+        let x0: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+        let mut xs: Vec<f32> =
+            x0.iter().map(|&x| prec.params.quantize(x)).collect();
+        let mut z = Zero2State::build_prec("lamb", &x0, &segs, h, prec)
+            .unwrap();
+        assert_eq!(z.precision(), prec);
+        for t in 1..=3 {
+            let g: Vec<f32> = (0..n)
+                .map(|_| prec.grads.quantize(rng.normal_f32(0.3)))
+                .collect();
+            z.step_all(&plan, &mut xs, &g, 0.01, t);
+            for &x in &xs {
+                assert_eq!(
+                    prec.params.quantize(x).to_bits(),
+                    x.to_bits(),
+                    "storage params must stay storage-dtype values"
+                );
+            }
+        }
+        let c = z.checkpoint(3, &xs);
+        // the saved params are the fp32 masters — not the cast copies
+        assert!(
+            c.params.iter().zip(&xs).any(|(a, b)| a.to_bits() != b.to_bits()),
+            "masters should differ from the storage cast somewhere"
+        );
+        let zeros = vec![0.0f32; n];
+        let mut z2 =
+            Zero2State::build_prec("lamb", &zeros, &segs, h, prec).unwrap();
+        let mut xs2 = vec![0.0f32; n];
+        z2.restore(&c, &mut xs2);
+        assert_eq!(xs, xs2, "restore must reconstruct the storage params");
+        for t in 4..=6 {
+            let g: Vec<f32> = (0..n)
+                .map(|_| prec.grads.quantize(rng.normal_f32(0.3)))
+                .collect();
+            let ra = z.step_all(&plan, &mut xs, &g, 0.01, t);
+            let rb = z2.step_all(&plan, &mut xs2, &g, 0.01, t);
+            assert_eq!(ra, rb, "ratios diverged at step {t}");
+            assert_eq!(xs, xs2, "params diverged at step {t}");
+        }
+        // master/grad-shard accounting tiles the owned elements
+        let k = 3;
+        let masters: usize =
+            (0..k).map(|w| z.master_bytes_for(&plan, w, k)).sum();
+        assert_eq!(masters, n * 4);
+        let grads: usize =
+            (0..k).map(|w| z.grad_shard_bytes(&plan, w, k)).sum();
+        assert_eq!(grads, n * 2);
+    }
+
+    /// ZeRO-3 mixed: owner shards hold the storage-dtype cast, the view
+    /// gathers those exact bits, and restore scatters a dense f32
+    /// checkpoint back through the cast.
+    #[test]
+    fn zero3_mixed_shards_hold_storage_dtype() {
+        let segs = tile(&[40, 8, 64, 16]);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        let plan = BucketPlan::from_segs(&segs, 50 * 4);
+        let h = Hyper::default();
+        let prec = PrecisionPlan::mixed(Precision::F16);
+        let mut rng = Rng::new(22);
+        let x0: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.8)).collect();
+        let mut z =
+            Zero3State::build_prec("adam", &plan, &x0, &segs, h, prec)
+                .unwrap();
+        let mut view = vec![0.0f32; n];
+        z.gather_into(&plan, &mut view);
+        for (i, &x) in view.iter().enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                prec.params.quantize(x0[i]).to_bits(),
+                "i={i}"
+            );
+        }
+        let g: Vec<f32> = (0..n)
+            .map(|_| prec.grads.quantize(rng.normal_f32(0.2)))
+            .collect();
+        z.step_all(&plan, &mut view, &g, 0.01, 1);
+        for &x in &view {
+            assert_eq!(prec.params.quantize(x).to_bits(), x.to_bits());
+        }
+        // dense checkpoint carries the fp32 masters; restoring into a
+        // fresh mixed state reproduces both copies
+        let c = z.checkpoint(&plan, 1);
+        let zeros = vec![0.0f32; n];
+        let mut z2 =
+            Zero3State::build_prec("adam", &plan, &zeros, &segs, h, prec)
+                .unwrap();
+        z2.restore(&plan, &c);
+        let mut va = vec![0.0f32; n];
+        let mut vb = vec![0.0f32; n];
+        z.gather_into(&plan, &mut va);
+        z2.gather_into(&plan, &mut vb);
+        assert_eq!(va, vb);
+        let g2: Vec<f32> = (0..n)
+            .map(|_| prec.grads.quantize(rng.normal_f32(0.2)))
+            .collect();
+        let ra = z.step_all(&plan, &mut va, &g2, 0.01, 2);
+        let rb = z2.step_all(&plan, &mut vb, &g2, 0.01, 2);
+        assert_eq!(ra, rb);
+        assert_eq!(va, vb);
+        // per-rank param shards are half-width under f16 storage
+        let k = 2;
+        let shard_bytes: usize =
+            (0..k).map(|w| z.param_shard_bytes(&plan, w, k)).sum();
+        assert_eq!(shard_bytes, n * 2);
+        assert_eq!(
+            (0..k).map(|w| z.master_bytes_for(&plan, w, k)).sum::<usize>(),
+            n * 4
+        );
     }
 
     /// ZeRO-2 memory shares: moments and gradient shards both prorate by

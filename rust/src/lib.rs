@@ -30,7 +30,14 @@
 //!   shards the parameters themselves — each bucket's params are
 //!   all-gathered just-in-time before its forward/backward segment and
 //!   dropped after use, so params, grads and moments are all ~1/k
-//!   (`[exec] zero_stage = 0|1|2|3`).
+//!   (`[exec] zero_stage = 0|1|2|3`). Orthogonally, the `[precision]`
+//!   table ([`collective::precision`]) makes the storage/wire dtype a
+//!   first-class axis: bf16/f16 params and grads (deterministic
+//!   software quantization, half the bytes on every collective the pod
+//!   prices), fp32 master weights sharded with the optimizer state,
+//!   and dynamic loss scaling ([`optim::LossScaler`]) — the paper's
+//!   mixed-precision configuration, with the f32 plan bitwise-identical
+//!   to the pre-precision stack.
 //!
 //! Both trainers drive their step loops through the exec layer:
 //! [`coordinator::NativeTrainer`] runs workers truly in parallel for the

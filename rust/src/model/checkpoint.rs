@@ -3,6 +3,17 @@
 //! the two-stage BERT recipe to be resumed mid-run (the paper's 9/10 +
 //! 1/10 phases were separate jobs on the pod).
 //!
+//! The on-disk format is always **dense and fp32**: a ZeRO run saves by
+//! having every owner contribute its moment / master shards
+//! (`exec::Zero1State::checkpoint` and friends assemble exactly this
+//! struct), and a restore scatters them back — so checkpoints move
+//! freely between stages (dense-save → zero3-restore is
+//! bitwise-identical, `tests/test_exec.rs`) and between precisions
+//! (a mixed run saves its fp32 masters). The dense-optimizer halves of
+//! that contract live here: [`Checkpoint::capture`] /
+//! [`Checkpoint::apply_moments`] via `Optimizer::export_moments` /
+//! `import_moments`.
+//!
 //! Layout (little-endian):
 //!   magic "LMBCKPT1" | step u64 | n u64 | params [f32; n]
 //!   | m [f32; n] | v [f32; n] | checksum u64 (FNV-1a over payload)
@@ -11,6 +22,8 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
+
+use crate::optim::Optimizer;
 
 const MAGIC: &[u8; 8] = b"LMBCKPT1";
 
@@ -45,6 +58,23 @@ fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
 }
 
 impl Checkpoint {
+    /// Capture a dense run: the parameter vector plus the optimizer's
+    /// exported moment buffers (zeros where the optimizer keeps none —
+    /// a zero moment restores as a fresh one, so the roundtrip is
+    /// lossless for every `optim` solver).
+    pub fn capture(step: u64, params: &[f32], opt: &dyn Optimizer) -> Checkpoint {
+        let mut m = vec![0.0f32; params.len()];
+        let mut v = vec![0.0f32; params.len()];
+        opt.export_moments(&mut m, &mut v);
+        Checkpoint { step, params: params.to_vec(), m, v }
+    }
+
+    /// Push the saved moment state back into a dense optimizer (the
+    /// caller restores `params`/`step` itself).
+    pub fn apply_moments(&self, opt: &mut dyn Optimizer) {
+        opt.import_moments(&self.m, &self.v);
+    }
+
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
         if let Some(dir) = path.parent() {

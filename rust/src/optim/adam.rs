@@ -35,7 +35,9 @@ macro_rules! adam_like {
             ) -> Vec<f32> {
                 let h = self.h;
                 let (c1, c2) = if h.bias_correction {
-                    let t = step as f32;
+                    // 1-based contract: clamp so step 0 cannot make
+                    // c1 = 1/(1 - beta^0) = inf (step 0 == step 1).
+                    let t = step.max(1) as f32;
                     (
                         1.0 / (1.0 - h.beta1.powf(t)),
                         1.0 / (1.0 - h.beta2.powf(t)),
@@ -72,6 +74,16 @@ macro_rules! adam_like {
 
             fn state_bytes(&self) -> usize {
                 (self.m.len() + self.v.len()) * 4
+            }
+
+            fn export_moments(&self, m: &mut [f32], v: &mut [f32]) {
+                m.copy_from_slice(&self.m);
+                v.copy_from_slice(&self.v);
+            }
+
+            fn import_moments(&mut self, m: &[f32], v: &[f32]) {
+                self.m.copy_from_slice(m);
+                self.v.copy_from_slice(v);
             }
         }
     };
@@ -124,6 +136,15 @@ impl Optimizer for Adagrad {
     fn state_bytes(&self) -> usize {
         self.v.len() * 4
     }
+
+    fn export_moments(&self, m: &mut [f32], v: &mut [f32]) {
+        m.fill(0.0); // no first moment
+        v.copy_from_slice(&self.v);
+    }
+
+    fn import_moments(&mut self, _m: &[f32], v: &[f32]) {
+        self.v.copy_from_slice(v);
+    }
 }
 
 /// Heavy-ball momentum SGD — the ResNet-50 baseline of Goyal et al. 2017.
@@ -169,6 +190,15 @@ impl Optimizer for Momentum {
 
     fn state_bytes(&self) -> usize {
         self.m.len() * 4
+    }
+
+    fn export_moments(&self, m: &mut [f32], v: &mut [f32]) {
+        m.copy_from_slice(&self.m);
+        v.fill(0.0); // no second moment
+    }
+
+    fn import_moments(&mut self, m: &[f32], _v: &[f32]) {
+        self.m.copy_from_slice(m);
     }
 }
 

@@ -43,7 +43,10 @@ impl Optimizer for Lamb {
     ) -> Vec<f32> {
         let h = self.h;
         let (c1, c2) = if h.bias_correction {
-            let t = step as f32;
+            // `step` is 1-based by contract; clamp so a stray step 0
+            // cannot make c1 = 1/(1 - beta^0) = inf and poison the
+            // parameters with NaN (step 0 == step 1 exactly).
+            let t = step.max(1) as f32;
             (
                 1.0 / (1.0 - h.beta1.powf(t)),
                 1.0 / (1.0 - h.beta2.powf(t)),
@@ -85,6 +88,16 @@ impl Optimizer for Lamb {
 
     fn state_bytes(&self) -> usize {
         (self.m.len() + self.v.len()) * 4
+    }
+
+    fn export_moments(&self, m: &mut [f32], v: &mut [f32]) {
+        m.copy_from_slice(&self.m);
+        v.copy_from_slice(&self.v);
+    }
+
+    fn import_moments(&mut self, m: &[f32], v: &[f32]) {
+        self.m.copy_from_slice(m);
+        self.v.copy_from_slice(v);
     }
 }
 

@@ -59,6 +59,15 @@ impl Optimizer for Lars {
     fn state_bytes(&self) -> usize {
         self.m.len() * 4
     }
+
+    fn export_moments(&self, m: &mut [f32], v: &mut [f32]) {
+        m.copy_from_slice(&self.m);
+        v.fill(0.0); // no second moment
+    }
+
+    fn import_moments(&mut self, m: &[f32], _v: &[f32]) {
+        self.m.copy_from_slice(m);
+    }
 }
 
 #[cfg(test)]

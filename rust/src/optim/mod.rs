@@ -19,11 +19,13 @@ mod adam;
 mod lamb;
 mod lars;
 mod nesterov;
+mod scaler;
 
 pub use adam::{Adagrad, Adam, AdamW, Momentum};
 pub use lamb::Lamb;
 pub use lars::Lars;
 pub use nesterov::{NLamb, NnLamb};
+pub use scaler::LossScaler;
 
 use crate::manifest::ParamSeg;
 
@@ -141,7 +143,10 @@ pub(crate) fn trust_ratio(w_norm: f32, u_norm: f32, h: &Hyper) -> f32 {
 
 /// A layerwise first-order optimizer over the flat parameter vector.
 pub trait Optimizer {
-    /// Apply one step in place. `step` is 1-based. Returns the per-segment
+    /// Apply one step in place. `step` is 1-based; implementations clamp
+    /// `step.max(1)` before the bias correction, so a stray 0 cannot
+    /// produce `1/(1 - beta^0) = inf` and poison the parameters (step 0
+    /// and step 1 apply the identical update). Returns the per-segment
     /// trust ratios (1.0 for optimizers/segments without adaptation) —
     /// the quantity plotted in the paper's Figures 9-14.
     fn step(
@@ -183,6 +188,22 @@ pub trait Optimizer {
 
     /// Moment buffer size (for state-size accounting in the pod model).
     fn state_bytes(&self) -> usize;
+
+    /// Copy the moment state into `(m, v)` for checkpointing. Both
+    /// buffers are fully overwritten — zeroed wherever this optimizer
+    /// keeps no such buffer (momentum-style solvers have no second
+    /// moment; a zero moment is exactly a fresh one, so the
+    /// export/import pair round-trips every optimizer losslessly). The
+    /// dense half of the shard-aware checkpoint path
+    /// (`exec::Zero1State::checkpoint` and friends).
+    fn export_moments(&self, m: &mut [f32], v: &mut [f32]) {
+        m.fill(0.0);
+        v.fill(0.0);
+    }
+
+    /// Restore moment state captured by [`Optimizer::export_moments`];
+    /// buffers this optimizer does not keep are ignored.
+    fn import_moments(&mut self, _m: &[f32], _v: &[f32]) {}
 }
 
 /// Construct an optimizer by paper name.
@@ -274,6 +295,94 @@ mod tests {
             let f1 = f(&x);
             assert!(f1 < 0.5 * f0, "{name}: {f0} -> {f1}");
             assert!(x.iter().all(|a| a.is_finite()), "{name} diverged");
+        }
+    }
+
+    /// Regression (ISSUE 5): the 1-based step contract is enforced by
+    /// clamping — step 0 and step 1 apply bitwise-identical, finite
+    /// updates for every optimizer (before the clamp, step 0 made the
+    /// bias correction 1/(1 - beta^0) = inf in LAMB/Adam/N-LAMB and
+    /// silently poisoned the parameters with NaN).
+    #[test]
+    fn step_zero_equals_step_one_and_stays_finite() {
+        let n = 24;
+        let segs = Seg::whole(n);
+        let x0: Vec<f32> = (0..n).map(|i| 0.5 + (i as f32) * 0.25).collect();
+        let g: Vec<f32> =
+            (0..n).map(|i| ((i as f32) - 11.5) * 0.125).collect();
+        for name in ALL {
+            let run = |step: u64| {
+                let mut opt = build(name, n, Hyper::default()).unwrap();
+                let mut x = x0.clone();
+                let ratios = opt.step(&mut x, &g, 0.01, step, &segs);
+                (x, ratios)
+            };
+            let (x_zero, r_zero) = run(0);
+            let (x_one, r_one) = run(1);
+            assert!(
+                x_zero.iter().all(|v| v.is_finite()),
+                "{name}: step 0 produced non-finite params: {x_zero:?}"
+            );
+            assert!(r_zero.iter().all(|v| v.is_finite()), "{name}");
+            for i in 0..n {
+                assert_eq!(
+                    x_zero[i].to_bits(),
+                    x_one[i].to_bits(),
+                    "{name}: step 0 vs step 1 diverge at param {i}"
+                );
+            }
+            assert_eq!(r_zero, r_one, "{name}: trust ratios");
+            // step 0 must also leave usable state: continuing at step 2
+            // stays finite
+            let mut opt = build(name, n, Hyper::default()).unwrap();
+            let mut x = x0.clone();
+            opt.step(&mut x, &g, 0.01, 0, &segs);
+            opt.step(&mut x, &g, 0.01, 2, &segs);
+            assert!(x.iter().all(|v| v.is_finite()), "{name} step 0 -> 2");
+        }
+    }
+
+    /// export_moments / import_moments round-trips every optimizer: a
+    /// fresh instance fed the exported state continues bitwise-identical
+    /// to the uninterrupted original (the dense half of the shard-aware
+    /// checkpoint contract).
+    #[test]
+    fn moment_export_import_roundtrips_every_optimizer() {
+        let n = 40;
+        let segs = Seg::whole(n);
+        for name in ALL {
+            let h = Hyper::default();
+            let mut orig = build(name, n, h).unwrap();
+            let mut x: Vec<f32> =
+                (0..n).map(|i| 1.0 + (i as f32) * 0.1).collect();
+            let grad = |t: u64| -> Vec<f32> {
+                (0..n)
+                    .map(|i| (((i as u64 + 3 * t) % 7) as f32) * 0.1 - 0.3)
+                    .collect()
+            };
+            for t in 1..=3 {
+                orig.step(&mut x, &grad(t), 0.01, t, &segs);
+            }
+            // checkpoint: params + exported moments
+            let mut m = vec![0.0f32; n];
+            let mut v = vec![0.0f32; n];
+            orig.export_moments(&mut m, &mut v);
+            let mut restored = build(name, n, h).unwrap();
+            restored.import_moments(&m, &v);
+            let mut xr = x.clone();
+            for t in 4..=6 {
+                let g = grad(t);
+                let ra = orig.step(&mut x, &g, 0.01, t, &segs);
+                let rb = restored.step(&mut xr, &g, 0.01, t, &segs);
+                assert_eq!(ra, rb, "{name} ratios step {t}");
+                for i in 0..n {
+                    assert_eq!(
+                        x[i].to_bits(),
+                        xr[i].to_bits(),
+                        "{name} param {i} step {t}"
+                    );
+                }
+            }
         }
     }
 

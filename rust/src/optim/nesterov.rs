@@ -18,7 +18,9 @@ fn nesterov_step(
     step: u64,
     segs: &[Seg],
 ) -> Vec<f32> {
-    let t = step as f32;
+    // 1-based contract: clamp so step 0 cannot zero the cm_cur/cv_cur
+    // denominators (step 0 == step 1 exactly).
+    let t = step.max(1) as f32;
     let b1 = h.beta1;
     let b2 = h.beta2;
     // Nadam-style double corrections (constant-beta products -> powers).
@@ -96,6 +98,16 @@ macro_rules! nesterov_opt {
 
             fn state_bytes(&self) -> usize {
                 (self.m.len() + self.v.len()) * 4
+            }
+
+            fn export_moments(&self, m: &mut [f32], v: &mut [f32]) {
+                m.copy_from_slice(&self.m);
+                v.copy_from_slice(&self.v);
+            }
+
+            fn import_moments(&mut self, m: &[f32], v: &[f32]) {
+                self.m.copy_from_slice(m);
+                self.v.copy_from_slice(v);
             }
         }
     };

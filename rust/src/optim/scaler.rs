@@ -1,0 +1,298 @@
+//! Dynamic loss scaling — the numeric safety companion of half-width
+//! gradients (`[precision] loss_scale`).
+//!
+//! f16's exponent floor is 2^-24: small gradient components underflow to
+//! zero on the wire, silently starving the update. The classic remedy
+//! (used by the mixed-precision BERT runs this repo reproduces) is to
+//! multiply the loss — hence every gradient — by a large scale `S`
+//! before backprop, and divide it back out just before the optimizer
+//! step. [`LossScaler`] implements the *dynamic* variant:
+//!
+//! * **scale** ([`LossScaler::apply`]): multiply the gradient buffer by
+//!   `S` (what backprop on `S * loss` would have produced);
+//! * **unscale + step gate** ([`LossScaler::unscale`]): before the
+//!   optimizer consumes the gradients, divide by `S` — unless any
+//!   element is non-finite (the scale overflowed the half dtype's
+//!   range), in which case the step is **skipped** and `S` halves
+//!   (skip-and-halve);
+//! * **growth**: after [`LossScaler::growth_interval`] consecutive
+//!   finite steps, `S` doubles (capped), probing back toward the
+//!   largest safe scale.
+//!
+//! `S` starts at and remains a power of two, so scaling and unscaling
+//! are exact in f32 for in-range values: a scale → unscale round trip
+//! is bitwise-identical for every normal float, and the f32 training
+//! path with a scaler enabled stays deterministic.
+
+/// Dynamic loss-scale state. All knobs are plain fields so configs and
+/// tests can tighten them; the defaults follow the standard
+/// mixed-precision recipe (init 2^16, x2 growth per 2000-step stable
+/// window, halve on overflow, floor 1.0, cap 2^24).
+#[derive(Clone, Copy, Debug)]
+pub struct LossScaler {
+    /// Current scale `S`. Kept a power of two by the default dynamics
+    /// (exact unscale); a fixed-scale config simply sets it and a
+    /// `growth_interval` of `u64::MAX`.
+    pub scale: f32,
+    /// Multiplier applied after a stable window (default 2.0).
+    pub growth_factor: f32,
+    /// Multiplier applied on a non-finite step (default 0.5).
+    pub backoff_factor: f32,
+    /// Consecutive finite steps before the scale grows (default 2000).
+    pub growth_interval: u64,
+    /// Lower bound for backoff (default 1.0 — never scale *down* the
+    /// true gradients).
+    pub min_scale: f32,
+    /// Upper bound for growth (default 2^24).
+    pub max_scale: f32,
+    /// Finite steps since the last scale change.
+    stable: u64,
+    /// Steps skipped so far (observability; the paper-style logs report
+    /// skipped steps alongside loss).
+    pub skipped: u64,
+    /// Times the scale grew.
+    pub growths: u64,
+}
+
+impl LossScaler {
+    /// Standard initial scale, 2^16.
+    pub const DEFAULT_INIT: f32 = 65536.0;
+
+    /// The standard dynamic recipe starting at 2^16.
+    pub fn dynamic() -> LossScaler {
+        LossScaler::with_scale(Self::DEFAULT_INIT)
+    }
+
+    /// Dynamic recipe with an explicit initial scale.
+    pub fn with_scale(init: f32) -> LossScaler {
+        assert!(
+            init.is_finite() && init >= 1.0,
+            "loss scale must be finite and >= 1 (got {init})"
+        );
+        LossScaler {
+            scale: init,
+            growth_factor: 2.0,
+            backoff_factor: 0.5,
+            growth_interval: 2000,
+            min_scale: 1.0,
+            max_scale: 16_777_216.0, // 2^24
+            stable: 0,
+            skipped: 0,
+            growths: 0,
+        }
+    }
+
+    /// Fixed scale: never grows, still skip-and-halves on overflow (a
+    /// fixed scale that overflows every step would otherwise deadlock
+    /// training).
+    pub fn fixed(scale: f32) -> LossScaler {
+        let mut s = LossScaler::with_scale(scale);
+        s.growth_interval = u64::MAX;
+        s
+    }
+
+    /// Current scale.
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Scale the gradient buffer in place — what backprop on
+    /// `scale * loss` hands the reduction. Must run **before** the
+    /// gradients cross a half-width wire: the whole point of the scale
+    /// is that components below the wire dtype's underflow threshold
+    /// (2^-24 for f16) survive quantization, and that a wire overflow
+    /// is curable by halving the scale on the *next* step's pre-wire
+    /// values.
+    pub fn apply(&self, grads: &mut [f32]) {
+        let s = self.scale;
+        for g in grads.iter_mut() {
+            *g *= s;
+        }
+    }
+
+    /// Gate-only variant for full-precision paths with no wire to
+    /// protect (the scale round-trip is exact in f32, so there is
+    /// nothing to multiply in or divide out): same skip-and-halve /
+    /// stable-window dynamics as [`LossScaler::unscale`], buffer
+    /// untouched. Returns `false` if the step must be skipped.
+    pub fn observe(&mut self, grads: &[f32]) -> bool {
+        let nonfinite = grads.iter().any(|g| !g.is_finite());
+        self.gate(nonfinite)
+    }
+
+    /// The single skip-and-halve / grow-on-stable-window state machine
+    /// behind [`LossScaler::observe`] and [`LossScaler::unscale`] (one
+    /// implementation, so the two gates cannot drift). Returns whether
+    /// the step proceeds.
+    fn gate(&mut self, nonfinite: bool) -> bool {
+        if nonfinite {
+            self.scale =
+                (self.scale * self.backoff_factor).max(self.min_scale);
+            self.stable = 0;
+            self.skipped += 1;
+            return false;
+        }
+        self.stable += 1;
+        if self.stable >= self.growth_interval {
+            self.scale = (self.scale * self.growth_factor).min(self.max_scale);
+            self.stable = 0;
+            self.growths += 1;
+        }
+        true
+    }
+
+    /// Unscale before the optimizer step. Returns `true` and divides the
+    /// buffer by the scale if every element is finite; otherwise leaves
+    /// the buffer untouched, halves the scale (floored at
+    /// [`LossScaler::min_scale`]), resets the stable window, and returns
+    /// `false` — the caller must **skip** this optimizer step. A full
+    /// stable window grows the scale for subsequent steps.
+    pub fn unscale(&mut self, grads: &mut [f32]) -> bool {
+        if grads.iter().any(|g| !g.is_finite()) {
+            return self.gate(true);
+        }
+        // Divide by the scale that was applied — before the gate may
+        // grow it for the next step.
+        let inv = 1.0 / self.scale;
+        for g in grads.iter_mut() {
+            *g *= inv;
+        }
+        self.gate(false)
+    }
+}
+
+impl Default for LossScaler {
+    fn default() -> Self {
+        LossScaler::dynamic()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_unscale_roundtrip_is_bitwise_exact() {
+        // Power-of-two scale: apply → unscale returns the original bits
+        // for normal-range values.
+        let mut s = LossScaler::dynamic();
+        let orig: Vec<f32> = (0..100)
+            .map(|i| ((i as f32) - 50.0) * 0.3717 + 1e-6)
+            .collect();
+        let mut g = orig.clone();
+        s.apply(&mut g);
+        assert!(s.unscale(&mut g));
+        for (a, b) in g.iter().zip(&orig) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(s.skipped, 0);
+    }
+
+    #[test]
+    fn non_finite_skips_and_halves_without_touching_grads() {
+        let mut s = LossScaler::dynamic();
+        let mut g = [1.0f32, f32::INFINITY, 3.0];
+        assert!(!s.unscale(&mut g));
+        assert_eq!(s.scale(), 32768.0);
+        assert_eq!(s.skipped, 1);
+        // buffer untouched on the skip path
+        assert_eq!(g[0], 1.0);
+        assert!(g[1].is_infinite());
+        let mut g = [f32::NAN; 2];
+        assert!(!s.unscale(&mut g));
+        assert_eq!(s.scale(), 16384.0);
+        assert_eq!(s.skipped, 2);
+    }
+
+    #[test]
+    fn repeated_overflow_floors_at_min_scale() {
+        let mut s = LossScaler::dynamic();
+        let mut g = [f32::INFINITY];
+        for _ in 0..60 {
+            assert!(!s.unscale(&mut g));
+        }
+        assert_eq!(s.scale(), 1.0);
+    }
+
+    #[test]
+    fn grows_after_stable_window_and_caps() {
+        let mut s = LossScaler::dynamic();
+        s.growth_interval = 4;
+        for step in 1..=8 {
+            let mut g = [0.5f32, -0.25];
+            assert!(s.unscale(&mut g));
+            let want = match step {
+                1..=3 => 65536.0,
+                4..=7 => 131072.0,
+                _ => 262144.0,
+            };
+            assert_eq!(s.scale(), want, "step {step}");
+        }
+        assert_eq!(s.growths, 2);
+        // a skip resets the window
+        let mut g = [f32::NAN];
+        assert!(!s.unscale(&mut g));
+        assert_eq!(s.scale(), 131072.0);
+        for _ in 0..3 {
+            let mut g = [0.5f32];
+            assert!(s.unscale(&mut g));
+            assert_eq!(s.scale(), 131072.0);
+        }
+        // growth caps at max_scale
+        let mut s = LossScaler::dynamic();
+        s.growth_interval = 1;
+        for _ in 0..100 {
+            let mut g = [1.0f32];
+            s.unscale(&mut g);
+        }
+        assert_eq!(s.scale(), s.max_scale);
+    }
+
+    #[test]
+    fn fixed_scale_never_grows_but_still_backs_off() {
+        let mut s = LossScaler::fixed(1024.0);
+        for _ in 0..5000 {
+            let mut g = [2.0f32];
+            assert!(s.unscale(&mut g));
+            assert_eq!(g[0], 2.0 / 1024.0);
+        }
+        assert_eq!(s.scale(), 1024.0);
+        let mut g = [f32::INFINITY];
+        assert!(!s.unscale(&mut g));
+        assert_eq!(s.scale(), 512.0);
+    }
+
+    /// The gate-only variant shares the skip/grow dynamics without
+    /// touching the buffer, and a scaled buffer crossing a half-width
+    /// wire is exactly what survives: small components times 2^16 stay
+    /// representable where the raw values would underflow to zero.
+    #[test]
+    fn observe_gates_without_touching_and_scale_rescues_underflow() {
+        use crate::collective::Precision;
+        let mut s = LossScaler::dynamic();
+        s.growth_interval = 2;
+        let g = [1.0f32, -0.5];
+        let mut g2 = g;
+        assert!(s.observe(&g2));
+        assert!(s.observe(&g2));
+        assert_eq!(g2, g, "observe must not modify the buffer");
+        assert_eq!(s.scale(), 131072.0, "observe drives the growth window");
+        assert!(!s.observe(&[f32::NAN]));
+        assert_eq!(s.scale(), 65536.0);
+        assert_eq!(s.skipped, 1);
+        // the underflow rescue: 2^-30 quantizes to zero on an f16 wire
+        // raw, but survives once scaled by 2^16
+        let s = LossScaler::dynamic();
+        let tiny = f32::from_bits(0x3080_0000); // 2^-30
+        assert_eq!(Precision::F16.quantize(tiny), 0.0);
+        let mut g = [tiny];
+        s.apply(&mut g);
+        assert_ne!(Precision::F16.quantize(g[0]), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "loss scale must be finite")]
+    fn rejects_bad_initial_scale() {
+        LossScaler::with_scale(f32::NAN);
+    }
+}

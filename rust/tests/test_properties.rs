@@ -4,7 +4,9 @@
 //! data pipeline's distributional contracts.
 
 use lamb_train::cluster::{Pod, StatePartition};
-use lamb_train::collective::{reduce_mean, RingAllReduce, RingCost};
+use lamb_train::collective::{
+    reduce_mean, Precision, PrecisionPlan, RingAllReduce, RingCost,
+};
 use lamb_train::data::{Corpus, MlmConfig, MlmGenerator};
 use lamb_train::manifest::ModelMeta;
 use lamb_train::optim::{self, Hyper, Norm, Seg};
@@ -229,33 +231,148 @@ fn prop_max_batch_monotone_across_zero_stages() {
     for m in &models {
         for &chips in &[1usize, 8, 64, 1024] {
             for &node_size in &[1usize, 4, 8] {
-                let pod = Pod::tpu_v3_nodes(chips, node_size);
-                for &seq in &[128usize, 512] {
-                    let parts = [
-                        StatePartition::Replicated,
-                        StatePartition::Zero1 { shards: chips },
-                        StatePartition::Zero2 { shards: chips },
-                        StatePartition::Zero3 { shards: chips },
-                    ];
-                    let caps: Vec<usize> = parts
-                        .iter()
-                        .map(|&p| pod.max_batch(m, seq, p))
+                for prec in [
+                    PrecisionPlan::F32,
+                    PrecisionPlan::mixed(Precision::Bf16),
+                    PrecisionPlan::mixed(Precision::F16),
+                ] {
+                    let pod = Pod::tpu_v3_nodes(chips, node_size)
+                        .with_precision(prec);
+                    for &seq in &[128usize, 512] {
+                        let parts = [
+                            StatePartition::Replicated,
+                            StatePartition::Zero1 { shards: chips },
+                            StatePartition::Zero2 { shards: chips },
+                            StatePartition::Zero3 { shards: chips },
+                        ];
+                        let caps: Vec<usize> = parts
+                            .iter()
+                            .map(|&p| pod.max_batch(m, seq, p))
+                            .collect();
+                        for w in caps.windows(2) {
+                            assert!(
+                                w[1] >= w[0],
+                                "{} chips={chips} node={node_size} \
+                                 seq={seq} {}: {caps:?}",
+                                m.name,
+                                prec.label()
+                            );
+                        }
+                        if chips == 1 {
+                            assert!(
+                                caps.iter().all(|&c| c == caps[0]),
+                                "{} seq={seq} {}: k=1 stages differ: \
+                                 {caps:?}",
+                                m.name,
+                                prec.label()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// ISSUE 5 satellite: ragged-plan byte accounting across precisions.
+/// For random ragged bucket plans, all stages x shard counts x
+/// precision plans:
+///
+/// * the per-worker plan-exact sharded shares (owner map x bytes per
+///   element, the arithmetic behind `owned_state_bytes` /
+///   `BucketPlan::owned_bytes` and the `*_shard_bytes` accessors) tile
+///   the dense sharded total **exactly** — no byte is dropped or
+///   double-counted;
+/// * the model-level per-rank cap (`stage_state_bytes_prec`, ceil
+///   division) times the rank count is >= the plan-exact total a real
+///   partition distributes — the cap never undercounts the aggregate
+///   footprint (per rank it is the mean-share bound; the max share of
+///   a ragged plan is covered by the plan-aware accounting,
+///   `Pod::state_bytes_planned`);
+/// * on evenly divisible plans the cap covers every single worker
+///   exactly.
+#[test]
+fn prop_stage_state_bytes_bounds_plan_exact_shares() {
+    use lamb_train::exec::{
+        stage_split_prec, stage_state_bytes_prec, BucketPlan,
+    };
+    let mut rng = Rng::new(109);
+    let precs = [
+        PrecisionPlan::F32,
+        PrecisionPlan::mixed(Precision::Bf16),
+        PrecisionPlan::mixed(Precision::F16),
+        PrecisionPlan {
+            params: Precision::F32,
+            grads: Precision::Bf16,
+            master_weights: false,
+        },
+    ];
+    for case in 0..20 {
+        // ragged: odd segment sizes, bucket targets that do not divide
+        // them, shard counts that do not divide the bucket count
+        let mut segs = Vec::new();
+        let mut off = 0usize;
+        for i in 0..(2 + rng.below(10) as usize) {
+            let size = 1 + rng.below(97) as usize;
+            segs.push(Seg {
+                offset: off,
+                size,
+                decay: i % 2 == 0,
+                adapt: true,
+            });
+            off += size;
+        }
+        let plan =
+            BucketPlan::from_segs(&segs, 4 * (1 + rng.below(120) as usize));
+        let n = plan.n;
+        for &k in &[1usize, 2, 3, 5, 8] {
+            for stage in 0..=3u8 {
+                for prec in &precs {
+                    let (rep, sh) = stage_split_prec(stage, prec);
+                    let shares: Vec<usize> = (0..k)
+                        .map(|w| plan.owned_elems(w, k) * sh)
                         .collect();
-                    for w in caps.windows(2) {
-                        assert!(
-                            w[1] >= w[0],
-                            "{} chips={chips} node={node_size} seq={seq}: \
-                             {caps:?}",
-                            m.name
-                        );
+                    assert_eq!(
+                        shares.iter().sum::<usize>(),
+                        n * sh,
+                        "case {case} stage {stage} k={k} {}: sharded \
+                         shares must tile the dense total",
+                        prec.label()
+                    );
+                    let cap = stage_state_bytes_prec(stage, n, k, prec);
+                    let real_total: usize =
+                        shares.iter().map(|s| rep * n + s).sum();
+                    assert!(
+                        k * cap >= real_total,
+                        "case {case} stage {stage} k={k} {}: aggregate \
+                         cap {k}x{cap} undercounts {real_total}",
+                        prec.label()
+                    );
+                    // the cap is never below the replicated floor, and
+                    // a single shard is exactly dense
+                    assert!(cap >= rep * n);
+                    if k == 1 {
+                        assert_eq!(cap, (rep + sh) * n);
                     }
-                    if chips == 1 {
-                        assert!(
-                            caps.iter().all(|&c| c == caps[0]),
-                            "{} seq={seq}: k=1 stages differ: {caps:?}",
-                            m.name
-                        );
-                    }
+                }
+            }
+        }
+    }
+    // evenly divisible plans: the per-rank cap covers every worker
+    // exactly (owner map hands each rank the same share)
+    let plan = BucketPlan::even(960, 8);
+    for &k in &[1usize, 2, 4, 8] {
+        for stage in 0..=3u8 {
+            for prec in &precs {
+                let (rep, sh) = stage_split_prec(stage, prec);
+                let cap = stage_state_bytes_prec(stage, 960, k, prec);
+                for w in 0..k {
+                    let exact = rep * 960 + plan.owned_elems(w, k) * sh;
+                    assert_eq!(
+                        cap, exact,
+                        "stage {stage} k={k} w={w} {}",
+                        prec.label()
+                    );
                 }
             }
         }

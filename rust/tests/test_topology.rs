@@ -257,6 +257,7 @@ fn native_runs_bitwise_identical_across_reduce_schedules() {
             workers: 4,
             bucket_bytes: 4444,
             reduce,
+            ..ExecConfig::default()
         };
         let mut tr = NativeTrainer::with_exec(
             &spec,

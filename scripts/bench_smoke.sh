@@ -55,7 +55,58 @@ if not gathers:
     sys.exit(f"{path}: no param_gather records in the bench artifact")
 if any(set(("bucket", "pass", "schedule")) - set(o) for o in gathers):
     sys.exit(f"{path}: param_gather records missing bucket/pass/schedule keys")
+# The precision columns must parse: one record per (precision, stage)
+# with the seq-512 batch cap, and the mixed cap must strictly exceed
+# the f32 cap at every ZeRO stage (the ISSUE 5 acceptance, re-checked
+# from the artifact itself).
+prec = [o for o in objs if o.get("kind") == "precision"]
+if any(set(("precision", "zero_stage", "max_batch_512")) - set(o) for o in prec):
+    sys.exit(f"{path}: precision records missing precision/zero_stage/max_batch_512 keys")
+caps = {(o["precision"], o["zero_stage"]): o["max_batch_512"] for o in prec}
+for stage in range(4):
+    for dtype in ("f32", "bf16"):
+        if (dtype, stage) not in caps:
+            sys.exit(f"{path}: missing precision record ({dtype}, stage {stage})")
+        if not isinstance(caps[(dtype, stage)], int) or caps[(dtype, stage)] <= 0:
+            sys.exit(f"{path}: bad max_batch_512 in precision record ({dtype}, stage {stage})")
+    if caps[("bf16", stage)] <= caps[("f32", stage)]:
+        sys.exit(f"{path}: stage {stage}: bf16 cap {caps[('bf16', stage)]} "
+                 f"does not exceed f32 cap {caps[('f32', stage)]}")
 print(f"bench_smoke: {len(lines)} JSON measurements in {path} "
-      f"(zero3 column + {len(gathers)} param_gather records ok)")
+      f"(zero3 column + {len(gathers)} param_gather records + "
+      f"{len(prec)} precision records ok; bf16 caps > f32 at every stage)")
 EOF
+fi
+
+# Regression fixture (ISSUE 5): a zero or non-finite step-time cell in
+# the *previous* artifact must neither crash the trend diff nor poison
+# the ratio computation — the script reports the cell as unparseable
+# (or skips the zero cell) and still exits 0.
+if command -v python3 >/dev/null 2>&1; then
+    FIXTURE="$(mktemp)"
+    DIFF_OUT="$(mktemp)"
+    cat > "$FIXTURE" <<'EOF'
+{"bench":"bench_exec","mode":"serial","workers":1,"steps":3,"batch":64,"secs":0}
+{"bench":"bench_exec","kind":"sched_compare","config":"bert-32k-zero2","schedule":"auto","secs":NaN}
+{"bench":"bench_exec","kind":"sched_compare","config":"bert-32k-zero3","schedule":"auto","secs":Infinity}
+EOF
+    if ! python3 scripts/bench_trend_diff.py "$FIXTURE" "$OUT" > "$DIFF_OUT"; then
+        echo "bench_smoke: bench_trend_diff crashed on zero/non-finite fixture" >&2
+        cat "$DIFF_OUT" >&2
+        rm -f "$FIXTURE" "$DIFF_OUT"
+        exit 1
+    fi
+    if ! grep -q "unparseable secs value" "$DIFF_OUT"; then
+        echo "bench_smoke: bench_trend_diff did not report the non-finite fixture cells" >&2
+        cat "$DIFF_OUT" >&2
+        rm -f "$FIXTURE" "$DIFF_OUT"
+        exit 1
+    fi
+    if grep -i "regression" "$DIFF_OUT" | grep -qi "nan%"; then
+        echo "bench_smoke: NaN leaked into a trend-diff percentage" >&2
+        rm -f "$FIXTURE" "$DIFF_OUT"
+        exit 1
+    fi
+    echo "bench_smoke: trend-diff division guard ok (zero/NaN/Inf previous cells handled)"
+    rm -f "$FIXTURE" "$DIFF_OUT"
 fi

@@ -20,6 +20,7 @@ downloads.
 
 import argparse
 import json
+import math
 import sys
 
 
@@ -43,7 +44,19 @@ def load(path):
         secs = obj.pop("secs")
         # Identity of the measurement cell: every non-measurement field.
         key = tuple(sorted((k, str(v)) for k, v in obj.items()))
-        if not isinstance(secs, (int, float)) or secs < 0:
+        # A NaN/Infinity secs (json.loads accepts both) or a negative
+        # value must never reach the ratio computation: NaN would pass
+        # every guard below (all comparisons are False) and silently
+        # poison the percentage; report the cell as unparseable instead.
+        if (
+            not isinstance(secs, (int, float))
+            or not math.isfinite(float(secs))
+            or secs < 0
+        ):
+            print(
+                f"bench_trend_diff: {path}:{i}: unparseable secs value "
+                f"{secs!r} for cell {fmt_key(key)}; skipping cell"
+            )
             continue
         out[key] = float(secs)
     return out
@@ -82,7 +95,9 @@ def main():
             continue
         compared += 1
         if was <= 0.0:
-            # Zero-cost cells (pure pass/fail records): nothing to diff.
+            # Zero-cost cells (pure pass/fail records, or a zero
+            # step-time cell in the previous artifact): dividing by
+            # `was` would blow up, so there is nothing to diff.
             continue
         pct = (now - was) / was * 100.0
         if pct > args.warn_pct:
