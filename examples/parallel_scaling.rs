@@ -15,6 +15,12 @@
 //! crosses that ladder with the storage/wire dtype (`[precision]`):
 //! f32 vs bf16+fp32-masters state, caps and step times per stage.
 //!
+//! Every number here is a *total*; to see where inside a step the time
+//! sits (which bucket's gather stalls, which reduce-scatter is
+//! exposed), export the same steps as Perfetto traces:
+//! `lamb-train trace-smoke` then `lamb-train trace-report <trace.json>`
+//! (README "Observability").
+//!
 //!     cargo run --release --example parallel_scaling [steps] [batch]
 
 use std::time::Instant;
@@ -279,6 +285,13 @@ fn main() -> Result<()> {
          weights sharded alongside the optimizer state: the batch cap \
          strictly exceeds f32 at every stage and every collective \
          carries half the bytes — [precision] in the config)"
+    );
+
+    println!(
+        "\nper-span breakdowns of these steps: `lamb-train trace-smoke \
+         --out results/trace` writes the batch-32k zero3 step as a \
+         Perfetto trace (ui.perfetto.dev) and `lamb-train trace-report` \
+         summarizes it (README \"Observability\")"
     );
     Ok(())
 }

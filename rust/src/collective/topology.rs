@@ -348,6 +348,41 @@ impl ReduceSchedule {
         self
     }
 
+    /// Static telemetry counter name `wire_bytes.<op>.<wire dtype>` —
+    /// the host-trace recorder takes `&'static str` names so the hot
+    /// path never allocates.
+    fn wire_counter(&self, op: CollOp) -> &'static str {
+        match (op, self.wire) {
+            (CollOp::AllReduce, Precision::F32) => {
+                "wire_bytes.all_reduce.f32"
+            }
+            (CollOp::AllReduce, Precision::Bf16) => {
+                "wire_bytes.all_reduce.bf16"
+            }
+            (CollOp::AllReduce, Precision::F16) => {
+                "wire_bytes.all_reduce.f16"
+            }
+            (CollOp::ReduceScatter, Precision::F32) => {
+                "wire_bytes.reduce_scatter.f32"
+            }
+            (CollOp::ReduceScatter, Precision::Bf16) => {
+                "wire_bytes.reduce_scatter.bf16"
+            }
+            (CollOp::ReduceScatter, Precision::F16) => {
+                "wire_bytes.reduce_scatter.f16"
+            }
+            (CollOp::AllGather, Precision::F32) => {
+                "wire_bytes.all_gather.f32"
+            }
+            (CollOp::AllGather, Precision::Bf16) => {
+                "wire_bytes.all_gather.bf16"
+            }
+            (CollOp::AllGather, Precision::F16) => {
+                "wire_bytes.all_gather.f16"
+            }
+        }
+    }
+
     /// Average per-worker buffers into `out` — the single rank-order
     /// kernel for every kind, so this is bitwise-identical to
     /// [`super::reduce_mean`] by construction at f32 wire (a ring
@@ -357,6 +392,12 @@ impl ReduceSchedule {
     /// contribution and the mean through the storage dtype — still one
     /// deterministic rank-order kernel for every kind.
     pub fn reduce_mean(&self, workers: &[&[f32]], out: &mut [f32]) {
+        if crate::trace::host::enabled() {
+            crate::trace::host::counter(
+                self.wire_counter(CollOp::AllReduce),
+                (out.len() * self.wire.bytes()) as f64,
+            );
+        }
         reduce_mean_quant(self.wire, workers, out);
     }
 
@@ -378,7 +419,15 @@ impl ReduceSchedule {
                 &w[start..end]
             })
             .collect();
-        self.reduce_mean(&slices, out);
+        if crate::trace::host::enabled() {
+            crate::trace::host::counter(
+                self.wire_counter(CollOp::ReduceScatter),
+                ((end - start) * self.wire.bytes()) as f64,
+            );
+        }
+        // Straight to the kernel — routing through `reduce_mean` would
+        // double-count the payload as an all-reduce.
+        reduce_mean_quant(self.wire, &slices, out);
     }
 
     /// All-gather: stitch owner chunks back into the flat vector —
@@ -388,6 +437,13 @@ impl ReduceSchedule {
     /// no-op for chunks already holding storage-dtype values —
     /// quantization is idempotent).
     pub fn all_gather(&self, shards: &[(usize, &[f32])], out: &mut [f32]) {
+        if crate::trace::host::enabled() {
+            let elems: usize = shards.iter().map(|(_, s)| s.len()).sum();
+            crate::trace::host::counter(
+                self.wire_counter(CollOp::AllGather),
+                (elems * self.wire.bytes()) as f64,
+            );
+        }
         all_gather_quant(self.wire, shards, out);
     }
 }

@@ -281,6 +281,48 @@ impl PrecisionConfig {
     }
 }
 
+/// Structured tracing + telemetry (config section `[trace]`).
+///
+/// ```toml
+/// [trace]
+/// enabled = true             # master switch (default false)
+/// dir = "results/trace"      # output directory
+/// sim_trace = true           # write the simulated-time Perfetto trace
+/// host_trace = true          # record host-time spans (exec engine)
+/// metrics_jsonl = true       # write the JSONL telemetry sink
+/// ```
+///
+/// Mistyped values hard-error like `[exec]`/`[topology]` (a string
+/// where a boolean belongs, a number `dir`) instead of silently
+/// dropping the telemetry someone asked for. Tracing never changes
+/// numerics: hooks read clocks and metadata only, so a traced run is
+/// bitwise-identical to an untraced one.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Master switch; the sub-switches below are ignored when false.
+    pub enabled: bool,
+    /// Output directory for trace + telemetry files.
+    pub dir: String,
+    /// Write the simulated-time Perfetto trace (`trace::sim`) per stage.
+    pub sim_trace: bool,
+    /// Record host-time spans through `trace::host`.
+    pub host_trace: bool,
+    /// Write the `MetricsSink` JSONL (`trace::sink`).
+    pub metrics_jsonl: bool,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            enabled: false,
+            dir: "results/trace".into(),
+            sim_trace: true,
+            host_trace: true,
+            metrics_jsonl: true,
+        }
+    }
+}
+
 /// Which step path the coordinator uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StepPath {
@@ -325,6 +367,8 @@ pub struct TrainConfig {
     pub topology: TopologyConfig,
     // storage/wire precision ([precision] section)
     pub precision: PrecisionConfig,
+    // tracing + telemetry ([trace] section)
+    pub trace: TraceConfig,
     // io
     pub artifacts: String,
     pub out_dir: String,
@@ -355,6 +399,7 @@ impl Default for TrainConfig {
             bucket_kb: 1024,
             topology: TopologyConfig::default(),
             precision: PrecisionConfig::default(),
+            trace: TraceConfig::default(),
             artifacts: "artifacts".into(),
             out_dir: "results".into(),
             eval_every: 50,
@@ -597,6 +642,37 @@ impl TrainConfig {
                     LossScaleConfig::Fixed(f)
                 }
             };
+        }
+        // ---- [trace] table: mistyped values hard-error (mirroring
+        // [exec]/[topology]) instead of silently dropping telemetry. ----
+        let get_trace_bool = |key: &str| -> Result<Option<bool>> {
+            match doc.get(key) {
+                None => Ok(None),
+                Some(raw) => Ok(Some(raw.as_bool().ok_or_else(|| {
+                    anyhow!("{key} must be a boolean (got {raw:?})")
+                })?)),
+            }
+        };
+        if let Some(v) = get_trace_bool("trace.enabled")? {
+            c.trace.enabled = v;
+        }
+        if let Some(raw) = doc.get("trace.dir") {
+            let s = raw.as_str().ok_or_else(|| {
+                anyhow!("trace.dir must be a string path (got {raw:?})")
+            })?;
+            if s.is_empty() {
+                bail!("trace.dir must be a non-empty path");
+            }
+            c.trace.dir = s.to_string();
+        }
+        if let Some(v) = get_trace_bool("trace.sim_trace")? {
+            c.trace.sim_trace = v;
+        }
+        if let Some(v) = get_trace_bool("trace.host_trace")? {
+            c.trace.host_trace = v;
+        }
+        if let Some(v) = get_trace_bool("trace.metrics_jsonl")? {
+            c.trace.metrics_jsonl = v;
         }
         if let Some(v) = gets("run.artifacts") { c.artifacts = v; }
         if let Some(v) = gets("run.out_dir") { c.out_dir = v; }
@@ -1058,6 +1134,51 @@ betas = [0.9, 0.999]
         )
         .unwrap();
         assert!(c.precision.plan().has_master());
+    }
+
+    #[test]
+    fn trace_table_parses_with_defaults() {
+        // Absent table: disabled, canonical defaults.
+        let d = TrainConfig::default();
+        assert!(!d.trace.enabled);
+        assert_eq!(d.trace.dir, "results/trace");
+        assert!(d.trace.sim_trace);
+        assert!(d.trace.host_trace);
+        assert!(d.trace.metrics_jsonl);
+        let c = TrainConfig::load(
+            None,
+            &[
+                ("trace.enabled".into(), "true".into()),
+                ("trace.dir".into(), "\"out/tr\"".into()),
+                ("trace.sim_trace".into(), "false".into()),
+                ("trace.host_trace".into(), "true".into()),
+                ("trace.metrics_jsonl".into(), "false".into()),
+            ],
+        )
+        .unwrap();
+        assert!(c.trace.enabled);
+        assert_eq!(c.trace.dir, "out/tr");
+        assert!(!c.trace.sim_trace);
+        assert!(c.trace.host_trace);
+        assert!(!c.trace.metrics_jsonl);
+    }
+
+    /// Mistyped `[trace]` values are hard errors (like `exec.zero_stage`
+    /// and the `[topology]`/`[precision]` tables), never silently-ignored
+    /// keys.
+    #[test]
+    fn trace_table_rejects_mistyped_values() {
+        let bad = |k: &str, v: &str| {
+            TrainConfig::load(None, &[(k.into(), v.into())]).is_err()
+        };
+        assert!(bad("trace.enabled", "\"yes\""));
+        assert!(bad("trace.enabled", "1"));
+        assert!(bad("trace.dir", "7"));
+        assert!(bad("trace.dir", "true"));
+        assert!(bad("trace.dir", "\"\""));
+        assert!(bad("trace.sim_trace", "\"true\""));
+        assert!(bad("trace.host_trace", "0"));
+        assert!(bad("trace.metrics_jsonl", "1.0"));
     }
 
     #[test]

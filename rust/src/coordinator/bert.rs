@@ -37,6 +37,7 @@ use crate::model::{Checkpoint, ParamStore};
 use crate::optim::{self, Hyper, LossScaler, Optimizer, Seg};
 use crate::runtime::{self, Engine, Executable};
 use crate::schedule::Schedule;
+use crate::trace;
 
 /// One homogeneous phase of training.
 #[derive(Clone, Debug)]
@@ -261,6 +262,12 @@ impl<'e> BertTrainer<'e> {
     pub fn train(&mut self, stages: &[Stage]) -> Result<RunLog> {
         let mut log = RunLog::default();
         let mut div = DivergenceDetector::new();
+        // `[trace] host_trace`: record wall-clock spans/counters through
+        // the run (zero-state steps, collective wire bytes, scaler
+        // decisions — all clock/metadata reads, numerics untouched).
+        if self.cfg.trace.enabled && self.cfg.trace.host_trace {
+            trace::host::start();
+        }
         let t0 = Instant::now();
         let mut sim_time = if stages.is_empty() { 0.0 } else { log.sim_time() };
         for stage in stages {
@@ -270,7 +277,57 @@ impl<'e> BertTrainer<'e> {
             }
         }
         log.diverged = div.diverged;
+        self.write_trace_outputs(&log)?;
         Ok(log)
+    }
+
+    /// Post-run `[trace]` outputs: drain the host recorder into
+    /// `host.trace.json` (if `host_trace`) and emit the telemetry JSONL
+    /// (if `metrics_jsonl`) — per-step records, bucket-latency
+    /// histogram, and the cumulative counters (wire bytes from the host
+    /// recorder, gather stalls from the pod model).
+    fn write_trace_outputs(&self, log: &RunLog) -> Result<()> {
+        if !self.cfg.trace.enabled {
+            return Ok(());
+        }
+        let dir = std::path::Path::new(&self.cfg.trace.dir);
+        std::fs::create_dir_all(dir).with_context(|| {
+            format!("creating trace dir {}", dir.display())
+        })?;
+        let mut sink = trace::sink::MetricsSink::new("bert_sim");
+        if self.cfg.trace.host_trace {
+            if let Some(tr) = trace::host::drain() {
+                std::fs::write(
+                    dir.join("host.trace.json"),
+                    tr.to_perfetto_json(),
+                )
+                .context("writing host.trace.json")?;
+                sink.absorb(&tr);
+            }
+        }
+        if self.cfg.trace.metrics_jsonl {
+            for r in &log.records {
+                let mut fields = vec![
+                    ("lr", r.lr as f64),
+                    ("loss", r.loss as f64),
+                    ("sim_time", r.sim_time),
+                    ("host_time", r.host_time),
+                ];
+                if let Some(c) = r.comm.as_ref() {
+                    fields.push(("comm_time", c.comm_time));
+                    fields.push(("comm_exposed", c.exposed));
+                    fields.push(("gather_stall", c.gather_stall));
+                    sink.add("gather_stall.secs", c.gather_stall);
+                    for &(ready, done) in &c.per_bucket {
+                        sink.observe("bucket_latency_secs", done - ready);
+                    }
+                }
+                sink.record_step(r.step, &fields);
+            }
+            sink.write(&dir.join("metrics.jsonl"))
+                .context("writing metrics.jsonl")?;
+        }
+        Ok(())
     }
 
     fn train_stage(
@@ -368,6 +425,10 @@ impl<'e> BertTrainer<'e> {
         };
         let bucketed =
             self.cfg.exec_mode != ExecMode::Serial && fused_exe.is_none();
+        // Deterministic pointer from every StepRecord of this stage to
+        // the simulated-time Perfetto trace written below (if tracing
+        // is on) — stage-derived, so re-runs produce identical refs.
+        let mut sim_trace_ref: Option<String> = None;
         let (step_sim, comm_tpl) = if bucketed {
             let (costs, compute, total) = self.pod.bucket_timeline_partitioned(
                 &self.meta,
@@ -382,21 +443,23 @@ impl<'e> BertTrainer<'e> {
             // per-bucket wire records. Zero2's trailing whole-vector
             // all-gather is not a bucket and shows up in `exposed` (and
             // step_sim) instead, as do zero3's gather stalls.
-            let comm = StepComm {
-                buckets: costs.len(),
-                comm_time: costs
-                    .iter()
-                    .map(|c| {
-                        (c.done - c.start)
-                            + c.gather.map_or(0.0, |g| {
-                                (g.fwd_done - g.fwd_start)
-                                    + (g.bwd_done - g.bwd_start)
-                            })
-                    })
-                    .sum(),
-                exposed: (total - compute).max(0.0),
-                per_bucket: costs.iter().map(|c| (c.ready, c.done)).collect(),
-            };
+            let mut comm = StepComm::from_costs(&costs, compute, total);
+            comm.gather_stall = trace::sim::gather_stall_total(
+                &self.pod, &self.plan, part, &costs, compute,
+            );
+            if self.cfg.trace.enabled && self.cfg.trace.sim_trace {
+                let tr = trace::sim::sim_step_trace(
+                    &self.pod, &self.plan, part, &costs, compute, total,
+                );
+                let dir = std::path::Path::new(&self.cfg.trace.dir);
+                std::fs::create_dir_all(dir).with_context(|| {
+                    format!("creating trace dir {}", dir.display())
+                })?;
+                let name = format!("sim_seq{}.trace.json", stage.seq);
+                std::fs::write(dir.join(&name), tr.to_perfetto_json())
+                    .with_context(|| format!("writing {name}"))?;
+                sim_trace_ref = Some(name);
+            }
             (total, Some(comm))
         } else {
             (
@@ -580,6 +643,7 @@ impl<'e> BertTrainer<'e> {
                 sim_time,
                 host_time: t0.elapsed().as_secs_f64(),
                 comm: comm_tpl.clone(),
+                trace_ref: sim_trace_ref.clone(),
             });
             if div.observe(loss) {
                 break;

@@ -24,6 +24,7 @@ use crate::metrics::{DivergenceDetector, RunLog, StepComm, StepRecord};
 use crate::nn::{Mlp, MlpConfig};
 use crate::optim::{build, Hyper, Optimizer, Seg};
 use crate::schedule::Schedule;
+use crate::trace::{self, sink::MetricsSink};
 use crate::util::Rng;
 
 /// A self-contained small-task training setup.
@@ -129,6 +130,12 @@ pub struct NativeTrainer {
     test_x: Vec<f32>,
     test_y: Vec<u32>,
     exec: Option<NativeExec>,
+    /// When set, [`train_with_eval`] records host-time spans through
+    /// `trace::host` and writes `host.trace.json` + `metrics.jsonl`
+    /// into this directory. Hooks never touch numeric buffers, so a
+    /// traced run is bitwise-identical to an untraced one
+    /// (`traced_run_is_bitwise_identical_to_untraced`).
+    trace_dir: Option<std::path::PathBuf>,
 }
 
 impl NativeTrainer {
@@ -162,7 +169,17 @@ impl NativeTrainer {
             test_x: tx,
             test_y: ty,
             exec: None,
+            trace_dir: None,
         }
+    }
+
+    /// Enable host-time tracing: the next [`train_with_eval`] records a
+    /// per-thread span timeline (coordinator + exec workers) and writes
+    /// `host.trace.json` (Perfetto) and `metrics.jsonl` (telemetry
+    /// sink) under `dir`. The recorder is process-global; concurrent
+    /// traced trainers should serialize via [`trace::host::exclusive`].
+    pub fn enable_trace(&mut self, dir: impl Into<std::path::PathBuf>) {
+        self.trace_dir = Some(dir.into());
     }
 
     /// Build a trainer whose step loop runs through the exec engine with
@@ -331,9 +348,14 @@ impl NativeTrainer {
         let mut log = RunLog::default();
         let mut evals = Vec::new();
         let mut div = DivergenceDetector::new();
+        let tracing = self.trace_dir.is_some();
+        if tracing {
+            trace::host::start();
+        }
         let t0 = Instant::now();
         let (mut x, mut y) = (Vec::new(), Vec::new());
         for t in 1..=steps {
+            let step_span = trace::host::span_id("native.step", t);
             let lr = self.schedule.lr(t);
             let (loss, ratios, comm) = if self.exec.is_some() {
                 self.exec_step(t, batch, lr)
@@ -352,6 +374,7 @@ impl NativeTrainer {
             if t % 50 == 0 || t == 1 {
                 log.trust_ratios.push((t, ratios));
             }
+            drop(step_span);
             log.push(StepRecord {
                 step: t,
                 lr,
@@ -359,6 +382,7 @@ impl NativeTrainer {
                 sim_time: 0.0,
                 host_time: t0.elapsed().as_secs_f64(),
                 comm,
+                trace_ref: tracing.then(|| "host.trace.json".to_string()),
             });
             if eval_every > 0 && (t % eval_every == 0 || t == 1) {
                 let (tl, ta) = self.mlp.evaluate(&self.test_x, &self.test_y);
@@ -366,6 +390,34 @@ impl NativeTrainer {
             }
             if div.observe(loss) {
                 break;
+            }
+        }
+        if let Some(dir) = self.trace_dir.as_ref() {
+            if let Some(tr) = trace::host::drain() {
+                let _ = std::fs::create_dir_all(dir);
+                let _ = std::fs::write(
+                    dir.join("host.trace.json"),
+                    tr.to_perfetto_json(),
+                );
+                let mut sink = MetricsSink::new("native_host");
+                sink.absorb(&tr);
+                for r in &log.records {
+                    let mut fields = vec![
+                        ("lr", r.lr as f64),
+                        ("loss", r.loss as f64),
+                        ("host_time", r.host_time),
+                    ];
+                    if let Some(c) = r.comm.as_ref() {
+                        fields.push(("comm_time", c.comm_time));
+                        fields.push(("comm_exposed", c.exposed));
+                        fields.push(("gather_stall", c.gather_stall));
+                        for &(ready, done) in &c.per_bucket {
+                            sink.observe("bucket_latency_secs", done - ready);
+                        }
+                    }
+                    sink.record_step(r.step, &fields);
+                }
+                let _ = sink.write(&dir.join("metrics.jsonl"));
             }
         }
         log.diverged = div.diverged
@@ -577,6 +629,73 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The tracing acceptance contract: hooks read clocks and metadata
+    /// only, so a traced run is bitwise-identical to an untraced one —
+    /// same per-step losses, same final parameter bits — while still
+    /// producing a parseable Perfetto artifact and a metrics JSONL.
+    #[test]
+    fn traced_run_is_bitwise_identical_to_untraced() {
+        // The host recorder is process-global; hold the test-serializer
+        // so concurrent traced tests don't interleave spans.
+        let _x = crate::trace::host::exclusive();
+        let spec = NativeTask::mnist_proxy();
+        let sched = Schedule::WarmupPoly {
+            base: 0.02,
+            warmup: 5,
+            total: 60,
+            power: 1.0,
+        };
+        let mk = || {
+            let cfg = ExecConfig {
+                mode: ExecMode::Zero3,
+                workers: 2,
+                bucket_bytes: 1 << 12,
+                ..ExecConfig::default()
+            };
+            NativeTrainer::with_exec(
+                &spec,
+                "lamb",
+                Hyper::default(),
+                sched.clone(),
+                9,
+                cfg,
+            )
+        };
+        let mut plain = mk();
+        let log_plain = plain.train(60, 64);
+        let dir = std::env::temp_dir().join("lamb_trace_bitwise_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut traced = mk();
+        traced.enable_trace(dir.clone());
+        let log_traced = traced.train(60, 64);
+        assert_eq!(log_plain.losses(), log_traced.losses());
+        assert_eq!(plain.mlp.params.len(), traced.mlp.params.len());
+        for (a, b) in plain.mlp.params.iter().zip(&traced.mlp.params) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(log_plain.records[0].trace_ref.is_none());
+        assert_eq!(
+            log_traced.records[0].trace_ref.as_deref(),
+            Some("host.trace.json")
+        );
+        let txt =
+            std::fs::read_to_string(dir.join("host.trace.json")).unwrap();
+        let parsed =
+            crate::trace::report::TraceSummary::parse(&txt).unwrap();
+        assert!(
+            parsed.spans.iter().any(|s| s.name == "native.step"),
+            "coordinator lane missing"
+        );
+        assert!(
+            parsed.spans.iter().any(|s| s.name == "worker.compute"),
+            "worker lanes missing"
+        );
+        let jsonl =
+            std::fs::read_to_string(dir.join("metrics.jsonl")).unwrap();
+        assert!(jsonl.lines().any(|l| l.contains("\"kind\":\"step\"")));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -75,6 +75,7 @@ use std::time::Instant;
 use crate::collective::{PrecisionPlan, ReduceSchedule};
 use crate::metrics::StepComm;
 use crate::optim::Seg;
+use crate::trace::host as thost;
 
 /// How the executor runs one global step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -345,7 +346,11 @@ impl Gather {
             .iter()
             .map(|p| p.as_deref().expect("incomplete bucket"))
             .collect();
-        sched.reduce_mean(&refs, shard);
+        // The payloads are already bucket-local, so the scattered range
+        // is the whole bucket; going through the reduce-scatter entry
+        // point (same rank-order kernel, bitwise-identical) keeps the
+        // wire-bytes telemetry attributed to the right collective op.
+        sched.reduce_scatter_mean(&refs, 0, bk.len(), shard);
     }
 }
 
@@ -444,6 +449,9 @@ impl Executor {
         reduced: &mut [f32],
     ) -> StepOutcome {
         assert_eq!(reduced.len(), self.plan.n);
+        // Host-trace hooks below read clocks and metadata only — the
+        // numeric path of a traced step is identical to an untraced one.
+        let _step_span = thost::span_id("exec.step", step);
         let t0 = Instant::now();
         let ctx = StepCtx {
             step,
@@ -478,6 +486,14 @@ impl Executor {
                             if gather.offer(b, w, payload.to_vec()) {
                                 per_bucket[b].0 =
                                     t0.elapsed().as_secs_f64();
+                                let _g = thost::span_id(
+                                    if shard_grads {
+                                        "exec.reduce_scatter"
+                                    } else {
+                                        "exec.reduce"
+                                    },
+                                    b as u64,
+                                );
                                 if shard_grads {
                                     gather.scatter_into(
                                         &plan,
@@ -500,16 +516,33 @@ impl Executor {
                 }
             }
             Backend::Pool(pool) => {
-                pool.begin_step(&ctx);
+                {
+                    let _g = thost::span("exec.begin_step");
+                    pool.begin_step(&ctx);
+                }
                 let mut done = 0usize;
                 let mut reduced_n = 0usize;
                 while done < k || reduced_n < nb {
-                    match pool.recv() {
+                    let msg = {
+                        // Coordinator turnaround: time spent waiting on
+                        // the worker channel (idle vs reduce work).
+                        let _g = thost::span("exec.recv");
+                        pool.recv()
+                    };
+                    match msg {
                         pool::Msg::Bucket { worker, bucket, data, at } => {
                             if gather.offer(bucket, worker, data) {
                                 per_bucket[bucket].0 = at
                                     .saturating_duration_since(t0)
                                     .as_secs_f64();
+                                let _g = thost::span_id(
+                                    if shard_grads {
+                                        "exec.reduce_scatter"
+                                    } else {
+                                        "exec.reduce"
+                                    },
+                                    bucket as u64,
+                                );
                                 if shard_grads {
                                     gather.scatter_into(
                                         &plan,
@@ -543,6 +576,7 @@ impl Executor {
         if shard_grads {
             // All-gather the owner shards into the full buffer — the
             // union of every simulated rank's view.
+            let _g = thost::span("exec.all_gather");
             let parts: Vec<(usize, &[f32])> = plan
                 .buckets
                 .iter()
@@ -568,6 +602,7 @@ impl Executor {
                 buckets: nb,
                 comm_time,
                 exposed: (total - compute_done).max(0.0),
+                gather_stall: 0.0,
                 per_bucket,
             },
         }

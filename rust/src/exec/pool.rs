@@ -65,20 +65,33 @@ impl WorkerPool {
                 .spawn(move || {
                     let mut grads = vec![0.0f32; n];
                     while let Ok(ctx) = cmd_rx.recv() {
-                        let loss = drive_worker(
-                            worker.as_mut(),
-                            &mut grads,
-                            &plan,
-                            &ctx,
-                            &mut |bucket, payload| {
-                                let _ = msg_tx.send(Msg::Bucket {
-                                    worker: wid,
-                                    bucket,
-                                    data: payload.to_vec(),
-                                    at: Instant::now(),
-                                });
-                            },
-                        );
+                        let loss = {
+                            // One host-trace span per step on this
+                            // worker's lane (clock reads only — the
+                            // numeric path is untouched).
+                            let _g = crate::trace::host::span_id(
+                                "worker.compute",
+                                ctx.step,
+                            );
+                            drive_worker(
+                                worker.as_mut(),
+                                &mut grads,
+                                &plan,
+                                &ctx,
+                                &mut |bucket, payload| {
+                                    let _ = msg_tx.send(Msg::Bucket {
+                                        worker: wid,
+                                        bucket,
+                                        data: payload.to_vec(),
+                                        at: Instant::now(),
+                                    });
+                                },
+                            )
+                        };
+                        // Natural barrier: hand buffered events to the
+                        // shared sink before reporting Done (cheap no-op
+                        // when tracing is off or the buffer is empty).
+                        crate::trace::host::flush_thread();
                         let _ = msg_tx.send(Msg::Done {
                             worker: wid,
                             loss,

@@ -230,6 +230,7 @@ impl Zero1State {
         lr: f32,
         step: u64,
     ) -> Vec<f32> {
+        let _g = crate::trace::host::span("zero1.step_all");
         let mut ratios = Vec::new();
         for b in 0..plan.len() {
             ratios.extend(self.step_bucket(plan, b, params, grads, lr, step));
@@ -446,6 +447,7 @@ impl Zero2State {
         lr: f32,
         step: u64,
     ) -> Vec<f32> {
+        let _g = crate::trace::host::span("zero2.step_all");
         let mut ratios = Vec::new();
         for b in 0..plan.len() {
             ratios.extend(self.step_bucket(plan, b, params, grads, lr, step));
@@ -650,6 +652,7 @@ impl Zero3State {
     /// full view (the per-bucket all-gather the pod prices before the
     /// bucket's forward/backward segment).
     pub fn gather_bucket(&self, plan: &BucketPlan, b: usize, view: &mut [f32]) {
+        let _g = crate::trace::host::span_id("zero3.gather", b as u64);
         let bk = &plan.buckets[b];
         all_gather(&[(bk.start, self.shards[b].as_slice())], view);
     }
@@ -659,6 +662,7 @@ impl Zero3State {
     /// overlap under compute — `cluster::Pod::bucket_timeline_partitioned`
     /// prices exactly that).
     pub fn gather_into(&self, plan: &BucketPlan, view: &mut [f32]) {
+        let _g = crate::trace::host::span("zero3.gather_into");
         assert_eq!(view.len(), plan.n, "view length != plan coverage");
         for b in 0..plan.len() {
             self.gather_bucket(plan, b, view);
@@ -735,6 +739,7 @@ impl Zero3State {
         lr: f32,
         step: u64,
     ) -> Vec<f32> {
+        let _g = crate::trace::host::span("zero3.step_all");
         let mut ratios = Vec::new();
         for b in 0..plan.len() {
             ratios.extend(self.step_bucket(plan, b, view, grads, lr, step));

@@ -71,4 +71,5 @@ pub mod repro;
 pub mod runtime;
 pub mod schedule;
 pub mod sweep;
+pub mod trace;
 pub mod util;

@@ -5,29 +5,39 @@
 //!   train [--config F] [k=v]    one training run over the AOT artifacts
 //!   repro <exp|all> [--scale S] regenerate a paper table/figure
 //!   sweep --optimizer O [...]   LR grid on the native substrate
+//!   trace-report FILE [--top K] summarize a Perfetto trace artifact
+//!   trace-smoke [--out DIR]     traced sim + host steps with checks
 //!
 //! `k=v` overrides use the config's dotted keys, e.g.
 //! `optimizer.name="lars"` `batch.global=256` `model.name="bert-small"`.
 
 use anyhow::{bail, Context, Result};
 
+use lamb_train::cluster::{Pod, StatePartition};
 use lamb_train::config::TrainConfig;
-use lamb_train::coordinator::{BertTrainer, NativeTask, Stage};
+use lamb_train::coordinator::{BertTrainer, NativeTask, NativeTrainer, Stage};
+use lamb_train::exec::{BucketPlan, ExecConfig, ExecMode};
 use lamb_train::manifest::Manifest;
-use lamb_train::metrics::{fmt_duration, render_table};
+use lamb_train::metrics::{fmt_duration, render_table, StepComm};
+use lamb_train::optim::Hyper;
 use lamb_train::repro::{self, ReproCtx};
 use lamb_train::runtime::Engine;
+use lamb_train::schedule::Schedule;
 use lamb_train::sweep::{self, GridSpec};
+use lamb_train::trace;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: lamb-train <info|train|repro|sweep> [args]\n\
+        "usage: lamb-train <info|train|repro|sweep|trace-report|trace-smoke> \
+         [args]\n\
          \n\
          lamb-train info [--artifacts DIR]\n\
          lamb-train train [--config FILE] [section.key=value ...]\n\
          lamb-train repro <{}|all> [--scale S] [--out DIR] [--artifacts DIR]\n\
          lamb-train sweep --optimizer NAME [--task mnist|cifar|imagenet]\n\
-         \u{20}                 [--steps N] [--batch B]",
+         \u{20}                 [--steps N] [--batch B]\n\
+         lamb-train trace-report FILE [--top K]\n\
+         lamb-train trace-smoke [--out DIR]",
         repro::EXPERIMENTS.join("|")
     );
     std::process::exit(2)
@@ -217,6 +227,113 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_trace_report(args: &Args) -> Result<()> {
+    let path = match args.positional.first() {
+        Some(p) => p.as_str(),
+        None => usage(),
+    };
+    let top: usize =
+        args.flag("top").map(|s| s.parse()).transpose()?.unwrap_or(10);
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {path}"))?;
+    let summary = trace::report::TraceSummary::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing trace {path}: {e}"))?;
+    print!("{}", summary.render(top));
+    Ok(())
+}
+
+/// Smoke both tracing backends, checking the conservation contract on
+/// the way (this is what `scripts/bench_smoke.sh` drives in CI):
+///
+/// 1. price one ZeRO-3 batch-32k BERT-Large step on the 1024-chip pod
+///    and export it as a Perfetto trace, then parse the artifact back
+///    and require the folded wire time to equal `StepComm.comm_time`
+///    (and the exposed lane to equal `exposed`) bit-for-bit;
+/// 2. run a tiny traced ZeRO-3 native run, producing the host-time
+///    trace and the metrics JSONL.
+fn cmd_trace_smoke(args: &Args) -> Result<()> {
+    let out = args.flag("out").unwrap_or("results/trace");
+    std::fs::create_dir_all(out)
+        .with_context(|| format!("creating {out}"))?;
+
+    // -- simulated-time backend --
+    let meta = repro::bert_exps::bert_large_meta();
+    let pod = Pod::tpu_v3_nodes(1024, 8);
+    let plan = BucketPlan::even(meta.total_params, 64);
+    let part = StatePartition::Zero3 { shards: 1024 };
+    let (costs, compute, total) =
+        pod.bucket_timeline_partitioned(&meta, 32_768, 512, &plan, part);
+    let comm = StepComm::from_costs(&costs, compute, total);
+    let tr = trace::sim::sim_step_trace(&pod, &plan, part, &costs, compute, total);
+    let json = tr.to_perfetto_json();
+    let parsed = trace::report::TraceSummary::parse(&json)
+        .map_err(|e| anyhow::anyhow!("self-parse of sim trace: {e}"))?;
+    if parsed.comm_time().to_bits() != comm.comm_time.to_bits() {
+        bail!(
+            "sim trace does not conserve comm_time: folded {} vs StepComm {}",
+            parsed.comm_time(),
+            comm.comm_time
+        );
+    }
+    if parsed.exposed().to_bits() != comm.exposed.to_bits() {
+        bail!(
+            "sim trace does not conserve exposed: {} vs {}",
+            parsed.exposed(),
+            comm.exposed
+        );
+    }
+    let sim_path = format!("{out}/sim_zero3_b32k.trace.json");
+    std::fs::write(&sim_path, &json)
+        .with_context(|| format!("writing {sim_path}"))?;
+    println!(
+        "sim trace ok: {} spans, comm_time {:.4}s == folded wire lanes \
+         (bitwise), exposed {:.4}s",
+        tr.spans.len(),
+        comm.comm_time,
+        comm.exposed
+    );
+    println!("wrote {sim_path}");
+
+    // -- host-time backend --
+    let sched =
+        Schedule::WarmupPoly { base: 0.02, warmup: 5, total: 40, power: 1.0 };
+    let cfg = ExecConfig {
+        mode: ExecMode::Zero3,
+        workers: 2,
+        bucket_bytes: 1 << 12,
+        ..ExecConfig::default()
+    };
+    let mut trainer = NativeTrainer::with_exec(
+        &NativeTask::mnist_proxy(),
+        "lamb",
+        Hyper::default(),
+        sched,
+        7,
+        cfg,
+    );
+    trainer.enable_trace(out);
+    let log = trainer.train(40, 64);
+    if log.diverged {
+        bail!("trace-smoke native run diverged");
+    }
+    for name in ["host.trace.json", "metrics.jsonl"] {
+        let p = format!("{out}/{name}");
+        if !std::path::Path::new(&p).is_file() {
+            bail!("trace-smoke did not write {p}");
+        }
+        println!("wrote {p}");
+    }
+    let host_text = std::fs::read_to_string(format!("{out}/host.trace.json"))?;
+    let host = trace::report::TraceSummary::parse(&host_text)
+        .map_err(|e| anyhow::anyhow!("self-parse of host trace: {e}"))?;
+    println!(
+        "host trace ok: {} spans across {} steps",
+        host.spans.len(),
+        log.records.len()
+    );
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = match argv.first() {
@@ -229,6 +346,8 @@ fn main() -> Result<()> {
         "train" => cmd_train(&rest),
         "repro" => cmd_repro(&rest),
         "sweep" => cmd_sweep(&rest),
+        "trace-report" => cmd_trace_report(&rest),
+        "trace-smoke" => cmd_trace_smoke(&rest),
         _ => usage(),
     }
 }

@@ -17,8 +17,44 @@ pub struct StepComm {
     pub comm_time: f64,
     /// Communication not hidden under compute (what extends the step).
     pub exposed: f64,
+    /// Compute time spent stalled on ZeRO-3 just-in-time parameter
+    /// gathers (0 for partitions without JIT gathers and on host-timed
+    /// steps; see `trace::sim::gather_stall_total`).
+    pub gather_stall: f64,
     /// Per-bucket (ready, done) offsets from step start.
     pub per_bucket: Vec<(f64, f64)>,
+}
+
+impl StepComm {
+    /// Fold a priced bucket timeline into the step's communication
+    /// record. This is *the* definition of `comm_time` (per bucket:
+    /// reduce-scatter slot plus both gather windows, summed in
+    /// ascending bucket order) and `exposed`
+    /// (`(total - compute).max(0.0)`) — the trace exporter's
+    /// conservation tests and the `trace-report` fold reproduce these
+    /// exact operations, so keep the association unchanged.
+    pub fn from_costs(
+        costs: &[crate::cluster::BucketCost],
+        compute: f64,
+        total: f64,
+    ) -> StepComm {
+        StepComm {
+            buckets: costs.len(),
+            comm_time: costs
+                .iter()
+                .map(|c| {
+                    (c.done - c.start)
+                        + c.gather.map_or(0.0, |g| {
+                            (g.fwd_done - g.fwd_start)
+                                + (g.bwd_done - g.bwd_start)
+                        })
+                })
+                .sum(),
+            exposed: (total - compute).max(0.0),
+            gather_stall: 0.0,
+            per_bucket: costs.iter().map(|c| (c.ready, c.done)).collect(),
+        }
+    }
 }
 
 /// One training step's observables.
@@ -33,6 +69,11 @@ pub struct StepRecord {
     pub host_time: f64,
     /// Bucketed all-reduce timing (None on unbucketed step paths).
     pub comm: Option<StepComm>,
+    /// Stable pointer to the trace artifact covering this step (the
+    /// file name under the `[trace]` dir; None when tracing is off).
+    /// Deterministic — derived from stage/step indices, never from
+    /// clocks — so two runs of the same config produce identical refs.
+    pub trace_ref: Option<String>,
 }
 
 /// Divergence detector per Tables 2/8: non-finite loss, or loss exceeding
@@ -117,7 +158,16 @@ impl RunLog {
         self.records.last().map(|r| r.sim_time).unwrap_or(0.0)
     }
 
-    /// Write `step,lr,loss,sim_time,host_time,buckets,comm_exposed` CSV.
+    /// The step CSV header. Column order is stable API: downstream
+    /// plots index these positions, so new columns append only.
+    pub const CSV_HEADER: &'static str = "step,lr,loss,sim_time,host_time,\
+                                          buckets,comm_time,comm_exposed,\
+                                          gather_stall";
+
+    /// Write the per-step CSV ([`Self::CSV_HEADER`] columns). The
+    /// header used to promise `comm_exposed` while the writer dropped
+    /// `comm_time` entirely; both now emit, plus the ZeRO-3
+    /// `gather_stall` column.
     pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
         if let Some(dir) = path.parent() {
@@ -125,16 +175,17 @@ impl RunLog {
         }
         let mut f = std::fs::File::create(path)
             .with_context(|| format!("creating {path:?}"))?;
-        writeln!(f, "step,lr,loss,sim_time,host_time,buckets,comm_exposed")?;
+        writeln!(f, "{}", Self::CSV_HEADER)?;
         for r in &self.records {
-            let (b, exp) = match &r.comm {
-                Some(c) => (c.buckets, c.exposed),
-                None => (0, 0.0),
+            let (b, comm, exp, stall) = match &r.comm {
+                Some(c) => (c.buckets, c.comm_time, c.exposed, c.gather_stall),
+                None => (0, 0.0, 0.0, 0.0),
             };
             writeln!(
                 f,
-                "{},{},{},{},{},{},{}",
-                r.step, r.lr, r.loss, r.sim_time, r.host_time, b, exp
+                "{},{},{},{},{},{},{},{},{}",
+                r.step, r.lr, r.loss, r.sim_time, r.host_time, b, comm, exp,
+                stall
             )?;
         }
         Ok(())
@@ -192,14 +243,33 @@ pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
     out
 }
 
-/// Format seconds the way Table 1 mixes units (e.g. "81.4h", "76.19m").
+/// Format seconds with natural unit thresholds: hours from 3600 s,
+/// minutes from 60 s. (The threshold used to be 3 h, so durations
+/// between 1 h and 3 h rendered as e.g. "120.0m"; Table 1's
+/// mixed-unit paper cells are matched by [`fmt_duration_like`], which
+/// is why this function can afford to be honest.)
 pub fn fmt_duration(secs: f64) -> String {
-    if secs >= 3600.0 * 3.0 {
+    if secs >= 3600.0 {
         format!("{:.1}h", secs / 3600.0)
     } else if secs >= 60.0 {
         format!("{:.1}m", secs / 60.0)
     } else {
         format!("{secs:.1}s")
+    }
+}
+
+/// Format seconds in the unit of an adjacent reference cell — the
+/// Table 1 convention, where the paper prints "693.6m" (11.5 h) in one
+/// row and "81.4h" in the next, and our simulated column must line up
+/// unit-for-unit with the paper cell beside it. `like` is the
+/// reference string; its trailing unit letter (`h`/`m`/`s`) picks the
+/// unit, anything else falls back to [`fmt_duration`].
+pub fn fmt_duration_like(secs: f64, like: &str) -> String {
+    match like.chars().last() {
+        Some('h') => format!("{:.1}h", secs / 3600.0),
+        Some('m') => format!("{:.1}m", secs / 60.0),
+        Some('s') => format!("{secs:.1}s"),
+        _ => fmt_duration(secs),
     }
 }
 
@@ -249,6 +319,7 @@ mod tests {
                 sim_time: 0.0,
                 host_time: 0.0,
                 comm: None,
+                trace_ref: None,
             });
         }
         assert_eq!(log.tail_loss(2), 1.5);
@@ -269,7 +340,85 @@ mod tests {
     #[test]
     fn duration_units() {
         assert_eq!(fmt_duration(30.0), "30.0s");
-        assert_eq!(fmt_duration(4572.0), "76.2m");
         assert_eq!(fmt_duration(293_040.0), "81.4h");
+        // The old 3 h threshold rendered 1–3 h durations in minutes.
+        assert_eq!(fmt_duration(7200.0), "2.0h");
+        // Boundary: minutes up to (exclusive) 3600 s, hours from it.
+        assert_eq!(fmt_duration(3599.0), "60.0m");
+        assert_eq!(fmt_duration(3600.0), "1.0h");
+        assert_eq!(fmt_duration(3601.0), "1.0h");
+    }
+
+    /// Table-1 fixtures: the simulated cell renders in the unit of the
+    /// adjacent paper cell, bitwise-stable against the pre-fix output.
+    #[test]
+    fn duration_like_matches_paper_units() {
+        assert_eq!(fmt_duration_like(4572.0, "76.19m"), "76.2m");
+        assert_eq!(fmt_duration_like(293_040.0, "81.4h"), "81.4h");
+        // Above 1 h but the paper prints minutes: follow the paper.
+        assert_eq!(fmt_duration_like(41_616.0, "693.6m"), "693.6m");
+        assert_eq!(fmt_duration_like(30.0, "45.0s"), "30.0s");
+        // No recognizable unit: natural thresholds.
+        assert_eq!(fmt_duration_like(7200.0, "n/a"), "2.0h");
+    }
+
+    /// write_csv round-trip: the header parses back to the exact
+    /// column list, in order, and every row has one field per column.
+    #[test]
+    fn csv_header_roundtrip() {
+        let mut log = RunLog::default();
+        log.push(StepRecord {
+            step: 1,
+            lr: 0.01,
+            loss: 2.5,
+            sim_time: 1.5,
+            host_time: 0.25,
+            comm: Some(StepComm {
+                buckets: 4,
+                comm_time: 0.5,
+                exposed: 0.125,
+                gather_stall: 0.0625,
+                per_bucket: vec![],
+            }),
+            trace_ref: Some("sim_stage0.trace.json".into()),
+        });
+        log.push(StepRecord {
+            step: 2,
+            lr: 0.01,
+            loss: 2.0,
+            sim_time: 3.0,
+            host_time: 0.5,
+            comm: None,
+            trace_ref: None,
+        });
+        let dir = std::env::temp_dir().join("lamb_csv_roundtrip_test");
+        let path = dir.join("run.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        let header: Vec<&str> = lines.next().unwrap().split(',').collect();
+        assert_eq!(
+            header,
+            vec![
+                "step",
+                "lr",
+                "loss",
+                "sim_time",
+                "host_time",
+                "buckets",
+                "comm_time",
+                "comm_exposed",
+                "gather_stall"
+            ]
+        );
+        // The header promised comm_time — the bug was dropping it.
+        let row1: Vec<&str> = lines.next().unwrap().split(',').collect();
+        assert_eq!(row1.len(), header.len());
+        assert_eq!(row1[header.iter().position(|h| *h == "comm_time").unwrap()], "0.5");
+        assert_eq!(row1[header.iter().position(|h| *h == "comm_exposed").unwrap()], "0.125");
+        assert_eq!(row1[header.iter().position(|h| *h == "gather_stall").unwrap()], "0.0625");
+        let row2: Vec<&str> = lines.next().unwrap().split(',').collect();
+        assert_eq!(row2.len(), header.len());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -96,6 +96,18 @@ impl LossScaler {
         self.scale
     }
 
+    /// Cumulative skipped (non-finite) steps — the observability
+    /// counterpart of the `loss_scale.skips` trace counter.
+    pub fn skips(&self) -> u64 {
+        self.skipped
+    }
+
+    /// Cumulative scale growths — the observability counterpart of the
+    /// `loss_scale.growths` trace counter.
+    pub fn growth_count(&self) -> u64 {
+        self.growths
+    }
+
     /// Scale the gradient buffer in place — what backprop on
     /// `scale * loss` hands the reduction. Must run **before** the
     /// gradients cross a half-width wire: the whole point of the scale
@@ -130,6 +142,10 @@ impl LossScaler {
                 (self.scale * self.backoff_factor).max(self.min_scale);
             self.stable = 0;
             self.skipped += 1;
+            // Counter event for the host-trace/telemetry layer; inert
+            // (one relaxed load) when the recorder is off, and never
+            // touches the gradient buffer either way.
+            crate::trace::host::counter("loss_scale.skips", 1.0);
             return false;
         }
         self.stable += 1;
@@ -137,6 +153,7 @@ impl LossScaler {
             self.scale = (self.scale * self.growth_factor).min(self.max_scale);
             self.stable = 0;
             self.growths += 1;
+            crate::trace::host::counter("loss_scale.growths", 1.0);
         }
         true
     }
@@ -294,5 +311,35 @@ mod tests {
     #[should_panic(expected = "loss scale must be finite")]
     fn rejects_bad_initial_scale() {
         LossScaler::with_scale(f32::NAN);
+    }
+
+    /// Forcing a non-finite gradient through the gate bumps the
+    /// cumulative getters *and* emits the trace counter events the
+    /// telemetry sink aggregates.
+    #[test]
+    fn skip_and_growth_counters_reach_the_trace_layer() {
+        use crate::trace::host;
+        let _x = host::exclusive();
+        host::start();
+        let mut s = LossScaler::dynamic();
+        s.growth_interval = 2;
+        let mut g = [1.0f32, f32::NEG_INFINITY];
+        assert!(!s.unscale(&mut g), "non-finite gradient must skip");
+        assert_eq!(s.skips(), 1);
+        assert_eq!(s.growth_count(), 0);
+        for _ in 0..2 {
+            let mut g = [0.25f32];
+            assert!(s.unscale(&mut g));
+        }
+        assert_eq!(s.growth_count(), 1);
+        let tr = host::drain().unwrap();
+        let get = |name: &str| {
+            tr.counters
+                .iter()
+                .find(|c| c.name == name)
+                .map(|c| c.value)
+        };
+        assert_eq!(get("loss_scale.skips"), Some(1.0));
+        assert_eq!(get("loss_scale.growths"), Some(1.0));
     }
 }

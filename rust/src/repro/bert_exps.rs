@@ -18,7 +18,7 @@ use crate::cluster::Pod;
 use crate::config::TrainConfig;
 use crate::coordinator::{BertTrainer, Stage};
 use crate::manifest::{Manifest, ModelMeta};
-use crate::metrics::{fmt_duration, render_table};
+use crate::metrics::{fmt_duration_like, render_table};
 use crate::runtime::Engine;
 use crate::schedule::{steps_for_batch, Schedule};
 
@@ -120,7 +120,9 @@ pub fn table1(ctx: &ReproCtx) -> Result<String> {
             batch.to_string(),
             steps.to_string(),
             chips.to_string(),
-            fmt_duration(t),
+            // Match the paper cell's unit so the table reads h-vs-h /
+            // m-vs-m regardless of fmt_duration's own thresholds.
+            fmt_duration_like(t, paper_times[i]),
             paper_times[i].into(),
         ]);
     }
@@ -136,7 +138,7 @@ pub fn table1(ctx: &ReproCtx) -> Result<String> {
             "64k/32k".into(),
             (s1 + s2).to_string(),
             "1024".into(),
-            fmt_duration(t),
+            fmt_duration_like(t, "76.19m"),
             "76.19m".into(),
         ]);
     }

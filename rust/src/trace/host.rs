@@ -1,0 +1,307 @@
+//! Host-time recorder: lock-free per-thread span buffers over the real
+//! exec engine.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero numeric impact.** Hooks read clocks and metadata only —
+//!    never gradient or parameter buffers — so a traced run is
+//!    bitwise-identical to an untraced one (asserted by
+//!    `coordinator::native`'s tests). Disabled, a hook is one relaxed
+//!    atomic load.
+//! 2. **No locks on the hot path.** Each thread pushes events into a
+//!    `thread_local!` buffer; the shared mutex is touched only at
+//!    [`flush_thread`] (worker barriers — after compute, before the
+//!    `Done` message) and [`drain`].
+//! 3. **Raw `Instant`s in the buffers.** Events store absolute clock
+//!    readings; conversion to epoch-relative seconds happens once at
+//!    drain time, so the hot path does no float math.
+//!
+//! The recorder is a process-global single session (matching the
+//! process-global exec engine it instruments): [`start`] → record →
+//! [`drain`]. Tests that enable it serialize through [`exclusive`].
+
+use super::{Arg, Span, Trace, CAT_HOST};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SHARED: Mutex<Shared> = Mutex::new(Shared { epoch: None, lanes: Vec::new() });
+static EXCLUSIVE: Mutex<()> = Mutex::new(());
+
+struct Shared {
+    epoch: Option<Instant>,
+    /// Flushed per-thread buffers: (thread label, events).
+    lanes: Vec<(String, Vec<Event>)>,
+}
+
+enum Event {
+    Span {
+        name: &'static str,
+        /// Optional id (bucket, worker, step) rendered into the name.
+        id: Option<u64>,
+        start: Instant,
+        end: Instant,
+    },
+    Counter { name: &'static str, at: Instant, value: f64 },
+}
+
+thread_local! {
+    static BUF: RefCell<Vec<Event>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Whether the recorder is currently active (one relaxed load — the
+/// entire cost of an instrumentation point in an untraced run).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Serialize recorder sessions (tests only — production has a single
+/// coordinator). Poisoning from a panicked holder is ignored: the
+/// recorder state is reset by the next [`start`] anyway.
+pub fn exclusive() -> MutexGuard<'static, ()> {
+    EXCLUSIVE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn shared() -> MutexGuard<'static, Shared> {
+    SHARED.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Start a recording session: sets the epoch and discards anything a
+/// previous session left behind.
+pub fn start() {
+    let mut s = shared();
+    s.epoch = Some(Instant::now());
+    s.lanes.clear();
+    // The calling thread may hold events from an aborted session;
+    // events from *other* threads are dropped at drain by the epoch
+    // filter (their Instants predate the new epoch).
+    BUF.with(|b| b.borrow_mut().clear());
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Stop recording (events already buffered stay until [`drain`]).
+pub fn stop() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// An in-flight span; records its end time when dropped. Inactive (and
+/// free) when the recorder is disabled.
+pub struct SpanGuard {
+    name: &'static str,
+    id: Option<u64>,
+    start: Option<Instant>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            let end = Instant::now();
+            BUF.with(|b| {
+                b.borrow_mut().push(Event::Span {
+                    name: self.name,
+                    id: self.id,
+                    start,
+                    end,
+                })
+            });
+        }
+    }
+}
+
+/// Open a host span; it closes when the guard drops.
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    SpanGuard {
+        name,
+        id: None,
+        start: enabled().then(Instant::now),
+    }
+}
+
+/// [`span`] with a numeric id (bucket index, worker id, step) appended
+/// to the display name at drain time.
+#[inline]
+pub fn span_id(name: &'static str, id: u64) -> SpanGuard {
+    SpanGuard {
+        name,
+        id: Some(id),
+        start: enabled().then(Instant::now),
+    }
+}
+
+/// Record a counter increment (e.g. bytes moved by a collective, a
+/// loss-scaler skip). Increments with the same name are summed by
+/// [`drain`] into one cumulative counter.
+#[inline]
+pub fn counter(name: &'static str, value: f64) {
+    if enabled() {
+        BUF.with(|b| {
+            b.borrow_mut().push(Event::Counter {
+                name,
+                at: Instant::now(),
+                value,
+            })
+        });
+    }
+}
+
+/// Move this thread's buffered events into the shared sink. Workers
+/// call this at their natural barriers (after compute, before sending
+/// `Done`); the coordinator calls it post-step and it is implied by
+/// [`drain`]. Cheap no-op when the buffer is empty.
+pub fn flush_thread() {
+    let events = BUF.with(|b| std::mem::take(&mut *b.borrow_mut()));
+    if events.is_empty() {
+        return;
+    }
+    let label = std::thread::current()
+        .name()
+        .unwrap_or("anon")
+        .to_string();
+    shared().lanes.push((label, events));
+}
+
+/// Close the session and build the [`Trace`]: one lane per thread
+/// label (sorted for determinism), spans relative to the session
+/// epoch, counter increments summed per name and stamped cumulatively.
+/// Returns `None` if no session was started.
+pub fn drain() -> Option<Trace> {
+    stop();
+    flush_thread();
+    let mut s = shared();
+    let epoch = s.epoch.take()?;
+    let mut by_label: std::collections::BTreeMap<String, Vec<Event>> =
+        std::collections::BTreeMap::new();
+    for (label, events) in s.lanes.drain(..) {
+        by_label.entry(label).or_default().extend(events);
+    }
+    drop(s);
+    let mut tr = Trace::new("host", &[]);
+    let mut totals: std::collections::BTreeMap<&'static str, f64> =
+        std::collections::BTreeMap::new();
+    for (label, events) in by_label {
+        let lane = tr.lanes.len();
+        tr.lanes.push(label);
+        for e in events {
+            match e {
+                Event::Span { name, id, start, end } => {
+                    // Epoch filter: stale events from a previous
+                    // session (another thread's unflushed buffer)
+                    // predate the epoch and are dropped.
+                    let Some(rel) = start.checked_duration_since(epoch)
+                    else {
+                        continue;
+                    };
+                    let dur = end.saturating_duration_since(start);
+                    let display = match id {
+                        Some(id) => format!("{name} {id}"),
+                        None => name.to_string(),
+                    };
+                    let mut span = Span::new(
+                        lane,
+                        display,
+                        CAT_HOST,
+                        rel.as_secs_f64(),
+                        dur.as_secs_f64(),
+                    );
+                    if let Some(id) = id {
+                        span = span.arg("id", Arg::U(id));
+                    }
+                    tr.push(span);
+                }
+                Event::Counter { name, at, value } => {
+                    if at.checked_duration_since(epoch).is_none() {
+                        continue;
+                    }
+                    *totals.entry(name).or_default() += value;
+                }
+            }
+        }
+    }
+    let end = tr
+        .spans
+        .iter()
+        .map(|s| s.start + s.dur)
+        .fold(0.0f64, f64::max);
+    for (name, value) in totals {
+        tr.counter(name, end, value);
+    }
+    Some(tr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let _x = exclusive();
+        stop();
+        {
+            let _g = span("should_not_record");
+            counter("nope", 1.0);
+        }
+        flush_thread();
+        // No session: drain yields None and leaves no residue.
+        assert!(drain().is_none());
+    }
+
+    #[test]
+    fn records_spans_and_counters_across_threads() {
+        let _x = exclusive();
+        start();
+        {
+            let _g = span("step");
+            {
+                let _inner = span_id("bucket", 3);
+            }
+            counter("wire_bytes.reduce.f32", 1024.0);
+            counter("wire_bytes.reduce.f32", 512.0);
+        }
+        let h = std::thread::Builder::new()
+            .name("trace-test-worker".into())
+            .spawn(|| {
+                let _g = span_id("compute", 0);
+                flush_thread();
+            })
+            .unwrap();
+        h.join().unwrap();
+        let tr = drain().expect("session was started");
+        assert!(tr.lanes.iter().any(|l| l == "trace-test-worker"));
+        assert!(tr.spans.iter().any(|s| s.name == "bucket 3"));
+        assert!(tr.spans.iter().any(|s| s.name == "compute 0"));
+        // Nesting: the inner bucket span sits inside the step span.
+        let step = tr.spans.iter().find(|s| s.name == "step").unwrap();
+        let bucket = tr.spans.iter().find(|s| s.name == "bucket 3").unwrap();
+        assert!(bucket.start >= step.start);
+        assert!(bucket.start + bucket.dur <= step.start + step.dur + 1e-9);
+        let c = tr
+            .counters
+            .iter()
+            .find(|c| c.name == "wire_bytes.reduce.f32")
+            .unwrap();
+        assert_eq!(c.value, 1536.0);
+        // Second drain: the session is closed.
+        assert!(drain().is_none());
+    }
+
+    #[test]
+    fn spans_are_monotone_and_nonnegative() {
+        let _x = exclusive();
+        start();
+        for i in 0..32u64 {
+            let _g = span_id("tick", i);
+        }
+        let tr = drain().unwrap();
+        let mut prev = -1.0f64;
+        for s in &tr.spans {
+            assert!(s.dur >= 0.0);
+            assert!(s.start >= prev, "thread-local order is time order");
+            prev = s.start;
+        }
+        assert_eq!(tr.spans.len(), 32);
+    }
+}

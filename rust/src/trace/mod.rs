@@ -1,0 +1,286 @@
+//! Structured tracing + metrics: one span/counter model, two backends.
+//!
+//! Every PR so far has argued about *totals* — `StepComm.comm_time`,
+//! `exposed`, a step-time CSV column — but the interesting questions
+//! ("why is bucket 13's reduce-scatter exposed?", "does the ZeRO-3
+//! prefetch window actually hide the gathers?") are about *where in the
+//! step* the time sits. This module turns both time domains into the
+//! same inspectable artifact:
+//!
+//! * [`sim`] — the **simulated-time exporter**: renders
+//!   `cluster::Pod::bucket_timeline_partitioned`'s per-bucket costs
+//!   (compute segments, reduce-scatter wire, ZeRO-3 just-in-time
+//!   gathers with their prefetch stalls, cross-step pipelined slots,
+//!   exposed tails) as a [`Trace`] with one lane per resource.
+//! * [`host`] — the **host-time recorder**: lock-free per-thread span
+//!   buffers instrumenting the real exec engine (worker-pool
+//!   turnaround, per-bucket reduce/scatter/gather kernels, ZeRO state
+//!   steps, loss-scaler decisions), drained post-step into a [`Trace`]
+//!   with one lane per thread.
+//! * [`sink`] — the **metrics sink**: per-step JSONL plus cumulative
+//!   counter cells (`wire_bytes.<op>.<dtype>`, gather stalls, scaler
+//!   skips/growths) in the same `{"bench": ...}` shape
+//!   `scripts/bench_trend_diff.py` diffs across commits.
+//!
+//! A [`Trace`] serializes to Chrome trace-event / Perfetto JSON
+//! ([`Trace::to_perfetto_json`]) — open it at <https://ui.perfetto.dev>.
+//! The display timestamps are microseconds (floats), but every span
+//! also carries its **exact** f64 duration in seconds as the `secs`
+//! arg, printed with Rust's shortest-round-trip `Display` and parsed
+//! back bit-for-bit by `util::json` — which is what lets
+//! [`report::TraceSummary::comm_time`] reproduce `StepComm.comm_time`
+//! to f64 exactness from the JSON artifact alone (the acceptance
+//! contract this subsystem is built around).
+
+pub mod host;
+pub mod report;
+pub mod sim;
+pub mod sink;
+
+use crate::util::json::escape;
+use std::fmt::Write as _;
+
+/// Simulated-trace lane indices ([`sim`] emits exactly these four; the
+/// host recorder instead makes one lane per thread).
+pub const LANE_COMPUTE: usize = 0;
+pub const LANE_WIRE_INTRA: usize = 1;
+pub const LANE_WIRE_INTER: usize = 2;
+pub const LANE_EXPOSED: usize = 3;
+
+/// Span categories. The conservation contract hangs off these:
+/// `comm_time` is the bucket-grouped fold over [`CAT_GRAD_COLL`] +
+/// [`CAT_PARAM_GATHER`] spans; [`CAT_PARAM_GATHER_TRAILING`] (ZeRO-2's
+/// trailing whole-vector all-gather) is wire time that `StepComm`
+/// accounts under `exposed`, not `comm_time`, so it is deliberately a
+/// distinct category.
+pub const CAT_COMPUTE: &str = "compute";
+pub const CAT_GRAD_COLL: &str = "grad_coll";
+pub const CAT_PARAM_GATHER: &str = "param_gather";
+pub const CAT_PARAM_GATHER_TRAILING: &str = "param_gather_trailing";
+pub const CAT_GATHER_STALL: &str = "gather_stall";
+pub const CAT_EXPOSED: &str = "exposed";
+pub const CAT_HOST: &str = "host";
+
+/// One span argument value (serialized under the Perfetto `args` key).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Arg {
+    F(f64),
+    U(u64),
+    S(String),
+}
+
+/// One complete span: `[start, start + dur)` seconds on a lane. `dur`
+/// is the *exact* measurement; `start` is layout (where the span sits
+/// on the timeline) and only needs to be display-accurate.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub lane: usize,
+    pub name: String,
+    pub cat: &'static str,
+    pub start: f64,
+    pub dur: f64,
+    pub args: Vec<(&'static str, Arg)>,
+}
+
+impl Span {
+    pub fn new(
+        lane: usize,
+        name: impl Into<String>,
+        cat: &'static str,
+        start: f64,
+        dur: f64,
+    ) -> Span {
+        Span { lane, name: name.into(), cat, start, dur, args: Vec::new() }
+    }
+
+    pub fn arg(mut self, key: &'static str, v: Arg) -> Span {
+        self.args.push((key, v));
+        self
+    }
+
+    /// The `bucket` arg, if the span carries one.
+    pub fn bucket(&self) -> Option<u64> {
+        self.args.iter().find_map(|(k, v)| match (k, v) {
+            (&"bucket", Arg::U(b)) => Some(*b),
+            _ => None,
+        })
+    }
+}
+
+/// A cumulative counter sample at time `t` (seconds since trace start).
+#[derive(Clone, Debug)]
+pub struct Counter {
+    pub name: String,
+    pub t: f64,
+    pub value: f64,
+}
+
+/// A recorded trace: named lanes of complete spans plus counter
+/// samples, independent of which time domain produced it.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    /// Process name shown in the Perfetto UI.
+    pub process: String,
+    /// Lane display names; `Span::lane` indexes this.
+    pub lanes: Vec<String>,
+    pub spans: Vec<Span>,
+    pub counters: Vec<Counter>,
+}
+
+impl Trace {
+    pub fn new(process: &str, lanes: &[&str]) -> Trace {
+        Trace {
+            process: process.to_string(),
+            lanes: lanes.iter().map(|s| s.to_string()).collect(),
+            spans: Vec::new(),
+            counters: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, span: Span) {
+        debug_assert!(span.lane < self.lanes.len(), "span lane out of range");
+        self.spans.push(span);
+    }
+
+    pub fn counter(&mut self, name: &str, t: f64, value: f64) {
+        self.counters.push(Counter { name: name.to_string(), t, value });
+    }
+
+    /// Serialize as Chrome trace-event JSON (the format Perfetto and
+    /// `chrome://tracing` load). One process, one thread per lane;
+    /// spans are `"X"` complete events with microsecond `ts`/`dur`,
+    /// counters are `"C"` events. Every span's `args` carries the exact
+    /// seconds duration under `secs` (plus any caller args), so the
+    /// artifact loses no precision to the microsecond display scale.
+    pub fn to_perfetto_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+        let _ = write!(
+            out,
+            "{{\"ph\":\"M\",\"pid\":1,\"tid\":0,\"name\":\"process_name\",\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            escape(&self.process)
+        );
+        for (i, lane) in self.lanes.iter().enumerate() {
+            let _ = write!(
+                out,
+                ",\n{{\"ph\":\"M\",\"pid\":1,\"tid\":{},\"name\":\
+                 \"thread_name\",\"args\":{{\"name\":\"{}\"}}}}",
+                i + 1,
+                escape(lane)
+            );
+            // Keep the Perfetto track order equal to the lane order
+            // (compute above wire above exposed) instead of name-sorted.
+            let _ = write!(
+                out,
+                ",\n{{\"ph\":\"M\",\"pid\":1,\"tid\":{},\"name\":\
+                 \"thread_sort_index\",\"args\":{{\"sort_index\":{}}}}}",
+                i + 1,
+                i
+            );
+        }
+        for s in &self.spans {
+            let _ = write!(
+                out,
+                ",\n{{\"ph\":\"X\",\"pid\":1,\"tid\":{},\"ts\":{},\
+                 \"dur\":{},\"cat\":\"{}\",\"name\":\"{}\",\"args\":{{\
+                 \"secs\":{}",
+                s.lane + 1,
+                num(s.start * 1e6),
+                num(s.dur * 1e6),
+                escape(s.cat),
+                escape(&s.name),
+                num(s.dur),
+            );
+            for (k, v) in &s.args {
+                let _ = write!(out, ",\"{}\":", escape(k));
+                match v {
+                    Arg::F(x) => out.push_str(&num(*x)),
+                    Arg::U(u) => {
+                        let _ = write!(out, "{u}");
+                    }
+                    Arg::S(t) => {
+                        let _ = write!(out, "\"{}\"", escape(t));
+                    }
+                }
+            }
+            out.push_str("}}");
+        }
+        for c in &self.counters {
+            let _ = write!(
+                out,
+                ",\n{{\"ph\":\"C\",\"pid\":1,\"ts\":{},\"name\":\"{}\",\
+                 \"args\":{{\"value\":{}}}}}",
+                num(c.t * 1e6),
+                escape(&c.name),
+                num(c.value),
+            );
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+}
+
+/// Format an f64 as a JSON number. Rust's `Display` prints the shortest
+/// string that parses back to the same bits (what the exactness
+/// round-trip rests on) and is always valid JSON for finite values;
+/// non-finite values (never produced by the exporters, but host clocks
+/// are not worth a panic) degrade to `null`.
+pub(crate) fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn perfetto_json_parses_and_roundtrips_secs_exactly() {
+        let mut tr = Trace::new("pod-sim", &["compute", "wire"]);
+        // An awkward f64 that a fixed-precision format would corrupt.
+        let dur = 0.1 + 0.2 + 1e-17;
+        tr.push(
+            Span::new(1, "rs b3", CAT_GRAD_COLL, 1.25, dur)
+                .arg("bucket", Arg::U(3))
+                .arg("sched", Arg::S("ring \"x\"".into())),
+        );
+        tr.counter("wire_bytes.reduce_scatter.f32", 2.0, 4096.0);
+        let txt = tr.to_perfetto_json();
+        let j = Json::parse(&txt).expect("perfetto json must parse");
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process meta + 2 lanes x 2 meta + 1 span + 1 counter
+        assert_eq!(events.len(), 7);
+        let x = events
+            .iter()
+            .find(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .unwrap();
+        assert_eq!(x.get("tid").unwrap().as_f64(), Some(2.0));
+        assert_eq!(x.get("cat").unwrap().as_str(), Some(CAT_GRAD_COLL));
+        let args = x.get("args").unwrap();
+        let secs = args.get("secs").unwrap().as_f64().unwrap();
+        assert_eq!(secs.to_bits(), dur.to_bits(), "secs must round-trip");
+        assert_eq!(args.get("bucket").unwrap().as_f64(), Some(3.0));
+        assert_eq!(args.get("sched").unwrap().as_str(), Some("ring \"x\""));
+        let c = events
+            .iter()
+            .find(|e| e.get("ph").unwrap().as_str() == Some("C"))
+            .unwrap();
+        assert_eq!(
+            c.get("args").unwrap().get("value").unwrap().as_f64(),
+            Some(4096.0)
+        );
+    }
+
+    #[test]
+    fn span_bucket_accessor() {
+        let s = Span::new(0, "x", CAT_COMPUTE, 0.0, 1.0);
+        assert_eq!(s.bucket(), None);
+        let s = s.arg("bucket", Arg::U(7));
+        assert_eq!(s.bucket(), Some(7));
+    }
+}

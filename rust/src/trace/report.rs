@@ -1,0 +1,354 @@
+//! Trace summarization: parse a Perfetto JSON artifact back into spans
+//! and fold it into the aligned-table report the `trace-report` CLI
+//! mode prints.
+//!
+//! The parse side is deliberately built on `util::json` (the same
+//! shortest-round-trip f64 path the writer uses), so the exact `secs`
+//! args survive the artifact round-trip and [`TraceSummary::comm_time`]
+//! reproduces `StepComm.comm_time` bit-for-bit — the report is computed
+//! from the artifact alone, never from in-process state, which is what
+//! makes it trustworthy on a trace somebody hands you.
+
+use super::{
+    CAT_EXPOSED, CAT_GATHER_STALL, CAT_GRAD_COLL, CAT_PARAM_GATHER,
+    CAT_PARAM_GATHER_TRAILING,
+};
+use crate::metrics::render_table;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One span read back from a trace artifact.
+#[derive(Clone, Debug)]
+pub struct RSpan {
+    /// Lane (thread) display name from the trace metadata.
+    pub lane: String,
+    pub name: String,
+    pub cat: String,
+    /// Display start in seconds (from the microsecond `ts`).
+    pub start: f64,
+    /// Exact duration in seconds (the `secs` arg).
+    pub secs: f64,
+    pub bucket: Option<u64>,
+    pub pass: Option<String>,
+}
+
+/// A parsed trace artifact.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSummary {
+    pub process: String,
+    pub spans: Vec<RSpan>,
+    /// Final value of each counter track.
+    pub counters: BTreeMap<String, f64>,
+}
+
+/// The coordinator's `comm_time` fold, reproduced from span data: per
+/// bucket `rs + (fwd + bwd)` (inner sum first), folded over buckets in
+/// ascending order — the exact association `coordinator::bert` uses
+/// over `BucketCost`, so equal inputs give bitwise-equal output.
+/// Trailing-gather spans ([`CAT_PARAM_GATHER_TRAILING`]) are excluded,
+/// exactly as `StepComm.comm_time` excludes ZeRO-2's trailing gather.
+pub fn fold_comm_time<'a, I>(items: I) -> f64
+where
+    I: IntoIterator<Item = (&'a str, Option<u64>, Option<&'a str>, f64)>,
+{
+    #[derive(Default, Clone, Copy)]
+    struct B {
+        rs: f64,
+        fwd: f64,
+        bwd: f64,
+        has_gather: bool,
+    }
+    let mut buckets: BTreeMap<u64, B> = BTreeMap::new();
+    for (cat, bucket, pass, secs) in items {
+        let Some(b) = bucket else { continue };
+        let e = buckets.entry(b).or_default();
+        match cat {
+            CAT_GRAD_COLL => e.rs += secs,
+            CAT_PARAM_GATHER => {
+                e.has_gather = true;
+                match pass {
+                    Some("bwd") => e.bwd += secs,
+                    _ => e.fwd += secs,
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut acc = 0.0f64;
+    for e in buckets.values() {
+        let term = if e.has_gather {
+            e.rs + (e.fwd + e.bwd)
+        } else {
+            // `map_or(0.0, ..)` on a None gather: term is rs + 0.0,
+            // which is bitwise rs for non-negative rs.
+            e.rs + 0.0
+        };
+        acc += term;
+    }
+    acc
+}
+
+impl TraceSummary {
+    /// Parse a Chrome trace-event / Perfetto JSON document.
+    pub fn parse(text: &str) -> Result<TraceSummary, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let events = j
+            .get("traceEvents")
+            .and_then(|e| e.as_arr())
+            .ok_or("no traceEvents array")?;
+        let mut s = TraceSummary::default();
+        let mut lane_names: BTreeMap<u64, String> = BTreeMap::new();
+        for e in events {
+            let ph = e.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+            let tid = e.get("tid").and_then(|t| t.as_f64()).unwrap_or(0.0)
+                as u64;
+            match ph {
+                "M" => {
+                    let name =
+                        e.get("name").and_then(|n| n.as_str()).unwrap_or("");
+                    let arg = e
+                        .get("args")
+                        .and_then(|a| a.get("name"))
+                        .and_then(|n| n.as_str())
+                        .unwrap_or("")
+                        .to_string();
+                    match name {
+                        "process_name" => s.process = arg,
+                        "thread_name" => {
+                            lane_names.insert(tid, arg);
+                        }
+                        _ => {}
+                    }
+                }
+                "X" => {
+                    let args = e.get("args");
+                    let secs = args
+                        .and_then(|a| a.get("secs"))
+                        .and_then(|v| v.as_f64())
+                        .ok_or("X event without exact secs arg")?;
+                    s.spans.push(RSpan {
+                        lane: lane_names
+                            .get(&tid)
+                            .cloned()
+                            .unwrap_or_else(|| format!("tid{tid}")),
+                        name: e
+                            .get("name")
+                            .and_then(|n| n.as_str())
+                            .unwrap_or("")
+                            .to_string(),
+                        cat: e
+                            .get("cat")
+                            .and_then(|c| c.as_str())
+                            .unwrap_or("")
+                            .to_string(),
+                        start: e
+                            .get("ts")
+                            .and_then(|t| t.as_f64())
+                            .unwrap_or(0.0)
+                            / 1e6,
+                        secs,
+                        bucket: args
+                            .and_then(|a| a.get("bucket"))
+                            .and_then(|b| b.as_f64())
+                            .map(|b| b as u64),
+                        pass: args
+                            .and_then(|a| a.get("pass"))
+                            .and_then(|p| p.as_str())
+                            .map(|p| p.to_string()),
+                    });
+                }
+                "C" => {
+                    let name = e
+                        .get("name")
+                        .and_then(|n| n.as_str())
+                        .unwrap_or("")
+                        .to_string();
+                    let v = e
+                        .get("args")
+                        .and_then(|a| a.get("value"))
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0);
+                    s.counters.insert(name, v);
+                }
+                _ => {}
+            }
+        }
+        // Spans with unnamed lanes happen only on hand-edited traces;
+        // the writer always emits the thread_name metadata first.
+        Ok(s)
+    }
+
+    /// `StepComm.comm_time` reproduced from the artifact (see
+    /// [`fold_comm_time`]).
+    pub fn comm_time(&self) -> f64 {
+        fold_comm_time(self.spans.iter().map(|s| {
+            (s.cat.as_str(), s.bucket, s.pass.as_deref(), s.secs)
+        }))
+    }
+
+    /// `StepComm.exposed` reproduced from the artifact: the sum of
+    /// exposed-lane spans (the writer emits exactly one).
+    pub fn exposed(&self) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.cat == CAT_EXPOSED)
+            .map(|s| s.secs)
+            .sum()
+    }
+
+    /// Busy seconds per lane for the wire categories (grad collectives,
+    /// gathers, trailing gathers).
+    pub fn wire_busy_per_lane(&self) -> Vec<(String, f64)> {
+        let mut busy: BTreeMap<String, f64> = BTreeMap::new();
+        for s in &self.spans {
+            if matches!(
+                s.cat.as_str(),
+                CAT_GRAD_COLL | CAT_PARAM_GATHER | CAT_PARAM_GATHER_TRAILING
+            ) {
+                *busy.entry(s.lane.clone()).or_default() += s.secs;
+            }
+        }
+        busy.into_iter().collect()
+    }
+
+    /// End of the last span (display timeline length, seconds).
+    pub fn span_end(&self) -> f64 {
+        self.spans
+            .iter()
+            .map(|s| s.start + s.secs)
+            .fold(0.0f64, f64::max)
+    }
+
+    /// The aligned-table report: totals, wire utilization per link
+    /// class, and the top-k exposed/stalled spans.
+    pub fn render(&self, top_k: usize) -> String {
+        let comm = self.comm_time();
+        let exposed = self.exposed();
+        let stall: f64 = self
+            .spans
+            .iter()
+            .filter(|s| s.cat == CAT_GATHER_STALL)
+            .map(|s| s.secs)
+            .sum();
+        let overlap = if comm > 0.0 {
+            (1.0 - exposed / comm).max(0.0)
+        } else {
+            1.0
+        };
+        let mut out = String::new();
+        out.push_str(&format!("trace: {}\n\n", self.process));
+        let rows = vec![
+            vec!["spans".to_string(), format!("{}", self.spans.len())],
+            vec!["comm_time (s)".to_string(), format!("{comm:.6}")],
+            vec!["exposed (s)".to_string(), format!("{exposed:.6}")],
+            vec!["gather_stall (s)".to_string(), format!("{stall:.6}")],
+            vec![
+                "compute/comm overlap".to_string(),
+                format!("{:.1}%", overlap * 100.0),
+            ],
+        ];
+        out.push_str(&render_table(&["metric", "value"], &rows));
+        let end = self.span_end();
+        if end > 0.0 {
+            let rows: Vec<Vec<String>> = self
+                .wire_busy_per_lane()
+                .into_iter()
+                .map(|(lane, busy)| {
+                    vec![
+                        lane,
+                        format!("{busy:.6}"),
+                        format!("{:.1}%", busy / end * 100.0),
+                    ]
+                })
+                .collect();
+            if !rows.is_empty() {
+                out.push('\n');
+                out.push_str(&render_table(
+                    &["wire lane", "busy (s)", "utilization"],
+                    &rows,
+                ));
+            }
+        }
+        let mut worst: Vec<&RSpan> = self
+            .spans
+            .iter()
+            .filter(|s| {
+                matches!(s.cat.as_str(), CAT_EXPOSED | CAT_GATHER_STALL)
+                    && s.secs > 0.0
+            })
+            .collect();
+        worst.sort_by(|a, b| b.secs.partial_cmp(&a.secs).unwrap());
+        worst.truncate(top_k);
+        if !worst.is_empty() {
+            let rows: Vec<Vec<String>> = worst
+                .iter()
+                .map(|s| {
+                    vec![
+                        s.name.clone(),
+                        s.cat.clone(),
+                        format!("{:.6}", s.start),
+                        format!("{:.6}", s.secs),
+                    ]
+                })
+                .collect();
+            out.push('\n');
+            out.push_str(&render_table(
+                &["top exposed/stalled span", "cat", "start (s)", "secs"],
+                &rows,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Pod, StatePartition};
+    use crate::exec::BucketPlan;
+    use crate::metrics::StepComm;
+    use crate::trace::sim::sim_step_trace;
+
+    /// Write → parse → fold: the artifact round-trip preserves the
+    /// conservation contract bit-for-bit.
+    #[test]
+    fn json_roundtrip_preserves_comm_time_exactly() {
+        let meta = crate::repro::bert_exps::bert_large_meta();
+        let pod = Pod::tpu_v3_nodes(1024, 8);
+        let plan = BucketPlan::even(meta.total_params, 29);
+        for part in [
+            StatePartition::Replicated,
+            StatePartition::Zero2 { shards: 1024 },
+            StatePartition::Zero3 { shards: 1024 },
+        ] {
+            let (costs, compute, total) = pod
+                .bucket_timeline_partitioned(&meta, 32768, 512, &plan, part);
+            let comm = StepComm::from_costs(&costs, compute, total);
+            let tr = sim_step_trace(&pod, &plan, part, &costs, compute, total);
+            let parsed =
+                TraceSummary::parse(&tr.to_perfetto_json()).unwrap();
+            assert_eq!(
+                parsed.comm_time().to_bits(),
+                comm.comm_time.to_bits(),
+                "{part:?}"
+            );
+            assert_eq!(
+                parsed.exposed().to_bits(),
+                comm.exposed.to_bits(),
+                "{part:?}"
+            );
+            assert_eq!(parsed.process, "pod-sim");
+            assert!(!parsed.render(5).is_empty());
+        }
+    }
+
+    #[test]
+    fn parse_rejects_junk() {
+        assert!(TraceSummary::parse("not json").is_err());
+        assert!(TraceSummary::parse("{\"a\": 1}").is_err());
+        // An X event without the exact secs arg is a schema error.
+        let bad = r#"{"traceEvents":[{"ph":"X","pid":1,"tid":1,"ts":0,
+            "dur":1,"name":"x","args":{}}]}"#;
+        assert!(TraceSummary::parse(bad).is_err());
+    }
+}

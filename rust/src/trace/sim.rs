@@ -1,0 +1,529 @@
+//! Simulated-time exporter: `Pod::bucket_timeline_partitioned` → [`Trace`].
+//!
+//! The pod model already computes everything a trace needs — per-bucket
+//! reduce-scatter slots, ZeRO-3 gather windows, compute cursors — but
+//! throws the intermediate cursors away and returns only the per-bucket
+//! `BucketCost` records plus two scalars. This exporter reconstructs
+//! the full timeline from those records by **replaying the segment
+//! recurrences with the identical f64 operations in the identical
+//! order** (see [`replay_compute`]), so every replayed boundary is
+//! bitwise-equal to what the pricing model computed internally (the
+//! backward-segment ends are asserted against `BucketCost::ready` in
+//! the tests), and every wire span's `secs` arg is exactly the
+//! difference the coordinator folds into `StepComm.comm_time`.
+//!
+//! Lane policy: wire spans land on the **spanning link class** of the
+//! collective — `chips <= node_size` is the intra-node lane, otherwise
+//! inter (mirroring `Topology::span_link`). A hierarchical schedule
+//! crosses both links, but its serialized cost is priced on the
+//! spanning class, so the trace attributes the whole slot there (the
+//! `sched` arg records which schedule ran).
+
+use super::{
+    Arg, Span, Trace, CAT_COMPUTE, CAT_EXPOSED, CAT_GATHER_STALL,
+    CAT_GRAD_COLL, CAT_PARAM_GATHER, CAT_PARAM_GATHER_TRAILING, LANE_COMPUTE,
+    LANE_EXPOSED, LANE_WIRE_INTER, LANE_WIRE_INTRA,
+};
+use crate::cluster::{BucketCost, Pod, StatePartition, PREFETCH_BUCKETS};
+use crate::collective::CollOp;
+use crate::exec::BucketPlan;
+
+/// One compute-lane event from the replay: a forward/backward segment
+/// or a stall where the pass waited on a just-in-time gather.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeSeg {
+    /// Bucket index the segment (or the stalled-on gather) belongs to.
+    pub bucket: usize,
+    pub start: f64,
+    pub end: f64,
+    /// `"fwd"` or `"bwd"`.
+    pub pass: &'static str,
+    /// True for a gather stall (idle compute), false for a segment.
+    pub stall: bool,
+}
+
+/// The replayed compute timeline of one simulated step.
+#[derive(Clone, Debug, Default)]
+pub struct ComputeReplay {
+    pub segs: Vec<ComputeSeg>,
+    /// Sum of all stall gaps (the `gather_stall` CSV/metrics column).
+    pub stall_total: f64,
+    /// Number of distinct stall gaps.
+    pub stall_count: usize,
+}
+
+/// Replay the compute-lane recurrence of
+/// `Pod::bucket_timeline_partitioned` for a step already priced as
+/// `(costs, compute, total)`. For ZeRO-3 this re-runs the forward and
+/// backward cursor arithmetic of `zero3_timeline` operation-for-
+/// operation (reading the gather completion times back out of
+/// `BucketCost::gather`), so segment boundaries are bitwise-identical
+/// to the model's internal cursors; for the other partitions the
+/// timeline is the two-phase fwd/bwd split, with ZeRO-2's cross-step
+/// prefetch stall surfaced when the pipelined gather outlasts forward.
+pub fn replay_compute(
+    pod: &Pod,
+    plan: &BucketPlan,
+    part: StatePartition,
+    costs: &[BucketCost],
+    compute: f64,
+) -> ComputeReplay {
+    let t_fwd = compute / 3.0;
+    let t_bwd = compute - t_fwd;
+    let n = plan.n.max(1) as f64;
+    let mut r = ComputeReplay::default();
+    if matches!(part, StatePartition::Zero3 { .. }) {
+        let nb = plan.len();
+        if nb == 0 {
+            return r;
+        }
+        let w = PREFETCH_BUCKETS;
+        // ---- forward: identical recurrence to `zero3_timeline` ----
+        let mut fwd_cursor = 0.0f64;
+        for (b, bk) in plan.buckets.iter().enumerate() {
+            let g_done = costs[b].gather.map_or(0.0, |g| g.fwd_done);
+            let seg_start = if pod.topology.cross_step && b < w {
+                fwd_cursor
+            } else {
+                fwd_cursor.max(g_done)
+            };
+            push_stall(&mut r, b, fwd_cursor, seg_start, "fwd");
+            let seg_end = seg_start + t_fwd * (bk.len() as f64 / n);
+            r.segs.push(ComputeSeg {
+                bucket: b,
+                start: seg_start,
+                end: seg_end,
+                pass: "fwd",
+                stall: false,
+            });
+            fwd_cursor = seg_end;
+        }
+        // ---- backward: descending, stalling on the re-gathers ----
+        let mut bwd_cursor = fwd_cursor;
+        for b in (0..nb).rev() {
+            let bk = &plan.buckets[b];
+            let g_done = costs[b].gather.map_or(0.0, |g| g.bwd_done);
+            let seg_start = bwd_cursor.max(g_done);
+            push_stall(&mut r, b, bwd_cursor, seg_start, "bwd");
+            let seg_end = seg_start + t_bwd * (bk.len() as f64 / n);
+            r.segs.push(ComputeSeg {
+                bucket: b,
+                start: seg_start,
+                end: seg_end,
+                pass: "bwd",
+                stall: false,
+            });
+            bwd_cursor = seg_end;
+            debug_assert_eq!(
+                seg_end.to_bits(),
+                costs[b].ready.to_bits(),
+                "replayed backward cursor diverged from BucketCost::ready"
+            );
+        }
+    } else {
+        let zero2 = matches!(part, StatePartition::Zero2 { .. });
+        let pipelined = zero2 && pod.topology.cross_step;
+        let gather = if zero2 { trailing_gather_time(pod, plan) } else { 0.0 };
+        let fwd_end = if pipelined { t_fwd.max(gather) } else { t_fwd };
+        r.segs.push(ComputeSeg {
+            bucket: 0,
+            start: 0.0,
+            end: t_fwd,
+            pass: "fwd",
+            stall: false,
+        });
+        // Cross-step prefetch stall: forward consumed the layers faster
+        // than the previous step's parameter gather delivered them.
+        push_stall(&mut r, 0, t_fwd, fwd_end, "fwd");
+        r.segs.push(ComputeSeg {
+            bucket: 0,
+            start: fwd_end,
+            end: fwd_end + t_bwd,
+            pass: "bwd",
+            stall: false,
+        });
+    }
+    r
+}
+
+fn push_stall(
+    r: &mut ComputeReplay,
+    bucket: usize,
+    start: f64,
+    end: f64,
+    pass: &'static str,
+) {
+    if end > start {
+        r.segs.push(ComputeSeg { bucket, start, end, pass, stall: true });
+        r.stall_total += end - start;
+        r.stall_count += 1;
+    }
+}
+
+/// Total compute time spent stalled on parameter gathers — the
+/// `gather_stall` column of `RunLog::write_csv` and the
+/// `gather_stall.secs` metrics counter. Zero for partitions without
+/// just-in-time gathers.
+pub fn gather_stall_total(
+    pod: &Pod,
+    plan: &BucketPlan,
+    part: StatePartition,
+    costs: &[BucketCost],
+    compute: f64,
+) -> f64 {
+    replay_compute(pod, plan, part, costs, compute).stall_total
+}
+
+/// ZeRO-2's trailing whole-vector parameter all-gather time (0 when the
+/// plan is empty or the pod has one chip) — same call the pricing model
+/// makes.
+fn trailing_gather_time(pod: &Pod, plan: &BucketPlan) -> f64 {
+    pod.topology
+        .pick(
+            CollOp::AllGather,
+            pod.chips,
+            plan.n * pod.precision.param_bytes(),
+        )
+        .1
+}
+
+/// Which wire lane a collective over `k` ranks lands on: the spanning
+/// link class of `Topology::span_link`.
+fn wire_lane(pod: &Pod, k: usize) -> usize {
+    if k <= pod.topology.node_size {
+        LANE_WIRE_INTRA
+    } else {
+        LANE_WIRE_INTER
+    }
+}
+
+/// Render one priced step as a four-lane [`Trace`] (compute, intra
+/// wire, inter wire, exposed).
+///
+/// Exactness contract (the acceptance criterion of the tracing PR):
+///
+/// * every [`CAT_GRAD_COLL`] span's `secs` is exactly
+///   `costs[b].done - costs[b].start`, and every [`CAT_PARAM_GATHER`]
+///   span's `secs` exactly the recorded gather difference, so the
+///   bucket-grouped fold [`super::report::TraceSummary::comm_time`]
+///   reproduces `StepComm.comm_time` bit-for-bit;
+/// * the single [`CAT_EXPOSED`] span's `secs` is exactly
+///   `(total - compute).max(0.0)` — `StepComm.exposed`.
+///
+/// ZeRO-2's trailing all-gather is emitted as
+/// [`CAT_PARAM_GATHER_TRAILING`]: the coordinator's `comm_time` fold
+/// deliberately excludes it (it is accounted under `exposed` when not
+/// pipelined), and so does the report's.
+pub fn sim_step_trace(
+    pod: &Pod,
+    plan: &BucketPlan,
+    part: StatePartition,
+    costs: &[BucketCost],
+    compute: f64,
+    total: f64,
+) -> Trace {
+    let mut tr = Trace::new(
+        "pod-sim",
+        &["compute", "wire intra", "wire inter", "exposed"],
+    );
+    let lane = wire_lane(pod, pod.chips);
+    let zero2 = matches!(part, StatePartition::Zero2 { .. });
+    let zero3 = matches!(part, StatePartition::Zero3 { .. });
+    let grad_op = if zero2 || zero3 { "reduce_scatter" } else { "all_reduce" };
+    let gdtype = pod.precision.grads.as_str();
+    let pdtype = pod.precision.params.as_str();
+    let mut grad_bytes = 0u64;
+    let mut gather_bytes = 0u64;
+    for (b, c) in costs.iter().enumerate() {
+        tr.push(
+            Span::new(
+                lane,
+                format!("{grad_op} b{b}"),
+                CAT_GRAD_COLL,
+                c.start,
+                c.done - c.start,
+            )
+            .arg("bucket", Arg::U(b as u64))
+            .arg("sched", Arg::S(c.schedule.as_str().to_string()))
+            .arg("dtype", Arg::S(gdtype.to_string())),
+        );
+        grad_bytes +=
+            (plan.buckets[b].len() * pod.precision.grad_bytes()) as u64;
+        if let Some(g) = c.gather {
+            for (pass, start, dur) in [
+                ("fwd", g.fwd_start, g.fwd_done - g.fwd_start),
+                ("bwd", g.bwd_start, g.bwd_done - g.bwd_start),
+            ] {
+                tr.push(
+                    Span::new(
+                        lane,
+                        format!("gather b{b} {pass}"),
+                        CAT_PARAM_GATHER,
+                        start,
+                        dur,
+                    )
+                    .arg("bucket", Arg::U(b as u64))
+                    .arg("pass", Arg::S(pass.to_string()))
+                    .arg("sched", Arg::S(g.schedule.as_str().to_string()))
+                    .arg("dtype", Arg::S(pdtype.to_string())),
+                );
+                gather_bytes +=
+                    (plan.buckets[b].len() * pod.precision.param_bytes())
+                        as u64;
+            }
+        }
+    }
+    // ZeRO-2's trailing whole-vector parameter gather: pipelined it
+    // occupies the head of the step (streaming into the next forward),
+    // otherwise it trails fully exposed.
+    if zero2 {
+        let gather = trailing_gather_time(pod, plan);
+        if gather > 0.0 {
+            let start = if pod.topology.cross_step { 0.0 } else { total - gather };
+            tr.push(
+                Span::new(
+                    lane,
+                    "param all-gather (trailing)",
+                    CAT_PARAM_GATHER_TRAILING,
+                    start,
+                    gather,
+                )
+                .arg("dtype", Arg::S(pdtype.to_string())),
+            );
+            gather_bytes += (plan.n * pod.precision.param_bytes()) as u64;
+        }
+    }
+    // Compute lane: replayed segments + stall gaps.
+    let replay = replay_compute(pod, plan, part, costs, compute);
+    for s in &replay.segs {
+        let (name, cat) = if s.stall {
+            (format!("stall b{} {}", s.bucket, s.pass), CAT_GATHER_STALL)
+        } else {
+            (format!("{} b{}", s.pass, s.bucket), CAT_COMPUTE)
+        };
+        tr.push(
+            Span::new(LANE_COMPUTE, name, cat, s.start, s.end - s.start)
+                .arg("bucket", Arg::U(s.bucket as u64))
+                .arg("pass", Arg::S(s.pass.to_string())),
+        );
+    }
+    // Exposed tail: exactly StepComm.exposed, as one span (the display
+    // position is the tail of the step; the duration is the contract).
+    let exposed = (total - compute).max(0.0);
+    tr.push(Span::new(
+        LANE_EXPOSED,
+        "exposed (step - compute)",
+        CAT_EXPOSED,
+        total - exposed,
+        exposed,
+    ));
+    // Cumulative counters at end-of-step.
+    tr.counter(&format!("wire_bytes.{grad_op}.{gdtype}"), total, grad_bytes as f64);
+    if gather_bytes > 0 {
+        tr.counter(
+            &format!("wire_bytes.all_gather.{pdtype}"),
+            total,
+            gather_bytes as f64,
+        );
+    }
+    tr.counter("gather_stall.count", total, replay.stall_count as f64);
+    tr.counter("gather_stall.secs", total, replay.stall_total);
+    tr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ParamGather;
+    use crate::metrics::StepComm;
+
+    /// The coordinator's fold, verbatim (`coordinator::bert`): per
+    /// bucket `rs + (fwd + bwd)`, summed in ascending bucket order.
+    fn comm_time_of(costs: &[BucketCost]) -> f64 {
+        costs
+            .iter()
+            .map(|c| {
+                (c.done - c.start)
+                    + c.gather.map_or(0.0, |g| {
+                        (g.fwd_done - g.fwd_start) + (g.bwd_done - g.bwd_start)
+                    })
+            })
+            .sum()
+    }
+
+    fn pods() -> Vec<Pod> {
+        let flat = Pod::tpu_v3(64);
+        let nodes = Pod::tpu_v3_nodes(1024, 8);
+        let mut cross = Pod::tpu_v3_nodes(256, 8);
+        cross.topology.cross_step = true;
+        vec![flat, nodes, cross]
+    }
+
+    fn partitions(chips: usize) -> Vec<StatePartition> {
+        vec![
+            StatePartition::Replicated,
+            StatePartition::Zero1 { shards: chips },
+            StatePartition::Zero2 { shards: chips },
+            StatePartition::Zero3 { shards: chips },
+        ]
+    }
+
+    #[test]
+    fn replayed_backward_cursor_matches_ready_bitwise() {
+        let meta = crate::repro::bert_exps::bert_large_meta();
+        for pod in pods() {
+            // Ragged split: uneven buckets stress the cursor arithmetic.
+            let plan = BucketPlan::even(meta.total_params, 23);
+            let part = StatePartition::Zero3 { shards: pod.chips };
+            let (costs, compute, _total) = pod
+                .bucket_timeline_partitioned(&meta, 32768, 512, &plan, part);
+            let r = replay_compute(&pod, &plan, part, &costs, compute);
+            for s in r.segs.iter().filter(|s| s.pass == "bwd" && !s.stall) {
+                assert_eq!(
+                    s.end.to_bits(),
+                    costs[s.bucket].ready.to_bits(),
+                    "bucket {}",
+                    s.bucket
+                );
+            }
+        }
+    }
+
+    /// Spans within each lane must not overlap, every span must be
+    /// monotone (dur >= 0, finite), and the wire spans must conserve
+    /// `StepComm.comm_time` / `exposed` exactly — across ZeRO stages
+    /// 0–3, flat and two-level topologies, and precision plans, on a
+    /// ragged bucket split.
+    #[test]
+    fn sim_trace_well_formed_and_conserves_wire_time() {
+        use crate::collective::{Precision, PrecisionPlan};
+        let meta = crate::repro::bert_exps::bert_large_meta();
+        for mut pod in pods() {
+            for prec in
+                [PrecisionPlan::F32, PrecisionPlan::mixed(Precision::Bf16)]
+            {
+                pod.precision = prec;
+                for part in partitions(pod.chips) {
+                    let plan = BucketPlan::even(meta.total_params, 17);
+                    let (costs, compute, total) = pod
+                        .bucket_timeline_partitioned(
+                            &meta, 32768, 512, &plan, part,
+                        );
+                    let comm = StepComm::from_costs(&costs, compute, total);
+                    let tr = sim_step_trace(
+                        &pod, &plan, part, &costs, compute, total,
+                    );
+                    // -- well-formedness per lane --
+                    for lane in 0..tr.lanes.len() {
+                        let mut spans: Vec<&Span> = tr
+                            .spans
+                            .iter()
+                            .filter(|s| s.lane == lane)
+                            .collect();
+                        spans.sort_by(|a, b| {
+                            a.start.partial_cmp(&b.start).unwrap()
+                        });
+                        let mut prev_end = f64::NEG_INFINITY;
+                        for s in spans {
+                            assert!(
+                                s.start.is_finite() && s.dur.is_finite(),
+                                "{}: non-finite span",
+                                s.name
+                            );
+                            assert!(s.dur >= 0.0, "{}: negative dur", s.name);
+                            // Tolerance-free overlap check: starts are
+                            // exact model values, so an overlap would be
+                            // a real scheduling bug, not rounding.
+                            assert!(
+                                s.start >= prev_end
+                                    || s.start - prev_end > -1e-12,
+                                "lane {lane}: '{}' starts {} before {}",
+                                s.name,
+                                s.start,
+                                prev_end
+                            );
+                            prev_end = prev_end.max(s.start + s.dur);
+                        }
+                    }
+                    // -- exact conservation --
+                    let folded = crate::trace::report::fold_comm_time(
+                        tr.spans.iter().map(|s| {
+                            let pass =
+                                s.args.iter().find_map(|(k, v)| match (k, v) {
+                                    (&"pass", Arg::S(p)) => Some(p.as_str()),
+                                    _ => None,
+                                });
+                            (s.cat, s.bucket(), pass, s.dur)
+                        }),
+                    );
+                    assert_eq!(
+                        folded.to_bits(),
+                        comm.comm_time.to_bits(),
+                        "comm_time not conserved ({part:?}, {})",
+                        pod.precision.label()
+                    );
+                    let exposed: f64 = tr
+                        .spans
+                        .iter()
+                        .filter(|s| s.cat == CAT_EXPOSED)
+                        .map(|s| s.dur)
+                        .sum();
+                    assert_eq!(
+                        exposed.to_bits(),
+                        comm.exposed.to_bits(),
+                        "exposed not conserved ({part:?})"
+                    );
+                    assert_eq!(
+                        comm_time_of(&costs).to_bits(),
+                        comm.comm_time.to_bits()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_plan_yields_empty_compute_replay() {
+        let pod = Pod::tpu_v3(8);
+        let plan = BucketPlan::from_segs(&[], 1024);
+        let r = replay_compute(
+            &pod,
+            &plan,
+            StatePartition::Zero3 { shards: 8 },
+            &[],
+            1.0,
+        );
+        assert!(r.segs.is_empty());
+        assert_eq!(r.stall_total, 0.0);
+    }
+
+    #[test]
+    fn gather_args_name_both_passes() {
+        let meta = crate::repro::bert_exps::bert_large_meta();
+        let pod = Pod::tpu_v3_nodes(64, 8);
+        let plan = BucketPlan::even(meta.total_params, 8);
+        let part = StatePartition::Zero3 { shards: 64 };
+        let (costs, compute, total) =
+            pod.bucket_timeline_partitioned(&meta, 4096, 512, &plan, part);
+        // Sanity: the gathers actually carry both windows.
+        assert!(costs.iter().all(|c| {
+            let g: ParamGather = c.gather.unwrap();
+            g.fwd_done >= g.fwd_start && g.bwd_done >= g.bwd_start
+        }));
+        let tr = sim_step_trace(&pod, &plan, part, &costs, compute, total);
+        let fwd = tr
+            .spans
+            .iter()
+            .filter(|s| s.cat == CAT_PARAM_GATHER)
+            .filter(|s| s.name.ends_with("fwd"))
+            .count();
+        let bwd = tr
+            .spans
+            .iter()
+            .filter(|s| s.cat == CAT_PARAM_GATHER)
+            .filter(|s| s.name.ends_with("bwd"))
+            .count();
+        assert_eq!(fwd, plan.len());
+        assert_eq!(bwd, plan.len());
+    }
+}

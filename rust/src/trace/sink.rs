@@ -1,0 +1,181 @@
+//! JSONL telemetry sink: per-step records plus cumulative counter and
+//! histogram cells.
+//!
+//! The output is line-delimited JSON in the same dialect as
+//! `BENCH_smoke.json`, designed so `scripts/bench_trend_diff.py` can
+//! consume it directly:
+//!
+//! * **counter cells** carry a `bench` key and a `value` measurement —
+//!   the diff script keys them by every other field and compares
+//!   `value` across commits (the PR-4 new/removed-cell convention);
+//! * **step records** (`{"kind":"step",...}`) and **histogram
+//!   summaries** (`{"kind":"hist",...}`) carry no `bench` key: they
+//!   are per-run detail (noisy host timings), deliberately invisible
+//!   to the trend diff.
+
+use super::{num, Trace};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+
+/// Accumulates one run's telemetry and serializes it as JSONL.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSink {
+    /// The `bench` key stamped on counter cells.
+    bench: String,
+    counters: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Hist>,
+    steps: Vec<String>,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Hist {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl MetricsSink {
+    pub fn new(bench: &str) -> MetricsSink {
+        MetricsSink { bench: bench.to_string(), ..Default::default() }
+    }
+
+    /// Add to a cumulative counter.
+    pub fn add(&mut self, name: &str, v: f64) {
+        *self.counters.entry(name.to_string()).or_default() += v;
+    }
+
+    /// Current value of a counter (0 if never added).
+    pub fn counter(&self, name: &str) -> f64 {
+        self.counters.get(name).copied().unwrap_or(0.0)
+    }
+
+    /// Record one observation into a histogram (e.g. per-bucket
+    /// reduce latency).
+    pub fn observe(&mut self, hist: &str, v: f64) {
+        let h = self.hists.entry(hist.to_string()).or_insert(Hist {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        });
+        h.count += 1;
+        h.sum += v;
+        h.min = h.min.min(v);
+        h.max = h.max.max(v);
+    }
+
+    /// Fold a drained trace's counters into this sink.
+    pub fn absorb(&mut self, trace: &Trace) {
+        for c in &trace.counters {
+            self.add(&c.name, c.value);
+        }
+    }
+
+    /// Emit one per-step record line.
+    pub fn record_step(&mut self, step: u64, fields: &[(&str, f64)]) {
+        let mut line = format!("{{\"kind\":\"step\",\"step\":{step}");
+        for (k, v) in fields {
+            let _ = write!(
+                line,
+                ",\"{}\":{}",
+                crate::util::json::escape(k),
+                num(*v)
+            );
+        }
+        line.push('}');
+        self.steps.push(line);
+    }
+
+    /// Serialize: step records in order, then histogram summaries,
+    /// then the diffable counter cells.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for s in &self.steps {
+            out.push_str(s);
+            out.push('\n');
+        }
+        for (name, h) in &self.hists {
+            let mean = if h.count > 0 { h.sum / h.count as f64 } else { 0.0 };
+            let _ = writeln!(
+                out,
+                "{{\"kind\":\"hist\",\"hist\":\"{}\",\"count\":{},\
+                 \"min\":{},\"max\":{},\"mean\":{}}}",
+                crate::util::json::escape(name),
+                h.count,
+                num(if h.count > 0 { h.min } else { 0.0 }),
+                num(if h.count > 0 { h.max } else { 0.0 }),
+                num(mean),
+            );
+        }
+        for (name, v) in &self.counters {
+            let _ = writeln!(
+                out,
+                "{{\"bench\":\"{}\",\"kind\":\"counter\",\"counter\":\"{}\",\
+                 \"value\":{}}}",
+                crate::util::json::escape(&self.bench),
+                crate::util::json::escape(name),
+                num(*v),
+            );
+        }
+        out
+    }
+
+    pub fn write(&self, path: &Path) -> io::Result<()> {
+        std::fs::write(path, self.to_jsonl())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn jsonl_lines_parse_and_counter_cells_are_diffable() {
+        let mut sink = MetricsSink::new("trace_smoke");
+        sink.add("wire_bytes.reduce_scatter.f32", 4096.0);
+        sink.add("wire_bytes.reduce_scatter.f32", 4096.0);
+        sink.add("loss_scale.skips", 1.0);
+        sink.observe("bucket_latency_secs", 0.5);
+        sink.observe("bucket_latency_secs", 1.5);
+        sink.record_step(1, &[("loss", 2.5), ("comm_time", 0.125)]);
+        sink.record_step(2, &[("loss", f64::NAN)]);
+        let text = sink.to_jsonl();
+        let mut counters = 0;
+        for line in text.lines() {
+            let j = Json::parse(line).expect("every line is valid JSON");
+            if j.get("bench").is_some() {
+                // Diffable cell: bench + value present, per the
+                // bench_trend_diff contract.
+                assert!(j.get("value").is_some());
+                assert!(j.get("counter").is_some());
+                counters += 1;
+            }
+        }
+        assert_eq!(counters, 2);
+        assert_eq!(sink.counter("wire_bytes.reduce_scatter.f32"), 8192.0);
+        assert_eq!(sink.counter("missing"), 0.0);
+        // The NaN loss degraded to null, not to invalid JSON.
+        assert!(text.contains("\"loss\":null"));
+        let hist = text
+            .lines()
+            .find(|l| l.contains("\"kind\":\"hist\""))
+            .unwrap();
+        let j = Json::parse(hist).unwrap();
+        assert_eq!(j.get("count").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("mean").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn absorb_sums_trace_counters() {
+        let mut tr = Trace::new("host", &["main"]);
+        tr.counter("loss_scale.skips", 1.0, 1.0);
+        tr.counter("loss_scale.skips", 2.0, 1.0);
+        let mut sink = MetricsSink::new("x");
+        sink.absorb(&tr);
+        assert_eq!(sink.counter("loss_scale.skips"), 2.0);
+    }
+}

@@ -78,6 +78,65 @@ print(f"bench_smoke: {len(lines)} JSON measurements in {path} "
 EOF
 fi
 
+# Trace smoke: run both tracing backends through the CLI — the
+# simulated ZeRO-3 batch-32k step (the binary itself re-checks the
+# comm_time/exposed conservation contract against the parsed artifact
+# and exits nonzero on any mismatch) and a tiny traced native run —
+# then validate the Perfetto / JSONL schemas and fold the diffable
+# telemetry counter cells into the bench artifact so
+# bench_trend_diff.py tracks them across commits.
+# The directory is kept (and uploaded by CI) so the traced step is
+# inspectable from the checks page; override with TRACE_OUT.
+TRACE_DIR="${TRACE_OUT:-trace-smoke}"
+rm -rf "$TRACE_DIR"
+cargo run --release --bin lamb-train -- trace-smoke --out "$TRACE_DIR"
+if command -v python3 >/dev/null 2>&1; then
+    python3 - "$TRACE_DIR" <<'EOF'
+import json, os, sys
+d = sys.argv[1]
+for name in ("sim_zero3_b32k.trace.json", "host.trace.json"):
+    path = os.path.join(d, name)
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        sys.exit(f"{path}: no traceEvents array")
+    if not any(e.get("ph") == "M" and e.get("name") == "thread_name"
+               for e in events):
+        sys.exit(f"{path}: no lane (thread_name) metadata")
+    xs = [e for e in events if e.get("ph") == "X"]
+    if not xs:
+        sys.exit(f"{path}: no complete (X) spans")
+    for e in xs:
+        args = e.get("args") or {}
+        if "secs" not in args:
+            sys.exit(f"{path}: X span {e.get('name')!r} missing exact secs arg")
+        if not (float(args["secs"]) >= 0):
+            sys.exit(f"{path}: bad secs on span {e.get('name')!r}")
+metrics = os.path.join(d, "metrics.jsonl")
+steps = counters = 0
+with open(metrics) as f:
+    for i, line in enumerate(f.read().splitlines(), 1):
+        if not line.strip():
+            continue
+        obj = json.loads(line)
+        if obj.get("kind") == "step":
+            steps += 1
+        if "bench" in obj:
+            if "counter" not in obj or "value" not in obj:
+                sys.exit(f"{metrics}:{i}: counter cell missing counter/value keys")
+            counters += 1
+if steps == 0 or counters == 0:
+    sys.exit(f"{metrics}: expected step records and counter cells "
+             f"(got {steps} steps, {counters} counters)")
+print(f"trace_smoke: perfetto schemas ok; {steps} step records, "
+      f"{counters} diffable counter cells")
+EOF
+fi
+# The diffable telemetry counters ride in the uploaded bench artifact
+# (counter cells are the lines carrying a "bench" key).
+grep '"bench"' "$TRACE_DIR/metrics.jsonl" >> "$OUT"
+
 # Regression fixture (ISSUE 5): a zero or non-finite step-time cell in
 # the *previous* artifact must neither crash the trend diff nor poison
 # the ratio computation — the script reports the cell as unparseable

@@ -3,12 +3,14 @@
 
 Usage: bench_trend_diff.py PREV.json CURR.json [--warn-pct 10]
 
-Each line of either file is one JSON object with at least a "bench" and
-a "secs" field (scripts/bench_smoke.sh validates this invariant before
-the artifact is uploaded). Records are keyed by every field except the
-measurement itself ("secs") so the same (bench, mode, workers, ...) cell
-is compared across the two runs; step-time cells slower by more than
---warn-pct percent produce a GitHub `::warning::` annotation.
+Each line of either file is one JSON object with a "bench" field and a
+measurement: step-time cells carry "secs", telemetry counter cells (the
+trace::sink JSONL folded in by the trace-smoke step) carry "value"
+(scripts/bench_smoke.sh validates these invariants before the artifact
+is uploaded). Records are keyed by every field except the measurement
+itself so the same (bench, mode, workers, ...) cell is compared across
+the two runs; cells higher by more than --warn-pct percent produce a
+GitHub `::warning::` annotation.
 
 The diff is advisory by design: CI-runner noise makes small swings
 routine, so the script always exits 0 (the CI step is additionally
@@ -25,7 +27,7 @@ import sys
 
 
 def load(path):
-    """Parse one JSON-lines bench artifact into {key: secs}."""
+    """Parse one JSON-lines bench artifact into {key: measurement}."""
     out = {}
     try:
         with open(path) as f:
@@ -39,9 +41,12 @@ def load(path):
         except ValueError as e:
             print(f"bench_trend_diff: {path}:{i}: bad JSON ({e}); skipping")
             continue
-        if "bench" not in obj or "secs" not in obj:
+        if "bench" not in obj or ("secs" not in obj and "value" not in obj):
             continue
-        secs = obj.pop("secs")
+        # Step-time cells measure "secs"; telemetry counter cells
+        # (trace::sink) measure "value". "secs" wins if both appear.
+        field = "secs" if "secs" in obj else "value"
+        secs = obj.pop(field)
         # Identity of the measurement cell: every non-measurement field.
         key = tuple(sorted((k, str(v)) for k, v in obj.items()))
         # A NaN/Infinity secs (json.loads accepts both) or a negative
@@ -54,7 +59,7 @@ def load(path):
             or secs < 0
         ):
             print(
-                f"bench_trend_diff: {path}:{i}: unparseable secs value "
+                f"bench_trend_diff: {path}:{i}: unparseable {field} value "
                 f"{secs!r} for cell {fmt_key(key)}; skipping cell"
             )
             continue
