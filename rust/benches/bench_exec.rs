@@ -18,7 +18,10 @@
 //! the schedule the topology picks per gradient bucket
 //! (`"kind":"bucket_schedule"`), a flat-ring vs hierarchical vs auto
 //! step-time comparison for both the zero2 and zero3 partitions
-//! (`"kind":"sched_compare"`), the per-bucket just-in-time
+//! (`"kind":"sched_compare"`), mesh cells pricing the same step under
+//! representative `(dp, tp, pp)` factorizations (`sched_compare` rows
+//! whose config keys carry the mesh label, e.g.
+//! `bert-32k-dp256-tp4-pp1`), the per-bucket just-in-time
 //! parameter all-gathers of the zero3 timeline
 //! (`"kind":"param_gather"`, one record per bucket and pass), and the
 //! precision columns (`"kind":"precision"`, one record per ZeRO stage
@@ -173,6 +176,44 @@ fn emit_pod_schedules(json: bool) {
     }
 }
 
+/// Mesh cells: the batch-32k step priced under representative
+/// `(dp, tp, pp)` meshes of the 1024-chip pod (zero2 partition, auto
+/// schedule), pure dp included. The config key carries the mesh label
+/// (`bert-32k-dp256-tp4-pp1` etc.), which is what
+/// `scripts/bench_trend_diff.py` parses to group renamed mesh cells as
+/// new/removed rather than step-time regressions.
+fn emit_mesh(json: bool) {
+    use lamb_train::cluster::Mesh;
+    let meta = bert_large_meta();
+    let plan = BucketPlan::even(meta.total_params, 24);
+    let pod = Pod::tpu_v3_nodes(1024, 8);
+    let part = StatePartition::Zero2 { shards: 1024 };
+    if !json {
+        println!(
+            "== pod model: mesh cells (batch 32k / seq 128, zero2) =="
+        );
+    }
+    for mesh in [
+        Mesh::dp_only(1024),
+        Mesh { dp: 256, tp: 4, pp: 1 },
+        Mesh { dp: 128, tp: 2, pp: 4 },
+        Mesh { dp: 64, tp: 1, pp: 16 },
+    ] {
+        let secs =
+            pod.step_time_mesh(&meta, 32_768, 128, &plan, part, &mesh);
+        if json {
+            println!(
+                "{{\"bench\":\"bench_exec\",\"kind\":\"sched_compare\",\
+                 \"config\":\"bert-32k-{}\",\"schedule\":\"auto\",\
+                 \"secs\":{secs:.6}}}",
+                mesh.label()
+            );
+        } else {
+            println!("{:>18}: step {secs:.4}s", mesh.label());
+        }
+    }
+}
+
 /// Precision columns: per-ZeRO-stage step time and seq-512 batch cap
 /// for the f32 vs mixed (bf16 storage/wire + fp32 masters) pods. Pure
 /// cost-model arithmetic — cheap enough for the CI smoke artifact,
@@ -291,5 +332,6 @@ fn main() {
     // Pod-model schedule + precision records (cheap; emitted in smoke
     // mode too so the CI artifact tracks them across commits).
     emit_pod_schedules(json);
+    emit_mesh(json);
     emit_precision(json);
 }

@@ -7,12 +7,25 @@
 //! caps. This module prices exactly those. Numerics still execute for
 //! real through PJRT; this model only accounts *time* the way the
 //! authors' testbed would.
+//!
+//! Since PR 7 the pod is also the host of the 3D-parallel mesh
+//! ([`mesh::Mesh`]): data parallelism (this module's native axis, with
+//! the ZeRO ladder inside it), tensor parallelism (intra-node sharded
+//! matmuls) and 1F1B pipeline parallelism compose through the same
+//! [`Topology`] pricing seam. Every mesh entry point delegates to the
+//! pure-dp code in this file when `tp = pp = 1`, keeping the degenerate
+//! mesh bitwise-identical to the pre-mesh model (see ARCHITECTURE.md
+//! for the contract).
 
 use crate::collective::{
     CollOp, PrecisionPlan, RingCost, ScheduleKind, Topology,
 };
 use crate::exec::{stage_state_bytes_prec, BucketPlan};
 use crate::manifest::ModelMeta;
+
+pub mod mesh;
+
+pub use mesh::{mesh_search, Mesh, MeshPoint, MeshStep};
 
 /// How optimizer state (and, at stage 2, the gradient buffers; at stage
 /// 3, the parameters themselves) is laid out across the data-parallel
@@ -60,6 +73,18 @@ impl StatePartition {
             StatePartition::Zero1 { shards }
             | StatePartition::Zero2 { shards }
             | StatePartition::Zero3 { shards } => (*shards).max(1),
+        }
+    }
+
+    /// The same ZeRO stage re-sharded over `shards` ranks — how the
+    /// mesh paths pin a partition to their dp extent (ZeRO applies
+    /// within the dp axis only; `Replicated` stays `Replicated`).
+    pub fn with_shards(self, shards: usize) -> StatePartition {
+        match self {
+            StatePartition::Replicated => StatePartition::Replicated,
+            StatePartition::Zero1 { .. } => StatePartition::Zero1 { shards },
+            StatePartition::Zero2 { .. } => StatePartition::Zero2 { shards },
+            StatePartition::Zero3 { .. } => StatePartition::Zero3 { shards },
         }
     }
 }
@@ -487,7 +512,7 @@ impl Pod {
     ///   are freed after each use), recorded in [`BucketCost::gather`];
     ///   the gradient buckets reduce-scatter exactly as in `Zero2`, and
     ///   stage 2's trailing whole-vector all-gather disappears (updated
-    ///   params stay sharded at their owners). See [`Self::zero3_timeline`]
+    ///   params stay sharded at their owners). See `Self::zero3_timeline`
     ///   for the wire model.
     pub fn bucket_timeline_partitioned(
         &self,
@@ -498,6 +523,21 @@ impl Pod {
         part: StatePartition,
     ) -> (Vec<BucketCost>, f64, f64) {
         let compute = self.compute_time(model, global_batch, seq);
+        self.timeline_for_compute(compute, plan, part)
+    }
+
+    /// Body of [`Self::bucket_timeline_partitioned`] with the
+    /// occupied-chip time passed in explicitly — the seam the mesh
+    /// paths use to run the dp-axis gradient timeline against
+    /// `compute + tp_wire + bubble` instead of raw matmul time (the
+    /// pure-dp caller passes raw compute, so this split changes no
+    /// arithmetic).
+    pub(crate) fn timeline_for_compute(
+        &self,
+        compute: f64,
+        plan: &BucketPlan,
+        part: StatePartition,
+    ) -> (Vec<BucketCost>, f64, f64) {
         let t_fwd = compute / 3.0;
         let t_bwd = compute - t_fwd;
         if matches!(part, StatePartition::Zero3 { .. }) {

@@ -56,6 +56,20 @@
 //!   latency term is logarithmic instead of linear in `k`, so the tree
 //!   wins below a crossover payload; its bandwidth term is
 //!   `log2(k) * b` instead of `~b`, so the ring wins above it.
+//!
+//! ## The mesh axes plug in here
+//!
+//! [`Topology::pick`] is the single pricing seam every parallel axis
+//! goes through, at its own extent: the **dp** axis prices gradient
+//! reduce-scatters/all-reduces and ZeRO-3 parameter gathers at
+//! `k = dp`; the **tp** axis (`cluster::Mesh`) prices its per-layer
+//! activation all-gathers and output reduce-scatters at `k = tp` —
+//! which is `<= node_size` by validation, so they land on the
+//! intra-node link and `span_link` keeps them nearly free; the **pp**
+//! axis moves only microbatch boundary activations and is modeled as
+//! the 1F1B bubble rather than a collective. Nothing mesh-specific
+//! lives in this module: the axes differ only in the `k` and payload
+//! they ask this seam to price.
 
 use super::precision::{
     all_gather_quant, reduce_mean_quant, Precision,
@@ -303,7 +317,7 @@ impl Topology {
 }
 
 /// Numeric execution side of a schedule. All kinds run the single
-/// [`reduce_mean`] kernel (see module docs: the rank-order reduction
+/// [`super::reduce_mean`] kernel (see module docs: the rank-order reduction
 /// *is* the bit-level contract, and no host-side staging differs from
 /// it); the struct carries which schedule — and which node grouping —
 /// the data path is logically executing, matching what the cost model

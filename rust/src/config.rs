@@ -323,6 +323,77 @@ impl Default for TraceConfig {
     }
 }
 
+/// 3D-parallel mesh axes (config section `[mesh]`): how the pod's
+/// chips factor into data-parallel replicas x tensor-parallel shards x
+/// pipeline stages (`cluster::Mesh`). The default mesh is pure data
+/// parallelism — tp = pp = 1 — which prices bitwise-identically to the
+/// pre-mesh model at every ZeRO stage.
+///
+/// ```toml
+/// [mesh]
+/// dp = 128                    # data-parallel replicas; omit for
+///                             # auto = chips / (tp * pp)
+/// tp = 4                      # tensor-parallel shards per matmul
+/// pp = 2                      # pipeline stages (1F1B)
+/// allow_inter_node_tp = false # permit tp > topology.node_size
+/// ```
+///
+/// Mistyped values hard-error like `[exec]`/`[topology]` (a string
+/// where an integer belongs, a zero axis, axes that do not factor
+/// `cluster.chips`) instead of silently pricing the wrong machine.
+/// `tp` must also fit inside a node (`topology.node_size`) unless
+/// `allow_inter_node_tp = true`: tensor-parallel collectives sit on
+/// every matmul's critical path and are only viable on the intra-node
+/// fabric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MeshConfig {
+    /// Data-parallel replicas; `None` = auto (`chips / (tp * pp)`).
+    pub dp: Option<usize>,
+    /// Tensor-parallel shards per matmul (intra-node axis).
+    pub tp: usize,
+    /// Pipeline stages (1F1B schedule).
+    pub pp: usize,
+    /// Permit tensor parallelism to span nodes (priced on the
+    /// inter-node link; off by default because it is almost never the
+    /// right machine).
+    pub allow_inter_node_tp: bool,
+}
+
+impl Default for MeshConfig {
+    fn default() -> Self {
+        MeshConfig { dp: None, tp: 1, pp: 1, allow_inter_node_tp: false }
+    }
+}
+
+impl MeshConfig {
+    /// Resolve into a concrete `cluster::Mesh` over `chips`, filling
+    /// the dp axis automatically when unset. The axes must factor the
+    /// chip count exactly.
+    pub fn resolve(&self, chips: usize) -> Result<crate::cluster::Mesh> {
+        let span = self.tp.max(1) * self.pp.max(1);
+        let dp = match self.dp {
+            Some(dp) => dp,
+            None => {
+                if chips % span != 0 {
+                    bail!(
+                        "mesh tp = {} x pp = {} does not divide \
+                         cluster.chips = {}; set mesh.dp explicitly or \
+                         pick axes that factor the pod",
+                        self.tp,
+                        self.pp,
+                        chips
+                    );
+                }
+                chips / span
+            }
+        };
+        let mesh =
+            crate::cluster::Mesh { dp, tp: self.tp.max(1), pp: self.pp.max(1) };
+        mesh.validate_chips(chips)?;
+        Ok(mesh)
+    }
+}
+
 /// Which step path the coordinator uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StepPath {
@@ -369,6 +440,8 @@ pub struct TrainConfig {
     pub precision: PrecisionConfig,
     // tracing + telemetry ([trace] section)
     pub trace: TraceConfig,
+    // 3D-parallel mesh ([mesh] section)
+    pub mesh: MeshConfig,
     // io
     pub artifacts: String,
     pub out_dir: String,
@@ -400,6 +473,7 @@ impl Default for TrainConfig {
             topology: TopologyConfig::default(),
             precision: PrecisionConfig::default(),
             trace: TraceConfig::default(),
+            mesh: MeshConfig::default(),
             artifacts: "artifacts".into(),
             out_dir: "results".into(),
             eval_every: 50,
@@ -674,6 +748,39 @@ impl TrainConfig {
         if let Some(v) = get_trace_bool("trace.metrics_jsonl")? {
             c.trace.metrics_jsonl = v;
         }
+        // ---- [mesh] table: mistyped values hard-error (mirroring
+        // [exec]/[topology]) instead of silently pricing the wrong
+        // parallel machine. ----
+        let get_mesh_axis = |key: &str| -> Result<Option<usize>> {
+            match doc.get(key) {
+                None => Ok(None),
+                Some(raw) => {
+                    let v = raw.as_i64().ok_or_else(|| {
+                        anyhow!("{key} must be an integer (got {raw:?})")
+                    })?;
+                    if v < 1 {
+                        bail!("{key} must be >= 1 (got {v})");
+                    }
+                    Ok(Some(v as usize))
+                }
+            }
+        };
+        if let Some(v) = get_mesh_axis("mesh.dp")? {
+            c.mesh.dp = Some(v);
+        }
+        if let Some(v) = get_mesh_axis("mesh.tp")? {
+            c.mesh.tp = v;
+        }
+        if let Some(v) = get_mesh_axis("mesh.pp")? {
+            c.mesh.pp = v;
+        }
+        if let Some(raw) = doc.get("mesh.allow_inter_node_tp") {
+            c.mesh.allow_inter_node_tp = raw.as_bool().ok_or_else(|| {
+                anyhow!(
+                    "mesh.allow_inter_node_tp must be a boolean (got {raw:?})"
+                )
+            })?;
+        }
         if let Some(v) = gets("run.artifacts") { c.artifacts = v; }
         if let Some(v) = gets("run.out_dir") { c.out_dir = v; }
         if let Some(v) = geti("run.eval_every") { c.eval_every = v; }
@@ -698,6 +805,25 @@ impl TrainConfig {
         }
         if self.bucket_kb == 0 {
             bail!("exec.bucket_kb must be positive");
+        }
+        // Mesh axes must factor the pod, and tp must fit inside a node
+        // unless explicitly overridden (cross-field with [topology]).
+        // Model-dependent rules (pp vs layer count, tp vs attention
+        // heads) are checked by the coordinator once the model is
+        // known.
+        self.mesh.resolve(self.chips)?;
+        if self.mesh.tp > self.topology.node_size.max(1)
+            && !self.mesh.allow_inter_node_tp
+        {
+            bail!(
+                "mesh.tp = {} exceeds topology.node_size = {}: \
+                 tensor-parallel collectives would cross the inter-node \
+                 link on every matmul; shrink tp, raise \
+                 topology.node_size, or set mesh.allow_inter_node_tp = \
+                 true to price it anyway",
+                self.mesh.tp,
+                self.topology.node_size
+            );
         }
         use crate::collective::Precision;
         if self.precision.params != Precision::F32
@@ -1179,6 +1305,106 @@ betas = [0.9, 0.999]
         assert!(bad("trace.sim_trace", "\"true\""));
         assert!(bad("trace.host_trace", "0"));
         assert!(bad("trace.metrics_jsonl", "1.0"));
+    }
+
+    #[test]
+    fn mesh_table_parses_resolves_and_defaults_to_pure_dp() {
+        // Absent table: pure dp over all chips, bitwise-degenerate.
+        let d = TrainConfig::default();
+        assert_eq!(d.mesh, MeshConfig::default());
+        let mesh = d.mesh.resolve(d.chips).unwrap();
+        assert!(mesh.is_pure_dp());
+        assert_eq!(mesh.dp, d.chips);
+        // Explicit axes; dp auto-fills to chips / (tp * pp).
+        let c = TrainConfig::load(
+            None,
+            &[
+                ("cluster.chips".into(), "1024".into()),
+                ("topology.node_size".into(), "8".into()),
+                ("mesh.tp".into(), "4".into()),
+                ("mesh.pp".into(), "2".into()),
+            ],
+        )
+        .unwrap();
+        let mesh = c.mesh.resolve(c.chips).unwrap();
+        assert_eq!((mesh.dp, mesh.tp, mesh.pp), (128, 4, 2));
+        assert_eq!(mesh.label(), "dp128-tp4-pp2");
+        // Explicit dp must factor exactly too.
+        let c = TrainConfig::load(
+            None,
+            &[
+                ("cluster.chips".into(), "1024".into()),
+                ("topology.node_size".into(), "8".into()),
+                ("mesh.dp".into(), "256".into()),
+                ("mesh.tp".into(), "4".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.mesh.dp, Some(256));
+        assert!(c.mesh.resolve(1024).is_ok());
+        assert!(c.mesh.resolve(512).is_err());
+    }
+
+    /// Mistyped `[mesh]` values are hard errors (like `exec.zero_stage`
+    /// and every other table), and so are axes that do not factor the
+    /// pod or a tp that escapes the node without the explicit override.
+    #[test]
+    fn mesh_table_rejects_mistypes_and_infeasible_axes() {
+        let bad = |kv: &[(&str, &str)]| {
+            let kv: Vec<(String, String)> = kv
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect();
+            TrainConfig::load(None, &kv).is_err()
+        };
+        // wrong type
+        assert!(bad(&[("mesh.dp", "\"8\"")]));
+        assert!(bad(&[("mesh.tp", "2.0")]));
+        assert!(bad(&[("mesh.pp", "true")]));
+        assert!(bad(&[("mesh.allow_inter_node_tp", "\"yes\"")]));
+        assert!(bad(&[("mesh.allow_inter_node_tp", "1")]));
+        // wrong value
+        assert!(bad(&[("mesh.dp", "0")]));
+        assert!(bad(&[("mesh.tp", "-2")]));
+        assert!(bad(&[("mesh.pp", "0")]));
+        // axes must factor cluster.chips (default 8)
+        assert!(bad(&[
+            ("mesh.tp", "2"),
+            ("mesh.pp", "3"),
+            ("topology.node_size", "8"),
+        ]));
+        assert!(bad(&[
+            ("mesh.dp", "8"),
+            ("mesh.tp", "2"),
+            ("topology.node_size", "8"),
+        ]));
+        // tp beyond the node needs the explicit override
+        let err = TrainConfig::load(
+            None,
+            &[
+                ("cluster.chips".into(), "1024".into()),
+                ("topology.node_size".into(), "8".into()),
+                ("mesh.tp".into(), "16".into()),
+            ],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("node_size"), "{err}");
+        assert!(err.contains("allow_inter_node_tp"), "{err}");
+        let c = TrainConfig::load(
+            None,
+            &[
+                ("cluster.chips".into(), "1024".into()),
+                ("topology.node_size".into(), "8".into()),
+                ("mesh.tp".into(), "16".into()),
+                ("mesh.allow_inter_node_tp".into(), "true".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.mesh.resolve(1024).unwrap().tp, 16);
+        // the default topology is flat (node_size 1), so any tp > 1
+        // needs the override there too
+        assert!(bad(&[("mesh.tp", "2")]));
     }
 
     #[test]

@@ -21,7 +21,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::cluster::{Pod, StatePartition};
+use crate::cluster::{Mesh, Pod, StatePartition};
 use crate::collective::{
     self, CollOp, Precision, ReduceSchedule, SchedulePolicy,
 };
@@ -74,6 +74,11 @@ pub struct BertTrainer<'e> {
     pub meta: ModelMeta,
     pub cfg: TrainConfig,
     pub pod: Pod,
+    /// 3D-parallel mesh (`[mesh]` table), resolved against the pod and
+    /// validated against the topology (tp within a node) and the model
+    /// (pp vs layers, tp vs heads). The default pure-dp mesh prices
+    /// bitwise-identically to the pre-mesh model.
+    pub mesh: Mesh,
     opt: OptPath<'e>,
     segs: Vec<Seg>,
     /// Layer-aligned bucket partition (`[exec] bucket_kb`) — drives the
@@ -177,6 +182,13 @@ impl<'e> BertTrainer<'e> {
         };
         let reduce = ReduceSchedule::new(reduce_kind, cfg.topology.node_size)
             .with_wire(prec.grads);
+        // 3D-parallel mesh: `[mesh]` axes resolved over the pod's chips
+        // (config already checked the factorization and the tp-vs-node
+        // rule); the model-dependent rules need the manifest and are
+        // checked here.
+        let mesh = cfg.mesh.resolve(cfg.chips)?;
+        mesh.validate(&pod.topology, cfg.mesh.allow_inter_node_tp)?;
+        mesh.validate_model(&meta)?;
         let zero1 = if cfg.exec_mode == ExecMode::Zero1 {
             Some(
                 Zero1State::build(&cfg.optimizer, &plan, &plan_segs, hyper)
@@ -237,6 +249,7 @@ impl<'e> BertTrainer<'e> {
             engine,
             manifest,
             pod,
+            mesh,
             opt,
             segs,
             plan,
@@ -430,26 +443,48 @@ impl<'e> BertTrainer<'e> {
         // is on) — stage-derived, so re-runs produce identical refs.
         let mut sim_trace_ref: Option<String> = None;
         let (step_sim, comm_tpl) = if bucketed {
-            let (costs, compute, total) = self.pod.bucket_timeline_partitioned(
+            // Price the step through the mesh: the pure-dp default
+            // delegates to `bucket_timeline_partitioned` (bitwise the
+            // pre-mesh pricing); tp/pp meshes run the dp-axis timeline
+            // over the dp-view pod with this chip's model-shard buckets
+            // and fold tensor-parallel wire + the 1F1B bubble into the
+            // occupied-chip time.
+            let mesh = self.mesh;
+            let ms = self.pod.mesh_step(
                 &self.meta,
                 stage.global_batch,
                 stage.seq,
                 &self.plan,
                 part,
+                &mesh,
             );
+            let dp_pod;
+            let shard_plan;
+            let (price_pod, price_plan): (&Pod, &BucketPlan) =
+                if mesh.is_pure_dp() {
+                    (&self.pod, &self.plan)
+                } else {
+                    dp_pod = self.pod.dp_view(&mesh);
+                    shard_plan = Pod::mesh_shard_plan(&self.plan, &mesh);
+                    (&dp_pod, &shard_plan)
+                };
+            let part_dp = part.with_shards(mesh.dp);
             // comm_time is per-bucket wire time by contract (StepComm
             // docs): the grad collective plus, under zero3, the bucket's
             // just-in-time parameter gathers (forward + backward) — all
             // per-bucket wire records. Zero2's trailing whole-vector
             // all-gather is not a bucket and shows up in `exposed` (and
-            // step_sim) instead, as do zero3's gather stalls.
-            let mut comm = StepComm::from_costs(&costs, compute, total);
+            // step_sim) instead, as do zero3's gather stalls. Under a
+            // mesh, `exposed` is measured against the occupied-chip
+            // time (compute + tp wire + pipeline bubble), so tp/pp
+            // terms never masquerade as exposed gradient wire.
+            let mut comm = StepComm::from_costs(&ms.costs, ms.work, ms.total);
             comm.gather_stall = trace::sim::gather_stall_total(
-                &self.pod, &self.plan, part, &costs, compute,
+                price_pod, price_plan, part_dp, &ms.costs, ms.work,
             );
             if self.cfg.trace.enabled && self.cfg.trace.sim_trace {
-                let tr = trace::sim::sim_step_trace(
-                    &self.pod, &self.plan, part, &costs, compute, total,
+                let tr = trace::sim::sim_step_trace_mesh(
+                    price_pod, price_plan, part_dp, &ms, &mesh,
                 );
                 let dir = std::path::Path::new(&self.cfg.trace.dir);
                 std::fs::create_dir_all(dir).with_context(|| {
@@ -460,7 +495,7 @@ impl<'e> BertTrainer<'e> {
                     .with_context(|| format!("writing {name}"))?;
                 sim_trace_ref = Some(name);
             }
-            (total, Some(comm))
+            (ms.total, Some(comm))
         } else {
             (
                 self.pod.step_time(&self.meta, stage.global_batch, stage.seq),

@@ -14,6 +14,9 @@
 
 use std::time::Instant;
 
+use anyhow::{bail, Result};
+
+use crate::cluster::Mesh;
 use crate::collective::Precision;
 use crate::data::image::ImageTask;
 use crate::exec::{
@@ -283,6 +286,51 @@ impl NativeTrainer {
         tr
     }
 
+    /// As [`NativeTrainer::with_exec`], taking the run's `(dp, tp, pp)`
+    /// [`Mesh`] explicitly — the native half of the `[mesh]` config
+    /// seam. The exec engine executes the **dp axis only**: its workers
+    /// are full-model replicas exchanging gradients, so the mesh must
+    /// be pure data-parallel with `dp == exec.workers`. Tensor- or
+    /// pipeline-parallel meshes are rejected here with an actionable
+    /// error instead of silently training a different partitioning than
+    /// the pod model priced; an accepted mesh delegates to `with_exec`
+    /// verbatim, so the run is bitwise-identical to the un-meshed
+    /// constructor.
+    pub fn with_exec_mesh(
+        spec: &NativeTask,
+        optimizer: &str,
+        hyper: Hyper,
+        schedule: Schedule,
+        seed: u64,
+        exec: ExecConfig,
+        mesh: Mesh,
+    ) -> Result<NativeTrainer> {
+        if !mesh.is_pure_dp() {
+            bail!(
+                "the native exec engine executes the dp axis only (its \
+                 workers are full-model replicas): mesh {} has tp = {} \
+                 and pp = {}; price tensor/pipeline axes with the pod \
+                 model (cluster::Pod::mesh_step) or set [mesh] tp = 1, \
+                 pp = 1",
+                mesh.label(),
+                mesh.tp,
+                mesh.pp
+            );
+        }
+        let workers = exec.workers.max(1);
+        if mesh.dp != workers {
+            bail!(
+                "mesh dp = {} does not match exec.workers = {}: the \
+                 exec engine's data-parallel extent is its worker count",
+                mesh.dp,
+                workers
+            );
+        }
+        Ok(NativeTrainer::with_exec(
+            spec, optimizer, hyper, schedule, seed, exec,
+        ))
+    }
+
     /// One exec-engine global step: broadcast params, per-worker grads,
     /// bucketed reduce (all-reduce, or reduce-scatter under ZeRO-2/3),
     /// optimizer (dense or ZeRO-sharded). Under ZeRO-3 the step is
@@ -527,6 +575,74 @@ mod tests {
         let c = log.records[0].comm.as_ref().unwrap();
         assert!(c.buckets >= 1);
         assert_eq!(c.per_bucket.len(), c.buckets);
+    }
+
+    /// The native mesh seam: a pure-dp mesh matching the worker count
+    /// delegates to `with_exec` bitwise; tp/pp axes and dp/worker
+    /// mismatches are rejected with actionable errors.
+    #[test]
+    fn exec_mesh_seam_accepts_pure_dp_and_rejects_tp_pp() {
+        let spec = NativeTask::mnist_proxy();
+        let sched = Schedule::WarmupPoly {
+            base: 0.02,
+            warmup: 10,
+            total: 100,
+            power: 1.0,
+        };
+        let cfg = ExecConfig {
+            mode: ExecMode::Zero2,
+            workers: 2,
+            bucket_bytes: 1 << 12,
+            ..ExecConfig::default()
+        };
+        let mut a = NativeTrainer::with_exec(
+            &spec,
+            "lamb",
+            Hyper::default(),
+            sched.clone(),
+            3,
+            cfg,
+        );
+        let mut b = NativeTrainer::with_exec_mesh(
+            &spec,
+            "lamb",
+            Hyper::default(),
+            sched.clone(),
+            3,
+            cfg,
+            Mesh::dp_only(2),
+        )
+        .unwrap();
+        let la = a.train(50, 64);
+        let lb = b.train(50, 64);
+        assert_eq!(la.losses(), lb.losses());
+        for (x, y) in a.mlp.params.iter().zip(&b.mlp.params) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let e = NativeTrainer::with_exec_mesh(
+            &spec,
+            "lamb",
+            Hyper::default(),
+            sched.clone(),
+            3,
+            cfg,
+            Mesh { dp: 1, tp: 2, pp: 1 },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("dp axis only"), "{e}");
+        let e = NativeTrainer::with_exec_mesh(
+            &spec,
+            "lamb",
+            Hyper::default(),
+            sched,
+            3,
+            cfg,
+            Mesh::dp_only(4),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("exec.workers"), "{e}");
     }
 
     #[test]

@@ -38,7 +38,7 @@ impl ImageTask {
         ImageTask { dim, classes, protos, noise }
     }
 
-    /// Fill `x` ([n, dim] row-major) and `y` ([n]) with `n` samples.
+    /// Fill `x` (`[n, dim]` row-major) and `y` (`[n]`) with `n` samples.
     pub fn sample(&self, rng: &mut Rng, n: usize, x: &mut Vec<f32>, y: &mut Vec<u32>) {
         x.clear();
         y.clear();

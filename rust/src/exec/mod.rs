@@ -57,6 +57,15 @@
 //! `Send`, uses the serial drive plus [`bucketed_reduce`] and prices the
 //! overlap it *would* get on the pod with
 //! `cluster::Pod::step_time_bucketed`.
+//!
+//! Under a 3D `cluster::Mesh` the entire ZeRO ladder lives **inside the
+//! dp axis**: `StatePartition::shards` is the mesh's dp extent, the
+//! gradient vector the buckets cover is one chip's `1/(tp * pp)` model
+//! shard (`cluster::Pod::mesh_shard_plan`), and the tensor/pipeline
+//! axes never touch this engine's numerics — they only change what the
+//! pod model prices around it. The engine itself executes dp only
+//! (`coordinator::NativeTrainer::with_exec_mesh` rejects tp/pp > 1),
+//! and the pure-dp mesh is bitwise-identical to everything above.
 
 pub mod bucket;
 pub mod pool;

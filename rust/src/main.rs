@@ -1,12 +1,15 @@
 //! `lamb-train` — leader entrypoint.
 //!
 //! Subcommands:
-//!   info                        manifest / artifact summary
-//!   train [--config F] [k=v]    one training run over the AOT artifacts
-//!   repro <exp|all> [--scale S] regenerate a paper table/figure
-//!   sweep --optimizer O [...]   LR grid on the native substrate
-//!   trace-report FILE [--top K] summarize a Perfetto trace artifact
-//!   trace-smoke [--out DIR]     traced sim + host steps with checks
+//!
+//! ```text
+//! info                        manifest / artifact summary
+//! train [--config F] [k=v]    one training run over the AOT artifacts
+//! repro <exp|all> [--scale S] regenerate a paper table/figure
+//! sweep --optimizer O [...]   LR grid on the native substrate
+//! trace-report FILE [--top K] summarize a Perfetto trace artifact
+//! trace-smoke [--out DIR]     traced sim + host steps with checks
+//! ```
 //!
 //! `k=v` overrides use the config's dotted keys, e.g.
 //! `optimizer.name="lars"` `batch.global=256` `model.name="bert-small"`.

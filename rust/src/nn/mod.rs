@@ -80,8 +80,8 @@ impl Mlp {
         self.params.len()
     }
 
-    /// Forward + backward over a batch. `x`: [n, input] row-major,
-    /// `y`: [n] class ids. Writes dL/dparams into `grads` (overwritten).
+    /// Forward + backward over a batch. `x`: `[n, input]` row-major,
+    /// `y`: `[n]` class ids. Writes dL/dparams into `grads` (overwritten).
     /// Returns (mean loss, accuracy).
     pub fn loss_grad(
         &self,

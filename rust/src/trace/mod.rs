@@ -11,7 +11,12 @@
 //!   `cluster::Pod::bucket_timeline_partitioned`'s per-bucket costs
 //!   (compute segments, reduce-scatter wire, ZeRO-3 just-in-time
 //!   gathers with their prefetch stalls, cross-step pipelined slots,
-//!   exposed tails) as a [`Trace`] with one lane per resource.
+//!   exposed tails) as a [`Trace`] with one lane per resource. A
+//!   non-degenerate `cluster::Mesh` step adds two more lanes —
+//!   [`LANE_TP_WIRE`] for the tensor-parallel collectives and
+//!   [`LANE_PIPE_BUBBLE`] for the 1F1B fill/drain bubble — via
+//!   [`sim::sim_step_trace_mesh`]; the pure-dp mesh emits the same
+//!   four-lane trace byte-for-byte.
 //! * [`host`] — the **host-time recorder**: lock-free per-thread span
 //!   buffers instrumenting the real exec engine (worker-pool
 //!   turnaround, per-bucket reduce/scatter/gather kernels, ZeRO state
@@ -40,12 +45,17 @@ pub mod sink;
 use crate::util::json::escape;
 use std::fmt::Write as _;
 
-/// Simulated-trace lane indices ([`sim`] emits exactly these four; the
-/// host recorder instead makes one lane per thread).
+/// Simulated-trace lane indices ([`sim`] emits the first four for every
+/// step; a non-degenerate mesh adds the tp-wire and pipe-bubble lanes.
+/// The host recorder instead makes one lane per thread).
 pub const LANE_COMPUTE: usize = 0;
 pub const LANE_WIRE_INTRA: usize = 1;
 pub const LANE_WIRE_INTER: usize = 2;
 pub const LANE_EXPOSED: usize = 3;
+/// Tensor-parallel collectives lane (mesh steps with tp > 1 only).
+pub const LANE_TP_WIRE: usize = 4;
+/// 1F1B pipeline-bubble lane (mesh steps with pp > 1 only).
+pub const LANE_PIPE_BUBBLE: usize = 5;
 
 /// Span categories. The conservation contract hangs off these:
 /// `comm_time` is the bucket-grouped fold over [`CAT_GRAD_COLL`] +
@@ -60,6 +70,14 @@ pub const CAT_PARAM_GATHER_TRAILING: &str = "param_gather_trailing";
 pub const CAT_GATHER_STALL: &str = "gather_stall";
 pub const CAT_EXPOSED: &str = "exposed";
 pub const CAT_HOST: &str = "host";
+/// Tensor-parallel activation all-gathers / output reduce-scatters of a
+/// mesh step. Excluded from the `comm_time` fold: the mesh model folds
+/// tp wire into the occupied-chip `work` the dp-axis timeline overlaps
+/// against, so counting it again would break conservation.
+pub const CAT_TP_COLL: &str = "tp_coll";
+/// 1F1B pipeline fill/drain bubble of a mesh step. Excluded from the
+/// `comm_time` fold for the same reason as [`CAT_TP_COLL`].
+pub const CAT_PIPE_BUBBLE: &str = "pipe_bubble";
 
 /// One span argument value (serialized under the Perfetto `args` key).
 #[derive(Clone, Debug, PartialEq)]

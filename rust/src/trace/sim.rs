@@ -21,10 +21,13 @@
 
 use super::{
     Arg, Span, Trace, CAT_COMPUTE, CAT_EXPOSED, CAT_GATHER_STALL,
-    CAT_GRAD_COLL, CAT_PARAM_GATHER, CAT_PARAM_GATHER_TRAILING, LANE_COMPUTE,
-    LANE_EXPOSED, LANE_WIRE_INTER, LANE_WIRE_INTRA,
+    CAT_GRAD_COLL, CAT_PARAM_GATHER, CAT_PARAM_GATHER_TRAILING,
+    CAT_PIPE_BUBBLE, CAT_TP_COLL, LANE_COMPUTE, LANE_EXPOSED,
+    LANE_PIPE_BUBBLE, LANE_TP_WIRE, LANE_WIRE_INTER, LANE_WIRE_INTRA,
 };
-use crate::cluster::{BucketCost, Pod, StatePartition, PREFETCH_BUCKETS};
+use crate::cluster::{
+    BucketCost, Mesh, MeshStep, Pod, StatePartition, PREFETCH_BUCKETS,
+};
 use crate::collective::CollOp;
 use crate::exec::BucketPlan;
 
@@ -331,6 +334,76 @@ pub fn sim_step_trace(
     tr
 }
 
+/// Render one mesh-priced step ([`Pod::mesh_step`]) as a [`Trace`].
+///
+/// The degenerate pure-dp mesh returns [`sim_step_trace`]'s output
+/// verbatim — same four lanes, same spans, byte-identical JSON — which
+/// extends the mesh's bitwise-equivalence contract to the trace
+/// artifact itself. A real mesh replays the dp-axis timeline against
+/// `MeshStep::work` (the value the buckets were priced against, so the
+/// replayed backward boundaries still match `BucketCost::ready`
+/// bitwise) and adds two lanes: **tp wire** ([`CAT_TP_COLL`], the
+/// per-layer Megatron all-gather/reduce-scatter pairs) and **pipe
+/// bubble** ([`CAT_PIPE_BUBBLE`], the 1F1B fill/drain cost, drawn at
+/// the tail of the occupied window where the drain sits). Both
+/// categories are excluded from the `comm_time` fold — they are
+/// already inside `work`, and `StepComm` accounts them as compute —
+/// so conservation against `StepComm.comm_time` / `exposed` holds
+/// unchanged.
+///
+/// `pod` and `plan` must be the dp-axis view the step was priced with:
+/// `Pod::dp_view` + `Pod::mesh_shard_plan` for a real mesh, the
+/// original pod and plan for a pure-dp one (the coordinator passes
+/// exactly these).
+pub fn sim_step_trace_mesh(
+    pod: &Pod,
+    plan: &BucketPlan,
+    part: StatePartition,
+    ms: &MeshStep,
+    mesh: &Mesh,
+) -> Trace {
+    if mesh.is_pure_dp() {
+        return sim_step_trace(
+            pod, plan, part, &ms.costs, ms.compute, ms.total,
+        );
+    }
+    let mut tr =
+        sim_step_trace(pod, plan, part, &ms.costs, ms.work, ms.total);
+    tr.process = format!("pod-sim {}", mesh.label());
+    tr.lanes.push("tp wire".to_string());
+    tr.lanes.push("pipe bubble".to_string());
+    debug_assert_eq!(tr.lanes.len(), LANE_PIPE_BUBBLE + 1);
+    if ms.tp_wire > 0.0 {
+        tr.push(
+            Span::new(
+                LANE_TP_WIRE,
+                format!("tp ag+rs x{} layers", mesh.tp),
+                CAT_TP_COLL,
+                0.0,
+                ms.tp_wire,
+            )
+            .arg("tp", Arg::U(mesh.tp as u64))
+            .arg("microbatches", Arg::U(ms.microbatches as u64)),
+        );
+    }
+    if ms.bubble > 0.0 {
+        tr.push(
+            Span::new(
+                LANE_PIPE_BUBBLE,
+                format!("1f1b bubble pp={}", mesh.pp),
+                CAT_PIPE_BUBBLE,
+                (ms.work - ms.bubble).max(0.0),
+                ms.bubble,
+            )
+            .arg("pp", Arg::U(mesh.pp as u64))
+            .arg("microbatches", Arg::U(ms.microbatches as u64)),
+        );
+    }
+    tr.counter("tp_wire.secs", ms.total, ms.tp_wire);
+    tr.counter("pipe_bubble.secs", ms.total, ms.bubble);
+    tr
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -525,5 +598,87 @@ mod tests {
             .count();
         assert_eq!(fwd, plan.len());
         assert_eq!(bwd, plan.len());
+    }
+
+    /// Mesh exporter contract: the pure-dp mesh's trace is
+    /// byte-identical to the dense exporter's, and a real mesh adds
+    /// the tp-wire / pipe-bubble lanes without breaking the
+    /// `comm_time` / `exposed` conservation fold.
+    #[test]
+    fn mesh_trace_degenerates_bytewise_and_conserves_comm_time() {
+        let meta = crate::repro::bert_exps::bert_large_meta();
+        let pod = Pod::tpu_v3_nodes(1024, 8);
+        let plan = BucketPlan::even(meta.total_params, 17);
+        for part in partitions(pod.chips) {
+            // -- degenerate mesh: byte-identical JSON --
+            let mesh = Mesh::dp_only(pod.chips);
+            let ms = pod.mesh_step(&meta, 32768, 512, &plan, part, &mesh);
+            let (costs, compute, total) =
+                pod.bucket_timeline_partitioned(&meta, 32768, 512, &plan, part);
+            let dense =
+                sim_step_trace(&pod, &plan, part, &costs, compute, total);
+            let via_mesh =
+                sim_step_trace_mesh(&pod, &plan, part, &ms, &mesh);
+            assert_eq!(
+                dense.to_perfetto_json(),
+                via_mesh.to_perfetto_json(),
+                "pure-dp mesh trace diverged ({part:?})"
+            );
+            // -- real mesh: extra lanes, conservation intact --
+            let mesh = Mesh { dp: 128, tp: 2, pp: 4 };
+            let ms = pod.mesh_step(&meta, 32768, 512, &plan, part, &mesh);
+            let dp_pod = pod.dp_view(&mesh);
+            let shard_plan = Pod::mesh_shard_plan(&plan, &mesh);
+            let part_dp = part.with_shards(mesh.dp);
+            let tr = sim_step_trace_mesh(
+                &dp_pod,
+                &shard_plan,
+                part_dp,
+                &ms,
+                &mesh,
+            );
+            assert_eq!(tr.lanes.len(), 6);
+            assert_eq!(tr.lanes[LANE_TP_WIRE], "tp wire");
+            assert!(tr.spans.iter().any(|s| s.cat == CAT_TP_COLL));
+            assert!(tr.spans.iter().any(|s| s.cat == CAT_PIPE_BUBBLE));
+            let comm = StepComm::from_costs(&ms.costs, ms.work, ms.total);
+            let folded = crate::trace::report::fold_comm_time(
+                tr.spans.iter().map(|s| {
+                    let pass =
+                        s.args.iter().find_map(|(k, v)| match (k, v) {
+                            (&"pass", Arg::S(p)) => Some(p.as_str()),
+                            _ => None,
+                        });
+                    (s.cat, s.bucket(), pass, s.dur)
+                }),
+            );
+            assert_eq!(
+                folded.to_bits(),
+                comm.comm_time.to_bits(),
+                "mesh comm_time not conserved ({part:?})"
+            );
+            let exposed: f64 = tr
+                .spans
+                .iter()
+                .filter(|s| s.cat == CAT_EXPOSED)
+                .map(|s| s.dur)
+                .sum();
+            assert_eq!(exposed.to_bits(), comm.exposed.to_bits());
+            // tp wire + bubble are inside `work`, not double-counted
+            let tp: f64 = tr
+                .spans
+                .iter()
+                .filter(|s| s.cat == CAT_TP_COLL)
+                .map(|s| s.dur)
+                .sum();
+            assert_eq!(tp.to_bits(), ms.tp_wire.to_bits());
+            let bub: f64 = tr
+                .spans
+                .iter()
+                .filter(|s| s.cat == CAT_PIPE_BUBBLE)
+                .map(|s| s.dur)
+                .sum();
+            assert_eq!(bub.to_bits(), ms.bubble.to_bits());
+        }
     }
 }

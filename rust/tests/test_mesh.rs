@@ -1,0 +1,150 @@
+//! 3D-parallel mesh guarantees through the public API (the ISSUE 7
+//! acceptance criteria, end-to-end rather than module-local):
+//!
+//! (a) degeneracy: `Mesh { dp: k, tp: 1, pp: 1 }` reproduces the
+//!     pure-dp batch caps and step times **bitwise** at every ZeRO
+//!     stage, on flat and hierarchical pods and a ragged bucket split
+//!     — the mesh is a pure extension, never a reprice;
+//! (b) rejection: infeasible meshes fail with actionable errors at
+//!     every validation layer (topology, model, chip count, `[mesh]`
+//!     config resolution) instead of pricing a machine that cannot
+//!     exist;
+//! (c) search: `mesh_search` enumerates exact factorizations, orders
+//!     feasible-fastest-first, and at 1024 chips / batch 32k finds a
+//!     mesh strictly faster than pure data parallelism on the
+//!     wire-bound seq-128 phase (the README table's headline claim).
+
+use lamb_train::cluster::{mesh_search, Mesh, Pod, StatePartition};
+use lamb_train::config::MeshConfig;
+use lamb_train::exec::BucketPlan;
+use lamb_train::repro::bert_exps::bert_large_meta;
+
+fn stages(shards: usize) -> [StatePartition; 4] {
+    [
+        StatePartition::Replicated,
+        StatePartition::Zero1 { shards },
+        StatePartition::Zero2 { shards },
+        StatePartition::Zero3 { shards },
+    ]
+}
+
+#[test]
+fn pure_dp_mesh_degenerates_bitwise_at_every_zero_stage() {
+    let meta = bert_large_meta();
+    let plan = BucketPlan::even(meta.total_params, 23); // ragged split
+    for pod in [Pod::tpu_v3(64), Pod::tpu_v3_nodes(1024, 8)] {
+        let mesh = Mesh::dp_only(pod.chips);
+        assert!(mesh.is_pure_dp());
+        assert_eq!(mesh.chips(), pod.chips);
+        for part in stages(pod.chips) {
+            for (batch, seq) in [(32_768, 512), (32_768, 128)] {
+                let cap_mesh =
+                    pod.max_batch_mesh(&meta, seq, part, &plan, &mesh);
+                let cap_dp = pod.max_batch_planned(&meta, seq, part, &plan);
+                assert_eq!(cap_mesh, cap_dp, "cap diverged: {part:?}");
+
+                let ms = pod.mesh_step(&meta, batch, seq, &plan, part, &mesh);
+                let (costs, compute, total) = pod
+                    .bucket_timeline_partitioned(&meta, batch, seq, &plan, part);
+                assert_eq!(ms.costs.len(), costs.len());
+                assert_eq!(ms.compute.to_bits(), compute.to_bits());
+                assert_eq!(ms.work.to_bits(), compute.to_bits());
+                assert_eq!(ms.total.to_bits(), total.to_bits());
+                assert_eq!(ms.tp_wire.to_bits(), 0f64.to_bits());
+                assert_eq!(ms.bubble.to_bits(), 0f64.to_bits());
+                let step = pod
+                    .step_time_mesh(&meta, batch, seq, &plan, part, &mesh);
+                assert_eq!(step.to_bits(), total.to_bits(), "{part:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn infeasible_meshes_rejected_with_actionable_errors() {
+    let meta = bert_large_meta();
+    let pod = Pod::tpu_v3_nodes(1024, 8);
+
+    // Topology layer: tp cannot outgrow a node without an explicit
+    // opt-in onto the inter-node link.
+    let wide = Mesh { dp: 64, tp: 16, pp: 1 };
+    let err = wide.validate(&pod.topology, false).unwrap_err().to_string();
+    assert!(err.contains("node_size"), "unactionable: {err}");
+    assert!(err.contains("allow_inter_node_tp"), "unactionable: {err}");
+    wide.validate(&pod.topology, true).unwrap();
+
+    // Model layer: pipeline stages cannot outnumber layers, and tp
+    // must divide the attention heads.
+    let deep = Mesh { dp: 1, tp: 1, pp: meta.layers + 1 };
+    let err = deep.validate_model(&meta).unwrap_err().to_string();
+    assert!(err.contains("transformer layers"), "unactionable: {err}");
+    let odd = Mesh { dp: 1, tp: 3, pp: 1 };
+    let err = odd.validate_model(&meta).unwrap_err().to_string();
+    assert!(err.contains("attention heads"), "unactionable: {err}");
+    Mesh { dp: 1, tp: 4, pp: 1 }.validate_model(&meta).unwrap();
+
+    // Chip-count layer: the factorization must cover the pod exactly.
+    let err = Mesh { dp: 100, tp: 1, pp: 1 }
+        .validate_chips(pod.chips)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("does not match"), "unactionable: {err}");
+
+    // Config layer: `[mesh]` resolution fills dp from the chip count
+    // and rejects axes that do not factor it.
+    let cfg = MeshConfig { dp: None, tp: 4, pp: 2, allow_inter_node_tp: false };
+    let mesh = cfg.resolve(1024).unwrap();
+    assert_eq!(mesh, Mesh { dp: 128, tp: 4, pp: 2 });
+    let cfg = MeshConfig { dp: None, tp: 3, pp: 1, allow_inter_node_tp: false };
+    let err = cfg.resolve(1024).unwrap_err().to_string();
+    assert!(err.contains("does not divide"), "unactionable: {err}");
+    let cfg =
+        MeshConfig { dp: Some(100), tp: 2, pp: 1, allow_inter_node_tp: false };
+    assert!(cfg.resolve(1024).is_err());
+}
+
+#[test]
+fn mesh_search_beats_pure_dp_on_the_wire_bound_phase() {
+    let meta = bert_large_meta();
+    let pod = Pod::tpu_v3_nodes(1024, 8);
+    let plan = BucketPlan::even(meta.total_params, 64);
+    let (batch, seq) = (32_768, 128);
+    for part in [
+        StatePartition::Zero2 { shards: pod.chips },
+        StatePartition::Zero3 { shards: pod.chips },
+    ] {
+        let points = mesh_search(&pod, &meta, batch, seq, &plan, part);
+        assert!(!points.is_empty());
+        // Every candidate factors the pod exactly and respects the
+        // model/topology feasibility rules.
+        for p in &points {
+            assert_eq!(p.mesh.chips(), pod.chips);
+            p.mesh.validate(&pod.topology, false).unwrap();
+            p.mesh.validate_model(&meta).unwrap();
+            assert_eq!(
+                p.feasible,
+                p.max_batch >= batch && p.mesh.dp <= batch
+            );
+        }
+        // Ordering contract: feasible first, fastest first.
+        let feasible: Vec<_> = points.iter().filter(|p| p.feasible).collect();
+        assert!(!feasible.is_empty());
+        for w in feasible.windows(2) {
+            assert!(w[0].step <= w[1].step);
+        }
+        let n_feasible = feasible.len();
+        assert!(points[..n_feasible].iter().all(|p| p.feasible));
+        // The ISSUE 7 acceptance: at 1024 chips / batch 32k some mesh
+        // strictly beats pure data parallelism on the seq-128 phase.
+        let pure = points.iter().find(|p| p.mesh.is_pure_dp()).unwrap();
+        let best = feasible[0];
+        assert!(!best.mesh.is_pure_dp(), "pure dp should lose here");
+        assert!(
+            best.step < pure.step,
+            "no mesh beat pure dp: best {} {:.4}s vs dp {:.4}s ({part:?})",
+            best.mesh.label(),
+            best.step,
+            pure.step
+        );
+    }
+}

@@ -59,6 +59,20 @@ if any(set(("bucket", "pass", "schedule")) - set(o) for o in gathers):
 # with the seq-512 batch cap, and the mixed cap must strictly exceed
 # the f32 cap at every ZeRO stage (the ISSUE 5 acceptance, re-checked
 # from the artifact itself).
+# The mesh cells (PR 7) must parse: sched_compare rows whose config
+# carries a dp<k>-tp<k>-pp<k> label, pure dp included, each with a
+# positive step time.
+import re
+mesh = [o for o in objs if o.get("kind") == "sched_compare"
+        and re.search(r"dp\d+-tp\d+-pp\d+", str(o.get("config", "")))]
+if not mesh:
+    sys.exit(f"{path}: no mesh sched_compare cells in the bench artifact")
+labels = {re.search(r"dp\d+-tp\d+-pp\d+", o["config"]).group(0) for o in mesh}
+for want in ("dp1024-tp1-pp1", "dp256-tp4-pp1"):
+    if want not in labels:
+        sys.exit(f"{path}: missing mesh cell {want} (got {sorted(labels)})")
+if any(not (o["secs"] > 0) for o in mesh):
+    sys.exit(f"{path}: mesh cell with non-positive secs")
 prec = [o for o in objs if o.get("kind") == "precision"]
 if any(set(("precision", "zero_stage", "max_batch_512")) - set(o) for o in prec):
     sys.exit(f"{path}: precision records missing precision/zero_stage/max_batch_512 keys")
@@ -74,6 +88,7 @@ for stage in range(4):
                  f"does not exceed f32 cap {caps[('f32', stage)]}")
 print(f"bench_smoke: {len(lines)} JSON measurements in {path} "
       f"(zero3 column + {len(gathers)} param_gather records + "
+      f"{len(mesh)} mesh cells + "
       f"{len(prec)} precision records ok; bf16 caps > f32 at every stage)")
 EOF
 fi
@@ -168,4 +183,44 @@ EOF
     fi
     echo "bench_smoke: trend-diff division guard ok (zero/NaN/Inf previous cells handled)"
     rm -f "$FIXTURE" "$DIFF_OUT"
+fi
+
+# Mesh-rename fixture (PR 7): a mesh cell whose (dp, tp, pp)
+# factorization changed between artifacts must be grouped by its mesh
+# key and reported as removed/new — never ratio-compared as a step-time
+# regression of the old mesh. The fixture takes the current pure-dp
+# mesh cell, renames it to a mesh the current bench does not emit, and
+# gives it a microscopic step time: if the trend diff wrongly compared
+# across the rename, the current cell would show as a huge regression.
+if command -v python3 >/dev/null 2>&1; then
+    MESH_FIXTURE="$(mktemp)"
+    MESH_DIFF="$(mktemp)"
+    grep '"config":"bert-32k-dp1024-tp1-pp1"' "$OUT" \
+        | sed -e 's/dp1024-tp1-pp1/dp512-tp2-pp1/' \
+              -e 's/"secs":[0-9.eE+-]*/"secs":0.000001/' > "$MESH_FIXTURE"
+    if [ ! -s "$MESH_FIXTURE" ]; then
+        echo "bench_smoke: could not build mesh-rename fixture (no pure-dp mesh cell in $OUT)" >&2
+        rm -f "$MESH_FIXTURE" "$MESH_DIFF"
+        exit 1
+    fi
+    if ! python3 scripts/bench_trend_diff.py "$MESH_FIXTURE" "$OUT" > "$MESH_DIFF"; then
+        echo "bench_smoke: bench_trend_diff crashed on mesh-rename fixture" >&2
+        cat "$MESH_DIFF" >&2
+        rm -f "$MESH_FIXTURE" "$MESH_DIFF"
+        exit 1
+    fi
+    if ! grep -q "removed mesh cell" "$MESH_DIFF"; then
+        echo "bench_smoke: renamed mesh cell not reported as removed" >&2
+        cat "$MESH_DIFF" >&2
+        rm -f "$MESH_FIXTURE" "$MESH_DIFF"
+        exit 1
+    fi
+    if grep "::warning" "$MESH_DIFF" | grep -q "dp512-tp2-pp1"; then
+        echo "bench_smoke: renamed mesh cell was ratio-compared as a regression" >&2
+        cat "$MESH_DIFF" >&2
+        rm -f "$MESH_FIXTURE" "$MESH_DIFF"
+        exit 1
+    fi
+    echo "bench_smoke: mesh-rename fixture ok (renamed mesh cell reported as removed/new, not a regression)"
+    rm -f "$MESH_FIXTURE" "$MESH_DIFF"
 fi

@@ -12,6 +12,15 @@ itself so the same (bench, mode, workers, ...) cell is compared across
 the two runs; cells higher by more than --warn-pct percent produce a
 GitHub `::warning::` annotation.
 
+Mesh cells (config values carrying a `dp<k>-tp<k>-pp<k>` label, e.g.
+`bert-32k-dp256-tp4-pp1` from bench_exec's sched_compare section) are
+grouped by their mesh key: the label is split out of the config into an
+explicit "mesh" identity field, so a cell whose mesh changed between
+artifacts is a *different* cell — reported as new/removed, never as a
+step-time regression of the old mesh (the two factorizations price
+different schedules, so a ratio between them is meaningless).
+bench_smoke.sh carries a fixture asserting exactly this.
+
 The diff is advisory by design: CI-runner noise makes small swings
 routine, so the script always exits 0 (the CI step is additionally
 `continue-on-error`). It exists so the perf trajectory the bench-smoke
@@ -23,7 +32,28 @@ downloads.
 import argparse
 import json
 import math
+import re
 import sys
+
+# A (dp, tp, pp) mesh label at the tail of a config value — the
+# canonical spelling of cluster::Mesh::label() in the Rust crate.
+MESH_RE = re.compile(r"^(?P<base>.*?)-?(?P<mesh>dp\d+-tp\d+-pp\d+)$")
+
+
+def split_mesh(obj):
+    """Split a trailing mesh label out of obj["config"] into an explicit
+    "mesh" identity field, in place. Grouping by mesh key is what makes
+    a renamed mesh cell a new/removed cell instead of a regression."""
+    cfg = obj.get("config")
+    if isinstance(cfg, str) and "mesh" not in obj:
+        m = MESH_RE.match(cfg)
+        if m:
+            obj["config"] = m.group("base") or "mesh"
+            obj["mesh"] = m.group("mesh")
+
+
+def is_mesh_key(key):
+    return any(k == "mesh" for k, _ in key)
 
 
 def load(path):
@@ -47,6 +77,7 @@ def load(path):
         # (trace::sink) measure "value". "secs" wins if both appear.
         field = "secs" if "secs" in obj else "value"
         secs = obj.pop(field)
+        split_mesh(obj)
         # Identity of the measurement cell: every non-measurement field.
         key = tuple(sorted((k, str(v)) for k, v in obj.items()))
         # A NaN/Infinity secs (json.loads accepts both) or a negative
@@ -109,7 +140,8 @@ def main():
             regressions.append((key, was, now, pct))
         elif pct < -args.warn_pct:
             improvements += 1
-    removed = len(prev) - compared
+    removed_keys = [k for k in sorted(prev) if k not in curr]
+    removed = len(removed_keys)
 
     print(
         f"bench_trend_diff: compared {compared} cells "
@@ -118,12 +150,22 @@ def main():
         f"{improvements} improvement(s), {len(new_cells)} new cell(s), "
         f"{removed} removed cell(s)"
     )
+    # Mesh cells that changed factorization between artifacts: surfaced
+    # explicitly (and never as regressions — their keys differ, so they
+    # were never ratio-compared above).
+    for key in removed_keys:
+        if is_mesh_key(key):
+            print(
+                "bench_trend_diff: removed mesh cell (renamed or "
+                f"dropped): {fmt_key(key)}"
+            )
     # Cap the listing: a schema change (e.g. a new per-bucket record
     # kind) can add a hundred cells at once, and the regression warnings
     # below are the signal this log exists for.
     max_listed = 10
     for key in new_cells[:max_listed]:
-        print(f"bench_trend_diff: new (no previous measurement): {fmt_key(key)}")
+        kind = "new mesh cell" if is_mesh_key(key) else "new"
+        print(f"bench_trend_diff: {kind} (no previous measurement): {fmt_key(key)}")
     if len(new_cells) > max_listed:
         print(
             f"bench_trend_diff: ... and {len(new_cells) - max_listed} "
