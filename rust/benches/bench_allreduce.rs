@@ -1,10 +1,25 @@
 //! All-reduce benches: host reduce_mean throughput and the chunked ring
 //! simulation, plus the alpha-beta model's predicted pod times (the
 //! communication side of Table 1 / Figure 8).
+//!
+//!     cargo bench --bench bench_allreduce            # full sweep
+//!     cargo bench --bench bench_allreduce -- --smoke # CI smoke (seconds)
+//!     cargo bench --bench bench_allreduce -- --json  # one JSON line/cell
+//!
+//! (`--test` is accepted as an alias for `--smoke`.) The quantizer and
+//! compressed-reduce sections measure the SIMD-friendly rewrites
+//! against their scalar baselines — asserting bit-identical output on
+//! every row — and report throughput; with `--json` each row is one
+//! object carrying a `"gbps"` field (input gigabytes per second,
+//! higher is better — `scripts/bench_trend_diff.py` flips the ratio
+//! direction for these cells).
 
 use std::time::Duration;
 
-use lamb_train::collective::{reduce_mean, RingAllReduce, RingCost};
+use lamb_train::collective::{
+    ef_transmit, quantize_slice, reduce_mean, reduce_mean_ef, EfResiduals,
+    Precision, RingAllReduce, RingCost, Wire,
+};
 use lamb_train::util::bench::bench;
 use lamb_train::util::Rng;
 
@@ -24,11 +39,60 @@ fn reduce_mean_naive(workers: &[&[f32]], out: &mut [f32]) {
     }
 }
 
+/// The pre-optimization error-feedback reduce: same two-stage math as
+/// `reduce_mean_ef` (per-worker transmit, f64 mean in worker order,
+/// stage-B transmit) but with the element-outer accumulation of
+/// `reduce_mean_naive` in the middle, defeating vectorization. Bitwise
+/// identical to the chunked kernel — the f64 sum visits workers in the
+/// same order per element.
+fn reduce_mean_ef_naive(
+    wire: Wire,
+    workers: &[&[f32]],
+    send: &mut [Vec<f32>],
+    recv: &mut [f32],
+    out: &mut [f32],
+) {
+    let n = out.len();
+    let k = workers.len();
+    let transmitted: Vec<Vec<f32>> = workers
+        .iter()
+        .zip(send.iter_mut())
+        .map(|(w, r)| {
+            let mut t = vec![0.0f32; n];
+            ef_transmit(wire, 0, w, Some(&mut r[..]), &mut t);
+            t
+        })
+        .collect();
+    let inv = 1.0f64 / k as f64;
+    let mut mean = vec![0.0f32; n];
+    for i in 0..n {
+        let mut acc = 0.0f64;
+        for t in &transmitted {
+            acc += t[i] as f64;
+        }
+        mean[i] = (acc * inv) as f32;
+    }
+    ef_transmit(wire, 0, &mean, Some(recv), out);
+}
+
+fn gbps(bytes: f64, median: Duration) -> f64 {
+    bytes / median.as_secs_f64() / 1e9
+}
+
 fn main() {
-    println!("== bench_allreduce ==");
+    let smoke =
+        std::env::args().any(|a| a == "--smoke" || a == "--test");
+    let json = std::env::args().any(|a| a == "--json");
+    if !json {
+        println!("== bench_allreduce ==");
+    }
     let mut rng = Rng::new(2);
-    let n = 1 << 22; // 4M floats ~ 16 MB/worker (bert-small grads ~ 5.4M)
-    for k in [2usize, 4, 8] {
+    // 4M floats ~ 16 MB/worker (bert-small grads ~ 5.4M); smoke shrinks
+    // the working set and budget so CI finishes in seconds.
+    let n = if smoke { 1 << 18 } else { 1 << 22 };
+    let budget = Duration::from_millis(if smoke { 40 } else { 400 });
+    let ks: &[usize] = if smoke { &[4] } else { &[2, 4, 8] };
+    for &k in ks {
         let bufs: Vec<Vec<f32>> = (0..k)
             .map(|_| (0..n).map(|_| rng.normal_f32(1.0)).collect())
             .collect();
@@ -36,39 +100,198 @@ fn main() {
         let mut out = vec![0.0f32; n];
         let r = bench(
             &format!("reduce_mean (naive) k={k} n={n}"),
-            Duration::from_millis(400),
+            budget,
             || reduce_mean_naive(&refs, &mut out),
         );
-        r.print_throughput((n * k) as f64, "elem");
+        let bytes = (n * k * 4) as f64;
+        if json {
+            println!(
+                "{{\"bench\":\"bench_allreduce\",\"kind\":\"reduce\",\
+                 \"path\":\"naive\",\"k\":{k},\"gbps\":{:.4}}}",
+                gbps(bytes, r.median)
+            );
+        } else {
+            r.print_throughput((n * k) as f64, "elem");
+        }
         let mut out2 = vec![0.0f32; n];
         let r = bench(
             &format!("reduce_mean (chunked) k={k} n={n}"),
-            Duration::from_millis(400),
+            budget,
             || reduce_mean(&refs, &mut out2),
         );
-        r.print_throughput((n * k) as f64, "elem");
+        if json {
+            println!(
+                "{{\"bench\":\"bench_allreduce\",\"kind\":\"reduce\",\
+                 \"path\":\"chunked\",\"k\":{k},\"gbps\":{:.4}}}",
+                gbps(bytes, r.median)
+            );
+        } else {
+            r.print_throughput((n * k) as f64, "elem");
+        }
         assert_eq!(out, out2, "chunked reduce must match naive bitwise");
     }
-    for k in [4usize, 8] {
-        let proto: Vec<Vec<f32>> = (0..k)
-            .map(|_| (0..n / 4).map(|_| rng.normal_f32(1.0)).collect())
-            .collect();
+    // Quantizer rows: the branchless chunked `quantize_slice` against
+    // the scalar per-element rounding it replaced. Bit-identical by
+    // assertion on every row.
+    for (pname, p) in [("bf16", Precision::Bf16), ("f16", Precision::F16)] {
+        let src: Vec<f32> =
+            (0..n).map(|_| rng.normal_f32(2.0)).collect();
+        let mut scalar = src.clone();
         let r = bench(
-            &format!("ring_sim k={k} n={}", n / 4),
-            Duration::from_millis(400),
+            &format!("quantize {pname} (scalar) n={n}"),
+            budget,
             || {
-                let mut bufs = proto.clone();
-                RingAllReduce::new(k).run(&mut bufs);
+                scalar.copy_from_slice(&src);
+                for x in scalar.iter_mut() {
+                    *x = p.quantize(*x);
+                }
             },
         );
-        r.print_throughput((n / 4 * k) as f64, "elem");
-    }
-    println!("\nalpha-beta model (BERT-Large grads = 1.336 GB):");
-    let c = RingCost { alpha: 4.4e-5, beta: 70e9 };
-    for k in [16usize, 64, 256, 1024] {
-        println!(
-            "  chips {k:>5}: ring all-reduce {:>8.1} ms",
-            c.time(k, 334_000_000 * 4) * 1e3
+        let bytes = (n * 4) as f64;
+        if json {
+            println!(
+                "{{\"bench\":\"bench_allreduce\",\"kind\":\"quantize\",\
+                 \"path\":\"scalar\",\"precision\":\"{pname}\",\
+                 \"gbps\":{:.4}}}",
+                gbps(bytes, r.median)
+            );
+        } else {
+            r.print_throughput(n as f64, "elem");
+        }
+        let mut chunked = src.clone();
+        let r = bench(
+            &format!("quantize {pname} (chunked) n={n}"),
+            budget,
+            || {
+                chunked.copy_from_slice(&src);
+                quantize_slice(p, &mut chunked);
+            },
         );
+        if json {
+            println!(
+                "{{\"bench\":\"bench_allreduce\",\"kind\":\"quantize\",\
+                 \"path\":\"chunked\",\"precision\":\"{pname}\",\
+                 \"gbps\":{:.4}}}",
+                gbps(bytes, r.median)
+            );
+        } else {
+            r.print_throughput(n as f64, "elem");
+        }
+        for i in 0..n {
+            assert_eq!(
+                scalar[i].to_bits(),
+                chunked[i].to_bits(),
+                "{pname} quantize diverged at {i}"
+            );
+        }
+    }
+    // Compressed error-feedback reduce rows: the chunked kernel against
+    // the element-outer baseline, per wire. Residuals reset per
+    // measured run so both paths see identical state; outputs and
+    // final residuals are asserted bit-identical.
+    for wire in [Wire::F8, Wire::OneBit] {
+        let k = 4;
+        let en = n / 4;
+        let bufs: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..en).map(|_| rng.normal_f32(1.0)).collect())
+            .collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let bytes = (en * k * 4) as f64;
+        let mut send_a: Vec<Vec<f32>> = vec![vec![0.0f32; en]; k];
+        let mut recv_a = vec![0.0f32; en];
+        let mut out_a = vec![0.0f32; en];
+        let r = bench(
+            &format!("ef_reduce {} (naive) k={k} n={en}", wire.as_str()),
+            budget,
+            || {
+                for s in send_a.iter_mut() {
+                    s.iter_mut().for_each(|x| *x = 0.0);
+                }
+                recv_a.iter_mut().for_each(|x| *x = 0.0);
+                reduce_mean_ef_naive(
+                    wire, &refs, &mut send_a, &mut recv_a, &mut out_a,
+                );
+            },
+        );
+        if json {
+            println!(
+                "{{\"bench\":\"bench_allreduce\",\"kind\":\"ef_reduce\",\
+                 \"path\":\"naive\",\"wire\":\"{}\",\"gbps\":{:.4}}}",
+                wire.as_str(),
+                gbps(bytes, r.median)
+            );
+        } else {
+            r.print_throughput((en * k) as f64, "elem");
+        }
+        let mut send_b: Vec<Vec<f32>> = vec![vec![0.0f32; en]; k];
+        let mut recv_b = vec![0.0f32; en];
+        let mut out_b = vec![0.0f32; en];
+        let r = bench(
+            &format!("ef_reduce {} (chunked) k={k} n={en}", wire.as_str()),
+            budget,
+            || {
+                for s in send_b.iter_mut() {
+                    s.iter_mut().for_each(|x| *x = 0.0);
+                }
+                recv_b.iter_mut().for_each(|x| *x = 0.0);
+                let mut sres: Vec<&mut [f32]> =
+                    send_b.iter_mut().map(|v| v.as_mut_slice()).collect();
+                reduce_mean_ef(
+                    wire,
+                    0,
+                    &refs,
+                    Some(EfResiduals {
+                        send: &mut sres,
+                        recv: &mut recv_b,
+                    }),
+                    &mut out_b,
+                );
+            },
+        );
+        if json {
+            println!(
+                "{{\"bench\":\"bench_allreduce\",\"kind\":\"ef_reduce\",\
+                 \"path\":\"chunked\",\"wire\":\"{}\",\"gbps\":{:.4}}}",
+                wire.as_str(),
+                gbps(bytes, r.median)
+            );
+        } else {
+            r.print_throughput((en * k) as f64, "elem");
+        }
+        assert_eq!(
+            out_a, out_b,
+            "{} ef reduce diverged from the naive baseline",
+            wire.as_str()
+        );
+        assert_eq!(send_a, send_b, "{} send residuals", wire.as_str());
+        assert_eq!(recv_a, recv_b, "{} recv residuals", wire.as_str());
+    }
+    if !smoke {
+        for k in [4usize, 8] {
+            let proto: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..n / 4).map(|_| rng.normal_f32(1.0)).collect())
+                .collect();
+            let r = bench(
+                &format!("ring_sim k={k} n={}", n / 4),
+                Duration::from_millis(400),
+                || {
+                    let mut bufs = proto.clone();
+                    RingAllReduce::new(k).run(&mut bufs);
+                },
+            );
+            if !json {
+                r.print_throughput((n / 4 * k) as f64, "elem");
+            }
+        }
+    }
+    if !json {
+        println!("\nalpha-beta model (BERT-Large grads = 1.336 GB):");
+        let c = RingCost { alpha: 4.4e-5, beta: 70e9 };
+        for k in [16usize, 64, 256, 1024] {
+            println!(
+                "  chips {k:>5}: ring all-reduce {:>8.1} ms",
+                c.time(k, 334_000_000 * 4) * 1e3
+            );
+        }
     }
 }

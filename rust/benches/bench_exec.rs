@@ -25,9 +25,11 @@
 //! parameter all-gathers of the zero3 timeline
 //! (`"kind":"param_gather"`, one record per bucket and pass), and the
 //! precision columns (`"kind":"precision"`, one record per ZeRO stage
-//! x {f32, bf16} carrying the step time plus the seq-512 batch cap —
-//! the mixed cap must strictly exceed f32 at every stage, which
-//! `scripts/bench_smoke.sh` re-asserts from the artifact).
+//! x {f32, bf16, f8, 1bit} carrying the step time plus the seq-512
+//! batch cap — the mixed cap must strictly exceed f32 at every stage,
+//! and the 1-bit error-feedback wire's step time must strictly beat
+//! bf16 at every stage, both of which `scripts/bench_smoke.sh`
+//! re-asserts from the artifact).
 
 use std::time::Instant;
 
@@ -215,11 +217,14 @@ fn emit_mesh(json: bool) {
 }
 
 /// Precision columns: per-ZeRO-stage step time and seq-512 batch cap
-/// for the f32 vs mixed (bf16 storage/wire + fp32 masters) pods. Pure
-/// cost-model arithmetic — cheap enough for the CI smoke artifact,
-/// which asserts the mixed cap strictly exceeds f32 per stage.
+/// for the f32 vs mixed (bf16 storage/wire + fp32 masters) pods, plus
+/// the compressed gradient wires (f8 / 1-bit error-feedback, bf16
+/// storage) riding the same mixed plan. Pure cost-model arithmetic —
+/// cheap enough for the CI smoke artifact, which asserts the mixed cap
+/// strictly exceeds f32 per stage and the 1-bit wire's step time
+/// strictly beats bf16 at every stage.
 fn emit_precision(json: bool) {
-    use lamb_train::collective::{Precision, PrecisionPlan};
+    use lamb_train::collective::{Precision, PrecisionPlan, Wire};
     let meta = bert_large_meta();
     let plan = BucketPlan::even(meta.total_params, 24);
     let parts = [
@@ -231,9 +236,12 @@ fn emit_precision(json: bool) {
     if !json {
         println!("== pod model: precision ladder (stage x dtype) ==");
     }
+    let mixed = PrecisionPlan::mixed(Precision::Bf16);
     for (pname, prec) in [
         ("f32", PrecisionPlan::F32),
-        ("bf16", PrecisionPlan::mixed(Precision::Bf16)),
+        ("bf16", mixed),
+        ("f8", mixed.with_grads_wire(Wire::F8)),
+        ("1bit", mixed.with_grads_wire(Wire::OneBit)),
     ] {
         let pod = Pod::tpu_v3_nodes(1024, 8).with_precision(prec);
         for (stage, part) in parts.iter().enumerate() {

@@ -1,0 +1,708 @@
+//! Compressed gradient wire formats with error feedback.
+//!
+//! [`Wire`] extends the storage dtypes of [`Precision`] with two compressed
+//! widths that exist only on the wire (gradients are always *stored* at a
+//! `Precision` dtype; the wire format decides what the collectives ship):
+//!
+//! * `Wire::F8` — E4M3 (1 sign, 4 exponent bits, 3 mantissa bits, bias 7,
+//!   max finite 448, no infinities). Deterministic round-to-nearest-even,
+//!   same contract as the bf16/f16 software codecs in `precision`.
+//! * `Wire::OneBit` — sign bit per element plus one fp32 scale per
+//!   [`ONEBIT_CHUNK`]-element chunk (`scale = mean |v|` over the chunk),
+//!   ~1/30 the bytes of f32 including the scale metadata.
+//!
+//! Both are lossy enough to wreck an optimizer trajectory if applied
+//! naively, so they ship as **error-feedback** collectives (1-bit
+//! Adam/LAMB style): every sender keeps a persistent fp32 residual `r`,
+//! quantizes `v = g + r`, transmits `t = Q(v)`, and stores back
+//! `r' = v - t`. The quantization errors telescope, so the compressed
+//! reduce is unbiased over steps even though each step is biased.
+//!
+//! The reduce itself is two-stage, mirroring where state lives on a pod:
+//!
+//! * **stage A (send)** — each worker quantizes its error-compensated
+//!   contribution with its own full-length residual (replicated state:
+//!   one residual per worker regardless of ZeRO stage);
+//! * **stage B (recv)** — the f64 worker-order mean of the transmitted
+//!   values is itself quantized back to the wire format at the reduce
+//!   site, with a second residual owned by whoever owns the reduced
+//!   bucket (dense: every rank holds the same copy; zero2/3: it shards
+//!   with the gradient owner).
+//!
+//! Contracts inherited from the rest of the collective stack:
+//!
+//! * **Deterministic**: accumulation is f64 in worker-index order; the
+//!   1-bit chunk scale is an f64 mean in element order. No atomics, no
+//!   arrival-order dependence.
+//! * **Offset-aligned**: 1-bit chunk boundaries are defined on *global*
+//!   element indices (`offset` = the bucket's start in the flat gradient),
+//!   so a bucket reduced dense and the same bucket reduce-scattered under
+//!   zero2/3 chunk identically — dense and sharded modes stay bitwise
+//!   equal at every wire width.
+//! * **Non-finite passthrough**: a non-finite `v` (or a 1-bit chunk whose
+//!   scale overflows) is transmitted raw and the residual update is
+//!   skipped, so the loss-scaler gate still observes the non-finite value
+//!   and residuals are never poisoned.
+//! * **F32 wire is the plain kernel**: `reduce_mean_ef` at `Wire::F32`
+//!   delegates to [`crate::collective::reduce_mean`] bit for bit.
+//!
+//! The inner loops are written as chunked, branch-light passes over fixed
+//! ranges (the same shape as `REDUCE_CHUNK` in `collective::mod`) so LLVM
+//! can autovectorize them; `benches/bench_allreduce.rs` measures them
+//! against element-at-a-time scalar baselines and asserts bitwise
+//! equality.
+
+use super::precision::{reduce_mean_quant, Precision};
+use super::{reduce_mean, REDUCE_CHUNK};
+
+/// Elements per 1-bit scale chunk. One fp32 scale is shipped per chunk, so
+/// the payload is `n/8 + 4*ceil(n/512)` bytes — ~1.03 bits/element. Chunk
+/// boundaries are aligned to global element indices (see module docs).
+pub const ONEBIT_CHUNK: usize = 512;
+
+/// Gradient wire format: what the collectives ship, independent of the
+/// storage dtype. The first three variants are exactly the `Precision`
+/// dtypes; the last two exist only on the wire.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Wire {
+    #[default]
+    F32,
+    Bf16,
+    F16,
+    /// E4M3 fp8: RNE quantize per element, 1 byte each.
+    F8,
+    /// Sign per element + fp32 scale per [`ONEBIT_CHUNK`] chunk.
+    OneBit,
+}
+
+impl Wire {
+    pub const ALL: [Wire; 5] = [Wire::F32, Wire::Bf16, Wire::F16, Wire::F8, Wire::OneBit];
+
+    /// Parse a config spelling. Accepts the `Precision` spellings plus
+    /// `"f8"`/`"e4m3"` and `"1bit"`/`"onebit"`.
+    pub fn parse(s: &str) -> Option<Wire> {
+        match s.to_ascii_lowercase().as_str() {
+            "f8" | "fp8" | "e4m3" | "float8" => Some(Wire::F8),
+            "1bit" | "onebit" | "1-bit" | "one_bit" => Some(Wire::OneBit),
+            other => Precision::parse(other).map(Wire::from_precision),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Wire::F32 => "f32",
+            Wire::Bf16 => "bf16",
+            Wire::F16 => "f16",
+            Wire::F8 => "f8",
+            Wire::OneBit => "1bit",
+        }
+    }
+
+    pub fn from_precision(p: Precision) -> Wire {
+        match p {
+            Precision::F32 => Wire::F32,
+            Precision::Bf16 => Wire::Bf16,
+            Precision::F16 => Wire::F16,
+        }
+    }
+
+    /// True for the wire-only compressed formats (f8 / 1-bit) that carry
+    /// error-feedback residual state.
+    pub fn is_compressed(&self) -> bool {
+        matches!(self, Wire::F8 | Wire::OneBit)
+    }
+
+    /// Bytes on the wire for `elems` gradient elements, including the
+    /// per-chunk scale metadata for the 1-bit format. For the uncompressed
+    /// widths this is exactly `elems * dtype_bytes`, so pod-model pricing
+    /// is unchanged when no compression is configured.
+    pub fn payload_bytes(&self, elems: usize) -> usize {
+        match self {
+            Wire::F32 => elems * 4,
+            Wire::Bf16 | Wire::F16 => elems * 2,
+            Wire::F8 => elems,
+            Wire::OneBit => elems.div_ceil(8) + 4 * elems.div_ceil(ONEBIT_CHUNK),
+        }
+    }
+
+    /// Quantize a single value through this wire format. For `OneBit` this
+    /// is undefined without chunk context and panics; use [`ef_transmit`].
+    pub fn quantize(&self, x: f32) -> f32 {
+        match self {
+            Wire::F32 => x,
+            Wire::Bf16 => Precision::Bf16.quantize(x),
+            Wire::F16 => Precision::F16.quantize(x),
+            Wire::F8 => f8_bits_to_f32(f32_to_f8_bits(x)),
+            Wire::OneBit => panic!("1-bit wire quantizes per chunk, not per element"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// E4M3 codec
+// ---------------------------------------------------------------------------
+//
+// Same structure as the f16 codec in `precision`: extract sign/exponent/
+// mantissa, rebias, shift with round-to-nearest-even on the dropped bits,
+// handle the carry-out. E4M3 departs from IEEE in two ways: there is no
+// infinity (the 0x7f mantissa pattern at max exponent is NaN, everything
+// else at e=15 is finite up to 448), and finite overflow *saturates* to
+// ±448 rather than producing a non-finite — gradients at the wire edge
+// clip instead of detonating the loss-scaler gate. f32 Inf/NaN still map
+// to the NaN pattern so non-finiteness is preserved end to end.
+
+/// f32 -> E4M3 bits with round-to-nearest-even. Deterministic, no FPU
+/// rounding-mode dependence.
+pub(crate) fn f32_to_f8_bits(x: f32) -> u8 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 24) & 0x80) as u8;
+    let exp32 = ((bits >> 23) & 0xff) as i32;
+    let man32 = bits & 0x007f_ffff;
+    if exp32 == 0xff {
+        // Inf and NaN: E4M3 has a single NaN pattern per sign and no Inf.
+        return sign | 0x7f;
+    }
+    if exp32 == 0 {
+        // f32 subnormals are < 2^-126, far below half the smallest f8
+        // subnormal (2^-10) — they all round to signed zero.
+        return sign;
+    }
+    let exp = exp32 - 127 + 7; // f8-biased exponent
+    let man = man32 | 0x0080_0000; // make the leading 1 explicit (24 bits)
+    // Normals keep 4 significant bits (23 - 3 = shift 20); subnormal
+    // results shift further so the integer result is in units of 2^-9,
+    // the f8 subnormal ulp.
+    let shift = if exp <= 0 { 21 - exp } else { 20 };
+    if shift > 24 {
+        return sign; // too small to round even to the smallest subnormal
+    }
+    let shift = shift as u32;
+    let halfway = 1u32 << (shift - 1);
+    let rem = man & ((1u32 << shift) - 1);
+    let mut out = man >> shift;
+    if rem > halfway || (rem == halfway && (out & 1) == 1) {
+        out += 1;
+    }
+    if exp <= 0 {
+        // Subnormal result; a carry to 0x8 is exactly the smallest normal
+        // (exponent field 1), which the encoding below composes naturally.
+        return sign | out as u8;
+    }
+    let mut exp = exp as u32;
+    if out >= 0x10 {
+        out >>= 1;
+        exp += 1;
+    }
+    if exp > 15 || (exp == 15 && out & 0x7 == 0x7) {
+        // Finite overflow (above 448, or rounding into the NaN pattern):
+        // saturate to the max finite magnitude.
+        return sign | 0x7e;
+    }
+    sign | ((exp << 3) as u8) | ((out & 0x7) as u8)
+}
+
+/// E4M3 bits -> f32 (exact: every finite f8 value is representable).
+pub(crate) fn f8_bits_to_f32(b: u8) -> f32 {
+    let sign = ((b & 0x80) as u32) << 24;
+    let exp = ((b >> 3) & 0x0f) as u32;
+    let man = (b & 0x07) as u32;
+    if exp == 0x0f && man == 0x07 {
+        return f32::from_bits(sign | 0x7fc0_0000); // the NaN pattern
+    }
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // signed zero
+        }
+        // Subnormal: man * 2^-9, renormalized into an f32 normal.
+        let mag = man as f32 * f32::from_bits(0x3b00_0000); // 2^-9
+        return f32::from_bits(mag.to_bits() | sign);
+    }
+    f32::from_bits(sign | ((exp + 120) << 23) | (man << 20))
+}
+
+// ---------------------------------------------------------------------------
+// Error-feedback transmit (stage A / stage B quantizer)
+// ---------------------------------------------------------------------------
+
+/// Quantize one sender's contribution into its transmitted form.
+///
+/// `t[i] = Q(g[i] + r[i])` and `r[i] = (g[i] + r[i]) - t[i]` when a
+/// residual is supplied; without one this is plain quantization of `g`.
+/// `offset` is the global element index of `g[0]`, anchoring the 1-bit
+/// chunk grid. Non-finite values pass through untouched and skip the
+/// residual update (for 1-bit, the whole affected chunk passes through,
+/// since its scale is poisoned).
+///
+/// This is the single quantization site for both EF stages: stage A calls
+/// it per worker with the send residual, stage B calls it on the f64 mean
+/// with the recv residual.
+pub fn ef_transmit(wire: Wire, offset: usize, g: &[f32], residual: Option<&mut [f32]>, t: &mut [f32]) {
+    assert_eq!(g.len(), t.len(), "transmit buffer length mismatch");
+    if let Some(r) = &residual {
+        assert_eq!(g.len(), r.len(), "residual length mismatch");
+    }
+    match wire {
+        Wire::F32 => t.copy_from_slice(g),
+        Wire::Bf16 | Wire::F16 | Wire::F8 => {
+            let q = |x: f32| wire.quantize(x);
+            match residual {
+                Some(r) => {
+                    for ((t, &g), r) in t.iter_mut().zip(g).zip(r.iter_mut()) {
+                        let v = g + *r;
+                        if v.is_finite() {
+                            let out = q(v);
+                            *t = out;
+                            *r = v - out;
+                        } else {
+                            *t = v;
+                        }
+                    }
+                }
+                None => {
+                    for (t, &g) in t.iter_mut().zip(g) {
+                        *t = if g.is_finite() { q(g) } else { g };
+                    }
+                }
+            }
+        }
+        Wire::OneBit => {
+            let mut residual = residual;
+            let mut i = 0;
+            while i < g.len() {
+                let gidx = offset + i;
+                let cend = (gidx / ONEBIT_CHUNK + 1) * ONEBIT_CHUNK;
+                let len = (cend - gidx).min(g.len() - i);
+                let r = residual.as_deref_mut().map(|r| &mut r[i..i + len]);
+                one_bit_chunk(&g[i..i + len], r, &mut t[i..i + len]);
+                i += len;
+            }
+        }
+    }
+}
+
+/// One 1-bit chunk: scale = f64 mean of |v| over the chunk, transmit
+/// `±scale` by sign of `v`. Two branch-light passes so the compiler can
+/// vectorize the |v| accumulation and the sign-select store.
+fn one_bit_chunk(g: &[f32], residual: Option<&mut [f32]>, t: &mut [f32]) {
+    // Pass 1: v = g + r into t (t doubles as the v scratch), f64 |v| sum.
+    let mut sum = 0.0f64;
+    match &residual {
+        Some(r) => {
+            for ((t, &g), &r) in t.iter_mut().zip(g).zip(r.iter()) {
+                let v = g + r;
+                *t = v;
+                sum += (v as f64).abs();
+            }
+        }
+        None => {
+            for (t, &g) in t.iter_mut().zip(g) {
+                *t = g;
+                sum += (g as f64).abs();
+            }
+        }
+    }
+    let scale = (sum / g.len() as f64) as f32;
+    if !scale.is_finite() {
+        // A non-finite v poisoned the chunk scale: transmit the raw values
+        // (already in t) and leave the residual alone.
+        return;
+    }
+    // Pass 2: sign-select ±scale, residual picks up the difference.
+    match residual {
+        Some(r) => {
+            for (t, r) in t.iter_mut().zip(r.iter_mut()) {
+                let v = *t;
+                let q = if v.is_sign_negative() { -scale } else { scale };
+                *t = q;
+                *r = v - q;
+            }
+        }
+        None => {
+            for t in t.iter_mut() {
+                let v = *t;
+                *t = if v.is_sign_negative() { -scale } else { scale };
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compressed reduce kernels
+// ---------------------------------------------------------------------------
+
+/// Error-feedback residual buffers for one reduce call: one full-range
+/// send residual per worker (stage A) plus the recv residual owned by the
+/// reduce site (stage B). Both slices cover exactly the reduced range.
+pub struct EfResiduals<'a, 'b> {
+    pub send: &'a mut [&'b mut [f32]],
+    pub recv: &'a mut [f32],
+}
+
+/// Compressed mean-reduce with error feedback.
+///
+/// `out[i] = Q_B( mean_w Q_A(workers[w][i] + r_send[w][i]) + r_recv[i] )`
+/// with the f64 worker-index-order mean of `reduce_mean`, and both
+/// quantization stages updating their residuals. With `residuals = None`
+/// (error feedback off) both stages quantize without residual state —
+/// the shape the convergence regression test shows drifting.
+///
+/// `offset` is the global element index of `out[0]` (1-bit chunk grid);
+/// `Wire::F32` is bitwise the plain `reduce_mean`, and bf16/f16 are
+/// bitwise `reduce_mean_quant` — residuals are never touched for
+/// uncompressed wires.
+pub fn reduce_mean_ef(
+    wire: Wire,
+    offset: usize,
+    workers: &[&[f32]],
+    residuals: Option<EfResiduals<'_, '_>>,
+    out: &mut [f32],
+) {
+    match wire {
+        Wire::F32 => return reduce_mean(workers, out),
+        Wire::Bf16 => return reduce_mean_quant(Precision::Bf16, workers, out),
+        Wire::F16 => return reduce_mean_quant(Precision::F16, workers, out),
+        Wire::F8 | Wire::OneBit => {}
+    }
+    let n = out.len();
+    let k = workers.len();
+    assert!(k > 0, "reduce over zero workers");
+    for w in workers {
+        assert_eq!(w.len(), n, "worker grad length mismatch");
+    }
+    let (mut send, recv) = match residuals {
+        Some(ef) => {
+            assert_eq!(ef.send.len(), k, "one send residual per worker");
+            assert_eq!(ef.recv.len(), n, "recv residual length mismatch");
+            (Some(ef.send), Some(ef.recv))
+        }
+        None => (None, None),
+    };
+    // Stage A + mean: quantize each worker's compensated contribution and
+    // accumulate it in f64, strictly in worker-index order.
+    let mut acc = vec![0.0f64; n];
+    let mut scratch = vec![0.0f32; n];
+    for (w, grads) in workers.iter().enumerate() {
+        let r = send.as_deref_mut().map(|s| &mut *s[w]);
+        ef_transmit(wire, offset, grads, r, &mut scratch);
+        accumulate_f64(&mut acc, &scratch);
+    }
+    let inv = 1.0 / k as f64;
+    for (s, a) in scratch.iter_mut().zip(acc.iter()) {
+        *s = (a * inv) as f32;
+    }
+    // Stage B: the mean goes back onto the wire, compensated by the recv
+    // residual owned by whoever owns this range.
+    ef_transmit(wire, offset, &scratch, recv, out);
+}
+
+/// Chunked f64 accumulation (`acc[i] += x[i]`), blocked like REDUCE_CHUNK
+/// so the widening add vectorizes.
+fn accumulate_f64(acc: &mut [f64], x: &[f32]) {
+    for (ac, xc) in acc.chunks_mut(REDUCE_CHUNK).zip(x.chunks(REDUCE_CHUNK)) {
+        for (a, &v) in ac.iter_mut().zip(xc) {
+            *a += v as f64;
+        }
+    }
+}
+
+/// Copy wire-formed shard values into the dense output: the all-gather
+/// counterpart of [`reduce_mean_ef`]. Values coming out of stage B are
+/// already in the wire format, so gathering them is a plain copy for the
+/// compressed wires (re-quantizing f8 is idempotent; 1-bit values are
+/// `±scale` f32s that only the reduce site could re-chunk). Uncompressed
+/// wires keep the `all_gather_quant` behavior.
+pub fn all_gather_wire(wire: Wire, shards: &[(usize, &[f32])], out: &mut [f32]) {
+    match wire {
+        Wire::F32 | Wire::F8 | Wire::OneBit => {
+            for &(start, shard) in shards {
+                out[start..start + shard.len()].copy_from_slice(shard);
+            }
+        }
+        Wire::Bf16 | Wire::F16 => {
+            let p = match wire {
+                Wire::Bf16 => Precision::Bf16,
+                _ => Precision::F16,
+            };
+            super::precision::all_gather_quant(p, shards, out);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vectorized storage quantizer (bitwise-identical to the scalar codec)
+// ---------------------------------------------------------------------------
+
+/// Branchless bf16 RNE round: same bits as `precision::bf16_round` (which
+/// early-returns on NaN), but written as straight-line bit arithmetic with
+/// a select so the whole loop body vectorizes.
+#[inline(always)]
+fn bf16_round_branchless(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let nan = (bits & 0x7fff_ffff) > 0x7f80_0000;
+    let nan_bits = (bits & 0xffff_0000) | 0x0040_0000;
+    let rounded = bits.wrapping_add(0x7fff + ((bits >> 16) & 1)) & 0xffff_0000;
+    f32::from_bits(if nan { nan_bits } else { rounded })
+}
+
+/// Quantize a slice in place through a `Precision` dtype. Bitwise-identical
+/// to mapping `p.quantize` per element, but the bf16 path uses the
+/// branchless round above and all paths run as chunked inner loops —
+/// `bench_allreduce` carries the scalar-vs-chunked rows proving the
+/// speedup and the bitwise match.
+pub fn quantize_slice(p: Precision, buf: &mut [f32]) {
+    match p {
+        Precision::F32 => {}
+        Precision::Bf16 => {
+            for chunk in buf.chunks_mut(REDUCE_CHUNK) {
+                for x in chunk.iter_mut() {
+                    *x = bf16_round_branchless(*x);
+                }
+            }
+        }
+        Precision::F16 => {
+            for chunk in buf.chunks_mut(REDUCE_CHUNK) {
+                for x in chunk.iter_mut() {
+                    *x = Precision::F16.quantize(*x);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f8_all_bit_patterns_roundtrip() {
+        // Every E4M3 bit pattern decodes to an f32 that encodes back to
+        // the same bits — including both signed zeros, all subnormals,
+        // the 448 endpoints, and the NaN pattern.
+        for b in 0..=u8::MAX {
+            let x = f8_bits_to_f32(b);
+            let back = f32_to_f8_bits(x);
+            assert_eq!(back, b, "pattern {b:#04x} -> {x} -> {back:#04x}");
+        }
+    }
+
+    #[test]
+    fn f8_known_values() {
+        assert_eq!(f8_bits_to_f32(0x7e), 448.0);
+        assert_eq!(f8_bits_to_f32(0xfe), -448.0);
+        assert_eq!(f8_bits_to_f32(0x01), f32::from_bits(0x3b00_0000)); // 2^-9
+        assert_eq!(f8_bits_to_f32(0x08), 0.015625); // 2^-6, smallest normal
+        assert_eq!(f8_bits_to_f32(0x38), 1.0);
+        assert_eq!(f8_bits_to_f32(0x39), 1.125);
+        assert!(f8_bits_to_f32(0x7f).is_nan());
+        assert!(f8_bits_to_f32(0xff).is_nan());
+        assert_eq!(f8_bits_to_f32(0x00).to_bits(), 0.0f32.to_bits());
+        assert_eq!(f8_bits_to_f32(0x80).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn f8_quantize_rounds_saturates_and_preserves_nonfinite() {
+        let q = |x: f32| Wire::F8.quantize(x);
+        assert_eq!(q(1.0), 1.0);
+        assert_eq!(q(1.05), 1.0); // nearest of {1.0, 1.125}
+        assert_eq!(q(1.0625), 1.0); // tie -> even mantissa (1.0)
+        assert_eq!(q(1.1875), 1.25); // tie -> even mantissa (1.25)
+        assert_eq!(q(447.0), 448.0);
+        assert_eq!(q(1.0e6), 448.0); // finite overflow saturates
+        assert_eq!(q(-1.0e6), -448.0);
+        assert_eq!(q(460.0), 448.0); // below the 464 midpoint
+        assert_eq!(q(470.0), 448.0); // would round into the NaN pattern
+        assert_eq!(q(464.0), 448.0); // exact tie -> even mantissa (448)
+        assert!(q(f32::INFINITY).is_nan()); // non-finite stays non-finite
+        assert!(q(f32::NAN).is_nan());
+        assert_eq!(q(1.0e-12), 0.0); // underflow to signed zero
+        assert_eq!(q(-1.0e-12).to_bits(), (-0.0f32).to_bits());
+        // RNE at the subnormal boundary: 2^-10 is halfway between 0 and
+        // the smallest subnormal 2^-9; ties go to the even mantissa (0).
+        assert_eq!(q(f32::from_bits(0x3a80_0000)), 0.0);
+    }
+
+    #[test]
+    fn f8_monotone_on_finite_grid() {
+        // Decoded finite values are strictly increasing with the bit
+        // pattern within each sign, which the codec relies on for RNE.
+        let mut prev = f8_bits_to_f32(0x00);
+        for b in 1..0x7f {
+            let x = f8_bits_to_f32(b);
+            assert!(x > prev, "non-monotone at {b:#04x}");
+            prev = x;
+        }
+    }
+
+    #[test]
+    fn one_bit_chunk_scale_is_mean_abs_and_residual_reconstructs() {
+        // Dyadic data: |v| ∈ {1, 3} -> scale 2.0, every subtraction exact.
+        let g = [1.0f32, -3.0, 3.0, -1.0];
+        let mut r = [0.0f32; 4];
+        let mut t = [0.0f32; 4];
+        ef_transmit(Wire::OneBit, 0, &g, Some(&mut r), &mut t);
+        assert_eq!(t, [2.0, -2.0, 2.0, -2.0]);
+        assert_eq!(r, [-1.0, -1.0, 1.0, 1.0]);
+        for i in 0..4 {
+            assert_eq!(t[i] + r[i], g[i], "residual + transmit reconstructs");
+        }
+    }
+
+    #[test]
+    fn one_bit_chunks_align_to_global_offset() {
+        // A range starting mid-chunk must split at the global boundary:
+        // offset 510 with 4 elements -> chunks [510,512) and [512,514).
+        let g = [1.0f32, 3.0, 5.0, 7.0];
+        let mut t = [0.0f32; 4];
+        ef_transmit(Wire::OneBit, 510, &g, None, &mut t);
+        assert_eq!(t, [2.0, 2.0, 6.0, 6.0]);
+        // Same data at an aligned offset is one chunk of mean 4.
+        ef_transmit(Wire::OneBit, 512, &g, None, &mut t);
+        assert_eq!(t, [4.0, 4.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn nonfinite_passthrough_skips_residual() {
+        // f8: the poisoned lane passes through, its residual is untouched,
+        // finite lanes still quantize.
+        let g = [1.05f32, f32::INFINITY, f32::NAN];
+        let mut r = [0.25f32, 0.5, 0.5];
+        let mut t = [0.0f32; 3];
+        ef_transmit(Wire::F8, 0, &g, Some(&mut r), &mut t);
+        assert_eq!(t[0], 1.25); // 1.05 + 0.25 = 1.3 -> 1.25
+        assert!(t[1].is_infinite() && t[2].is_nan());
+        assert_eq!(r[1], 0.5);
+        assert_eq!(r[2], 0.5);
+        // 1-bit: one Inf poisons the whole chunk's scale -> raw passthrough.
+        let g = [1.0f32, f32::INFINITY, -2.0];
+        let mut r = [0.125f32, 0.25, 0.375];
+        let mut t = [0.0f32; 3];
+        ef_transmit(Wire::OneBit, 0, &g, Some(&mut r), &mut t);
+        assert_eq!(t[0], 1.125); // v = g + r passes through raw
+        assert!(t[1].is_infinite());
+        assert_eq!(t[2], -1.625);
+        assert_eq!(r, [0.125, 0.25, 0.375]); // untouched
+    }
+
+    #[test]
+    fn reduce_mean_ef_f32_is_plain_kernel_and_ignores_residuals() {
+        let a: Vec<f32> = (0..1000).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..1000).map(|i| (i as f32).cos()).collect();
+        let workers = [a.as_slice(), b.as_slice()];
+        let mut want = vec![0.0f32; 1000];
+        reduce_mean(&workers, &mut want);
+        let mut r0 = vec![0.5f32; 1000];
+        let mut r1 = vec![0.5f32; 1000];
+        let mut recv = vec![0.5f32; 1000];
+        let mut got = vec![0.0f32; 1000];
+        {
+            let mut send: Vec<&mut [f32]> = vec![&mut r0, &mut r1];
+            reduce_mean_ef(
+                Wire::F32,
+                0,
+                &workers,
+                Some(EfResiduals { send: &mut send, recv: &mut recv }),
+                &mut got,
+            );
+        }
+        assert_eq!(got, want);
+        assert!(r0.iter().chain(r1.iter()).chain(recv.iter()).all(|&r| r == 0.5));
+    }
+
+    #[test]
+    fn reduce_mean_ef_errors_telescope() {
+        // Over many steps on a constant gradient, the EF-compressed mean
+        // tracks the true mean: the running average of transmitted values
+        // converges even though each step is heavily quantized.
+        let k = 3;
+        let n = 64;
+        let grads: Vec<Vec<f32>> = (0..k)
+            .map(|w| (0..n).map(|i| 0.01 * ((w * n + i) as f32).sin() + 0.005).collect())
+            .collect();
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let mut want = vec![0.0f32; n];
+        reduce_mean(&refs, &mut want);
+        for wire in [Wire::F8, Wire::OneBit] {
+            let mut send_bufs: Vec<Vec<f32>> = vec![vec![0.0; n]; k];
+            let mut recv = vec![0.0f32; n];
+            let steps = 400;
+            let mut avg = vec![0.0f64; n];
+            for _ in 0..steps {
+                let mut out = vec![0.0f32; n];
+                let mut send: Vec<&mut [f32]> =
+                    send_bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+                reduce_mean_ef(
+                    wire,
+                    0,
+                    &refs,
+                    Some(EfResiduals { send: &mut send, recv: &mut recv }),
+                    &mut out,
+                );
+                for (a, &o) in avg.iter_mut().zip(out.iter()) {
+                    *a += o as f64 / steps as f64;
+                }
+            }
+            for i in 0..n {
+                let err = (avg[i] - want[i] as f64).abs();
+                assert!(
+                    err < 1e-3,
+                    "{wire:?} lane {i}: averaged {} vs true {} (err {err})",
+                    avg[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_slice_bitwise_matches_scalar_codec() {
+        let mut vals: Vec<f32> = Vec::new();
+        // All 2^16 high halves (covers every exponent incl. NaN/Inf), plus
+        // low-bit patterns that exercise the RNE tie cases.
+        for h in 0..=u16::MAX {
+            vals.push(f32::from_bits((h as u32) << 16));
+            vals.push(f32::from_bits(((h as u32) << 16) | 0x8000));
+            vals.push(f32::from_bits(((h as u32) << 16) | 0x18000));
+            vals.push(f32::from_bits(((h as u32) << 16) | 0x7fff));
+        }
+        for p in [Precision::Bf16, Precision::F16] {
+            let mut chunked = vals.clone();
+            quantize_slice(p, &mut chunked);
+            for (c, &v) in chunked.iter().zip(vals.iter()) {
+                let want = p.quantize(v);
+                assert_eq!(
+                    c.to_bits(),
+                    want.to_bits(),
+                    "{p:?} diverges at input {:#010x}",
+                    v.to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn payload_bytes_match_widths() {
+        assert_eq!(Wire::F32.payload_bytes(1000), 4000);
+        assert_eq!(Wire::Bf16.payload_bytes(1000), 2000);
+        assert_eq!(Wire::F8.payload_bytes(1000), 1000);
+        // 1000 elems: 125 sign bytes + 2 chunk scales.
+        assert_eq!(Wire::OneBit.payload_bytes(1000), 125 + 8);
+        // ~1/30 of f32 at scale.
+        let n = 1 << 20;
+        let ratio = Wire::F32.payload_bytes(n) as f64 / Wire::OneBit.payload_bytes(n) as f64;
+        assert!(ratio > 29.0 && ratio < 32.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn wire_parse_and_labels() {
+        for w in Wire::ALL {
+            assert_eq!(Wire::parse(w.as_str()), Some(w));
+        }
+        assert_eq!(Wire::parse("e4m3"), Some(Wire::F8));
+        assert_eq!(Wire::parse("onebit"), Some(Wire::OneBit));
+        assert_eq!(Wire::parse("2bit"), None);
+        // The storage-precision parser must keep rejecting wire-only
+        // spellings: f8 gradients exist on the wire, not in HBM.
+        assert_eq!(Precision::parse("f8"), None);
+        assert_eq!(Precision::parse("1bit"), None);
+    }
+}

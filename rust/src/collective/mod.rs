@@ -33,6 +33,14 @@
 //! [`ReduceSchedule::wire`] threads the choice through the exec
 //! engine's reduce paths while the topology prices the halved payload.
 //!
+//! The [`compress`] submodule extends the wire axis past the storage
+//! dtypes: [`Wire`] adds E4M3 fp8 and 1-bit (sign + per-chunk scale)
+//! gradient wire formats, shipped as error-feedback collectives
+//! ([`reduce_mean_ef`]) whose persistent residuals make the compressed
+//! reduce unbiased over steps. F32 wire mode remains bitwise the plain
+//! kernel, and 1-bit chunk grids are anchored to global element offsets
+//! so dense and ZeRO-sharded reduces stay bitwise equal.
+//!
 //! ## Ring cost model
 //!
 //! A ring all-reduce over `k` ranks is a reduce-scatter followed by an
@@ -45,9 +53,14 @@
 //! owner's optimizer step). The two halves sum exactly to the all-reduce
 //! time.
 
+pub mod compress;
 pub mod precision;
 pub mod topology;
 
+pub use compress::{
+    all_gather_wire, ef_transmit, quantize_slice, reduce_mean_ef,
+    EfResiduals, Wire, ONEBIT_CHUNK,
+};
 pub use precision::{
     all_gather_quant, reduce_mean_quant, reduce_scatter_mean_quant,
     Precision, PrecisionPlan,

@@ -264,6 +264,13 @@ pub struct PrecisionPlan {
     /// steps (cast back to the storage dtype afterwards). Forced on via
     /// [`PrecisionPlan::has_master`] whenever params are half-width.
     pub master_weights: bool,
+    /// Gradient *wire* override (`[precision] grads_wire`): what the
+    /// gradient collectives actually ship. `None` derives the wire from
+    /// the gradient storage dtype (the pre-compression behavior);
+    /// `Some(Wire::F8 | Wire::OneBit)` turns on error-feedback
+    /// compressed collectives, which add fp32 residual state priced by
+    /// the cluster model.
+    pub grads_wire: Option<super::compress::Wire>,
 }
 
 impl PrecisionPlan {
@@ -273,12 +280,44 @@ impl PrecisionPlan {
         params: Precision::F32,
         grads: Precision::F32,
         master_weights: false,
+        grads_wire: None,
     };
 
     /// The paper's mixed recipe: half-width params + grads (storage and
     /// wire), fp32 master weights.
     pub fn mixed(half: Precision) -> PrecisionPlan {
-        PrecisionPlan { params: half, grads: half, master_weights: true }
+        PrecisionPlan {
+            params: half,
+            grads: half,
+            master_weights: true,
+            grads_wire: None,
+        }
+    }
+
+    /// Same plan with an explicit gradient wire format.
+    pub fn with_grads_wire(mut self, wire: super::compress::Wire) -> PrecisionPlan {
+        self.grads_wire = Some(wire);
+        self
+    }
+
+    /// The resolved gradient wire format: the explicit override, or the
+    /// gradient storage dtype when none is configured.
+    pub fn wire(&self) -> super::compress::Wire {
+        self.grads_wire
+            .unwrap_or_else(|| super::compress::Wire::from_precision(self.grads))
+    }
+
+    /// True when the gradient wire is one of the compressed formats and
+    /// therefore carries error-feedback residual state.
+    pub fn compressed_wire(&self) -> bool {
+        self.wire().is_compressed()
+    }
+
+    /// Bytes on the wire for `elems` gradient elements under the
+    /// resolved wire format (per-chunk scale metadata included) — what
+    /// the pod model prices gradient collectives at.
+    pub fn grad_wire_payload_bytes(&self, elems: usize) -> usize {
+        self.wire().payload_bytes(elems)
     }
 
     /// Anything half-width anywhere?
@@ -312,15 +351,21 @@ impl PrecisionPlan {
         }
     }
 
-    /// Short table label, e.g. `f32` or `bf16/bf16+master`.
+    /// Short table label, e.g. `f32`, `bf16/bf16+master`, or
+    /// `bf16/bf16+master+1bit-wire` when a compressed wire is configured.
     pub fn label(&self) -> String {
-        if !self.is_mixed() && !self.has_master() {
-            return self.params.as_str().to_string();
-        }
-        let mut s =
-            format!("{}/{}", self.params.as_str(), self.grads.as_str());
-        if self.has_master() {
-            s.push_str("+master");
+        let mut s = if !self.is_mixed() && !self.has_master() {
+            self.params.as_str().to_string()
+        } else {
+            let mut s =
+                format!("{}/{}", self.params.as_str(), self.grads.as_str());
+            if self.has_master() {
+                s.push_str("+master");
+            }
+            s
+        };
+        if self.compressed_wire() {
+            s.push_str(&format!("+{}-wire", self.wire().as_str()));
         }
         s
     }
@@ -552,6 +597,7 @@ mod tests {
             params: Precision::F16,
             grads: Precision::F32,
             master_weights: false,
+            grads_wire: None,
         };
         assert!(forced.has_master());
         assert_eq!(forced.master_bytes(), 4);
@@ -560,8 +606,20 @@ mod tests {
             params: Precision::F32,
             grads: Precision::Bf16,
             master_weights: true,
+            grads_wire: None,
         };
         assert!(optin.has_master() && optin.is_mixed());
         assert_eq!(PrecisionPlan::default(), PrecisionPlan::F32);
+        // The wire derives from grad storage until overridden.
+        use crate::collective::Wire;
+        assert_eq!(f.wire(), Wire::F32);
+        assert_eq!(m.wire(), Wire::Bf16);
+        let compressed = m.with_grads_wire(Wire::OneBit);
+        assert_eq!(compressed.wire(), Wire::OneBit);
+        assert!(compressed.compressed_wire() && !m.compressed_wire());
+        assert_eq!(compressed.label(), "bf16/bf16+master+1bit-wire");
+        assert_eq!(compressed.grad_wire_payload_bytes(1024), 128 + 8);
+        // Storage bytes (residents) are unaffected by the wire override.
+        assert_eq!(compressed.grad_bytes(), 2);
     }
 }

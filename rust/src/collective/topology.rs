@@ -71,9 +71,7 @@
 //! lives in this module: the axes differ only in the `k` and payload
 //! they ask this seam to price.
 
-use super::precision::{
-    all_gather_quant, reduce_mean_quant, Precision,
-};
+use super::compress::{all_gather_wire, reduce_mean_ef, EfResiduals, Wire};
 use super::RingCost;
 
 /// A concrete reduction schedule.
@@ -328,13 +326,18 @@ pub struct ReduceSchedule {
     /// Node grouping of the worker ranks (the hierarchical schedule's
     /// wire pattern); informational on the host data path.
     pub node_size: usize,
-    /// Dtype the elements cross the wire in ([`Precision::F32`] keeps
-    /// the plain kernels bitwise; half dtypes round every contribution
-    /// and result through the storage dtype —
-    /// [`super::reduce_mean_quant`]). Unlike `kind`, this is a *numeric*
-    /// choice: half wire changes bits, deterministically and rank-order
-    /// invariantly.
-    pub wire: Precision,
+    /// Format the elements cross the wire in ([`Wire::F32`] keeps the
+    /// plain kernels bitwise; half dtypes round every contribution and
+    /// result through the storage dtype; the compressed formats run the
+    /// error-feedback kernels in [`super::compress`]). Unlike `kind`,
+    /// this is a *numeric* choice: a narrow wire changes bits,
+    /// deterministically and rank-order invariantly.
+    pub wire: Wire,
+    /// Error feedback for the compressed wires: residual buffers
+    /// compensate the quantization error across steps. On by default;
+    /// turning it off (convergence regression tests do) quantizes
+    /// without residual state. Ignored by the uncompressed wires.
+    pub error_feedback: bool,
 }
 
 impl Default for ReduceSchedule {
@@ -342,7 +345,8 @@ impl Default for ReduceSchedule {
         ReduceSchedule {
             kind: ScheduleKind::Ring,
             node_size: 1,
-            wire: Precision::F32,
+            wire: Wire::F32,
+            error_feedback: true,
         }
     }
 }
@@ -352,48 +356,53 @@ impl ReduceSchedule {
         ReduceSchedule {
             kind,
             node_size: node_size.max(1),
-            wire: Precision::F32,
+            wire: Wire::F32,
+            error_feedback: true,
         }
     }
 
-    /// Same schedule, elements crossing the wire in `wire` dtype.
-    pub fn with_wire(mut self, wire: Precision) -> ReduceSchedule {
+    /// Same schedule, elements crossing the wire in `wire` format.
+    pub fn with_wire(mut self, wire: Wire) -> ReduceSchedule {
         self.wire = wire;
         self
     }
 
-    /// Static telemetry counter name `wire_bytes.<op>.<wire dtype>` —
+    /// Same schedule with error feedback toggled (compressed wires only).
+    pub fn with_error_feedback(mut self, on: bool) -> ReduceSchedule {
+        self.error_feedback = on;
+        self
+    }
+
+    /// Static telemetry counter name `wire_bytes.<op>.<wire format>` —
     /// the host-trace recorder takes `&'static str` names so the hot
     /// path never allocates.
     fn wire_counter(&self, op: CollOp) -> &'static str {
         match (op, self.wire) {
-            (CollOp::AllReduce, Precision::F32) => {
-                "wire_bytes.all_reduce.f32"
-            }
-            (CollOp::AllReduce, Precision::Bf16) => {
-                "wire_bytes.all_reduce.bf16"
-            }
-            (CollOp::AllReduce, Precision::F16) => {
-                "wire_bytes.all_reduce.f16"
-            }
-            (CollOp::ReduceScatter, Precision::F32) => {
+            (CollOp::AllReduce, Wire::F32) => "wire_bytes.all_reduce.f32",
+            (CollOp::AllReduce, Wire::Bf16) => "wire_bytes.all_reduce.bf16",
+            (CollOp::AllReduce, Wire::F16) => "wire_bytes.all_reduce.f16",
+            (CollOp::AllReduce, Wire::F8) => "wire_bytes.all_reduce.f8",
+            (CollOp::AllReduce, Wire::OneBit) => "wire_bytes.all_reduce.1bit",
+            (CollOp::ReduceScatter, Wire::F32) => {
                 "wire_bytes.reduce_scatter.f32"
             }
-            (CollOp::ReduceScatter, Precision::Bf16) => {
+            (CollOp::ReduceScatter, Wire::Bf16) => {
                 "wire_bytes.reduce_scatter.bf16"
             }
-            (CollOp::ReduceScatter, Precision::F16) => {
+            (CollOp::ReduceScatter, Wire::F16) => {
                 "wire_bytes.reduce_scatter.f16"
             }
-            (CollOp::AllGather, Precision::F32) => {
-                "wire_bytes.all_gather.f32"
+            (CollOp::ReduceScatter, Wire::F8) => {
+                "wire_bytes.reduce_scatter.f8"
             }
-            (CollOp::AllGather, Precision::Bf16) => {
-                "wire_bytes.all_gather.bf16"
+            (CollOp::ReduceScatter, Wire::OneBit) => {
+                "wire_bytes.reduce_scatter.1bit"
             }
-            (CollOp::AllGather, Precision::F16) => {
-                "wire_bytes.all_gather.f16"
-            }
+            (CollOp::AllGather, Wire::F32) => "wire_bytes.all_gather.f32",
+            (CollOp::AllGather, Wire::Bf16) => "wire_bytes.all_gather.bf16",
+            (CollOp::AllGather, Wire::F16) => "wire_bytes.all_gather.f16",
+            (CollOp::AllGather, Wire::F8) => "wire_bytes.all_gather.f8",
+            (CollOp::AllGather, Wire::OneBit) => "wire_bytes.all_gather.1bit",
         }
     }
 
@@ -402,26 +411,64 @@ impl ReduceSchedule {
     /// [`super::reduce_mean`] by construction at f32 wire (a ring
     /// streams the flat rank order; a pipelined chain tree and a
     /// hierarchical leader chain folding node groups in rank order
-    /// perform the same op sequence). A half-width wire quantizes each
-    /// contribution and the mean through the storage dtype — still one
-    /// deterministic rank-order kernel for every kind.
+    /// perform the same op sequence). A narrower wire quantizes each
+    /// contribution and the mean through the wire format — still one
+    /// deterministic rank-order kernel for every kind. This entry point
+    /// reduces a range starting at global element 0 with no residual
+    /// state; the exec engine's bucketed paths use
+    /// [`ReduceSchedule::reduce_mean_ef`].
     pub fn reduce_mean(&self, workers: &[&[f32]], out: &mut [f32]) {
+        self.reduce_mean_ef(0, workers, None, out);
+    }
+
+    /// [`ReduceSchedule::reduce_mean`] with the compressed-wire context:
+    /// `offset` anchors the 1-bit chunk grid to the bucket's position in
+    /// the flat gradient (so dense and ZeRO-sharded reduces chunk
+    /// identically), and `residuals` carries the error-feedback state.
+    /// Residuals are ignored when error feedback is off or the wire is
+    /// uncompressed.
+    pub fn reduce_mean_ef(
+        &self,
+        offset: usize,
+        workers: &[&[f32]],
+        residuals: Option<EfResiduals<'_, '_>>,
+        out: &mut [f32],
+    ) {
         if crate::trace::host::enabled() {
             crate::trace::host::counter(
                 self.wire_counter(CollOp::AllReduce),
-                (out.len() * self.wire.bytes()) as f64,
+                self.wire.payload_bytes(out.len()) as f64,
             );
         }
-        reduce_mean_quant(self.wire, workers, out);
+        let residuals = if self.error_feedback { residuals } else { None };
+        reduce_mean_ef(self.wire, offset, workers, residuals, out);
     }
 
     /// Reduce-scatter (mean) of the flat range `[start, end)` — the
-    /// ZeRO-2 half. Same schedule-invariance contract.
+    /// ZeRO-2 half. Same schedule-invariance contract. Range starts are
+    /// worker-buffer-local; `offset` (see
+    /// [`ReduceSchedule::reduce_mean_ef`]) is added on top to anchor the
+    /// 1-bit chunk grid globally.
     pub fn reduce_scatter_mean(
         &self,
         workers: &[&[f32]],
         start: usize,
         end: usize,
+        out: &mut [f32],
+    ) {
+        self.reduce_scatter_mean_ef(0, workers, start, end, None, out);
+    }
+
+    /// [`ReduceSchedule::reduce_scatter_mean`] with compressed-wire
+    /// context (global offset + error-feedback residuals covering the
+    /// scattered range).
+    pub fn reduce_scatter_mean_ef(
+        &self,
+        offset: usize,
+        workers: &[&[f32]],
+        start: usize,
+        end: usize,
+        residuals: Option<EfResiduals<'_, '_>>,
         out: &mut [f32],
     ) {
         assert!(start <= end, "inverted range");
@@ -436,12 +483,13 @@ impl ReduceSchedule {
         if crate::trace::host::enabled() {
             crate::trace::host::counter(
                 self.wire_counter(CollOp::ReduceScatter),
-                ((end - start) * self.wire.bytes()) as f64,
+                self.wire.payload_bytes(end - start) as f64,
             );
         }
+        let residuals = if self.error_feedback { residuals } else { None };
         // Straight to the kernel — routing through `reduce_mean` would
         // double-count the payload as an all-reduce.
-        reduce_mean_quant(self.wire, &slices, out);
+        reduce_mean_ef(self.wire, offset + start, &slices, residuals, out);
     }
 
     /// All-gather: stitch owner chunks back into the flat vector —
@@ -449,16 +497,18 @@ impl ReduceSchedule {
     /// pattern, which the cost model prices). At f32 wire a pure copy;
     /// a half wire rounds each element through the storage dtype (a
     /// no-op for chunks already holding storage-dtype values —
-    /// quantization is idempotent).
+    /// quantization is idempotent). The compressed wires gather values
+    /// that already came out of the stage-B quantizer, so they copy raw
+    /// while the counter prices the compressed payload.
     pub fn all_gather(&self, shards: &[(usize, &[f32])], out: &mut [f32]) {
         if crate::trace::host::enabled() {
             let elems: usize = shards.iter().map(|(_, s)| s.len()).sum();
             crate::trace::host::counter(
                 self.wire_counter(CollOp::AllGather),
-                (elems * self.wire.bytes()) as f64,
+                self.wire.payload_bytes(elems) as f64,
             );
         }
-        all_gather_quant(self.wire, shards, out);
+        all_gather_wire(self.wire, shards, out);
     }
 }
 

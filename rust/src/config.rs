@@ -207,7 +207,10 @@ impl TopologyConfig {
 /// ```toml
 /// [precision]
 /// params = "bf16"        # f32 | bf16 | f16 — storage + wire dtype
-/// grads  = "bf16"        # f32 | bf16 | f16 — gradient wire dtype
+/// grads  = "bf16"        # f32 | bf16 | f16 — gradient storage dtype
+/// grads_wire = "1bit"    # f32 | bf16 | f16 | f8 | 1bit — gradient wire
+///                        # format; default: the grads storage dtype.
+///                        # f8/1bit are error-feedback compressed.
 /// master_weights = true  # default: forced on when params are half
 /// loss_scale = "dynamic" # "none" | "dynamic" | a fixed scale >= 1
 /// ```
@@ -223,6 +226,10 @@ pub struct PrecisionConfig {
     pub params: crate::collective::Precision,
     /// Gradient storage + wire dtype.
     pub grads: crate::collective::Precision,
+    /// Gradient wire-format override; `None` derives the wire from the
+    /// gradient storage dtype. `f8`/`1bit` turn on error-feedback
+    /// compressed collectives.
+    pub grads_wire: Option<crate::collective::Wire>,
     /// fp32 master-weight copy; `None` = auto (on iff params are
     /// half-width). Explicitly disabling it with half params is a
     /// config error.
@@ -249,6 +256,7 @@ impl Default for PrecisionConfig {
         PrecisionConfig {
             params: crate::collective::Precision::F32,
             grads: crate::collective::Precision::F32,
+            grads_wire: None,
             master_weights: None,
             loss_scale: LossScaleConfig::None,
         }
@@ -264,6 +272,7 @@ impl PrecisionConfig {
             master_weights: self.master_weights.unwrap_or(
                 self.params != crate::collective::Precision::F32,
             ),
+            grads_wire: self.grads_wire,
         }
     }
 
@@ -668,6 +677,22 @@ impl TrainConfig {
         if let Some(p) = get_precision("precision.grads")? {
             c.precision.grads = p;
         }
+        if let Some(raw) = doc.get("precision.grads_wire") {
+            let s = raw.as_str().ok_or_else(|| {
+                anyhow!(
+                    "precision.grads_wire must be a string \
+                     \"f32\"|\"bf16\"|\"f16\"|\"f8\"|\"1bit\" (got {raw:?})"
+                )
+            })?;
+            c.precision.grads_wire = Some(
+                crate::collective::Wire::parse(s).ok_or_else(|| {
+                    anyhow!(
+                        "unknown precision.grads_wire {s:?} \
+                         (expected f32|bf16|f16|f8|1bit)"
+                    )
+                })?,
+            );
+        }
         if let Some(raw) = doc.get("precision.master_weights") {
             c.precision.master_weights = Some(raw.as_bool().ok_or_else(
                 || {
@@ -879,6 +904,15 @@ impl TrainConfig {
                      has no gradient wire); use the distributed step \
                      path",
                     self.precision.grads.as_str()
+                );
+            }
+            if self.precision.plan().compressed_wire() {
+                bail!(
+                    "step_path = \"fused\" is incompatible with \
+                     precision.grads_wire = \"{}\" (the single fused \
+                     worker has no gradient wire to compress); use the \
+                     distributed step path",
+                    self.precision.plan().wire().as_str()
                 );
             }
         }
@@ -1169,6 +1203,30 @@ betas = [0.9, 0.999]
         .unwrap();
         assert_eq!(c.precision.grads, Precision::F16);
         assert!(!c.precision.plan().has_master());
+        // compressed gradient wire: storage stays f32, only the
+        // collective payload narrows (error-feedback makes it safe)
+        use crate::collective::Wire;
+        for (spelling, wire) in [("\"f8\"", Wire::F8), ("\"1bit\"", Wire::OneBit)]
+        {
+            let c = TrainConfig::load(
+                None,
+                &[("precision.grads_wire".into(), spelling.into())],
+            )
+            .unwrap();
+            assert_eq!(c.precision.grads_wire, Some(wire));
+            assert_eq!(c.precision.plan().wire(), wire);
+            assert!(c.precision.plan().compressed_wire());
+            assert_eq!(c.precision.grads, Precision::F32);
+        }
+        // unset wire derives from grads storage
+        let c = TrainConfig::load(
+            None,
+            &[("precision.grads".into(), "\"bf16\"".into())],
+        )
+        .unwrap();
+        assert_eq!(c.precision.grads_wire, None);
+        assert_eq!(c.precision.plan().wire(), Wire::Bf16);
+        assert!(!c.precision.plan().compressed_wire());
     }
 
     /// Mistyped `[precision]` values are hard errors (like
@@ -1193,6 +1251,10 @@ betas = [0.9, 0.999]
         // wrong value
         assert!(bad(&[("precision.params", "\"fp8\"")]));
         assert!(bad(&[("precision.grads", "\"half\"")]));
+        assert!(bad(&[("precision.grads_wire", "8")]));
+        assert!(bad(&[("precision.grads_wire", "true")]));
+        assert!(bad(&[("precision.grads_wire", "\"2bit\"")]));
+        assert!(bad(&[("precision.grads_wire", "\"int8\"")]));
         assert!(bad(&[("precision.loss_scale", "\"auto\"")]));
         assert!(bad(&[("precision.loss_scale", "0.5")]));
         assert!(bad(&[("precision.loss_scale", "-2")]));
@@ -1210,6 +1272,10 @@ betas = [0.9, 0.999]
         assert!(bad(&[
             ("run.step_path", "\"fused\""),
             ("precision.grads", "\"bf16\""),
+        ]));
+        assert!(bad(&[
+            ("run.step_path", "\"fused\""),
+            ("precision.grads_wire", "\"1bit\""),
         ]));
         for stage in ["1", "2", "3"] {
             assert!(bad(&[

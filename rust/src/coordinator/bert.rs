@@ -23,13 +23,13 @@ use anyhow::{bail, Context, Result};
 
 use crate::cluster::{Mesh, Pod, StatePartition};
 use crate::collective::{
-    self, CollOp, Precision, ReduceSchedule, SchedulePolicy,
+    self, CollOp, Precision, ReduceSchedule, SchedulePolicy, Wire,
 };
 use crate::config::{StepPath, TrainConfig};
 use crate::data::{Batch, Corpus, MlmConfig, MlmGenerator};
 use crate::exec::{
-    bucketed_reduce_with, BucketPlan, ExecMode, Zero1State, Zero2State,
-    Zero3State,
+    bucketed_reduce_ef, bucketed_reduce_with, BucketPlan, ExecMode,
+    Zero1State, Zero2State, Zero3State,
 };
 use crate::manifest::{ArtifactKind, Manifest, ModelMeta};
 use crate::metrics::{DivergenceDetector, RunLog, StepComm, StepRecord};
@@ -108,6 +108,17 @@ pub struct BertTrainer<'e> {
     zero3: Option<Zero3State>,
     /// Per-worker gradient accumulators (bucketed modes; stage-sized).
     worker_grads: Vec<Vec<f32>>,
+    /// Error-feedback send residuals for the compressed gradient wires
+    /// (`[precision] grads_wire = "f8" | "1bit"`): one full-length fp32
+    /// buffer per worker in the bucketed modes (rebuilt alongside
+    /// `worker_grads` when the worker count changes), or a single
+    /// buffer for the serial path's monolithic transmit. Holds what the
+    /// wire dropped last step; re-sent with the next gradient, so the
+    /// quantization error telescopes instead of accumulating.
+    send_res: Vec<Vec<f32>>,
+    /// Error-feedback recv residuals, one per bucket: the reduce-site
+    /// quantization error of the worker-mean (bucketed modes only).
+    recv_res: Vec<Vec<f32>>,
     /// Gradient loss scaler (`[precision] loss_scale`): the per-worker
     /// gradients are scaled *before* they cross the (possibly
     /// half-width) wire, unscaled from the reduced gradient before the
@@ -170,18 +181,23 @@ impl<'e> BertTrainer<'e> {
         pod.precision = prec;
         // Numeric staging schedule: a fixed policy is taken as-is; auto
         // resolves to the topology's pick for the whole flat gradient
-        // (priced at the gradient wire dtype). The wire dtype itself
-        // comes from `[precision] grads`.
+        // (priced at the gradient wire payload, so a compressed wire
+        // can flip the pick). The wire format comes from `[precision]
+        // grads_wire`, defaulting to the grads storage dtype.
         let reduce_kind = match cfg.topology.policy {
             SchedulePolicy::Fixed(kind) => kind,
             SchedulePolicy::Auto => {
                 pod.topology
-                    .pick(CollOp::AllReduce, cfg.chips, n * prec.grad_bytes())
+                    .pick(
+                        CollOp::AllReduce,
+                        cfg.chips,
+                        prec.grad_wire_payload_bytes(n),
+                    )
                     .0
             }
         };
         let reduce = ReduceSchedule::new(reduce_kind, cfg.topology.node_size)
-            .with_wire(prec.grads);
+            .with_wire(prec.wire());
         // 3D-parallel mesh: `[mesh]` axes resolved over the pod's chips
         // (config already checked the factorization and the tp-vs-node
         // rule); the model-dependent rules need the manifest and are
@@ -258,6 +274,8 @@ impl<'e> BertTrainer<'e> {
             zero2,
             zero3,
             worker_grads: Vec::new(),
+            send_res: Vec::new(),
+            recv_res: Vec::new(),
             scaler,
             params: flat,
             m: vec![0.0; n],
@@ -506,6 +524,29 @@ impl<'e> BertTrainer<'e> {
             self.worker_grads =
                 (0..workers).map(|_| vec![0.0f32; n]).collect();
         }
+        // Error-feedback residual state for the compressed wires. A
+        // worker-count change invalidates the per-worker send residuals
+        // (their content belongs to the old sharding), so they are
+        // rebuilt zeroed alongside `worker_grads`; the per-bucket recv
+        // residuals survive re-sharding (the reduce site is
+        // worker-independent).
+        let ef_on =
+            self.reduce.wire.is_compressed() && self.reduce.error_feedback;
+        if ef_on {
+            let ef_workers = if bucketed { workers } else { 1 };
+            if self.send_res.len() != ef_workers {
+                self.send_res =
+                    (0..ef_workers).map(|_| vec![0.0f32; n]).collect();
+            }
+            if bucketed && self.recv_res.len() != self.plan.len() {
+                self.recv_res = self
+                    .plan
+                    .buckets
+                    .iter()
+                    .map(|bk| vec![0.0f32; bk.len()])
+                    .collect();
+            }
+        }
 
         for local in 1..=stage.steps {
             self.step += 1;
@@ -561,12 +602,23 @@ impl<'e> BertTrainer<'e> {
                 // -------- bucketed all-reduce (schedule-staged) --------
                 let refs: Vec<&[f32]> =
                     self.worker_grads.iter().map(|g| g.as_slice()).collect();
-                bucketed_reduce_with(
-                    &self.reduce,
-                    &self.plan,
-                    &refs,
-                    &mut self.grad_acc,
-                );
+                if ef_on {
+                    bucketed_reduce_ef(
+                        &self.reduce,
+                        &self.plan,
+                        &refs,
+                        &mut self.send_res,
+                        &mut self.recv_res,
+                        &mut self.grad_acc,
+                    );
+                } else {
+                    bucketed_reduce_with(
+                        &self.reduce,
+                        &self.plan,
+                        &refs,
+                        &mut self.grad_acc,
+                    );
+                }
                 let loss = (loss_sum / n_micro as f64) as f32;
                 // -------- unscale gate: divide the scale back out of
                 // the reduced gradient before the optimizer step, or
@@ -636,30 +688,45 @@ impl<'e> BertTrainer<'e> {
                 // -------- all-reduce (mean) --------
                 collective::scale(&mut self.grad_acc, 1.0 / n_micro as f32);
                 let loss = (loss_sum / n_micro as f64) as f32;
-                // -------- wire dtype + loss-scaling gate: this path
+                // -------- wire format + loss-scaling gate: this path
                 // simulates one monolithic all-reduce, and that reduce
-                // still crosses the interconnect in the grads dtype
-                // (what the pod's step_time prices). Scale before the
-                // wire so small components survive it; at f32 wire the
+                // still crosses the interconnect in the gradient wire
+                // format (what the pod's step_time prices). All
+                // quantization goes through the single error-feedback
+                // transmit site: the compressed wires carry their
+                // residual (what the wire dropped last step, re-sent
+                // with this one), the half wires quantize per element,
+                // f32 passes through untouched. Scale before the wire
+                // so small components survive it; at f32 wire the
                 // scale round-trip is exact, so only the non-finite
                 // gate runs. --------
                 let wire = self.reduce.wire;
-                let step_ok = match self.scaler.as_mut() {
-                    Some(sc) if wire != Precision::F32 => {
+                let step_ok = if wire != Wire::F32 {
+                    if let Some(sc) = self.scaler.as_mut() {
                         sc.apply(&mut self.grad_acc);
-                        for g in self.grad_acc.iter_mut() {
-                            *g = wire.quantize(*g);
-                        }
-                        sc.unscale(&mut self.grad_acc)
                     }
-                    Some(sc) => sc.observe(&self.grad_acc),
-                    None => {
-                        if wire != Precision::F32 {
-                            for g in self.grad_acc.iter_mut() {
-                                *g = wire.quantize(*g);
-                            }
-                        }
-                        true
+                    let residual = if ef_on {
+                        Some(&mut self.send_res[0][..])
+                    } else {
+                        None
+                    };
+                    let mut t = vec![0.0f32; n];
+                    collective::ef_transmit(
+                        wire,
+                        0,
+                        &self.grad_acc,
+                        residual,
+                        &mut t,
+                    );
+                    self.grad_acc.copy_from_slice(&t);
+                    match self.scaler.as_mut() {
+                        Some(sc) => sc.unscale(&mut self.grad_acc),
+                        None => true,
+                    }
+                } else {
+                    match self.scaler.as_mut() {
+                        Some(sc) => sc.observe(&self.grad_acc),
+                        None => true,
                     }
                 };
                 let ratios =
@@ -779,17 +846,16 @@ impl<'e> BertTrainer<'e> {
     /// precisions); the dense native path exports the optimizer's
     /// moments; the artifact path uses the trainer-held `m`/`v`.
     ///
-    /// Known limitation (ROADMAP follow-up): the dynamic loss-scaler
-    /// state is *not* part of the format — a resumed scaled run
-    /// restarts at the configured initial scale and re-converges via
-    /// skip-and-halve (a handful of skipped steps), so scaled resumes
-    /// are correct but not step-identical to the uninterrupted run.
+    /// The dynamic loss-scaler state rides along in the V2 scaler
+    /// block (scale bits + stable/skip/growth counters), so a resumed
+    /// scaled run continues the skip-and-halve dynamics bitwise
+    /// instead of restarting at the configured initial scale.
     pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
         self.to_checkpoint().save(path)
     }
 
     fn to_checkpoint(&self) -> Checkpoint {
-        if let Some(z) = &self.zero3 {
+        let mut c = if let Some(z) = &self.zero3 {
             z.checkpoint(&self.plan, self.step)
         } else if let Some(z) = &self.zero2 {
             z.checkpoint(self.step, &self.params)
@@ -803,8 +869,11 @@ impl<'e> BertTrainer<'e> {
                 params: self.params.clone(),
                 m: self.m.clone(),
                 v: self.v.clone(),
+                scaler: None,
             }
-        }
+        };
+        c.scaler = self.scaler.as_ref().map(|s| s.export_state());
+        c
     }
 
     /// Restore state saved by `save_checkpoint`; step counting resumes.
@@ -822,6 +891,13 @@ impl<'e> BertTrainer<'e> {
             self.meta.total_params
         );
         self.step = c.step;
+        // Scaler snapshot: restored bitwise when this run also scales
+        // (an unscaled resume of a scaled save just drops the block; a
+        // scaled resume of a V1/unscaled save keeps the configured
+        // initial scale).
+        if let (Some(sc), Some(st)) = (self.scaler.as_mut(), c.scaler) {
+            sc.restore_state(st);
+        }
         if let Some(z) = self.zero3.as_mut() {
             z.restore(&self.plan, &c);
             // refresh the transient view so anything inspecting params

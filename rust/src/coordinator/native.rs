@@ -747,6 +747,87 @@ mod tests {
         }
     }
 
+    /// Convergence regression for the compressed gradient wires
+    /// (`[precision] grads_wire`): with error feedback on, the f8 and
+    /// 1-bit runs keep LAMB's trajectory — the final loss lands within
+    /// tolerance of the f32-wire run — while turning the residual off
+    /// (1-bit, the harshest wire) demonstrably deviates further from
+    /// the f32 trajectory than the error-feedback run does. The
+    /// trajectory distance integrates the per-step loss gap over the
+    /// whole run, so the persistent bias of residual-free sign
+    /// quantization accumulates instead of being sampled at one noisy
+    /// endpoint.
+    #[test]
+    fn compressed_wire_error_feedback_tracks_f32_trajectory() {
+        use crate::collective::{PrecisionPlan, Wire};
+        let spec = NativeTask::mnist_proxy();
+        let sched = Schedule::WarmupPoly {
+            base: 0.02,
+            warmup: 10,
+            total: 200,
+            power: 1.0,
+        };
+        let run = |wire: Option<Wire>, ef: bool| {
+            let mut cfg = ExecConfig {
+                mode: ExecMode::Parallel,
+                workers: 2,
+                bucket_bytes: 1 << 12,
+                ..ExecConfig::default()
+            };
+            if let Some(w) = wire {
+                cfg.prec = PrecisionPlan::F32.with_grads_wire(w);
+            }
+            if !ef {
+                cfg.reduce = cfg.reduce.with_error_feedback(false);
+            }
+            let mut tr = NativeTrainer::with_exec(
+                &spec,
+                "lamb",
+                Hyper::default(),
+                sched.clone(),
+                3,
+                cfg,
+            );
+            let log = tr.train(200, 64);
+            (log.losses(), log.tail_loss(20), log.diverged)
+        };
+        let dist = |a: &[f32], b: &[f32]| {
+            a.iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs() as f64)
+                .sum::<f64>()
+        };
+        let (base_losses, base_tail, base_div) = run(None, true);
+        assert!(!base_div);
+        let mut ef_losses = Vec::new();
+        for wire in [Wire::F8, Wire::OneBit] {
+            let (losses, tail, diverged) = run(Some(wire), true);
+            assert!(!diverged, "{wire:?} EF run diverged");
+            assert!(
+                tail < 0.8 * losses[0],
+                "{wire:?} EF run failed to train: tail {tail} vs first {}",
+                losses[0]
+            );
+            assert!(
+                (tail - base_tail).abs() < 0.5 * base_tail + 0.1,
+                "{wire:?} EF tail {tail} too far from f32 tail {base_tail}"
+            );
+            ef_losses = losses;
+        }
+        // residual-off arm: same 1-bit wire, no error feedback — the
+        // quantization bias persists and the trajectory drifts further
+        // from f32 than the error-feedback run's does
+        let (noef_losses, _, noef_div) = run(Some(Wire::OneBit), false);
+        let steps = ef_losses.len().min(noef_losses.len()).min(base_losses.len());
+        let d_ef = dist(&ef_losses[..steps], &base_losses[..steps]);
+        let d_noef = dist(&noef_losses[..steps], &base_losses[..steps]);
+        assert!(
+            noef_div || d_noef > d_ef,
+            "residual-off must deviate further from the f32 trajectory: \
+             no-EF distance {d_noef} vs EF distance {d_ef}"
+        );
+    }
+
     /// The tracing acceptance contract: hooks read clocks and metadata
     /// only, so a traced run is bitwise-identical to an untraced one —
     /// same per-step losses, same final parameter bits — while still

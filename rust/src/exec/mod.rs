@@ -81,7 +81,7 @@ pub use zero::{
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::collective::{PrecisionPlan, ReduceSchedule};
+use crate::collective::{EfResiduals, PrecisionPlan, ReduceSchedule};
 use crate::metrics::StepComm;
 use crate::optim::Seg;
 use crate::trace::host as thost;
@@ -287,7 +287,44 @@ pub fn bucketed_reduce_with(
     for bk in &plan.buckets {
         let refs: Vec<&[f32]> =
             workers.iter().map(|w| &w[bk.start..bk.end]).collect();
-        sched.reduce_mean(&refs, &mut out[bk.start..bk.end]);
+        // Bucket start as the global offset keeps the compressed wires'
+        // chunk grids anchored (a no-op for the uncompressed formats).
+        sched.reduce_mean_ef(bk.start, &refs, None, &mut out[bk.start..bk.end]);
+    }
+}
+
+/// [`bucketed_reduce_with`] carrying error-feedback residual state for
+/// the compressed wires: one full-length send residual per worker and one
+/// recv residual per bucket (`recv[b].len() == plan.buckets[b].len()`).
+/// The artifact coordinator's monolithic reduce path uses this; the exec
+/// engine threads the same state through [`Gather`] bucket by bucket.
+pub fn bucketed_reduce_ef(
+    sched: &ReduceSchedule,
+    plan: &BucketPlan,
+    workers: &[&[f32]],
+    send: &mut [Vec<f32>],
+    recv: &mut [Vec<f32>],
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), plan.n, "output length != plan coverage");
+    assert_eq!(send.len(), workers.len(), "one send residual per worker");
+    assert_eq!(recv.len(), plan.len(), "one recv residual per bucket");
+    for w in workers {
+        assert_eq!(w.len(), plan.n, "worker buffer length != plan coverage");
+    }
+    for (bk, recv) in plan.buckets.iter().zip(recv.iter_mut()) {
+        let refs: Vec<&[f32]> =
+            workers.iter().map(|w| &w[bk.start..bk.end]).collect();
+        let mut slices: Vec<&mut [f32]> = send
+            .iter_mut()
+            .map(|r| &mut r[bk.start..bk.end])
+            .collect();
+        sched.reduce_mean_ef(
+            bk.start,
+            &refs,
+            Some(EfResiduals { send: &mut slices, recv }),
+            &mut out[bk.start..bk.end],
+        );
     }
 }
 
@@ -322,32 +359,59 @@ impl Gather {
 
     /// Reduce bucket `b` into the full output buffer through the
     /// configured reduction schedule (bitwise-identical across kinds).
+    /// `ef` is the error-feedback state for compressed wires: the
+    /// full-length per-worker send residuals (sliced to the bucket here)
+    /// plus the bucket's recv residual.
     pub(crate) fn reduce_into(
         &self,
         plan: &BucketPlan,
         b: usize,
         out: &mut [f32],
         sched: &ReduceSchedule,
+        ef: Option<(&mut [Vec<f32>], &mut [f32])>,
     ) {
         let bk = &plan.buckets[b];
         let refs: Vec<&[f32]> = self.parts[b]
             .iter()
             .map(|p| p.as_deref().expect("incomplete bucket"))
             .collect();
-        sched.reduce_mean(&refs, &mut out[bk.start..bk.end]);
+        match ef {
+            Some((send, recv)) => {
+                let mut slices: Vec<&mut [f32]> = send
+                    .iter_mut()
+                    .map(|r| &mut r[bk.start..bk.end])
+                    .collect();
+                sched.reduce_mean_ef(
+                    bk.start,
+                    &refs,
+                    Some(EfResiduals { send: &mut slices, recv }),
+                    &mut out[bk.start..bk.end],
+                );
+            }
+            None => sched.reduce_mean_ef(
+                bk.start,
+                &refs,
+                None,
+                &mut out[bk.start..bk.end],
+            ),
+        }
     }
 
     /// ZeRO-2 completion: reduce-scatter bucket `b` into the owner's
     /// bucket-local shard instead of the full buffer. The payloads are
     /// already bucket-local, so the owner's chunk is the whole range and
     /// the scatter is one schedule-dispatched mean into the shard —
-    /// bitwise-identical to the same range of [`Gather::reduce_into`].
+    /// bitwise-identical to the same range of [`Gather::reduce_into`]
+    /// (the error-feedback residuals, sliced to the same ranges and
+    /// anchored to the same global offset, see to that at the compressed
+    /// wires too).
     pub(crate) fn scatter_into(
         &self,
         plan: &BucketPlan,
         b: usize,
         shard: &mut [f32],
         sched: &ReduceSchedule,
+        ef: Option<(&mut [Vec<f32>], &mut [f32])>,
     ) {
         let bk = &plan.buckets[b];
         assert_eq!(shard.len(), bk.len(), "shard length != bucket length");
@@ -359,7 +423,30 @@ impl Gather {
         // is the whole bucket; going through the reduce-scatter entry
         // point (same rank-order kernel, bitwise-identical) keeps the
         // wire-bytes telemetry attributed to the right collective op.
-        sched.reduce_scatter_mean(&refs, 0, bk.len(), shard);
+        match ef {
+            Some((send, recv)) => {
+                let mut slices: Vec<&mut [f32]> = send
+                    .iter_mut()
+                    .map(|r| &mut r[bk.start..bk.end])
+                    .collect();
+                sched.reduce_scatter_mean_ef(
+                    bk.start,
+                    &refs,
+                    0,
+                    bk.len(),
+                    Some(EfResiduals { send: &mut slices, recv }),
+                    shard,
+                );
+            }
+            None => sched.reduce_scatter_mean_ef(
+                bk.start,
+                &refs,
+                0,
+                bk.len(),
+                None,
+                shard,
+            ),
+        }
     }
 }
 
@@ -379,22 +466,33 @@ pub struct Executor {
     /// Per-bucket owner shards of the ZeRO-2/3 reduce-scatter (empty in
     /// other modes); allocated once and reused across steps.
     shards: Vec<Vec<f32>>,
+    /// Error-feedback send residuals (compressed wires only, else empty):
+    /// one full-length fp32 buffer per worker, persistent across steps.
+    /// Replicated state — each simulated rank owns its own, at every
+    /// ZeRO stage.
+    send_res: Vec<Vec<f32>>,
+    /// Error-feedback recv residuals, one per bucket, applied when the
+    /// reduced mean is quantized back onto the wire (stage B). Bucket
+    /// granularity means the buffer lives with whoever owns the reduced
+    /// bucket: every rank (identical copies) in dense/zero1 modes, the
+    /// bucket owner under zero2/3 — it shards with the gradient.
+    recv_res: Vec<Vec<f32>>,
 }
 
 impl Executor {
     /// Build from the segment table and a set of workers (one per
     /// simulated chip). `cfg.workers` is informational; the actual count
-    /// is `workers.len()`. The reduce schedule's wire dtype is derived
-    /// here from `cfg.prec.grads` — the precision plan is the single
-    /// source of what the wire carries, so callers cannot end up with
-    /// mixed accounting over an f32 wire (or vice versa).
+    /// is `workers.len()`. The reduce schedule's wire format is derived
+    /// here from `cfg.prec` — the precision plan is the single source of
+    /// what the wire carries, so callers cannot end up with mixed
+    /// accounting over an f32 wire (or vice versa).
     pub fn new(
         cfg: ExecConfig,
         segs: &[Seg],
         workers: Vec<Box<dyn GradWorker>>,
     ) -> Executor {
         let mut cfg = cfg;
-        cfg.reduce = cfg.reduce.with_wire(cfg.prec.grads);
+        cfg.reduce = cfg.reduce.with_wire(cfg.prec.wire());
         assert!(!workers.is_empty(), "need at least one worker");
         let n = workers[0].n();
         for w in &workers {
@@ -419,7 +517,22 @@ impl Executor {
         } else {
             Vec::new()
         };
-        Executor { cfg, plan, backend, workers: count, shards }
+        // Error-feedback residuals start at zero: step 0 of a compressed
+        // run quantizes the raw gradients, exactly like a fresh 1-bit
+        // LAMB run would.
+        let (send_res, recv_res) =
+            if cfg.reduce.wire.is_compressed() && cfg.reduce.error_feedback {
+                (
+                    vec![vec![0.0f32; n]; count],
+                    plan.buckets
+                        .iter()
+                        .map(|bk| vec![0.0f32; bk.len()])
+                        .collect(),
+                )
+            } else {
+                (Vec::new(), Vec::new())
+            };
+        Executor { cfg, plan, backend, workers: count, shards, send_res, recv_res }
     }
 
     pub fn mode(&self) -> ExecMode {
@@ -477,6 +590,12 @@ impl Executor {
         // Owner shards of the reduce-scatter (Zero2/Zero3; pre-allocated
         // by the constructor, overwritten in full by each scatter).
         let shards = &mut self.shards;
+        // Persistent error-feedback residuals (compressed wires; empty
+        // slices otherwise). Split out of `self` so the emit closures can
+        // borrow them alongside the shards.
+        let ef_on = !self.send_res.is_empty();
+        let send_res = &mut self.send_res;
+        let recv_res = &mut self.recv_res;
         let mut gather = Gather::new(nb, k);
         let mut per_bucket = vec![(0.0f64, 0.0f64); nb];
         let mut losses = vec![0.0f32; k];
@@ -503,16 +622,25 @@ impl Executor {
                                     },
                                     b as u64,
                                 );
+                                let ef = if ef_on {
+                                    Some((
+                                        send_res.as_mut_slice(),
+                                        recv_res[b].as_mut_slice(),
+                                    ))
+                                } else {
+                                    None
+                                };
                                 if shard_grads {
                                     gather.scatter_into(
                                         &plan,
                                         b,
                                         &mut shards[b],
                                         &sched,
+                                        ef,
                                     );
                                 } else {
                                     gather.reduce_into(
-                                        &plan, b, reduced, &sched,
+                                        &plan, b, reduced, &sched, ef,
                                     );
                                 }
                                 per_bucket[b].1 =
@@ -552,16 +680,25 @@ impl Executor {
                                     },
                                     bucket as u64,
                                 );
+                                let ef = if ef_on {
+                                    Some((
+                                        send_res.as_mut_slice(),
+                                        recv_res[bucket].as_mut_slice(),
+                                    ))
+                                } else {
+                                    None
+                                };
                                 if shard_grads {
                                     gather.scatter_into(
                                         &plan,
                                         bucket,
                                         &mut shards[bucket],
                                         &sched,
+                                        ef,
                                     );
                                 } else {
                                     gather.reduce_into(
-                                        &plan, bucket, reduced, &sched,
+                                        &plan, bucket, reduced, &sched, ef,
                                     );
                                 }
                                 per_bucket[bucket].1 =
@@ -831,6 +968,7 @@ mod tests {
                     params: Precision::F32,
                     grads: wire,
                     master_weights: false,
+                    grads_wire: None,
                 },
                 ..ExecConfig::default()
             };
@@ -862,6 +1000,81 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    /// The compressed wires carry *stateful* error feedback, which is the
+    /// hard part of the dense↔sharded equivalence: the send residuals are
+    /// per-worker full-length buffers in both pipelines, the recv
+    /// residuals are per-bucket, and the 1-bit chunk grid is anchored at
+    /// global offsets — so serial, parallel, zero2 and zero3 must still
+    /// produce identical bits at every step even though each step's bits
+    /// depend on all previous steps through the residuals.
+    #[test]
+    fn compressed_wire_all_modes_bitwise_equal_and_stateful() {
+        use crate::collective::{PrecisionPlan, Wire};
+        let segs = tile(&[96, 16, 128, 16, 64, 8]);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        for wire in [Wire::F8, Wire::OneBit] {
+            let cfg = |mode| ExecConfig {
+                mode,
+                workers: 3,
+                bucket_bytes: 100 * 4,
+                prec: PrecisionPlan::F32.with_grads_wire(wire),
+                ..ExecConfig::default()
+            };
+            let mut base = Executor::new(
+                cfg(ExecMode::Parallel),
+                &segs,
+                toy_workers(3, n, 6),
+            );
+            assert_eq!(base.send_res.len(), 3);
+            assert_eq!(base.recv_res.len(), base.plan.len());
+            let mut others: Vec<Executor> =
+                [ExecMode::Serial, ExecMode::Zero2, ExecMode::Zero3]
+                    .into_iter()
+                    .map(|m| Executor::new(cfg(m), &segs, toy_workers(3, n, 6)))
+                    .collect();
+            let params = vec![0.5f32; n];
+            let mut ra = vec![0.0f32; n];
+            for t in 1..=4 {
+                base.step(t, 8, &params, &mut ra);
+                for ex in others.iter_mut() {
+                    let mode = ex.mode();
+                    let mut rb = vec![0.0f32; n];
+                    ex.step(t, 8, &params, &mut rb);
+                    for i in 0..n {
+                        assert_eq!(
+                            ra[i].to_bits(),
+                            rb[i].to_bits(),
+                            "{wire:?} {mode:?} step {t} i={i}"
+                        );
+                    }
+                }
+            }
+            // Residuals are live state: at least one is nonzero by now.
+            assert!(
+                base.send_res.iter().flatten().any(|&r| r != 0.0),
+                "{wire:?}: send residuals never engaged"
+            );
+            assert!(
+                base.recv_res.iter().flatten().any(|&r| r != 0.0),
+                "{wire:?}: recv residuals never engaged"
+            );
+            // Error feedback off: no residual buffers, different bits.
+            let mut cfg_off = cfg(ExecMode::Parallel);
+            cfg_off.reduce = cfg_off.reduce.with_error_feedback(false);
+            let mut off =
+                Executor::new(cfg_off, &segs, toy_workers(3, n, 6));
+            assert!(off.send_res.is_empty() && off.recv_res.is_empty());
+            let mut ro = vec![0.0f32; n];
+            for t in 1..=4 {
+                off.step(t, 8, &params, &mut ro);
+            }
+            assert!(
+                ro.iter().zip(ra.iter()).any(|(a, b)| a.to_bits() != b.to_bits()),
+                "{wire:?}: error feedback had no numeric effect"
+            );
         }
     }
 

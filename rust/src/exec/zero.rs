@@ -92,22 +92,31 @@ pub fn stage_split(stage: u8) -> (usize, usize) {
 ///   shards with the optimizer state at stage >= 1 — which is what
 ///   makes mixed precision compound with the ZeRO ladder instead of
 ///   merely relabeling bytes (at stage 2 the replicated residue is the
-///   2-byte storage params alone).
+///   2-byte storage params alone);
+/// * error-feedback residuals when the gradient wire is compressed
+///   (f8 / 1-bit): the fp32 *send* residual is honest per-rank state
+///   that never shards (every rank compensates its own quantizer), and
+///   the fp32 *recv* residual lives at bucket granularity with whoever
+///   owns the reduced gradient — replicated below stage 2, sharded with
+///   the gradients at stage >= 2.
 ///
 /// The halves always sum to the plan's dense bytes/param.
 pub fn stage_split_prec(stage: u8, prec: &PrecisionPlan) -> (usize, usize) {
     let param = prec.param_bytes();
     let grad = prec.grad_bytes();
     let opt_state = MOMENT_BYTES_PER_ELEM + prec.master_bytes();
-    let mut rep = param + grad + opt_state;
+    let ef_res = if prec.compressed_wire() { 4 } else { 0 };
+    let mut rep = param + grad + opt_state + 2 * ef_res;
     let mut sharded = 0;
     if stage >= 1 {
         rep -= opt_state;
         sharded += opt_state;
     }
     if stage >= 2 {
-        rep -= grad;
-        sharded += grad;
+        // The gradients shard — and the recv residual (one of the two
+        // ef_res columns) shards with its owner. The send residual stays.
+        rep -= grad + ef_res;
+        sharded += grad + ef_res;
     }
     if stage >= 3 {
         rep -= param;
@@ -278,7 +287,7 @@ impl Zero1State {
             m[bk.start..bk.end].copy_from_slice(&tm);
             v[bk.start..bk.end].copy_from_slice(&tv);
         }
-        Checkpoint { step, params: params.to_vec(), m, v }
+        Checkpoint { step, params: params.to_vec(), m, v, scaler: None }
     }
 
     /// Restore a dense checkpoint into the sharded run: each bucket
@@ -519,7 +528,7 @@ impl Zero2State {
             }
             None => params.to_vec(),
         };
-        Checkpoint { step, params, m, v }
+        Checkpoint { step, params, m, v, scaler: None }
     }
 
     /// Restore a dense checkpoint into the sharded run: moments scatter
@@ -822,7 +831,7 @@ impl Zero3State {
         let mut m = vec![0.0f32; plan.n];
         let mut v = vec![0.0f32; plan.n];
         self.opt.export_moments(&mut m, &mut v);
-        Checkpoint { step, params, m, v }
+        Checkpoint { step, params, m, v, scaler: None }
     }
 
     /// Restore a dense checkpoint into the sharded run: each parameter
@@ -1099,9 +1108,23 @@ mod tests {
             params: Precision::F32,
             grads: Precision::F16,
             master_weights: false,
+            grads_wire: None,
         };
         assert_eq!(stage_split_prec(0, &gonly), (14, 0));
         assert_eq!(stage_split_prec(2, &gonly), (4, 10));
+        // A compressed wire adds two honest fp32 residual columns: the
+        // send residual never shards, the recv residual shards with the
+        // gradients at stage >= 2.
+        use crate::collective::Wire;
+        let ef = PrecisionPlan::F32.with_grads_wire(Wire::OneBit);
+        assert_eq!(stage_split_prec(0, &ef), (16 + 8, 0));
+        assert_eq!(stage_split_prec(1, &ef), (8 + 8, 8));
+        assert_eq!(stage_split_prec(2, &ef), (4 + 4, 12 + 4));
+        assert_eq!(stage_split_prec(3, &ef), (4, 16 + 4));
+        for stage in 0..=3u8 {
+            let (r, s) = stage_split_prec(stage, &ef);
+            assert_eq!(r + s, 24, "stage {stage}: halves must sum dense");
+        }
     }
 
     /// ZeRO-2 mixed: the storage params stay storage-dtype values, the

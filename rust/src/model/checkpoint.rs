@@ -15,23 +15,39 @@
 //! `import_moments`.
 //!
 //! Layout (little-endian):
-//!   magic "LMBCKPT1" | step u64 | n u64 | params [f32; n]
-//!   | m [f32; n] | v [f32; n] | checksum u64 (FNV-1a over payload)
+//!   magic "LMBCKPT2" | step u64 | n u64 | params [f32; n]
+//!   | m [f32; n] | v [f32; n]
+//!   | scaler flag u8 (0 = absent, 1 = present)
+//!   | [scale f32-bits u32 | stable u64 | skipped u64 | growths u64]
+//!   | checksum u64 (FNV-1a over payload)
+//!
+//! The V2 scaler block carries the dynamic loss-scaler state (scale as
+//! raw bits, stable-window / skip / growth counters) so a resumed
+//! mixed-precision run continues the skip-and-halve dynamics bitwise
+//! instead of restarting at the configured initial scale. V1 files
+//! ("LMBCKPT1", no scaler block) still load, with `scaler = None`.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::optim::Optimizer;
+use crate::optim::{Optimizer, ScalerState};
 
-const MAGIC: &[u8; 8] = b"LMBCKPT1";
+const MAGIC: &[u8; 8] = b"LMBCKPT2";
+const MAGIC_V1: &[u8; 8] = b"LMBCKPT1";
+/// Bytes of the present-scaler block: u32 scale bits + 3 u64 counters.
+const SCALER_BLOCK: usize = 4 + 3 * 8;
 
 pub struct Checkpoint {
     pub step: u64,
     pub params: Vec<f32>,
     pub m: Vec<f32>,
     pub v: Vec<f32>,
+    /// Dynamic loss-scaler snapshot (`None` for unscaled runs and V1
+    /// files). Restored bitwise by the trainer when the resumed config
+    /// also enables a scaler.
+    pub scaler: Option<ScalerState>,
 }
 
 fn fnv1a(data: &[u8]) -> u64 {
@@ -66,7 +82,7 @@ impl Checkpoint {
         let mut m = vec![0.0f32; params.len()];
         let mut v = vec![0.0f32; params.len()];
         opt.export_moments(&mut m, &mut v);
-        Checkpoint { step, params: params.to_vec(), m, v }
+        Checkpoint { step, params: params.to_vec(), m, v, scaler: None }
     }
 
     /// Push the saved moment state back into a dense optimizer (the
@@ -90,6 +106,16 @@ impl Checkpoint {
         payload.extend_from_slice(&f32s_to_bytes(&self.params));
         payload.extend_from_slice(&f32s_to_bytes(&self.m));
         payload.extend_from_slice(&f32s_to_bytes(&self.v));
+        match &self.scaler {
+            Some(s) => {
+                payload.push(1);
+                payload.extend_from_slice(&s.scale_bits.to_le_bytes());
+                payload.extend_from_slice(&s.stable.to_le_bytes());
+                payload.extend_from_slice(&s.skipped.to_le_bytes());
+                payload.extend_from_slice(&s.growths.to_le_bytes());
+            }
+            None => payload.push(0),
+        }
         let sum = fnv1a(&payload);
         // write to a temp file then rename: a crash mid-save must not
         // destroy the previous checkpoint
@@ -111,7 +137,8 @@ impl Checkpoint {
             .with_context(|| format!("opening checkpoint {path:?}"))?;
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
+        let v2 = &magic == MAGIC;
+        if !v2 && &magic != MAGIC_V1 {
             bail!("{path:?}: not a lamb-train checkpoint");
         }
         let mut rest = Vec::new();
@@ -127,14 +154,47 @@ impl Checkpoint {
         let step = u64::from_le_bytes(payload[0..8].try_into().unwrap());
         let n = u64::from_le_bytes(payload[8..16].try_into().unwrap()) as usize;
         let body = &payload[16..];
-        if body.len() != 3 * n * 4 {
-            bail!("{path:?}: wrong payload size for n={n}");
-        }
+        let vectors = 3 * n * 4;
+        // V1 payload is exactly the three vectors; V2 appends the
+        // scaler flag byte and, when the flag is set, the scaler block.
+        let scaler = if v2 {
+            match body.len().checked_sub(vectors).and_then(|tail| {
+                let flag = *body.get(vectors)?;
+                match (flag, tail) {
+                    (0, 1) => Some(None),
+                    (1, t) if t == 1 + SCALER_BLOCK => {
+                        let b = &body[vectors + 1..];
+                        let u32le = |r: &[u8]| {
+                            u32::from_le_bytes(r.try_into().unwrap())
+                        };
+                        let u64le = |r: &[u8]| {
+                            u64::from_le_bytes(r.try_into().unwrap())
+                        };
+                        Some(Some(ScalerState {
+                            scale_bits: u32le(&b[0..4]),
+                            stable: u64le(&b[4..12]),
+                            skipped: u64le(&b[12..20]),
+                            growths: u64le(&b[20..28]),
+                        }))
+                    }
+                    _ => None,
+                }
+            }) {
+                Some(s) => s,
+                None => bail!("{path:?}: wrong payload size for n={n}"),
+            }
+        } else {
+            if body.len() != vectors {
+                bail!("{path:?}: wrong payload size for n={n}");
+            }
+            None
+        };
         Ok(Checkpoint {
             step,
             params: bytes_to_f32s(&body[0..n * 4]),
             m: bytes_to_f32s(&body[n * 4..2 * n * 4]),
-            v: bytes_to_f32s(&body[2 * n * 4..]),
+            v: bytes_to_f32s(&body[2 * n * 4..3 * n * 4]),
+            scaler,
         })
     }
 }
@@ -154,6 +214,7 @@ mod tests {
             params: vec![1.0, -2.5, 3.25],
             m: vec![0.1, 0.2, 0.3],
             v: vec![0.01, 0.02, 0.03],
+            scaler: None,
         };
         let p = tmp("roundtrip.bin");
         c.save(&p).unwrap();
@@ -162,6 +223,100 @@ mod tests {
         assert_eq!(d.params, c.params);
         assert_eq!(d.m, c.m);
         assert_eq!(d.v, c.v);
+        assert_eq!(d.scaler, None);
+    }
+
+    /// The V2 scaler block roundtrips bitwise — scale bits and all
+    /// three counters.
+    #[test]
+    fn roundtrip_with_scaler_state() {
+        let s = ScalerState {
+            scale_bits: 32768.0f32.to_bits(),
+            stable: 1234,
+            skipped: 7,
+            growths: 3,
+        };
+        let c = Checkpoint {
+            step: 9,
+            params: vec![1.0, 2.0],
+            m: vec![0.0, 0.0],
+            v: vec![0.5, 0.5],
+            scaler: Some(s),
+        };
+        let p = tmp("roundtrip_scaler.bin");
+        c.save(&p).unwrap();
+        let d = Checkpoint::load(&p).unwrap();
+        assert_eq!(d.scaler, Some(s));
+        assert_eq!(d.params, c.params);
+    }
+
+    /// save → restore → train roundtrip for the scaler block: a scaler
+    /// checkpointed mid-run (mid growth-window, after a skip) and
+    /// restored from disk makes bitwise the same gate decisions, scale
+    /// values, and unscaled gradients as the uninterrupted one.
+    #[test]
+    fn scaler_save_restore_train_roundtrip() {
+        use crate::optim::LossScaler;
+        let mut live = LossScaler::dynamic();
+        live.growth_interval = 3;
+        // mixed history: finite steps around one overflow skip
+        assert!(live.unscale(&mut [1.0f32, -2.0]));
+        assert!(!live.unscale(&mut [f32::INFINITY]));
+        assert!(live.unscale(&mut [0.5f32]));
+        let c = Checkpoint {
+            step: 3,
+            params: vec![0.0; 4],
+            m: vec![0.0; 4],
+            v: vec![0.0; 4],
+            scaler: Some(live.export_state()),
+        };
+        let p = tmp("scaler_resume.bin");
+        c.save(&p).unwrap();
+        let d = Checkpoint::load(&p).unwrap();
+        let mut resumed = LossScaler::dynamic();
+        resumed.growth_interval = 3;
+        resumed.restore_state(d.scaler.unwrap());
+        // continue training both: the window completes and grows on the
+        // same step, and every unscaled buffer matches bitwise
+        for i in 0..8 {
+            let mut ga = [0.1f32 * i as f32, -1.5];
+            let mut gb = ga;
+            assert_eq!(live.unscale(&mut ga), resumed.unscale(&mut gb));
+            assert_eq!(live.scale().to_bits(), resumed.scale().to_bits());
+            assert_eq!(ga[0].to_bits(), gb[0].to_bits());
+        }
+        assert_eq!(live.export_state(), resumed.export_state());
+        assert!(live.growth_count() > 0, "the window must have completed");
+    }
+
+    /// A V1 file (no scaler block) still loads, with `scaler = None` —
+    /// checkpoints written before the scaler block stay readable.
+    #[test]
+    fn loads_v1_files_without_scaler_block() {
+        let params = [1.5f32, -2.0, 0.25];
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&42u64.to_le_bytes());
+        payload.extend_from_slice(&(params.len() as u64).to_le_bytes());
+        for _ in 0..3 {
+            payload.extend_from_slice(&f32s_to_bytes(&params));
+        }
+        let sum = fnv1a(&payload);
+        let mut bytes = MAGIC_V1.to_vec();
+        bytes.extend_from_slice(&payload);
+        bytes.extend_from_slice(&sum.to_le_bytes());
+        let p = tmp("v1_compat.bin");
+        std::fs::write(&p, &bytes).unwrap();
+        let d = Checkpoint::load(&p).unwrap();
+        assert_eq!(d.step, 42);
+        assert_eq!(d.params, params);
+        assert_eq!(d.scaler, None);
+        // a V1-sized payload under the V2 magic is malformed (missing
+        // flag byte), not silently accepted
+        let mut bad = MAGIC.to_vec();
+        bad.extend_from_slice(&payload);
+        bad.extend_from_slice(&sum.to_le_bytes());
+        std::fs::write(&p, &bad).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
     }
 
     #[test]
@@ -171,6 +326,7 @@ mod tests {
             params: vec![1.0; 16],
             m: vec![0.0; 16],
             v: vec![0.0; 16],
+            scaler: None,
         };
         let p = tmp("corrupt.bin");
         c.save(&p).unwrap();
@@ -195,6 +351,7 @@ mod tests {
             params: vec![1.0; 8],
             m: vec![0.0; 8],
             v: vec![0.0; 8],
+            scaler: None,
         };
         let p = tmp("trunc.bin");
         c.save(&p).unwrap();

@@ -25,7 +25,7 @@ pub use adam::{Adagrad, Adam, AdamW, Momentum};
 pub use lamb::Lamb;
 pub use lars::Lars;
 pub use nesterov::{NLamb, NnLamb};
-pub use scaler::LossScaler;
+pub use scaler::{LossScaler, ScalerState};
 
 use crate::manifest::ParamSeg;
 

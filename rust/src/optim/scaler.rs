@@ -184,6 +184,45 @@ impl Default for LossScaler {
     }
 }
 
+/// Serializable snapshot of the scaler's *dynamic* state — everything
+/// the step-to-step skip-and-halve / growth machine mutates, including
+/// the private stable-window counter. The configuration knobs
+/// (growth/backoff factors, bounds, interval) are *not* part of the
+/// snapshot: they come from the config on restore, so a resumed run can
+/// retune them while continuing the saved dynamics bitwise.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScalerState {
+    /// Current scale, as raw f32 bits (bitwise-exact roundtrip).
+    pub scale_bits: u32,
+    /// Finite steps since the last scale change.
+    pub stable: u64,
+    /// Cumulative skipped steps.
+    pub skipped: u64,
+    /// Cumulative scale growths.
+    pub growths: u64,
+}
+
+impl LossScaler {
+    /// Snapshot the dynamic state for checkpointing.
+    pub fn export_state(&self) -> ScalerState {
+        ScalerState {
+            scale_bits: self.scale.to_bits(),
+            stable: self.stable,
+            skipped: self.skipped,
+            growths: self.growths,
+        }
+    }
+
+    /// Restore a [`ScalerState`] snapshot; the resumed scaler continues
+    /// the dynamics bitwise where the saved run left them.
+    pub fn restore_state(&mut self, s: ScalerState) {
+        self.scale = f32::from_bits(s.scale_bits);
+        self.stable = s.stable;
+        self.skipped = s.skipped;
+        self.growths = s.growths;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -311,6 +350,31 @@ mod tests {
     #[should_panic(expected = "loss scale must be finite")]
     fn rejects_bad_initial_scale() {
         LossScaler::with_scale(f32::NAN);
+    }
+
+    /// export_state → restore_state resumes the dynamics bitwise,
+    /// including the private stable-window counter: the restored
+    /// scaler grows on exactly the same step the uninterrupted one
+    /// does.
+    #[test]
+    fn state_snapshot_resumes_dynamics_bitwise() {
+        let mut a = LossScaler::dynamic();
+        a.growth_interval = 4;
+        for _ in 0..3 {
+            assert!(a.unscale(&mut [1.0f32]));
+        }
+        let snap = a.export_state();
+        assert_eq!(snap.stable, 3);
+        let mut b = LossScaler::dynamic();
+        b.growth_interval = 4;
+        b.restore_state(snap);
+        assert_eq!(b.scale().to_bits(), a.scale().to_bits());
+        // one more finite step completes the window on both
+        assert!(a.unscale(&mut [1.0f32]));
+        assert!(b.unscale(&mut [1.0f32]));
+        assert_eq!(a.scale(), 131072.0);
+        assert_eq!(b.scale(), 131072.0);
+        assert_eq!(b.export_state(), a.export_state());
     }
 
     /// Forcing a non-finite gradient through the gate bumps the

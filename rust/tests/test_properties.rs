@@ -305,6 +305,7 @@ fn prop_stage_state_bytes_bounds_plan_exact_shares() {
             params: Precision::F32,
             grads: Precision::Bf16,
             master_weights: false,
+            grads_wire: None,
         },
     ];
     for case in 0..20 {
@@ -374,6 +375,240 @@ fn prop_stage_state_bytes_bounds_plan_exact_shares() {
                         prec.label()
                     );
                 }
+            }
+        }
+    }
+}
+
+/// ISSUE 8 satellite: the compressed error-feedback reduce is
+/// deterministic and invariant under worker permutation, on ragged
+/// bucket splits with 1-bit chunk offsets that straddle bucket edges.
+/// Gradient magnitudes are kept within a few octaves so every f64
+/// accumulation is exact (f8 values carry <= 4 significand bits; 1-bit
+/// terms are per-worker chunk scales of similar magnitude), which makes
+/// worker order drop out of the sum bit for bit. Send residuals travel
+/// with their worker through the permutation; the recv residual belongs
+/// to the reduce site and never moves.
+#[test]
+fn prop_compressed_reduce_deterministic_and_rank_order_invariant() {
+    use lamb_train::collective::{reduce_mean_ef, EfResiduals, Wire};
+    let mut rng = Rng::new(110);
+    for wire in [Wire::F8, Wire::OneBit] {
+        for case in 0..6 {
+            let k = 2 + rng.below(5) as usize;
+            let n = 700 + rng.below(900) as usize;
+            let grads: Vec<Vec<f32>> = (0..k)
+                .map(|_| {
+                    (0..n)
+                        .map(|_| {
+                            let m = 1 + rng.below(511) as i64;
+                            let s =
+                                if rng.below(2) == 0 { -1.0f32 } else { 1.0 };
+                            s * m as f32 / 64.0
+                        })
+                        .collect()
+                })
+                .collect();
+            // ragged split of [0, n) into buckets
+            let mut cuts = vec![0usize, n];
+            for _ in 0..3 {
+                cuts.push(1 + rng.below(n as u64 - 1) as usize);
+            }
+            cuts.sort_unstable();
+            cuts.dedup();
+            let run = |perm: &[usize]| {
+                let mut send: Vec<Vec<f32>> = vec![vec![0.0f32; n]; k];
+                let mut recv = vec![0.0f32; n];
+                let mut out = vec![0.0f32; n];
+                for _round in 0..3 {
+                    for win in cuts.windows(2) {
+                        let (s, e) = (win[0], win[1]);
+                        let ws: Vec<&[f32]> = perm
+                            .iter()
+                            .map(|&w| &grads[w][s..e])
+                            .collect();
+                        let mut taken: Vec<Option<&mut [f32]>> = send
+                            .iter_mut()
+                            .map(|v| Some(&mut v[s..e]))
+                            .collect();
+                        let mut sres: Vec<&mut [f32]> = perm
+                            .iter()
+                            .map(|&w| taken[w].take().unwrap())
+                            .collect();
+                        reduce_mean_ef(
+                            wire,
+                            s,
+                            &ws,
+                            Some(EfResiduals {
+                                send: &mut sres,
+                                recv: &mut recv[s..e],
+                            }),
+                            &mut out[s..e],
+                        );
+                    }
+                }
+                (out, recv, send)
+            };
+            let ident: Vec<usize> = (0..k).collect();
+            let mut perm: Vec<usize> = ident.clone();
+            perm.reverse(); // non-identity for every k >= 2
+            let (o1, rc1, sd1) = run(&ident);
+            let (o2, rc2, sd2) = run(&ident);
+            let (o3, rc3, sd3) = run(&perm);
+            let bits =
+                |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&o1), bits(&o2), "{wire:?} case {case}: rerun");
+            assert_eq!(bits(&rc1), bits(&rc2));
+            assert_eq!(sd1, sd2);
+            assert_eq!(
+                bits(&o1),
+                bits(&o3),
+                "{wire:?} case {case}: perm {perm:?} changed the reduce"
+            );
+            assert_eq!(
+                bits(&rc1),
+                bits(&rc3),
+                "{wire:?} case {case}: recv residual moved with workers"
+            );
+            for w in 0..k {
+                assert_eq!(
+                    bits(&sd1[w]),
+                    bits(&sd3[w]),
+                    "{wire:?} case {case}: send residual of worker {w} \
+                     depends on rank order"
+                );
+            }
+            // a rotation, not just the reversal
+            let mut rot: Vec<usize> = ident.clone();
+            rot.rotate_left(1);
+            let (o4, rc4, _) = run(&rot);
+            assert_eq!(bits(&o1), bits(&o4), "{wire:?} case {case}: rot");
+            assert_eq!(bits(&rc1), bits(&rc4));
+        }
+    }
+}
+
+/// ISSUE 8 satellite: the f32 wire through the error-feedback entry
+/// point is bitwise the plain kernel (and bf16 bitwise the quantized
+/// one), with the residual buffers left untouched — compressed-wire
+/// plumbing must cost uncompressed configs nothing, not even a bit.
+#[test]
+fn prop_f32_wire_is_bitwise_the_plain_reduce() {
+    use lamb_train::collective::{
+        reduce_mean_ef, reduce_mean_quant, EfResiduals, Wire,
+    };
+    let mut rng = Rng::new(111);
+    for case in 0..10 {
+        let k = 1 + rng.below(6) as usize;
+        let n = 1 + rng.below(600) as usize;
+        let bufs: Vec<Vec<f32>> =
+            (0..k).map(|_| rand_vec(&mut rng, n, 3.0)).collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let mut want = vec![0.0f32; n];
+        reduce_mean(&refs, &mut want);
+        let mut send: Vec<Vec<f32>> =
+            (0..k).map(|_| rand_vec(&mut rng, n, 1.0)).collect();
+        let send_before = send.clone();
+        let mut recv = rand_vec(&mut rng, n, 1.0);
+        let recv_before = recv.clone();
+        let mut out = vec![0.0f32; n];
+        let mut sres: Vec<&mut [f32]> =
+            send.iter_mut().map(|v| v.as_mut_slice()).collect();
+        reduce_mean_ef(
+            Wire::F32,
+            rng.below(10_000) as usize,
+            &refs,
+            Some(EfResiduals { send: &mut sres, recv: &mut recv }),
+            &mut out,
+        );
+        for i in 0..n {
+            assert_eq!(
+                out[i].to_bits(),
+                want[i].to_bits(),
+                "case {case} i={i}"
+            );
+        }
+        drop(sres);
+        assert_eq!(send, send_before, "case {case}: f32 touched residuals");
+        assert_eq!(recv, recv_before, "case {case}: f32 touched residuals");
+        // bf16 wire == the quantized kernel, also residual-free
+        let mut want_bf = vec![0.0f32; n];
+        reduce_mean_quant(Precision::Bf16, &refs, &mut want_bf);
+        let mut out_bf = vec![0.0f32; n];
+        reduce_mean_ef(Wire::Bf16, 0, &refs, None, &mut out_bf);
+        for i in 0..n {
+            assert_eq!(out_bf[i].to_bits(), want_bf[i].to_bits());
+        }
+    }
+}
+
+/// ISSUE 8 satellite: transmitted value + new residual reconstructs the
+/// compensated pre-quantization gradient **exactly**, every round. For
+/// f8 the data stays in the normal, non-saturating range where
+/// `v - Q(v)` is exact (Sterbenz: RNE keeps Q within 1/16 of v, and the
+/// difference lands on v's own ulp grid). For 1-bit the data sits on a
+/// dyadic grid with power-of-two chunk slices, so the chunk-mean scale
+/// and every subtraction are exact in f32 — including a nonzero global
+/// offset and ragged (but power-of-two) leading/trailing chunks.
+#[test]
+fn prop_residual_plus_transmitted_reconstructs_gradient() {
+    use lamb_train::collective::{ef_transmit, Wire};
+    let mut rng = Rng::new(112);
+    // f8 arm: magnitudes in [2^-10, 2^8) — no saturation, no f32 subnormals
+    for case in 0..8 {
+        let n = 50 + rng.below(400) as usize;
+        let g: Vec<f32> = (0..n)
+            .map(|_| {
+                let e = rng.below(18) as i32 - 10;
+                let frac = 1.0 + rng.uniform() as f32 * 0.999;
+                let s = if rng.below(2) == 0 { -1.0f32 } else { 1.0 };
+                s * frac * (e as f32).exp2()
+            })
+            .collect();
+        let mut r = vec![0.0f32; n];
+        let mut t = vec![0.0f32; n];
+        for round in 0..3 {
+            let v: Vec<f32> =
+                g.iter().zip(&r).map(|(&g, &r)| g + r).collect();
+            ef_transmit(Wire::F8, 0, &g, Some(&mut r[..]), &mut t);
+            for i in 0..n {
+                assert_eq!(
+                    (t[i] + r[i]).to_bits(),
+                    v[i].to_bits(),
+                    "f8 case {case} round {round} i={i}: t={} r={} v={}",
+                    t[i],
+                    r[i],
+                    v[i]
+                );
+            }
+        }
+    }
+    // 1-bit arm: grid 2^-6, |g| <= 64, chunk slices 256/512/256
+    for case in 0..8 {
+        let n = 1024;
+        let offset = 256;
+        let g: Vec<f32> = (0..n)
+            .map(|_| {
+                let m = 1 + rng.below(4096) as i64;
+                let s = if rng.below(2) == 0 { -1.0f32 } else { 1.0 };
+                s * m as f32 / 64.0
+            })
+            .collect();
+        let mut r = vec![0.0f32; n];
+        let mut t = vec![0.0f32; n];
+        for round in 0..4 {
+            let v: Vec<f32> =
+                g.iter().zip(&r).map(|(&g, &r)| g + r).collect();
+            ef_transmit(Wire::OneBit, offset, &g, Some(&mut r[..]), &mut t);
+            for i in 0..n {
+                assert_eq!(
+                    (t[i] + r[i]).to_bits(),
+                    v[i].to_bits(),
+                    "1bit case {case} round {round} i={i}: t={} r={} v={}",
+                    t[i],
+                    r[i],
+                    v[i]
+                );
             }
         }
     }

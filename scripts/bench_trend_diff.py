@@ -5,12 +5,15 @@ Usage: bench_trend_diff.py PREV.json CURR.json [--warn-pct 10]
 
 Each line of either file is one JSON object with a "bench" field and a
 measurement: step-time cells carry "secs", telemetry counter cells (the
-trace::sink JSONL folded in by the trace-smoke step) carry "value"
-(scripts/bench_smoke.sh validates these invariants before the artifact
-is uploaded). Records are keyed by every field except the measurement
-itself so the same (bench, mode, workers, ...) cell is compared across
-the two runs; cells higher by more than --warn-pct percent produce a
-GitHub `::warning::` annotation.
+trace::sink JSONL folded in by the trace-smoke step) carry "value",
+throughput cells (bench_allreduce's quantizer / compressed-reduce rows)
+carry "gbps" (scripts/bench_smoke.sh validates these invariants before
+the artifact is uploaded). Records are keyed by every field except the
+measurement itself so the same (bench, mode, workers, ...) cell is
+compared across the two runs; cells that moved the *wrong way* by more
+than --warn-pct percent produce a GitHub `::warning::` annotation —
+higher is the wrong way for "secs"/"value" cells, lower is the wrong
+way for "gbps" cells (throughput regresses by dropping).
 
 Mesh cells (config values carrying a `dp<k>-tp<k>-pp<k>` label, e.g.
 `bert-32k-dp256-tp4-pp1` from bench_exec's sched_compare section) are
@@ -71,11 +74,14 @@ def load(path):
         except ValueError as e:
             print(f"bench_trend_diff: {path}:{i}: bad JSON ({e}); skipping")
             continue
-        if "bench" not in obj or ("secs" not in obj and "value" not in obj):
+        if "bench" not in obj or not any(
+            k in obj for k in ("secs", "value", "gbps")
+        ):
             continue
         # Step-time cells measure "secs"; telemetry counter cells
-        # (trace::sink) measure "value". "secs" wins if both appear.
-        field = "secs" if "secs" in obj else "value"
+        # (trace::sink) measure "value"; throughput cells measure
+        # "gbps" (higher is better). "secs" wins if several appear.
+        field = next(k for k in ("secs", "value", "gbps") if k in obj)
         secs = obj.pop(field)
         split_mesh(obj)
         # Identity of the measurement cell: every non-measurement field.
@@ -94,7 +100,7 @@ def load(path):
                 f"{secs!r} for cell {fmt_key(key)}; skipping cell"
             )
             continue
-        out[key] = float(secs)
+        out[key] = (float(secs), field)
     return out
 
 
@@ -121,14 +127,15 @@ def main():
     new_cells = []
     improvements = 0
     compared = 0
-    for key, now in sorted(curr.items()):
-        was = prev.get(key)
-        if was is None:
+    for key, (now, field) in sorted(curr.items()):
+        entry = prev.get(key)
+        if entry is None:
             # Schema growth (a new bench column, e.g. a new exec mode or
             # record kind) is expected across commits: report it as
             # "new", never as a diff error or a regression.
             new_cells.append(key)
             continue
+        was, _ = entry
         compared += 1
         if was <= 0.0:
             # Zero-cost cells (pure pass/fail records, or a zero
@@ -136,8 +143,11 @@ def main():
             # `was` would blow up, so there is nothing to diff.
             continue
         pct = (now - was) / was * 100.0
+        if field == "gbps":
+            # Throughput: regression is a *drop*, so flip the sign.
+            pct = -pct
         if pct > args.warn_pct:
-            regressions.append((key, was, now, pct))
+            regressions.append((key, was, now, pct, field))
         elif pct < -args.warn_pct:
             improvements += 1
     removed_keys = [k for k in sorted(prev) if k not in curr]
@@ -171,10 +181,11 @@ def main():
             f"bench_trend_diff: ... and {len(new_cells) - max_listed} "
             "more new cell(s)"
         )
-    for key, was, now, pct in regressions:
+    for key, was, now, pct, field in regressions:
+        unit = "GB/s" if field == "gbps" else "s"
         msg = (
             f"bench regression +{pct:.1f}%: {fmt_key(key)} "
-            f"({was:.6f}s -> {now:.6f}s)"
+            f"({was:.6f}{unit} -> {now:.6f}{unit})"
         )
         # GitHub annotation (shows on the commit / PR checks page).
         print(f"::warning title=bench regression::{msg}")
