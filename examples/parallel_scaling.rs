@@ -17,7 +17,12 @@
 //! (`grads_wire = "f8" | "1bit"` with error feedback), caps and step
 //! times per stage. A fifth runs the 3D-mesh search (`[mesh]`): every feasible
 //! `(dp, tp, pp)` factorization of 1024/2048/4096 chips priced at
-//! batch 32k, fastest feasible mesh vs pure data parallelism.
+//! batch 32k, fastest feasible mesh vs pure data parallelism. A sixth
+//! table walks the gradient-accumulation ladder (`[exec] accum_steps`)
+//! toward the 54-minute trajectory: batch 32k/64k at ZeRO-2/3 under
+//! the f32 and 1-bit gradient wires, the accumulated step (one reduce
+//! per optimizer step) against reducing every microbatch, and the
+//! multiplicative batch-cap gain.
 //!
 //! Every number here is a *total*; to see where inside a step the time
 //! sits (which bucket's gather stalls, which reduce-scatter is
@@ -245,6 +250,73 @@ fn mesh_search_table() -> String {
     )
 }
 
+/// Accumulation ladder: the 54-minute-trajectory table. For each
+/// gradient wire x ZeRO stage x global batch, the accumulated step
+/// (`Pod::step_time_accum` — workers run `a` microbatches locally and
+/// fire one bucketed reduce per optimizer step) against the
+/// counterfactual of reducing every microbatch (`a` full bucketed
+/// steps at the microbatch size). The gradient reduce payload is
+/// model-sized, not batch-sized, so the baseline pays it `a` times for
+/// nothing; the cap column is `Pod::max_batch_accum` — activation
+/// residency stays at microbatch size, so the memory ceiling scales
+/// multiplicatively with `a`. The pod cost model is
+/// optimizer-agnostic: LAMB and LANS price identically here (LANS
+/// changes the *trajectory* — the convergence regression lives in
+/// `coordinator::native`), so the table carries no optimizer column.
+fn accum_ladder_table() -> String {
+    use lamb_train::collective::{Precision, PrecisionPlan, Wire};
+    let meta = bert_large_meta();
+    let plan = BucketPlan::even(meta.total_params, 64);
+    let mixed = PrecisionPlan::mixed(Precision::Bf16);
+    let mut rows = Vec::new();
+    for (wname, prec) in [
+        ("f32", PrecisionPlan::F32),
+        ("bf16+1bit", mixed.with_grads_wire(Wire::OneBit)),
+    ] {
+        let pod = Pod::tpu_v3_nodes(1024, 8).with_precision(prec);
+        for (zname, part) in [
+            ("zero2", StatePartition::Zero2 { shards: 1024 }),
+            ("zero3", StatePartition::Zero3 { shards: 1024 }),
+        ] {
+            for &batch in &[32_768usize, 65_536] {
+                for &a in &[1usize, 2, 4] {
+                    let micro = batch / a;
+                    let acc = pod
+                        .step_time_accum(&meta, batch, 128, &plan, part, a);
+                    let base = a as f64
+                        * pod.step_time_bucketed_partitioned(
+                            &meta, micro, 128, &plan, part,
+                        );
+                    let cap = pod.max_batch_accum(&meta, 128, part, a);
+                    rows.push(vec![
+                        wname.into(),
+                        zname.into(),
+                        batch.to_string(),
+                        a.to_string(),
+                        format!("{acc:.4}s"),
+                        format!("{base:.4}s"),
+                        format!("{:.2}x", base / acc),
+                        cap.to_string(),
+                    ]);
+                }
+            }
+        }
+    }
+    render_table(
+        &[
+            "wire",
+            "partition",
+            "batch",
+            "accum",
+            "accum step",
+            "per-micro reduce",
+            "win",
+            "batch cap @128",
+        ],
+        &rows,
+    )
+}
+
 fn main() -> Result<()> {
     let steps: u64 = std::env::args()
         .nth(1)
@@ -364,6 +436,23 @@ fn main() -> Result<()> {
          regime both beat spending every chip on dp. Configure with the \
          [mesh] table; Mesh {{ dp: k, tp: 1, pp: 1 }} is bitwise the \
          pure-dp model)"
+    );
+
+    println!(
+        "\n== accumulation ladder: batch 32k/64k, one reduce per \
+         optimizer step (the 54-minute trajectory) =="
+    );
+    println!("{}", accum_ladder_table());
+    println!(
+        "(accum = a runs a microbatches per optimizer step and pays \
+         the model-sized gradient reduce once instead of a times — \
+         accum = 1 is bitwise the ordinary step, and the executed \
+         accumulated step is bitwise the single large-batch step at \
+         every ZeRO stage and wire. ZeRO-3's lead microbatches still \
+         pay their just-in-time parameter gathers, so its win column \
+         is smaller but strict. LAMB and LANS price identically in \
+         the pod model; [optimizer] name = \"lans\" changes the \
+         large-batch trajectory, not the wire)"
     );
 
     println!(

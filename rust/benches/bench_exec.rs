@@ -23,7 +23,10 @@
 //! whose config keys carry the mesh label, e.g.
 //! `bert-32k-dp256-tp4-pp1`), the per-bucket just-in-time
 //! parameter all-gathers of the zero3 timeline
-//! (`"kind":"param_gather"`, one record per bucket and pass), and the
+//! (`"kind":"param_gather"`, one record per bucket and pass), the
+//! gradient-accumulation ladder (`"kind":"accum_ladder"`, the
+//! batch-32k step at depths 1/2/4 vs the per-microbatch-reduce
+//! baseline, keys `bert-32k-accum{1,2,4}-{lamb,lans}`), and the
 //! precision columns (`"kind":"precision"`, one record per ZeRO stage
 //! x {f32, bf16, f8, 1bit} carrying the step time plus the seq-512
 //! batch cap — the mixed cap must strictly exceed f32 at every stage,
@@ -216,6 +219,65 @@ fn emit_mesh(json: bool) {
     }
 }
 
+/// Accumulation ladder: the batch-32k step priced at accumulation
+/// depths 1/2/4 under the zero2 and zero3 partitions — the cells
+/// backing the README's 54-minute-trajectory table. Config keys are
+/// `bert-32k-accum{a}-{opt}` for opt in {lamb, lans}; the pod's cost
+/// model is optimizer-agnostic (the update is chip-local arithmetic),
+/// so the lamb and lans rows share step time and differ in the
+/// convergence column the README adds on top. Each record carries the
+/// accumulated step time (`secs`), the per-microbatch-reduce baseline
+/// (`baseline_secs`: `a` independent steps at the microbatch size),
+/// and both sides' per-step gradient wire time (`wire_secs` /
+/// `baseline_wire_secs`: step time minus the `a`-microbatch compute
+/// floor). `scripts/bench_smoke.sh` asserts the cells parse and that
+/// accum > 1 strictly cuts `wire_secs` under the baseline's at zero2.
+fn emit_accum(json: bool) {
+    let meta = bert_large_meta();
+    let plan = BucketPlan::even(meta.total_params, 24);
+    let pod = Pod::tpu_v3_nodes(1024, 8);
+    if !json {
+        println!(
+            "== pod model: accumulation ladder (batch 32k / seq 128) =="
+        );
+    }
+    for (sname, part) in [
+        ("zero2", StatePartition::Zero2 { shards: 1024 }),
+        ("zero3", StatePartition::Zero3 { shards: 1024 }),
+    ] {
+        for a in [1usize, 2, 4] {
+            let micro = 32_768 / a;
+            let secs =
+                pod.step_time_accum(&meta, 32_768, 128, &plan, part, a);
+            let baseline = a as f64
+                * pod.step_time_bucketed_partitioned(
+                    &meta, micro, 128, &plan, part,
+                );
+            let floor = a as f64 * pod.compute_time(&meta, micro, 128);
+            let wire = secs - floor;
+            let base_wire = baseline - floor;
+            for opt in ["lamb", "lans"] {
+                if json {
+                    println!(
+                        "{{\"bench\":\"bench_exec\",\"kind\":\"accum_ladder\",\
+                         \"config\":\"bert-32k-accum{a}-{opt}\",\
+                         \"zero\":\"{sname}\",\"secs\":{secs:.6},\
+                         \"baseline_secs\":{baseline:.6},\
+                         \"wire_secs\":{wire:.6},\
+                         \"baseline_wire_secs\":{base_wire:.6}}}"
+                    );
+                } else {
+                    println!(
+                        "accum{a} {opt:>4} {sname}: step {secs:.4}s \
+                         (per-microbatch reduce {baseline:.4}s, wire \
+                         {wire:.4}s vs {base_wire:.4}s)"
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// Precision columns: per-ZeRO-stage step time and seq-512 batch cap
 /// for the f32 vs mixed (bf16 storage/wire + fp32 masters) pods, plus
 /// the compressed gradient wires (f8 / 1-bit error-feedback, bf16
@@ -341,5 +403,6 @@ fn main() {
     // mode too so the CI artifact tracks them across commits).
     emit_pod_schedules(json);
     emit_mesh(json);
+    emit_accum(json);
     emit_precision(json);
 }

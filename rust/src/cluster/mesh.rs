@@ -188,6 +188,18 @@ impl Mesh {
         let pp = self.pp.max(1) as f64;
         (pp - 1.0) / (m + pp - 1.0)
     }
+
+    /// The most even layer→stage split: the first `layers % pp` stages
+    /// take `ceil(layers / pp)` layers, the rest the floor. This is the
+    /// split [`Pod::mesh_step`] prices implicitly; pass a different one
+    /// to [`Pod::mesh_step_split`] to price a deliberate imbalance.
+    pub fn balanced_split(&self, model: &ModelMeta) -> Vec<usize> {
+        let l = model.layers.max(1);
+        let pp = self.pp.max(1);
+        let q = l / pp;
+        let r = l % pp;
+        (0..pp).map(|s| if s < r { q + 1 } else { q }).collect()
+    }
 }
 
 /// One priced step under a mesh: the dp-axis bucket timeline plus the
@@ -206,7 +218,14 @@ pub struct MeshStep {
     pub tp_wire: f64,
     /// 1F1B pipeline bubble time (0 when pp = 1).
     pub bubble: f64,
-    /// Microbatches the 1F1B schedule streams per step.
+    /// Slowest-stage inflation of the per-chip compute:
+    /// `pp * max_stage_layers / layers`. Exactly 1.0 when the layer
+    /// count divides evenly over the stages (so divisible splits price
+    /// bitwise as before); a 25-layer model on pp = 4 pays 28/25 — the
+    /// whole pipeline drains at the 7-layer stage's pace.
+    pub stage_factor: f64,
+    /// Microbatches the 1F1B schedule streams per step (across all
+    /// accumulated flushes when priced via [`Pod::mesh_step_accum`]).
     pub microbatches: usize,
     /// `compute + tp_wire + bubble` — the occupied-chip time the
     /// dp-axis gradient timeline overlaps against (what `StepComm`
@@ -340,6 +359,25 @@ impl Pod {
         seq: usize,
         mesh: &Mesh,
     ) -> f64 {
+        self.tp_wire_time_stages(
+            model,
+            global_batch,
+            seq,
+            mesh,
+            mesh.layers_per_stage(model),
+        )
+    }
+
+    /// [`Pod::tp_wire_time`] at an explicit critical-stage layer count
+    /// (the slowest stage of an uneven split).
+    fn tp_wire_time_stages(
+        &self,
+        model: &ModelMeta,
+        global_batch: usize,
+        seq: usize,
+        mesh: &Mesh,
+        lmax: usize,
+    ) -> f64 {
         if mesh.tp <= 1 {
             return 0.0;
         }
@@ -349,7 +387,7 @@ impl Pod {
         let (_, ag) = self.topology.pick(CollOp::AllGather, mesh.tp, bytes);
         let (_, rs) =
             self.topology.pick(CollOp::ReduceScatter, mesh.tp, bytes);
-        mesh.layers_per_stage(model) as f64 * 4.0 * (ag + rs)
+        lmax as f64 * 4.0 * (ag + rs)
     }
 
     /// Price one step under the mesh. The occupied-chip time is
@@ -370,6 +408,79 @@ impl Pod {
         part: StatePartition,
         mesh: &Mesh,
     ) -> MeshStep {
+        self.mesh_step_stages(
+            model,
+            global_batch,
+            seq,
+            plan,
+            part,
+            mesh,
+            mesh.layers_per_stage(model),
+        )
+    }
+
+    /// [`Pod::mesh_step`] under an explicit layer→stage split. The
+    /// split must name one layer count per pipeline stage, cover every
+    /// layer exactly once, and leave no stage empty; the step is then
+    /// priced off the *slowest* stage (a 1F1B pipeline drains at the
+    /// pace of its largest stage, both compute and tp wire).
+    /// `mesh.balanced_split(model)` reproduces [`Pod::mesh_step`]
+    /// bitwise.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mesh_step_split(
+        &self,
+        model: &ModelMeta,
+        global_batch: usize,
+        seq: usize,
+        plan: &BucketPlan,
+        part: StatePartition,
+        mesh: &Mesh,
+        split: &[usize],
+    ) -> Result<MeshStep> {
+        let l = model.layers.max(1);
+        let pp = mesh.pp.max(1);
+        if split.len() != pp {
+            bail!(
+                "layer split names {} stages but mesh.pp = {}",
+                split.len(),
+                pp
+            );
+        }
+        if let Some(s) = split.iter().position(|&c| c == 0) {
+            bail!("layer split leaves pipeline stage {s} empty");
+        }
+        let sum: usize = split.iter().sum();
+        if sum != l {
+            bail!(
+                "layer split covers {} layers but {} has {}",
+                sum,
+                model.name,
+                l
+            );
+        }
+        let lmax = *split.iter().max().expect("split is non-empty");
+        Ok(self.mesh_step_stages(
+            model,
+            global_batch,
+            seq,
+            plan,
+            part,
+            mesh,
+            lmax,
+        ))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn mesh_step_stages(
+        &self,
+        model: &ModelMeta,
+        global_batch: usize,
+        seq: usize,
+        plan: &BucketPlan,
+        part: StatePartition,
+        mesh: &Mesh,
+        lmax: usize,
+    ) -> MeshStep {
         let part = part.with_shards(mesh.dp);
         if mesh.is_pure_dp() && mesh.dp == self.chips {
             let (costs, compute, total) = self.bucket_timeline_partitioned(
@@ -384,15 +495,24 @@ impl Pod {
                 compute,
                 tp_wire: 0.0,
                 bubble: 0.0,
+                stage_factor: 1.0,
                 microbatches: mesh.microbatches(global_batch),
                 work: compute,
                 total,
             };
         }
         let compute = self.compute_time(model, global_batch, seq);
-        let tp_wire = self.tp_wire_time(model, global_batch, seq, mesh);
+        let l = model.layers.max(1);
+        // The pipeline drains at the slowest stage's pace: with lmax
+        // layers there instead of layers/pp, the per-chip flat time
+        // inflates by pp*lmax/layers. Divisible splits give exactly
+        // 1.0 (an f64 multiply by 1.0 is the identity, keeping them
+        // bitwise as before); 25 layers on pp = 4 pays 28/25.
+        let stage_factor = (mesh.pp.max(1) * lmax) as f64 / l as f64;
+        let tp_wire =
+            self.tp_wire_time_stages(model, global_batch, seq, mesh, lmax);
         let m = mesh.microbatches(global_batch);
-        let flat = compute + tp_wire;
+        let flat = compute * stage_factor + tp_wire;
         let bubble = flat * (mesh.pp.max(1) - 1) as f64 / m as f64;
         let work = flat + bubble;
         let dp_pod = self.dp_view(mesh);
@@ -404,10 +524,68 @@ impl Pod {
             compute,
             tp_wire,
             bubble,
+            stage_factor,
             microbatches: m,
             work,
             total,
         }
+    }
+
+    /// [`Pod::mesh_step`] under gradient accumulation: the
+    /// optimizer-step batch splits into `accum` flushes of
+    /// `global_batch / accum` sequences. Each flush streams its own
+    /// 1F1B schedule — the bubble is paid per flush at the *flush's*
+    /// microbatch count, so accumulation and pipelining compose
+    /// instead of double-counting the same microbatches — and only the
+    /// last flush fires the dp-axis gradient collectives. Lead flushes
+    /// cost their occupied-chip work (plus, under ZeRO-3, the
+    /// per-flush just-in-time parameter gathers). `accum = 1` is
+    /// exactly [`Pod::mesh_step`], and a pure-dp mesh reproduces
+    /// [`Pod::step_time_accum`] bitwise.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mesh_step_accum(
+        &self,
+        model: &ModelMeta,
+        global_batch: usize,
+        seq: usize,
+        plan: &BucketPlan,
+        part: StatePartition,
+        mesh: &Mesh,
+        accum: usize,
+    ) -> MeshStep {
+        let a = accum.max(1);
+        let micro = global_batch.div_ceil(a);
+        let mut ms = self.mesh_step(model, micro, seq, plan, part, mesh);
+        if a > 1 {
+            let part = part.with_shards(mesh.dp);
+            let (dp_pod, shard_plan) =
+                if mesh.is_pure_dp() && mesh.dp == self.chips {
+                    (*self, plan.clone())
+                } else {
+                    (self.dp_view(mesh), Self::mesh_shard_plan(plan, mesh))
+                };
+            let lead =
+                dp_pod.lead_time_for_compute(ms.work, &shard_plan, part);
+            ms.total += (a - 1) as f64 * lead;
+        }
+        ms.microbatches *= a;
+        ms
+    }
+
+    /// [`Pod::max_batch_mesh`] scaled by the accumulation depth: the
+    /// activation budget caps the per-flush microbatch, not the
+    /// optimizer-step batch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn max_batch_mesh_accum(
+        &self,
+        model: &ModelMeta,
+        seq: usize,
+        part: StatePartition,
+        plan: &BucketPlan,
+        mesh: &Mesh,
+        accum: usize,
+    ) -> usize {
+        self.max_batch_mesh(model, seq, part, plan, mesh) * accum.max(1)
     }
 
     /// Step time under the mesh (the `total` of [`Pod::mesh_step`]).
@@ -703,5 +881,160 @@ mod tests {
             &pod.precision,
         );
         assert!(sb_tp < sb_dp * 2, "{sb_tp} vs {sb_dp}");
+    }
+
+    /// Satellite acceptance: a 25-layer model on pp = 4 is priced off
+    /// the 7-layer stage (factor 28/25), not the fictitious even
+    /// 25/4-layer stage — the old `layers / pp` assumption underpriced
+    /// every non-divisible split. Divisible splits keep factor exactly
+    /// 1.0, so they price bitwise as before.
+    #[test]
+    fn uneven_pipeline_split_prices_slowest_stage() {
+        let mut m25 = bert_large();
+        m25.layers = 25;
+        let pod = Pod::tpu_v3_nodes(1024, 8);
+        let plan = BucketPlan::even(m25.total_params, 64);
+        let part = StatePartition::Zero2 { shards: 256 };
+        let pp4 = Mesh { dp: 256, tp: 1, pp: 4 };
+        assert_eq!(pp4.balanced_split(&m25), vec![7, 6, 6, 6]);
+        assert_eq!(pp4.layers_per_stage(&m25), 7);
+
+        let ms = pod.mesh_step(&m25, 32_768, 128, &plan, part, &pp4);
+        assert_eq!(ms.stage_factor.to_bits(), (28.0f64 / 25.0).to_bits());
+        // The priced occupied time reproduces the slowest-stage
+        // arithmetic exactly ...
+        let flat = ms.compute * ms.stage_factor + ms.tp_wire;
+        let bubble = flat * 3.0 / ms.microbatches as f64;
+        assert_eq!(ms.bubble.to_bits(), bubble.to_bits());
+        assert_eq!(ms.work.to_bits(), (flat + bubble).to_bits());
+        // ... and sits strictly above what the even-split assumption
+        // would have charged (the old underpricing).
+        let naive_flat = ms.compute + ms.tp_wire;
+        let naive_work =
+            naive_flat * (1.0 + 3.0 / ms.microbatches as f64);
+        assert!(ms.work > naive_work, "{} !> {}", ms.work, naive_work);
+
+        // The explicit balanced split is the implicit one, bitwise.
+        let ms_bal = pod
+            .mesh_step_split(
+                &m25,
+                32_768,
+                128,
+                &plan,
+                part,
+                &pp4,
+                &pp4.balanced_split(&m25),
+            )
+            .unwrap();
+        assert_eq!(ms_bal.total.to_bits(), ms.total.to_bits());
+        assert_eq!(ms_bal.stage_factor.to_bits(), ms.stage_factor.to_bits());
+        // A deliberately lopsided split drains at the 10-layer stage.
+        let ms_lop = pod
+            .mesh_step_split(
+                &m25,
+                32_768,
+                128,
+                &plan,
+                part,
+                &pp4,
+                &[10, 5, 5, 5],
+            )
+            .unwrap();
+        assert_eq!(
+            ms_lop.stage_factor.to_bits(),
+            (40.0f64 / 25.0).to_bits()
+        );
+        assert!(ms_lop.total > ms.total);
+        // Malformed splits are rejected, not mispriced.
+        for bad in [&[13usize, 12][..], &[7, 6, 6, 7][..], &[19, 6, 0, 0][..]]
+        {
+            assert!(pod
+                .mesh_step_split(&m25, 32_768, 128, &plan, part, &pp4, bad)
+                .is_err());
+        }
+
+        // Divisible control: 24 layers over pp = 4 keeps factor 1.0,
+        // so the pre-fix arithmetic is reproduced bitwise.
+        let m24 = bert_large();
+        assert_eq!(m24.layers, 24);
+        let ms24 = pod.mesh_step(&m24, 32_768, 128, &plan, part, &pp4);
+        assert_eq!(ms24.stage_factor.to_bits(), 1.0f64.to_bits());
+        assert_eq!(
+            ms24.work.to_bits(),
+            ((ms24.compute + ms24.tp_wire)
+                * (1.0 + 3.0 / ms24.microbatches as f64))
+                .to_bits()
+        );
+    }
+
+    /// Tentpole acceptance (mesh side): accumulation composes with the
+    /// 1F1B schedule — each flush pays its own bubble at the flush's
+    /// microbatch count, the dp-axis gradient wire fires once — and the
+    /// pure-dp mesh delegates to [`Pod::step_time_accum`] bitwise.
+    #[test]
+    fn mesh_accum_composes_with_pipeline() {
+        let m = bert_large();
+        let pod = Pod::tpu_v3_nodes(1024, 8);
+        let plan = BucketPlan::even(m.total_params, 64);
+
+        // Pure dp: the mesh path is the pod path, bitwise, at every
+        // depth and every ZeRO stage.
+        let pure = Mesh::dp_only(1024);
+        for part in stages(1024) {
+            for a in [1usize, 2, 4] {
+                let ms =
+                    pod.mesh_step_accum(&m, 32_768, 128, &plan, part, &pure, a);
+                assert_eq!(
+                    ms.total.to_bits(),
+                    pod.step_time_accum(&m, 32_768, 128, &plan, part, a)
+                        .to_bits(),
+                    "{part:?} a={a}"
+                );
+            }
+        }
+
+        let pp4 = Mesh { dp: 256, tp: 1, pp: 4 };
+        for part in [
+            StatePartition::Zero2 { shards: 256 },
+            StatePartition::Zero3 { shards: 256 },
+        ] {
+            let a = 4usize;
+            let micro = 32_768 / a;
+            let ms1 = pod.mesh_step(&m, micro, 128, &plan, part, &pp4);
+            let msa =
+                pod.mesh_step_accum(&m, 32_768, 128, &plan, part, &pp4, a);
+            // Microbatch counts compose (m per flush x a flushes =
+            // the full-batch count) instead of double-counting.
+            assert_eq!(msa.microbatches, ms1.microbatches * a);
+            assert_eq!(msa.microbatches, pp4.microbatches(32_768));
+            // The bubble is the flush's own, priced at the flush's
+            // microbatch count.
+            assert_eq!(msa.bubble.to_bits(), ms1.bubble.to_bits());
+            // Lead flushes skip the gradient collectives: strictly
+            // cheaper than reducing every flush, dearer than bare
+            // occupied-chip work.
+            assert!(
+                msa.total < a as f64 * ms1.total,
+                "{part:?}: {} !< {}",
+                msa.total,
+                a as f64 * ms1.total
+            );
+            assert!(msa.total > a as f64 * ms1.work, "{part:?}");
+            // accum = 1 is the plain mesh step, bitwise.
+            let ms_a1 =
+                pod.mesh_step_accum(&m, 32_768, 128, &plan, part, &pp4, 1);
+            let ms_plain =
+                pod.mesh_step(&m, 32_768, 128, &plan, part, &pp4);
+            assert_eq!(ms_a1.total.to_bits(), ms_plain.total.to_bits());
+            assert_eq!(ms_a1.microbatches, ms_plain.microbatches);
+        }
+        // The activation cap bounds the flush, so the step batch
+        // scales with depth.
+        let part = StatePartition::Zero2 { shards: 256 };
+        let c1 = pod.max_batch_mesh(&m, 512, part, &plan, &pp4);
+        assert_eq!(
+            pod.max_batch_mesh_accum(&m, 512, part, &plan, &pp4, 4),
+            c1 * 4
+        );
     }
 }

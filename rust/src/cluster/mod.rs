@@ -643,6 +643,24 @@ impl Pod {
         t_fwd: f64,
         t_bwd: f64,
     ) -> (Vec<BucketCost>, f64, f64) {
+        self.zero3_timeline_impl(plan, compute, t_fwd, t_bwd, true)
+    }
+
+    /// Body of [`Self::zero3_timeline`] with the gradient
+    /// reduce-scatters optional: a *lead* microbatch under gradient
+    /// accumulation runs the same windowed just-in-time parameter
+    /// gathers (the params are sharded — every pass must gather them)
+    /// but fires no gradient collective (the local fp32 accumulator
+    /// absorbs its gradients; the wire reduces once per optimizer
+    /// step), so `reduce = false` prices gathers + compute only.
+    fn zero3_timeline_impl(
+        &self,
+        plan: &BucketPlan,
+        compute: f64,
+        t_fwd: f64,
+        t_bwd: f64,
+        reduce: bool,
+    ) -> (Vec<BucketCost>, f64, f64) {
         let n = plan.n.max(1) as f64;
         let nb = plan.len();
         // Degenerate empty partition: nothing to gather or reduce, like
@@ -728,11 +746,13 @@ impl Pod {
             let seg_start = bwd_cursor.max(g_done);
             bwd_cursor = seg_start + t_bwd * (bk.len() as f64 / n);
             ready[b] = bwd_cursor;
-            if b + 1 < nb {
+            if reduce && b + 1 < nb {
                 sched_rs(b + 1, &ready, &mut free, &gathers);
             }
         }
-        sched_rs(0, &ready, &mut free, &gathers);
+        if reduce {
+            sched_rs(0, &ready, &mut free, &gathers);
+        }
         (costs, compute, bwd_cursor.max(free))
     }
 
@@ -764,6 +784,69 @@ impl Pod {
     ) -> f64 {
         self.bucket_timeline_partitioned(model, global_batch, seq, plan, part)
             .2
+    }
+
+    /// Occupied-chip time of one *lead* (non-flushing) microbatch under
+    /// gradient accumulation. For replicated / ZeRO-1 / ZeRO-2 state a
+    /// lead microbatch is pure compute: its gradients land in the local
+    /// fp32 accumulator and no collective fires. Under ZeRO-3 the
+    /// parameters themselves are sharded, so every microbatch still pays
+    /// the windowed just-in-time gathers — only the reduce-scatters are
+    /// deferred to the flushing microbatch.
+    pub(crate) fn lead_time_for_compute(
+        &self,
+        compute: f64,
+        plan: &BucketPlan,
+        part: StatePartition,
+    ) -> f64 {
+        if matches!(part, StatePartition::Zero3 { .. }) {
+            let t_fwd = compute / 3.0;
+            self.zero3_timeline_impl(plan, compute, t_fwd, compute - t_fwd, false)
+                .2
+        } else {
+            compute
+        }
+    }
+
+    /// Simulated time of one *accumulated* optimizer step: `accum`
+    /// microbatches of `global_batch / accum` sequences each run
+    /// forward/backward into a local fp32 accumulator, and the bucketed
+    /// gradient collectives fire once, overlapped with the last
+    /// microbatch's backward. Compute scales with `accum` while the
+    /// gradient wire is paid once — the whole point of accumulation —
+    /// so this is strictly cheaper than `accum` independent steps at
+    /// the microbatch size whenever the wire cost is non-zero.
+    /// `accum = 1` is exactly [`Self::step_time_bucketed_partitioned`].
+    pub fn step_time_accum(
+        &self,
+        model: &ModelMeta,
+        global_batch: usize,
+        seq: usize,
+        plan: &BucketPlan,
+        part: StatePartition,
+        accum: usize,
+    ) -> f64 {
+        let a = accum.max(1);
+        let micro = (global_batch + a - 1) / a;
+        let compute = self.compute_time(model, micro, seq);
+        let (_, _, flush) = self.timeline_for_compute(compute, plan, part);
+        let lead = self.lead_time_for_compute(compute, plan, part);
+        (a - 1) as f64 * lead + flush
+    }
+
+    /// Largest optimizer-step batch under `part` when each step
+    /// accumulates `accum` microbatches: activations are resident one
+    /// microbatch at a time, so the per-chip activation budget caps the
+    /// *microbatch* and the step batch scales linearly with the
+    /// accumulation depth.
+    pub fn max_batch_accum(
+        &self,
+        model: &ModelMeta,
+        seq: usize,
+        part: StatePartition,
+        accum: usize,
+    ) -> usize {
+        self.max_batch(model, seq, part) * accum.max(1)
     }
 
     /// Simulated wall-clock for a whole run (steps uniform in batch/seq).
@@ -1585,5 +1668,75 @@ mod tests {
         let a = pod.run_time(&m, 100, 4096, 128);
         let b = pod.run_time(&m, 200, 4096, 128);
         assert!((b / a - 2.0).abs() < 1e-9);
+    }
+
+    /// Tentpole acceptance: an accumulated step pays the gradient wire
+    /// once. At batch 32k / seq 128 on the 1024-chip pod,
+    /// `step_time_accum` must beat the per-microbatch-reduce baseline
+    /// (`accum` independent steps at the microbatch size) *strictly*,
+    /// at every ZeRO stage, while never dropping below the compute
+    /// floor of `accum` microbatches.
+    #[test]
+    fn accumulation_pays_gradient_wire_once_per_step() {
+        let m = bert_large();
+        let k = 1024usize;
+        let pod = Pod::tpu_v3(k);
+        let plan = even_plan(m.total_params, 64);
+        let parts = [
+            StatePartition::Replicated,
+            StatePartition::Zero1 { shards: k },
+            StatePartition::Zero2 { shards: k },
+            StatePartition::Zero3 { shards: k },
+        ];
+        for part in parts {
+            // accum = 1 is bitwise the plain bucketed step.
+            assert_eq!(
+                pod.step_time_accum(&m, 32_768, 128, &plan, part, 1)
+                    .to_bits(),
+                pod.step_time_bucketed_partitioned(&m, 32_768, 128, &plan, part)
+                    .to_bits()
+            );
+            let mut prev_saving = 0.0f64;
+            for a in [2usize, 4, 8] {
+                let micro = 32_768 / a;
+                let t_acc =
+                    pod.step_time_accum(&m, 32_768, 128, &plan, part, a);
+                let baseline = a as f64
+                    * pod.step_time_bucketed_partitioned(
+                        &m, micro, 128, &plan, part,
+                    );
+                assert!(
+                    t_acc < baseline,
+                    "{part:?} a={a}: accum {t_acc} !< per-microbatch-reduce {baseline}"
+                );
+                let floor = a as f64 * pod.compute_time(&m, micro, 128);
+                assert!(t_acc >= floor - 1e-9, "{part:?} a={a}: below compute floor");
+                // Deeper ladders defer more reduces, so the absolute
+                // saving over the baseline grows monotonically.
+                let saving = baseline - t_acc;
+                assert!(saving > prev_saving, "{part:?} a={a}");
+                prev_saving = saving;
+            }
+            // The activation budget caps the microbatch, so the step
+            // batch scales linearly with the accumulation depth.
+            let c1 = pod.max_batch(&m, 512, part);
+            assert_eq!(pod.max_batch_accum(&m, 512, part, 1), c1);
+            assert_eq!(pod.max_batch_accum(&m, 512, part, 4), c1 * 4);
+        }
+        // ZeRO-3 lead microbatches still pay their just-in-time
+        // parameter gathers — dearer than bare compute, cheaper than
+        // the full gather+reduce timeline.
+        let z3 = StatePartition::Zero3 { shards: k };
+        let c_micro = pod.compute_time(&m, 32_768 / 4, 128);
+        let lead = pod.lead_time_for_compute(c_micro, &plan, z3);
+        let full = pod.timeline_for_compute(c_micro, &plan, z3).2;
+        assert!(lead > c_micro, "zero3 lead must price the gathers");
+        assert!(lead < full, "zero3 lead must skip the reduce-scatters");
+        // Every other stage's lead is pure compute.
+        let z2 = StatePartition::Zero2 { shards: k };
+        assert_eq!(
+            pod.lead_time_for_compute(c_micro, &plan, z2).to_bits(),
+            c_micro.to_bits()
+        );
     }
 }

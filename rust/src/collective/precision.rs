@@ -271,6 +271,14 @@ pub struct PrecisionPlan {
     /// compressed collectives, which add fp32 residual state priced by
     /// the cluster model.
     pub grads_wire: Option<super::compress::Wire>,
+    /// Per-segment storage override (`[precision] norms_fp32`): keep
+    /// the no-decay segments — layer norms and biases, the LM-head bias
+    /// included — resident in fp32 even when `params` is half-width.
+    /// Those segments are tiny (a few KB against the ~1.3 GB of BERT
+    /// weight matrices), so the wire/storage accounting ignores them,
+    /// but their *numerics* skip the quantize-back-to-storage cast: the
+    /// norm statistics step at full precision.
+    pub norms_fp32: bool,
 }
 
 impl PrecisionPlan {
@@ -281,6 +289,7 @@ impl PrecisionPlan {
         grads: Precision::F32,
         master_weights: false,
         grads_wire: None,
+        norms_fp32: false,
     };
 
     /// The paper's mixed recipe: half-width params + grads (storage and
@@ -291,7 +300,14 @@ impl PrecisionPlan {
             grads: half,
             master_weights: true,
             grads_wire: None,
+            norms_fp32: false,
         }
+    }
+
+    /// Same plan with the fp32 norm/bias storage override on.
+    pub fn with_norms_fp32(mut self, on: bool) -> PrecisionPlan {
+        self.norms_fp32 = on;
+        self
     }
 
     /// Same plan with an explicit gradient wire format.
@@ -598,6 +614,7 @@ mod tests {
             grads: Precision::F32,
             master_weights: false,
             grads_wire: None,
+            norms_fp32: false,
         };
         assert!(forced.has_master());
         assert_eq!(forced.master_bytes(), 4);
@@ -607,6 +624,7 @@ mod tests {
             grads: Precision::Bf16,
             master_weights: true,
             grads_wire: None,
+            norms_fp32: false,
         };
         assert!(optin.has_master() && optin.is_mixed());
         assert_eq!(PrecisionPlan::default(), PrecisionPlan::F32);

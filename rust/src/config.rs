@@ -213,6 +213,8 @@ impl TopologyConfig {
 ///                        # f8/1bit are error-feedback compressed.
 /// master_weights = true  # default: forced on when params are half
 /// loss_scale = "dynamic" # "none" | "dynamic" | a fixed scale >= 1
+/// norms_fp32 = true      # keep layer norms / biases in fp32 storage
+///                        # even when params are half (default false)
 /// ```
 ///
 /// Mistyped values hard-error like `exec.zero_stage` (a number where a
@@ -236,6 +238,11 @@ pub struct PrecisionConfig {
     pub master_weights: Option<bool>,
     /// Gradient loss scaling (`optim::LossScaler`).
     pub loss_scale: LossScaleConfig,
+    /// Per-segment override: keep no-decay segments (layer norms,
+    /// biases — the LM-head bias included) in fp32 storage even when
+    /// `params` is half-width. Their resident copy is never quantized,
+    /// so the norm statistics step at full precision.
+    pub norms_fp32: bool,
 }
 
 /// `[precision] loss_scale` spellings.
@@ -259,6 +266,7 @@ impl Default for PrecisionConfig {
             grads_wire: None,
             master_weights: None,
             loss_scale: LossScaleConfig::None,
+            norms_fp32: false,
         }
     }
 }
@@ -273,6 +281,7 @@ impl PrecisionConfig {
                 self.params != crate::collective::Precision::F32,
             ),
             grads_wire: self.grads_wire,
+            norms_fp32: self.norms_fp32,
         }
     }
 
@@ -443,6 +452,11 @@ pub struct TrainConfig {
     pub exec_workers: usize,
     /// Bucket size for the overlapped all-reduce, in KiB.
     pub bucket_kb: usize,
+    /// Gradient-accumulation microbatches per optimizer step
+    /// (`[exec] accum_steps`, default 1): each worker runs this many
+    /// forward/backward passes before the single bucketed reduce, so
+    /// the gradient wire is paid once per accumulated step.
+    pub accum_steps: usize,
     // interconnect topology ([topology] section)
     pub topology: TopologyConfig,
     // storage/wire precision ([precision] section)
@@ -479,6 +493,7 @@ impl Default for TrainConfig {
             exec_mode: crate::exec::ExecMode::Serial,
             exec_workers: 0,
             bucket_kb: 1024,
+            accum_steps: 1,
             topology: TopologyConfig::default(),
             precision: PrecisionConfig::default(),
             trace: TraceConfig::default(),
@@ -575,6 +590,20 @@ impl TrainConfig {
         }
         if let Some(v) = geti("exec.workers") { c.exec_workers = v as usize; }
         if let Some(v) = geti("exec.bucket_kb") { c.bucket_kb = v as usize; }
+        if let Some(raw) = doc.get("exec.accum_steps") {
+            // Hard-error on a mistyped value (float/string/bool) instead
+            // of silently accumulating the wrong batch, mirroring
+            // exec.zero_stage.
+            let v = raw.as_i64().ok_or_else(|| {
+                anyhow!(
+                    "exec.accum_steps must be an integer >= 1 (got {raw:?})"
+                )
+            })?;
+            if v < 1 {
+                bail!("exec.accum_steps must be >= 1 (got {v})");
+            }
+            c.accum_steps = v as usize;
+        }
         // ---- [topology] table: every key hard-errors on a mistyped
         // value (mirroring exec.zero_stage) instead of silently pricing
         // the wrong interconnect. ----
@@ -692,6 +721,13 @@ impl TrainConfig {
                     )
                 })?,
             );
+        }
+        if let Some(raw) = doc.get("precision.norms_fp32") {
+            c.precision.norms_fp32 = raw.as_bool().ok_or_else(|| {
+                anyhow!(
+                    "precision.norms_fp32 must be a boolean (got {raw:?})"
+                )
+            })?;
         }
         if let Some(raw) = doc.get("precision.master_weights") {
             c.precision.master_weights = Some(raw.as_bool().ok_or_else(
@@ -915,6 +951,16 @@ impl TrainConfig {
                     self.precision.plan().wire().as_str()
                 );
             }
+            if self.accum_steps > 1 {
+                bail!(
+                    "step_path = \"fused\" is incompatible with \
+                     exec.accum_steps = {} (the fused artifact runs one \
+                     forward/backward per step — there is no microbatch \
+                     loop to accumulate over); use the distributed step \
+                     path",
+                    self.accum_steps
+                );
+            }
         }
         Ok(())
     }
@@ -997,6 +1043,13 @@ betas = [0.9, 0.999]
             &[("optimizer.name".into(), "\"sgdx\"".into())],
         );
         assert!(r.is_err());
+        // the 54-minute-trajectory optimizer is a first-class name
+        let c = TrainConfig::load(
+            None,
+            &[("optimizer.name".into(), "\"lans\"".into())],
+        )
+        .unwrap();
+        assert_eq!(c.optimizer, "lans");
     }
 
     #[test]
@@ -1007,20 +1060,45 @@ betas = [0.9, 0.999]
                 ("exec.mode".into(), "\"zero1\"".into()),
                 ("exec.workers".into(), "4".into()),
                 ("exec.bucket_kb".into(), "256".into()),
+                ("exec.accum_steps".into(), "4".into()),
             ],
         )
         .unwrap();
         assert_eq!(c.exec_mode, crate::exec::ExecMode::Zero1);
         assert_eq!(c.exec_workers, 4);
         assert_eq!(c.bucket_kb, 256);
-        // defaults: serial, auto workers
+        assert_eq!(c.accum_steps, 4);
+        // defaults: serial, auto workers, no accumulation
         let d = TrainConfig::default();
         assert_eq!(d.exec_mode, crate::exec::ExecMode::Serial);
         assert_eq!(d.exec_workers, 0);
+        assert_eq!(d.accum_steps, 1);
         // bad mode rejected
         assert!(TrainConfig::load(
             None,
             &[("exec.mode".into(), "\"async\"".into())]
+        )
+        .is_err());
+        // accum_steps: mistypes and zero hard-error like zero_stage
+        let bad = |v: &str| {
+            TrainConfig::load(
+                None,
+                &[("exec.accum_steps".into(), v.into())],
+            )
+            .is_err()
+        };
+        assert!(bad("0"));
+        assert!(bad("-2"));
+        assert!(bad("2.0"));
+        assert!(bad("\"4\""));
+        assert!(bad("true"));
+        // the fused path has no microbatch loop to accumulate over
+        assert!(TrainConfig::load(
+            None,
+            &[
+                ("run.step_path".into(), "\"fused\"".into()),
+                ("exec.accum_steps".into(), "2".into()),
+            ]
         )
         .is_err());
     }
@@ -1227,6 +1305,27 @@ betas = [0.9, 0.999]
         assert_eq!(c.precision.grads_wire, None);
         assert_eq!(c.precision.plan().wire(), Wire::Bf16);
         assert!(!c.precision.plan().compressed_wire());
+        // norms_fp32: off by default, parses as a boolean, flows into
+        // the plan; mistypes hard-error
+        assert!(!TrainConfig::default().precision.norms_fp32);
+        let c = TrainConfig::load(
+            None,
+            &[
+                ("exec.zero_stage".into(), "3".into()),
+                ("precision.params".into(), "\"bf16\"".into()),
+                ("precision.norms_fp32".into(), "true".into()),
+            ],
+        )
+        .unwrap();
+        assert!(c.precision.norms_fp32);
+        assert!(c.precision.plan().norms_fp32);
+        for v in ["1", "\"yes\"", "2.0"] {
+            assert!(TrainConfig::load(
+                None,
+                &[("precision.norms_fp32".into(), v.into())]
+            )
+            .is_err());
+        }
     }
 
     /// Mistyped `[precision]` values are hard errors (like

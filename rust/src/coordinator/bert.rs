@@ -2,7 +2,10 @@
 //!
 //! One global step:
 //!   1. split the global batch into artifact-sized microbatches, one
-//!      stream per simulated worker (chip);
+//!      stream per simulated worker (chip) — under `[exec] accum_steps`
+//!      the microbatches group into accumulation flushes whose
+//!      gradients pile into the local fp32 buffers, and only the last
+//!      flush pays the wire;
 //!   2. execute the gradient artifact per microbatch (real numerics on
 //!      PJRT-CPU) and accumulate into the flat gradient buffer;
 //!   3. all-reduce: average (what the pod's ring would compute) and
@@ -378,6 +381,25 @@ impl<'e> BertTrainer<'e> {
             );
         }
         let n_micro = stage.global_batch / mb;
+        // Gradient accumulation (`[exec] accum_steps`): the optimizer
+        // step's microbatches split into `accum` equal flushes. The
+        // single-reduce loop below already computes the accumulated
+        // gradient numerically (every microbatch lands in the local
+        // fp32 accumulators before the one bucketed reduce, and the
+        // loss scaler gates the whole step), so the knob changes
+        // *pricing* — compute scales with the depth while the gradient
+        // wire is paid once — and threads flush boundaries into the
+        // host/sim tracers. The serial (non-bucketed) path keeps its
+        // legacy fixed-overlap pricing.
+        let accum = self.cfg.accum_steps.max(1);
+        if accum > 1 && n_micro % accum != 0 {
+            bail!(
+                "exec.accum_steps = {accum} does not divide the {n_micro} \
+                 artifact microbatches of global batch {} (microbatch \
+                 {mb})",
+                stage.global_batch
+            );
+        }
         // Gradient-phase worker count: explicit `exec.workers`, or auto
         // (one per chip), both capped by the microbatch count.
         let workers = if self.cfg.exec_workers > 0 {
@@ -468,9 +490,14 @@ impl<'e> BertTrainer<'e> {
             // and fold tensor-parallel wire + the 1F1B bubble into the
             // occupied-chip time.
             let mesh = self.mesh;
+            // Under accumulation the dp-axis timeline is priced at the
+            // *flush* batch: lead flushes pay occupied-chip work only
+            // (plus ZeRO-3's per-flush just-in-time gathers), the
+            // flushing microbatch pays the full gradient timeline.
+            // `accum = 1` is the plain mesh step, bitwise.
             let ms = self.pod.mesh_step(
                 &self.meta,
-                stage.global_batch,
+                stage.global_batch / accum,
                 stage.seq,
                 &self.plan,
                 part,
@@ -496,13 +523,23 @@ impl<'e> BertTrainer<'e> {
             // mesh, `exposed` is measured against the occupied-chip
             // time (compute + tp wire + pipeline bubble), so tp/pp
             // terms never masquerade as exposed gradient wire.
-            let mut comm = StepComm::from_costs(&ms.costs, ms.work, ms.total);
+            let lead =
+                price_pod.lead_time_for_compute(ms.work, price_plan, part_dp);
+            let (occupied, step_total) = if accum > 1 {
+                (
+                    (accum - 1) as f64 * lead + ms.work,
+                    (accum - 1) as f64 * lead + ms.total,
+                )
+            } else {
+                (ms.work, ms.total)
+            };
+            let mut comm = StepComm::from_costs(&ms.costs, occupied, step_total);
             comm.gather_stall = trace::sim::gather_stall_total(
                 price_pod, price_plan, part_dp, &ms.costs, ms.work,
             );
             if self.cfg.trace.enabled && self.cfg.trace.sim_trace {
-                let tr = trace::sim::sim_step_trace_mesh(
-                    price_pod, price_plan, part_dp, &ms, &mesh,
+                let tr = trace::sim::sim_step_trace_accum(
+                    price_pod, price_plan, part_dp, &ms, &mesh, accum, lead,
                 );
                 let dir = std::path::Path::new(&self.cfg.trace.dir);
                 std::fs::create_dir_all(dir).with_context(|| {
@@ -513,7 +550,7 @@ impl<'e> BertTrainer<'e> {
                     .with_context(|| format!("writing {name}"))?;
                 sim_trace_ref = Some(name);
             }
-            (ms.total, Some(comm))
+            (step_total, Some(comm))
         } else {
             (
                 self.pod.step_time(&self.meta, stage.global_batch, stage.seq),
@@ -568,18 +605,29 @@ impl<'e> BertTrainer<'e> {
                     wg.fill(0.0);
                 }
                 let mut loss_sum = 0.0f64;
-                for mi in 0..n_micro {
-                    let w = mi % workers;
-                    let b = gens[w].next_batch(mb);
-                    let out = grad_exe.as_ref().unwrap().run(&[
-                        runtime::lit_f32(&self.params),
-                        runtime::lit_i32_2d(&b.tokens, mb, stage.seq)?,
-                        runtime::lit_i32_2d(&b.targets, mb, stage.seq)?,
-                        runtime::lit_f32_2d(&b.mask, mb, stage.seq)?,
-                    ])?;
-                    loss_sum += runtime::scalar_f32(&out[0])? as f64;
-                    let g = runtime::vec_f32(&out[1])?;
-                    collective::accumulate(&mut self.worker_grads[w], &g);
+                // Iteration order is microbatch-major exactly as
+                // before; the flush nesting only marks accumulation
+                // boundaries for the host tracer (numerics and data
+                // streams are untouched, accum = 1 is one flush).
+                let group = n_micro / accum;
+                for fl in 0..accum {
+                    let _flush = (accum > 1).then(|| {
+                        trace::host::span_id("bert.accum_flush", fl as u64)
+                    });
+                    for gi in 0..group {
+                        let mi = fl * group + gi;
+                        let w = mi % workers;
+                        let b = gens[w].next_batch(mb);
+                        let out = grad_exe.as_ref().unwrap().run(&[
+                            runtime::lit_f32(&self.params),
+                            runtime::lit_i32_2d(&b.tokens, mb, stage.seq)?,
+                            runtime::lit_i32_2d(&b.targets, mb, stage.seq)?,
+                            runtime::lit_f32_2d(&b.mask, mb, stage.seq)?,
+                        ])?;
+                        loss_sum += runtime::scalar_f32(&out[0])? as f64;
+                        let g = runtime::vec_f32(&out[1])?;
+                        collective::accumulate(&mut self.worker_grads[w], &g);
+                    }
                 }
                 // Local mean per worker, so the bucketed worker-mean
                 // equals the global microbatch mean.

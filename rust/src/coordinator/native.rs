@@ -20,8 +20,8 @@ use crate::cluster::Mesh;
 use crate::collective::Precision;
 use crate::data::image::ImageTask;
 use crate::exec::{
-    ExecConfig, ExecMode, Executor, GradWorker, StepCtx, Zero1State,
-    Zero2State, Zero3State,
+    cast_params, ExecConfig, ExecMode, Executor, GradWorker, StepCtx,
+    Zero1State, Zero2State, Zero3State,
 };
 use crate::metrics::{DivergenceDetector, RunLog, StepComm, StepRecord};
 use crate::nn::{Mlp, MlpConfig};
@@ -187,7 +187,9 @@ impl NativeTrainer {
 
     /// Build a trainer whose step loop runs through the exec engine with
     /// `exec.workers` data-parallel workers. The global batch is split
-    /// evenly (`batch / workers` each; pick divisible batches). Serial
+    /// evenly across workers and accumulated microbatches
+    /// (`batch / (workers * accum_steps)` samples per worker per
+    /// microbatch; pick divisible batches). Serial
     /// and parallel modes produce bitwise-identical runs; `Zero1`
     /// additionally shards the optimizer state by bucket owner, `Zero2`
     /// shards the gradients too (reduce-scatter instead of all-reduce),
@@ -270,11 +272,12 @@ impl NativeTrainer {
             _ => None,
         };
         // The trainer's resident params are the storage copy (the fp32
-        // masters were seeded above from the same initialization).
+        // masters were seeded above from the same initialization). The
+        // cast is segment-aware: with `[precision] norms_fp32` on, the
+        // no-decay segments (layer norms, biases) stay fp32-resident.
         if exec.prec.params != Precision::F32 {
-            for x in tr.mlp.params.iter_mut() {
-                *x = exec.prec.params.quantize(*x);
-            }
+            let src = tr.mlp.params.clone();
+            cast_params(&mut tr.mlp.params, &src, 0, &exec.prec, &tr.segs);
         }
         tr.exec = Some(NativeExec {
             executor,
@@ -346,7 +349,13 @@ impl NativeTrainer {
     ) -> (f32, Vec<f32>, Option<StepComm>) {
         let ex = self.exec.as_mut().expect("exec_step without exec engine");
         let k = ex.executor.workers();
-        let share = (batch / k).max(1);
+        // The global batch splits twice: across the k workers, then
+        // across the accumulated microbatches — each worker draws
+        // `share` samples per microbatch, A microbatches per step, so
+        // the per-step sample count is unchanged by the accum knob
+        // (pick batches divisible by k * accum_steps).
+        let a = ex.executor.accum_steps();
+        let share = (batch / (k * a)).max(1);
         if let Some(z) = ex.zero3.as_ref() {
             // gather: materialize the transient full view from the
             // owners' shards (per bucket, just-in-time on the pod).
@@ -705,6 +714,9 @@ mod tests {
     /// params + bf16 gradient wire + fp32 masters still train (the loss
     /// falls), and the resident parameters stay storage-dtype values
     /// every step (the masters absorb the full-precision updates).
+    /// With `[precision] norms_fp32` on, the invariant narrows to the
+    /// decay (weight) segments — the no-decay norm/bias segments ride
+    /// in fp32 and the run still trains.
     #[test]
     fn mixed_precision_zero2_and_zero3_train() {
         use crate::collective::PrecisionPlan;
@@ -715,35 +727,130 @@ mod tests {
             total: 200,
             power: 1.0,
         };
-        for mode in [ExecMode::Zero2, ExecMode::Zero3] {
+        for norms_fp32 in [false, true] {
+            for mode in [ExecMode::Zero2, ExecMode::Zero3] {
+                let cfg = ExecConfig {
+                    mode,
+                    workers: 2,
+                    bucket_bytes: 1 << 12,
+                    prec: PrecisionPlan::mixed(Precision::Bf16)
+                        .with_norms_fp32(norms_fp32),
+                    ..ExecConfig::default()
+                };
+                let mut tr = NativeTrainer::with_exec(
+                    &spec,
+                    "lamb",
+                    Hyper::default(),
+                    sched.clone(),
+                    3,
+                    cfg,
+                );
+                let log = tr.train(200, 64);
+                assert!(!log.diverged, "{mode:?} norms_fp32={norms_fp32}");
+                assert!(
+                    log.tail_loss(20) < log.records[0].loss,
+                    "{mode:?} norms_fp32={norms_fp32}: loss did not fall"
+                );
+                for s in tr.mlp.segs() {
+                    if norms_fp32 && !s.decay {
+                        continue; // fp32-resident by design
+                    }
+                    for &x in &tr.mlp.params[s.offset..s.offset + s.size] {
+                        assert_eq!(
+                            Precision::Bf16.quantize(x).to_bits(),
+                            x.to_bits(),
+                            "{mode:?} norms_fp32={norms_fp32}: resident \
+                             weight params must be storage-dtype"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// LANS convergence regression at large simulated batch: with the
+    /// shared default hyperparameters and schedule, LANS's
+    /// pre-normalized Nesterov step must keep (or beat) LAMB's loss
+    /// trajectory on the proxy task — the paper-track claim that the
+    /// gradient pre-normalization does not cost convergence at scale.
+    #[test]
+    fn lans_matches_or_beats_lamb_trajectory_at_large_batch() {
+        let spec = NativeTask::mnist_proxy();
+        let sched = Schedule::WarmupPoly {
+            base: 0.02,
+            warmup: 20,
+            total: 300,
+            power: 1.0,
+        };
+        let run = |name: &str| {
+            let mut tr = NativeTrainer::new(
+                &spec,
+                name,
+                Hyper::default(),
+                sched.clone(),
+                5,
+            );
+            let log = tr.train(300, 512);
+            assert!(!log.diverged, "{name} diverged");
+            (log.records[0].loss, log.tail_loss(20), tr.test_accuracy())
+        };
+        let (_, lamb_tail, _) = run("lamb");
+        let (lans_first, lans_tail, lans_acc) = run("lans");
+        assert!(
+            lans_tail < 0.7 * lans_first,
+            "lans failed to train: tail {lans_tail} vs first {lans_first}"
+        );
+        assert!(lans_acc > 0.7, "lans accuracy {lans_acc}");
+        assert!(
+            lans_tail <= lamb_tail * 1.2 + 0.05,
+            "lans tail {lans_tail} must match or beat lamb tail {lamb_tail}"
+        );
+    }
+
+    /// LANS under gradient accumulation, dense vs ZeRO-3: the serial
+    /// exec drive (dense optimizer step) and the ZeRO-3 drive
+    /// (step_range by bucket owner over the reduce-scattered gradient)
+    /// run the same accumulated microbatch schedule and must stay
+    /// bitwise-identical — the pre-normalization is per segment, so
+    /// sharding cannot perturb it.
+    #[test]
+    fn lans_accum_serial_and_zero3_bitwise_identical() {
+        let spec = NativeTask::mnist_proxy();
+        let sched = Schedule::WarmupPoly {
+            base: 0.02,
+            warmup: 10,
+            total: 150,
+            power: 1.0,
+        };
+        let run = |mode: ExecMode| {
             let cfg = ExecConfig {
                 mode,
                 workers: 2,
                 bucket_bytes: 1 << 12,
-                prec: PrecisionPlan::mixed(Precision::Bf16),
+                accum_steps: 2,
                 ..ExecConfig::default()
             };
             let mut tr = NativeTrainer::with_exec(
                 &spec,
-                "lamb",
+                "lans",
                 Hyper::default(),
                 sched.clone(),
                 3,
                 cfg,
             );
-            let log = tr.train(200, 64);
-            assert!(!log.diverged, "{mode:?}");
-            assert!(
-                log.tail_loss(20) < log.records[0].loss,
-                "{mode:?}: loss did not fall"
-            );
-            for &x in &tr.mlp.params {
-                assert_eq!(
-                    Precision::Bf16.quantize(x).to_bits(),
-                    x.to_bits(),
-                    "{mode:?}: resident params must be storage-dtype"
-                );
-            }
+            let log = tr.train(150, 64);
+            (log, tr.mlp.params.clone())
+        };
+        let (la, pa) = run(ExecMode::Serial);
+        let (lb, pb) = run(ExecMode::Zero3);
+        assert!(!la.diverged && !lb.diverged);
+        assert!(
+            la.tail_loss(20) < la.records[0].loss,
+            "accumulated lans run failed to train"
+        );
+        assert_eq!(la.losses(), lb.losses(), "losses diverged");
+        for (x, y) in pa.iter().zip(&pb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "params diverged");
         }
     }
 

@@ -74,8 +74,8 @@ pub mod zero;
 pub use bucket::{Bucket, BucketPlan};
 pub use pool::WorkerPool;
 pub use zero::{
-    stage_split, stage_split_prec, stage_state_bytes, stage_state_bytes_prec,
-    Zero1State, Zero2State, Zero3State,
+    cast_params, stage_split, stage_split_prec, stage_state_bytes,
+    stage_state_bytes_prec, Zero1State, Zero2State, Zero3State,
 };
 
 use std::sync::Arc;
@@ -177,6 +177,18 @@ pub struct ExecConfig {
     /// the fp32 master-weight step path (stages 2/3 only — the masters
     /// live with the sharded optimizer state).
     pub prec: PrecisionPlan,
+    /// Gradient-accumulation microbatches per optimizer step (`[exec]
+    /// accum_steps`, default 1). Each worker runs this many
+    /// forward/backward passes of `batch_share` samples each,
+    /// accumulating into a local fp32 buffer regardless of the grads
+    /// storage dtype, and the bucketed reduce — with the wire
+    /// quantization, the error-feedback residuals and the `LossScaler`
+    /// gate behind it — fires **once per accumulated step**, not once
+    /// per microbatch. The accumulated step is bitwise-identical to a
+    /// single `accum_steps × batch_share`-sample step on the same
+    /// samples whenever the share arithmetic is exact (power-of-two
+    /// shares; asserted by the property tests below).
+    pub accum_steps: usize,
 }
 
 impl Default for ExecConfig {
@@ -187,6 +199,7 @@ impl Default for ExecConfig {
             bucket_bytes: 1 << 20,
             reduce: ReduceSchedule::default(),
             prec: PrecisionPlan::F32,
+            accum_steps: 1,
         }
     }
 }
@@ -199,6 +212,11 @@ pub struct StepCtx {
     pub step: u64,
     /// Samples this worker should draw for its microbatch.
     pub batch_share: usize,
+    /// Microbatches to accumulate locally before the reduce
+    /// (`ExecConfig::accum_steps`): the worker draws `batch_share`
+    /// samples *per microbatch*, so the effective per-worker batch of
+    /// the step is `accum * batch_share`.
+    pub accum: usize,
     pub params: Arc<Vec<f32>>,
 }
 
@@ -259,6 +277,62 @@ pub(crate) fn drive_worker(
         retired(0, grads);
     }
     loss
+}
+
+/// [`drive_worker`] over `ctx.accum` microbatches: run A
+/// forward/backward passes, sum the per-microbatch mean gradients into
+/// the fp32 accumulator `acc`, divide by A, and emit the buckets of
+/// the *accumulated* gradient once (descending bucket order — the same
+/// order the single-pass retirement sweep produces). The reduce — and
+/// with it the wire quantization, the error-feedback residuals and the
+/// `LossScaler` gate downstream — therefore runs once per optimizer
+/// step, not once per microbatch; a non-finite microbatch gradient
+/// propagates through the sum, so the scaler's single gate skips the
+/// whole accumulated step. With `ctx.accum <= 1` this is exactly
+/// [`drive_worker`], incremental retirement included. Returns the mean
+/// of the microbatch losses (f64 accumulator, fixed microbatch order).
+pub(crate) fn drive_worker_accum(
+    worker: &mut dyn GradWorker,
+    grads: &mut [f32],
+    acc: &mut [f32],
+    plan: &BucketPlan,
+    ctx: &StepCtx,
+    emit: &mut dyn FnMut(usize, &[f32]),
+) -> f32 {
+    let a = ctx.accum.max(1);
+    if a == 1 {
+        return drive_worker(worker, grads, plan, ctx, emit);
+    }
+    assert_eq!(acc.len(), grads.len(), "accumulator length mismatch");
+    let mut lsum = 0.0f64;
+    for micro in 0..a {
+        // Accumulation boundary on the host timeline: one span per
+        // microbatch (clock reads only — the numeric path is identical
+        // traced or untraced).
+        let _g = thost::span_id("exec.microbatch", micro as u64);
+        grads.fill(0.0);
+        // Segments still retire inside each microbatch, but only the
+        // accumulated sum crosses the wire — incremental emission is
+        // meaningless mid-accumulation, so retirement is a no-op here
+        // and the buckets go out after the loop.
+        let loss = worker.compute(ctx, grads, &mut |_, _| {});
+        lsum += loss as f64;
+        if micro == 0 {
+            acc.copy_from_slice(grads);
+        } else {
+            crate::collective::accumulate(acc, grads);
+        }
+    }
+    // Each `compute` returned a mean over its `batch_share` samples, so
+    // the 1/A rescale makes `acc` the mean over the whole
+    // `A * batch_share`-sample batch — what a single big-batch pass
+    // computes.
+    crate::collective::scale(acc, 1.0 / a as f32);
+    for b in (0..plan.len()).rev() {
+        let bk = &plan.buckets[b];
+        emit(b, &acc[bk.start..bk.end]);
+    }
+    (lsum / a as f64) as f32
 }
 
 /// Deterministic bucketed mean over per-worker gradient buffers, bucket
@@ -477,6 +551,9 @@ pub struct Executor {
     /// bucket: every rank (identical copies) in dense/zero1 modes, the
     /// bucket owner under zero2/3 — it shards with the gradient.
     recv_res: Vec<Vec<f32>>,
+    /// fp32 gradient accumulator for the serial backend when
+    /// `accum_steps > 1` (pool threads own their own); empty otherwise.
+    accum_scratch: Vec<f32>,
 }
 
 impl Executor {
@@ -493,6 +570,9 @@ impl Executor {
     ) -> Executor {
         let mut cfg = cfg;
         cfg.reduce = cfg.reduce.with_wire(cfg.prec.wire());
+        // 0 microbatches is meaningless; clamp to the no-accumulation
+        // drive so `accum_steps = 0` configs behave like the default.
+        cfg.accum_steps = cfg.accum_steps.max(1);
         assert!(!workers.is_empty(), "need at least one worker");
         let n = workers[0].n();
         for w in &workers {
@@ -532,7 +612,22 @@ impl Executor {
             } else {
                 (Vec::new(), Vec::new())
             };
-        Executor { cfg, plan, backend, workers: count, shards, send_res, recv_res }
+        let accum_scratch =
+            if cfg.accum_steps > 1 && matches!(cfg.mode, ExecMode::Serial) {
+                vec![0.0f32; n]
+            } else {
+                Vec::new()
+            };
+        Executor {
+            cfg,
+            plan,
+            backend,
+            workers: count,
+            shards,
+            send_res,
+            recv_res,
+            accum_scratch,
+        }
     }
 
     pub fn mode(&self) -> ExecMode {
@@ -541,6 +636,13 @@ impl Executor {
 
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Microbatches accumulated per optimizer step (>= 1; the
+    /// constructor clamps 0). Callers splitting a global batch divide
+    /// by `workers() * accum_steps()` to size one microbatch share.
+    pub fn accum_steps(&self) -> usize {
+        self.cfg.accum_steps
     }
 
     pub fn plan(&self) -> &BucketPlan {
@@ -578,6 +680,7 @@ impl Executor {
         let ctx = StepCtx {
             step,
             batch_share,
+            accum: self.cfg.accum_steps,
             params: Arc::new(params.to_vec()),
         };
         let plan = self.plan.clone();
@@ -596,6 +699,8 @@ impl Executor {
         let ef_on = !self.send_res.is_empty();
         let send_res = &mut self.send_res;
         let recv_res = &mut self.recv_res;
+        // Serial-mode accumulator (empty unless accum_steps > 1).
+        let acc = &mut self.accum_scratch;
         let mut gather = Gather::new(nb, k);
         let mut per_bucket = vec![(0.0f64, 0.0f64); nb];
         let mut losses = vec![0.0f32; k];
@@ -605,9 +710,10 @@ impl Executor {
             Backend::Serial(slots) => {
                 for (w, slot) in slots.iter_mut().enumerate() {
                     let (worker, grads) = slot;
-                    let loss = drive_worker(
+                    let loss = drive_worker_accum(
                         worker.as_mut(),
                         grads,
+                        acc,
                         &plan,
                         &ctx,
                         &mut |b, payload| {
@@ -809,6 +915,86 @@ mod tests {
             .collect()
     }
 
+    /// Exact-arithmetic batch worker for the accumulation equivalence
+    /// property: the gradient is the mean over `batch_share` samples of
+    /// a per-sample gradient whose elements are small integers (a hash
+    /// of worker id × sample index × element). With power-of-two shares
+    /// and accumulation factors every sum and mean is exact in f32, so
+    /// *any* grouping of the per-sample sum — A accumulated microbatches
+    /// or one A×-sized batch — is bitwise-identical. The worker consumes
+    /// its sample stream through a persistent cursor, so both groupings
+    /// see the same samples in the same order.
+    struct BatchWorker {
+        id: u64,
+        n: usize,
+        cursor: u64,
+        loss: f32,
+        /// Sample index whose gradient is poisoned with +inf (the
+        /// LossScaler × accumulation regression below).
+        spike_at: Option<u64>,
+    }
+
+    impl GradWorker for BatchWorker {
+        fn n(&self) -> usize {
+            self.n
+        }
+
+        fn compute(
+            &mut self,
+            ctx: &StepCtx,
+            grads: &mut [f32],
+            _retired: &mut dyn FnMut(usize, &[f32]),
+        ) -> f32 {
+            let s = ctx.batch_share.max(1);
+            grads.fill(0.0);
+            for _ in 0..s {
+                let smp = self.cursor;
+                self.cursor += 1;
+                for (i, g) in grads.iter_mut().enumerate() {
+                    let h = (self.id.wrapping_add(1))
+                        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                        ^ smp.wrapping_mul(0x85eb_ca6b_c2b2_ae63)
+                        ^ (i as u64).wrapping_mul(0xc2b2_ae3d_27d4_eb4f);
+                    let h = h.wrapping_mul(0x2545_f491_4f6c_dd1d);
+                    // small integer in [-8, 7]: exact in f32
+                    *g += ((h >> 48) as i64 % 16 - 8) as f32;
+                }
+                if self.spike_at == Some(smp) {
+                    grads[0] = f32::INFINITY;
+                }
+            }
+            let inv = 1.0 / s as f32; // power-of-two share: exact
+            for g in grads.iter_mut() {
+                *g *= inv;
+            }
+            self.loss
+        }
+    }
+
+    fn batch_workers(k: usize, n: usize) -> Vec<Box<dyn GradWorker>> {
+        spike_workers(k, n, None)
+    }
+
+    fn spike_workers(
+        k: usize,
+        n: usize,
+        spike_at: Option<u64>,
+    ) -> Vec<Box<dyn GradWorker>> {
+        (0..k)
+            .map(|id| {
+                Box::new(BatchWorker {
+                    id: id as u64,
+                    n,
+                    cursor: 0,
+                    loss: id as f32 * 0.25 + 1.0,
+                    // only worker 0 spikes — one bad microbatch on one
+                    // rank must poison the whole accumulated step
+                    spike_at: if id == 0 { spike_at } else { None },
+                }) as Box<dyn GradWorker>
+            })
+            .collect()
+    }
+
     #[test]
     fn mode_parse_roundtrip() {
         for m in [
@@ -965,10 +1151,8 @@ mod tests {
                 workers: 3,
                 bucket_bytes: 100 * 4,
                 prec: PrecisionPlan {
-                    params: Precision::F32,
                     grads: wire,
-                    master_weights: false,
-                    grads_wire: None,
+                    ..PrecisionPlan::F32
                 },
                 ..ExecConfig::default()
             };
@@ -1118,5 +1302,135 @@ mod tests {
             assert!(done <= out.total + 1e-9);
         }
         assert!(out.comm.exposed >= 0.0);
+    }
+
+    /// Tentpole equivalence property: A accumulated microbatches under
+    /// `accum_steps = A` produce the exact bits one A×-sized batch
+    /// produces — at every ZeRO stage (0–3) and every gradient wire
+    /// (f32 / bf16 / f8 / 1-bit), on ragged buckets. The accumulated
+    /// run reduces **once** per step, so the wire codecs and the
+    /// stateful error-feedback residuals see the identical payload
+    /// sequence the big-batch run feeds them.
+    #[test]
+    fn accumulated_steps_bitwise_equal_big_batch_all_stages_and_wires() {
+        use crate::collective::{Precision, PrecisionPlan, Wire};
+        let segs = tile(&[96, 16, 128, 16, 64, 8]);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        let a = 4usize; // power of two: microbatch means recombine exactly
+        let share = 2usize;
+        let precs: [(&str, PrecisionPlan); 4] = [
+            ("f32", PrecisionPlan::F32),
+            (
+                "bf16",
+                PrecisionPlan { grads: Precision::Bf16, ..PrecisionPlan::F32 },
+            ),
+            ("f8", PrecisionPlan::F32.with_grads_wire(Wire::F8)),
+            ("1bit", PrecisionPlan::F32.with_grads_wire(Wire::OneBit)),
+        ];
+        for (wname, prec) in precs {
+            for mode in [
+                ExecMode::Serial,
+                ExecMode::Parallel,
+                ExecMode::Zero1,
+                ExecMode::Zero2,
+                ExecMode::Zero3,
+            ] {
+                let cfg = |accum_steps| ExecConfig {
+                    mode,
+                    workers: 3,
+                    bucket_bytes: 100 * 4, // ragged vs the segment table
+                    prec,
+                    accum_steps,
+                    ..ExecConfig::default()
+                };
+                let mut acc_ex =
+                    Executor::new(cfg(a), &segs, batch_workers(3, n));
+                let mut big_ex =
+                    Executor::new(cfg(1), &segs, batch_workers(3, n));
+                let params = vec![0.5f32; n];
+                let mut ra = vec![0.0f32; n];
+                let mut rb = vec![0.0f32; n];
+                for t in 1..=3 {
+                    let oa = acc_ex.step(t, share, &params, &mut ra);
+                    let ob = big_ex.step(t, share * a, &params, &mut rb);
+                    for i in 0..n {
+                        assert_eq!(
+                            ra[i].to_bits(),
+                            rb[i].to_bits(),
+                            "{wname} {mode:?} step {t} i={i}"
+                        );
+                    }
+                    assert_eq!(
+                        oa.loss.to_bits(),
+                        ob.loss.to_bits(),
+                        "{wname} {mode:?} step {t}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// LossScaler × accumulation: one non-finite microbatch gradient on
+    /// one rank must skip the WHOLE accumulated step (not just the bad
+    /// microbatch), must not advance the growth window, and must leave
+    /// params + scaler dynamics bitwise-identical to the single
+    /// big-batch run over the same samples.
+    #[test]
+    fn scaler_skips_whole_accumulated_step_and_matches_big_batch() {
+        use crate::optim::{Hyper, LossScaler};
+        let segs = tile(&[96, 16, 128, 16, 64, 8]);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        let a = 4usize;
+        let share = 2usize;
+        // sample 9 lives in step 2 (each step consumes a*share = 8
+        // samples per worker): microbatch 0 of the accumulated step
+        let spike = Some(9u64);
+        let run = |accum_steps: usize, share: usize| {
+            let cfg = ExecConfig {
+                mode: ExecMode::Parallel,
+                workers: 2,
+                bucket_bytes: 100 * 4,
+                accum_steps,
+                ..ExecConfig::default()
+            };
+            let mut ex =
+                Executor::new(cfg, &segs, spike_workers(2, n, spike));
+            let mut sc = LossScaler::dynamic();
+            sc.growth_interval = 2; // make growth observable in 4 steps
+            let mut opt =
+                crate::optim::build("lamb", n, Hyper::default()).unwrap();
+            let mut params = vec![0.5f32; n];
+            let mut reduced = vec![0.0f32; n];
+            let mut skipped = Vec::new();
+            for t in 1..=4u64 {
+                ex.step(t, share, &params, &mut reduced);
+                // the scaler gates once per ACCUMULATED step — the
+                // single reduce is the only place gradients surface
+                if sc.observe(&reduced) {
+                    opt.step(&mut params, &reduced, 0.01, t, &segs);
+                } else {
+                    skipped.push(t);
+                }
+            }
+            (params, sc.export_state(), skipped)
+        };
+        let (pa, sa, ka) = run(a, share);
+        let (pb, sb, kb) = run(1, share * a);
+        assert_eq!(
+            ka,
+            vec![2],
+            "exactly the spiked step skips — whole accumulated step"
+        );
+        assert_eq!(ka, kb, "skip pattern matches the big-batch run");
+        assert_eq!(sa, sb, "scaler dynamics match the big-batch run");
+        assert_eq!(sa.skipped, 1);
+        assert_eq!(
+            sa.growths, 1,
+            "the skipped step must not advance the growth window \
+             (steps 3+4 complete it)"
+        );
+        for i in 0..n {
+            assert_eq!(pa[i].to_bits(), pb[i].to_bits(), "i={i}");
+        }
     }
 }

@@ -22,7 +22,7 @@ use std::thread::{Builder, JoinHandle};
 use std::time::Instant;
 
 use super::bucket::BucketPlan;
-use super::{drive_worker, GradWorker, StepCtx};
+use super::{drive_worker_accum, GradWorker, StepCtx};
 
 /// Worker-to-driver traffic.
 pub enum Msg {
@@ -64,7 +64,14 @@ impl WorkerPool {
                 .name(format!("exec-worker-{wid}"))
                 .spawn(move || {
                     let mut grads = vec![0.0f32; n];
+                    // fp32 accumulator for gradient accumulation;
+                    // allocated lazily on the first accumulated step so
+                    // accum-free runs pay nothing.
+                    let mut acc: Vec<f32> = Vec::new();
                     while let Ok(ctx) = cmd_rx.recv() {
+                        if ctx.accum > 1 && acc.len() != n {
+                            acc.resize(n, 0.0);
+                        }
                         let loss = {
                             // One host-trace span per step on this
                             // worker's lane (clock reads only — the
@@ -73,9 +80,10 @@ impl WorkerPool {
                                 "worker.compute",
                                 ctx.step,
                             );
-                            drive_worker(
+                            drive_worker_accum(
                                 worker.as_mut(),
                                 &mut grads,
+                                &mut acc,
                                 &plan,
                                 &ctx,
                                 &mut |bucket, payload| {
@@ -180,6 +188,7 @@ mod tests {
         let ctx = StepCtx {
             step: 2,
             batch_share: 1,
+            accum: 1,
             params: Arc::new(vec![0.0; n]),
         };
         pool.begin_step(&ctx);

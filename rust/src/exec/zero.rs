@@ -174,6 +174,42 @@ pub fn owned_shard_bytes(
     plan.owned_elems(worker, workers) * bytes_per_elem
 }
 
+/// Cast a parameter range from fp32 `src` into storage-dtype `dst`
+/// (bucket-local slices of equal length; `start` is the global offset
+/// of element 0). Ordinarily every element rounds through
+/// `prec.params`; with [`PrecisionPlan::norms_fp32`] set, elements
+/// inside **no-decay** segments (layer norms and biases — the tiny
+/// tensors half precision hurts most) are copied verbatim and stay
+/// fp32-resident. The byte accounting ([`stage_split_prec`])
+/// deliberately ignores the exemption: the exempt segments are a
+/// rounding error of the model's footprint, and pricing them at
+/// half-width keeps the cluster model conservative.
+pub fn cast_params(
+    dst: &mut [f32],
+    src: &[f32],
+    start: usize,
+    prec: &PrecisionPlan,
+    segs: &[Seg],
+) {
+    assert_eq!(dst.len(), src.len(), "cast range length mismatch");
+    let p = prec.params;
+    if !prec.norms_fp32 {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = p.quantize(s);
+        }
+        return;
+    }
+    let end = start + dst.len();
+    for s in segs {
+        let lo = s.offset.max(start);
+        let hi = (s.offset + s.size).min(end);
+        for i in lo..hi {
+            let v = src[i - start];
+            dst[i - start] = if s.decay { p.quantize(v) } else { v };
+        }
+    }
+}
+
 /// Optimizer state physically partitioned by bucket: one optimizer
 /// instance per bucket, sized for that bucket's range only, with segment
 /// offsets translated to bucket-local coordinates.
@@ -405,13 +441,13 @@ impl Zero2State {
             let ratios = self.opt.step_range(
                 masters, grads, lr, step, &self.segs, bk.start, bk.end,
             );
-            let p = self.prec.params;
-            for (dst, &src) in params[bk.start..bk.end]
-                .iter_mut()
-                .zip(&masters[bk.start..bk.end])
-            {
-                *dst = p.quantize(src);
-            }
+            cast_params(
+                &mut params[bk.start..bk.end],
+                &masters[bk.start..bk.end],
+                bk.start,
+                &self.prec,
+                &self.segs,
+            );
             ratios
         } else {
             self.opt.step_range(
@@ -541,10 +577,7 @@ impl Zero2State {
         self.opt.import_moments(&c.m, &c.v);
         if let Some(masters) = self.masters.as_mut() {
             masters.copy_from_slice(&c.params);
-            let p = self.prec.params;
-            for (dst, &src) in params.iter_mut().zip(masters.iter()) {
-                *dst = p.quantize(src);
-            }
+            cast_params(params, masters, 0, &self.prec, &self.segs);
         } else {
             params.copy_from_slice(&c.params);
         }
@@ -622,15 +655,19 @@ impl Zero3State {
         prec: PrecisionPlan,
     ) -> Option<Zero3State> {
         assert_eq!(params.len(), plan.n, "params length != plan coverage");
-        let p = prec.params;
         let shards = plan
             .buckets
             .iter()
             .map(|bk| {
-                params[bk.start..bk.end]
-                    .iter()
-                    .map(|&x| p.quantize(x))
-                    .collect()
+                let mut shard = vec![0.0f32; bk.len()];
+                cast_params(
+                    &mut shard,
+                    &params[bk.start..bk.end],
+                    bk.start,
+                    &prec,
+                    segs,
+                );
+                shard
             })
             .collect();
         let masters = if prec.has_master() {
@@ -698,10 +735,13 @@ impl Zero3State {
             let ratios = self.opt.step_range(
                 masters, grads, lr, step, &self.segs, bk.start, bk.end,
             );
-            let p = self.prec.params;
-            for (i, dst) in self.shards[b].iter_mut().enumerate() {
-                *dst = p.quantize(masters[bk.start + i]);
-            }
+            cast_params(
+                &mut self.shards[b],
+                &masters[bk.start..bk.end],
+                bk.start,
+                &self.prec,
+                &self.segs,
+            );
             view[bk.start..bk.end].copy_from_slice(&self.shards[b]);
             ratios
         } else {
@@ -846,11 +886,14 @@ impl Zero3State {
         if let Some(masters) = self.masters.as_mut() {
             masters.copy_from_slice(&c.params);
         }
-        let p = self.prec.params;
         for (b, bk) in plan.buckets.iter().enumerate() {
-            for (i, dst) in self.shards[b].iter_mut().enumerate() {
-                *dst = p.quantize(c.params[bk.start + i]);
-            }
+            cast_params(
+                &mut self.shards[b],
+                &c.params[bk.start..bk.end],
+                bk.start,
+                &self.prec,
+                &self.segs,
+            );
         }
     }
 }
@@ -1105,10 +1148,8 @@ mod tests {
         assert_eq!(stage_state_bytes_prec(3, 1000, 1, &mixed), 16_000);
         // grads-only mixed (f32 params, no master): 4 + 2 + 8
         let gonly = PrecisionPlan {
-            params: Precision::F32,
             grads: Precision::F16,
-            master_weights: false,
-            grads_wire: None,
+            ..PrecisionPlan::F32
         };
         assert_eq!(stage_split_prec(0, &gonly), (14, 0));
         assert_eq!(stage_split_prec(2, &gonly), (4, 10));
@@ -1249,6 +1290,152 @@ mod tests {
         assert_eq!(
             (0..k).map(|w| z.master_bytes_for(&plan, w, k)).sum::<usize>(),
             n * 4
+        );
+    }
+
+    /// LANS checkpoint portability: a dense LANS run's checkpoint
+    /// (params + exported moments) restores into a ZeRO-3 sharded
+    /// state, and the two runs continue bitwise-identically — the
+    /// moments are LANS's only persistent state, and its per-block
+    /// pre-normalization is strictly per-segment, so owner-sharded
+    /// `step_range` stepping cannot perturb it.
+    #[test]
+    fn lans_dense_save_restores_into_zero3_bitwise() {
+        let segs = tile(&[40, 8, 64, 16]);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        let plan = BucketPlan::from_segs(&segs, 50 * 4);
+        assert!(plan.len() > 1);
+        let h = Hyper::default();
+        let mut rng = Rng::new(44);
+        let mut xa: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+        let mut dense = build("lans", n, h).unwrap();
+        for t in 1..=3 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.3)).collect();
+            dense.step(&mut xa, &g, 0.01, t, &segs);
+        }
+        let mut m = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        dense.export_moments(&mut m, &mut v);
+        let c = Checkpoint {
+            step: 3,
+            params: xa.clone(),
+            m,
+            v,
+            scaler: None,
+        };
+        let zeros = vec![0.0f32; n];
+        let mut z =
+            Zero3State::build("lans", &plan, &zeros, &segs, h).unwrap();
+        z.restore(&plan, &c);
+        for t in 4..=7 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.3)).collect();
+            let ra = dense.step(&mut xa, &g, 0.01, t, &segs);
+            let mut view = vec![0.0f32; n];
+            z.gather_into(&plan, &mut view);
+            let rb = z.step_all(&plan, &mut view, &g, 0.01, t);
+            assert_eq!(ra, rb, "trust ratios diverged at step {t}");
+            assert_eq!(xa, view, "params diverged at step {t}");
+        }
+    }
+
+    /// `[precision] norms_fp32`: with the override on, no-decay
+    /// segments (layer norms, biases — `tile` marks odd segments
+    /// `decay: false`) keep their exact fp32 master bits in the
+    /// resident/storage parameters, while weight segments still round
+    /// through the storage dtype. Verified deterministically against
+    /// the checkpoint, which carries the fp32 masters: for every
+    /// element, storage == master (no-decay) or storage ==
+    /// quantize(master) (decay). Covers build, step and restore on
+    /// both ZeRO-2 and ZeRO-3.
+    #[test]
+    fn norms_fp32_keeps_no_decay_segments_full_precision() {
+        let segs = tile(&[40, 8, 64, 16]);
+        let n: usize = segs.iter().map(|s| s.size).sum();
+        let plan = BucketPlan::from_segs(&segs, 50 * 4);
+        assert!(plan.len() > 1);
+        let h = Hyper::default();
+        let prec =
+            PrecisionPlan::mixed(Precision::Bf16).with_norms_fp32(true);
+        let mut rng = Rng::new(33);
+        let x0: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+
+        let check = |stored: &[f32], masters: &[f32], tag: &str| {
+            let mut weights_rounded = false;
+            for s in &segs {
+                for i in s.offset..s.offset + s.size {
+                    let want = if s.decay {
+                        Precision::Bf16.quantize(masters[i])
+                    } else {
+                        masters[i]
+                    };
+                    assert_eq!(
+                        stored[i].to_bits(),
+                        want.to_bits(),
+                        "{tag}: element {i} (decay={})",
+                        s.decay
+                    );
+                    if s.decay
+                        && stored[i].to_bits() != masters[i].to_bits()
+                    {
+                        weights_rounded = true;
+                    }
+                }
+            }
+            assert!(
+                weights_rounded,
+                "{tag}: the bf16 cast never changed a weight bit — \
+                 the test would pass vacuously"
+            );
+        };
+
+        // --- ZeRO-3: build seeds the shards segment-aware ---
+        let mut z3 =
+            Zero3State::build_prec("lamb", &plan, &x0, &segs, h, prec)
+                .unwrap();
+        let mut view = vec![0.0f32; n];
+        z3.gather_into(&plan, &mut view);
+        check(&view, &x0, "zero3 build");
+        // step: owners re-cast their shard ranges from the masters
+        let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.3)).collect();
+        z3.step_all(&plan, &mut view, &g, 0.01, 1);
+        let c3 = z3.checkpoint(&plan, 1);
+        check(&view, &c3.params, "zero3 step");
+        // restore scatters dense fp32 params segment-aware
+        let zeros = vec![0.0f32; n];
+        let mut z3b =
+            Zero3State::build_prec("lamb", &plan, &zeros, &segs, h, prec)
+                .unwrap();
+        z3b.restore(&plan, &c3);
+        let mut vb = vec![0.0f32; n];
+        z3b.gather_into(&plan, &mut vb);
+        assert_eq!(view, vb, "zero3 restore must reproduce the storage bits");
+
+        // --- ZeRO-2: step_bucket and restore re-cast segment-aware ---
+        let mut xs: Vec<f32> = vec![0.0; n];
+        cast_params(&mut xs, &x0, 0, &prec, &segs);
+        check(&xs, &x0, "zero2 seed");
+        let mut z2 =
+            Zero2State::build_prec("lamb", &x0, &segs, h, prec).unwrap();
+        z2.step_all(&plan, &mut xs, &g, 0.01, 1);
+        let c2 = z2.checkpoint(1, &xs);
+        check(&xs, &c2.params, "zero2 step");
+        let mut z2b =
+            Zero2State::build_prec("lamb", &zeros, &segs, h, prec).unwrap();
+        let mut xs2 = vec![0.0f32; n];
+        z2b.restore(&c2, &mut xs2);
+        assert_eq!(xs, xs2, "zero2 restore must reproduce the storage bits");
+
+        // With the override off the same elements *do* round — the knob
+        // is the only difference.
+        let plain = PrecisionPlan::mixed(Precision::Bf16);
+        let mut xp = vec![0.0f32; n];
+        cast_params(&mut xp, &x0, 0, &plain, &segs);
+        assert!(
+            segs.iter().filter(|s| !s.decay).any(|s| {
+                (s.offset..s.offset + s.size)
+                    .any(|i| xp[i].to_bits() != x0[i].to_bits())
+            }),
+            "without norms_fp32 some no-decay element must round"
         );
     }
 

@@ -1,0 +1,207 @@
+//! LANS (Zheng et al. 2020, "Accelerated Large Batch Optimization of
+//! BERT Pretraining in 54 minutes") — the 54-minute trajectory's
+//! optimizer: LAMB's trust-ratio skeleton with two additions.
+//!
+//! 1. **Per-block gradient pre-normalization**: each segment's gradient
+//!    is divided by its own norm before entering the moment updates, so
+//!    a block whose gradient blows up (or vanishes) under a huge batch
+//!    cannot distort its Adam statistics — only the *direction* feeds
+//!    the moments.
+//! 2. **Nesterov-style momentum**: the update blends the momentum
+//!    direction `d = m_hat / (sqrt(v_hat) + eps) + wd*x` (weight
+//!    `beta1`) with the look-ahead current-gradient direction
+//!    `e = (g_norm / (1 - beta1^t)) / (sqrt(v_hat) + eps) + wd*x`
+//!    (weight `1 - beta1`), **each with its own trust ratio** — the
+//!    two-ratio construction of the paper's Algorithm 2.
+//!
+//! Shares the 1-based-step clamp contract of every optimizer here
+//! (`step.max(1)` before the bias corrections — the PR-5 inf bug
+//! class), and the `step_range` / `export_moments` / `import_moments`
+//! contracts so it rides every ZeRO stage and the shard-aware
+//! checkpoint path unchanged.
+
+use super::{trust_ratio, Hyper, Optimizer, Seg};
+
+pub struct Lans {
+    pub h: Hyper,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    /// Scratch: the pre-normalized gradient of the current block.
+    gq: Vec<f32>,
+    /// Scratch: momentum direction `d` of the current block.
+    d: Vec<f32>,
+    /// Scratch: look-ahead gradient direction `e` of the current block.
+    e: Vec<f32>,
+}
+
+impl Lans {
+    pub fn new(n: usize, h: Hyper) -> Lans {
+        Lans {
+            h,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            gq: vec![0.0; n],
+            d: vec![0.0; n],
+            e: vec![0.0; n],
+        }
+    }
+
+    /// Direct access to moments (checkpointing / cross-checks).
+    pub fn state(&self) -> (&[f32], &[f32]) {
+        (&self.m, &self.v)
+    }
+}
+
+impl Optimizer for Lans {
+    fn step(
+        &mut self,
+        params: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        step: u64,
+        segs: &[Seg],
+    ) -> Vec<f32> {
+        let h = self.h;
+        // 1-based contract: clamp so a stray step 0 cannot make the
+        // bias corrections 1/(1 - beta^0) = inf (step 0 == step 1).
+        let t = step.max(1) as f32;
+        let (c1, c2, cg) = if h.bias_correction {
+            (
+                1.0 / (1.0 - h.beta1.powf(t)),
+                1.0 / (1.0 - h.beta2.powf(t)),
+                1.0 / (1.0 - h.beta1.powf(t)),
+            )
+        } else {
+            (1.0, 1.0, 1.0)
+        };
+        let mut ratios = Vec::with_capacity(segs.len());
+        for s in segs {
+            let r = s.offset..s.offset + s.size;
+            let x = &mut params[r.clone()];
+            let g = &grads[r.clone()];
+            let m = &mut self.m[r.clone()];
+            let v = &mut self.v[r.clone()];
+            let gq = &mut self.gq[r.clone()];
+            let d = &mut self.d[r.clone()];
+            let e = &mut self.e[r];
+            let wd = if s.decay { h.weight_decay } else { 0.0 };
+            // Per-block gradient pre-normalization: only the direction
+            // enters the moments. A zero (or non-finite) block norm
+            // leaves the gradient untouched — the guard mirrors
+            // `trust_ratio`'s zero-norm fallback.
+            let gn = h.norm.eval(g);
+            let inv = if gn > 0.0 && gn.is_finite() { 1.0 / gn } else { 1.0 };
+            for i in 0..x.len() {
+                gq[i] = g[i] * inv;
+                m[i] = h.beta1 * m[i] + (1.0 - h.beta1) * gq[i];
+                v[i] = h.beta2 * v[i] + (1.0 - h.beta2) * gq[i] * gq[i];
+                let denom = (c2 * v[i]).sqrt() + h.eps;
+                d[i] = (c1 * m[i]) / denom + wd * x[i];
+                e[i] = (cg * gq[i]) / denom + wd * x[i];
+            }
+            let (rd, re) = if s.adapt {
+                let wn = h.norm.eval(x);
+                (
+                    trust_ratio(wn, h.norm.eval(d), &h),
+                    trust_ratio(wn, h.norm.eval(e), &h),
+                )
+            } else {
+                (1.0, 1.0)
+            };
+            let sd = lr * h.beta1 * rd;
+            let se = lr * (1.0 - h.beta1) * re;
+            for i in 0..x.len() {
+                x[i] -= sd * d[i] + se * e[i];
+            }
+            // Report the momentum direction's ratio — the quantity the
+            // paper's trust-ratio figures plot.
+            ratios.push(rd);
+        }
+        ratios
+    }
+
+    fn name(&self) -> &'static str {
+        "lans"
+    }
+
+    fn state_bytes(&self) -> usize {
+        (self.m.len() + self.v.len()) * 4
+    }
+
+    fn export_moments(&self, m: &mut [f32], v: &mut [f32]) {
+        m.copy_from_slice(&self.m);
+        v.copy_from_slice(&self.v);
+    }
+
+    fn import_moments(&mut self, m: &[f32], v: &[f32]) {
+        self.m.copy_from_slice(m);
+        self.v.copy_from_slice(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::Norm;
+
+    /// Pre-normalization makes the moment statistics invariant to the
+    /// gradient's block scale: two runs whose gradients differ by a
+    /// constant factor take bitwise-identical steps (LAMB is only
+    /// *approximately* scale-free through the trust ratio; LANS is
+    /// exactly so, per block, by construction — modulo the division's
+    /// own rounding, which a power-of-two scale keeps exact).
+    #[test]
+    fn gradient_scale_invariance_per_block() {
+        let n = 16;
+        let segs = Seg::whole(n);
+        let h = Hyper::default();
+        let x0: Vec<f32> = (0..n).map(|i| 0.5 + (i as f32) * 0.1).collect();
+        let g: Vec<f32> =
+            (0..n).map(|i| ((i as f32) - 7.5) * 0.25).collect();
+        let run = |scale: f32| {
+            let mut o = Lans::new(n, h);
+            let mut x = x0.clone();
+            for t in 1..=5 {
+                let gs: Vec<f32> = g.iter().map(|v| v * scale).collect();
+                o.step(&mut x, &gs, 0.01, t, &segs);
+            }
+            x
+        };
+        let a = run(1.0);
+        let b = run(256.0); // power of two: g*s/||g*s|| == g/||g|| exactly
+        for i in 0..n {
+            assert_eq!(a[i].to_bits(), b[i].to_bits(), "i={i}");
+        }
+    }
+
+    /// Zero-gradient blocks are a no-op on the moments' direction
+    /// (guarded division) and keep everything finite.
+    #[test]
+    fn zero_gradient_block_stays_finite() {
+        let mut o = Lans::new(4, Hyper::default());
+        let mut x = vec![1.0f32, -1.0, 0.5, 2.0];
+        for t in 1..=3 {
+            o.step(&mut x, &[0.0; 4], 0.05, t, &Seg::whole(4));
+        }
+        assert!(x.iter().all(|v| v.is_finite()), "{x:?}");
+    }
+
+    /// The Nesterov blend differs from plain LAMB on the first step
+    /// (fresh moments, where the look-ahead term dominates), and the
+    /// L1/Linf norm knobs flow into the pre-normalization.
+    #[test]
+    fn differs_from_lamb_and_honors_norm_knob() {
+        use crate::optim::Lamb;
+        let h = Hyper { weight_decay: 0.0, ..Hyper::default() };
+        let g = [0.5f32, -0.3, 0.2, 0.9];
+        let mut xa = vec![1.0f32, 2.0, -1.0, 0.5];
+        let mut xb = xa.clone();
+        Lans::new(4, h).step(&mut xa, &g, 0.1, 1, &Seg::whole(4));
+        Lamb::new(4, h).step(&mut xb, &g, 0.1, 1, &Seg::whole(4));
+        assert_ne!(xa, xb);
+        let h1 = Hyper { norm: Norm::L1, ..h };
+        let mut xc = vec![1.0f32, 2.0, -1.0, 0.5];
+        Lans::new(4, h1).step(&mut xc, &g, 0.1, 1, &Seg::whole(4));
+        assert_ne!(xa, xc);
+    }
+}

@@ -17,12 +17,14 @@
 
 mod adam;
 mod lamb;
+mod lans;
 mod lars;
 mod nesterov;
 mod scaler;
 
 pub use adam::{Adagrad, Adam, AdamW, Momentum};
 pub use lamb::Lamb;
+pub use lans::Lans;
 pub use lars::Lars;
 pub use nesterov::{NLamb, NnLamb};
 pub use scaler::{LossScaler, ScalerState};
@@ -217,13 +219,14 @@ pub fn build(name: &str, n: usize, h: Hyper) -> Option<Box<dyn Optimizer>> {
         "momentum" => Box::new(Momentum::new(n, h)),
         "nlamb" => Box::new(NLamb::new(n, h)),
         "nnlamb" => Box::new(NnLamb::new(n, h)),
+        "lans" => Box::new(Lans::new(n, h)),
         _ => return None,
     })
 }
 
 pub const ALL: &[&str] = &[
     "lamb", "lars", "adam", "adamw", "adagrad", "momentum", "nlamb",
-    "nnlamb",
+    "nnlamb", "lans",
 ];
 
 #[cfg(test)]

@@ -404,6 +404,52 @@ pub fn sim_step_trace_mesh(
     tr
 }
 
+/// [`sim_step_trace_mesh`] under gradient accumulation. `ms` is the
+/// *flush-level* step (priced at the microbatch, the value
+/// `Pod::mesh_step_accum` pads): the `accum - 1` lead flushes lay down
+/// as compute-lane spans of `lead` seconds each — gradient wire silent,
+/// their backward absorbed by the local fp32 accumulator — and the
+/// flushing microbatch's full trace (gathers, reduces, bubble and all)
+/// shifts right to start where the leads end. `accum = 1` returns
+/// [`sim_step_trace_mesh`] byte-identically, extending the trace
+/// artifact's bitwise contract to the accumulation axis.
+pub fn sim_step_trace_accum(
+    pod: &Pod,
+    plan: &BucketPlan,
+    part: StatePartition,
+    ms: &MeshStep,
+    mesh: &Mesh,
+    accum: usize,
+    lead: f64,
+) -> Trace {
+    let a = accum.max(1);
+    let mut tr = sim_step_trace_mesh(pod, plan, part, ms, mesh);
+    if a == 1 {
+        return tr;
+    }
+    let shift = (a - 1) as f64 * lead;
+    for s in tr.spans.iter_mut() {
+        s.start += shift;
+    }
+    for c in tr.counters.iter_mut() {
+        c.t += shift;
+    }
+    for f in 0..a - 1 {
+        tr.push(
+            Span::new(
+                LANE_COMPUTE,
+                format!("accum microbatch {f}"),
+                CAT_COMPUTE,
+                f as f64 * lead,
+                lead,
+            )
+            .arg("accum", Arg::U(a as u64))
+            .arg("flush", Arg::U(f as u64)),
+        );
+    }
+    tr
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

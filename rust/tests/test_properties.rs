@@ -302,10 +302,8 @@ fn prop_stage_state_bytes_bounds_plan_exact_shares() {
         PrecisionPlan::mixed(Precision::Bf16),
         PrecisionPlan::mixed(Precision::F16),
         PrecisionPlan {
-            params: Precision::F32,
             grads: Precision::Bf16,
-            master_weights: false,
-            grads_wire: None,
+            ..PrecisionPlan::F32
         },
     ];
     for case in 0..20 {

@@ -104,6 +104,42 @@ for stage in range(4):
         if caps[(wire, stage)] > caps[("bf16", stage)]:
             sys.exit(f"{path}: stage {stage}: {wire} cap {caps[(wire, stage)]} "
                      f"exceeds bf16 cap {caps[('bf16', stage)]} despite residual state")
+# The accumulation-ladder cells (ISSUE 9): bert-32k-accum{1,2,4} x
+# {lamb,lans} at zero2 and zero3, each carrying the accumulated step
+# time plus the per-microbatch-reduce baseline. At zero2, accum > 1
+# must strictly cut both the step time and the per-step gradient wire
+# time under the baseline's — the wire fires once per optimizer step
+# instead of once per microbatch.
+acc = [o for o in objs if o.get("kind") == "accum_ladder"]
+need = set(("config", "zero", "secs", "baseline_secs", "wire_secs",
+            "baseline_wire_secs"))
+if any(need - set(o) for o in acc):
+    sys.exit(f"{path}: accum_ladder records missing config/zero/secs/"
+             f"baseline_secs/wire_secs/baseline_wire_secs keys")
+for z in ("zero2", "zero3"):
+    for a in (1, 2, 4):
+        for opt in ("lamb", "lans"):
+            cell = [o for o in acc
+                    if o.get("zero") == z
+                    and o.get("config") == f"bert-32k-accum{a}-{opt}"]
+            if not cell:
+                sys.exit(f"{path}: missing accum_ladder cell "
+                         f"(accum{a}, {opt}, {z})")
+            c = cell[0]
+            if not (c["secs"] > 0):
+                sys.exit(f"{path}: non-positive secs in accum_ladder "
+                         f"cell ({z}, accum{a}, {opt})")
+            if z == "zero2" and a > 1:
+                if not (c["wire_secs"] < c["baseline_wire_secs"]):
+                    sys.exit(f"{path}: {z} accum{a} {opt}: per-step wire "
+                             f"{c['wire_secs']} not strictly under the "
+                             f"per-microbatch-reduce baseline "
+                             f"{c['baseline_wire_secs']}")
+                if not (c["secs"] < c["baseline_secs"]):
+                    sys.exit(f"{path}: {z} accum{a} {opt}: step "
+                             f"{c['secs']} not strictly under the "
+                             f"per-microbatch-reduce baseline "
+                             f"{c['baseline_secs']}")
 # The SIMD-hot-path cells (ISSUE 8): quantizer and compressed-reduce
 # throughput rows, scalar/naive baseline vs chunked rewrite, each with
 # a positive GB/s figure (the bitwise-equality proof runs inside the
@@ -126,10 +162,12 @@ for w in ("f8", "1bit"):
             sys.exit(f"{path}: non-positive gbps in ef_reduce cell ({w}, {path_kind})")
 print(f"bench_smoke: {len(lines)} JSON measurements in {path} "
       f"(zero3 column + {len(gathers)} param_gather records + "
-      f"{len(mesh)} mesh cells + "
+      f"{len(mesh)} mesh cells + {len(acc)} accum_ladder cells + "
       f"{len(prec)} precision records + {len(quant)} quantize + "
-      f"{len(efr)} ef_reduce throughput cells ok; bf16 caps > f32 and "
-      f"compressed wires beat bf16 step time at every stage)")
+      f"{len(efr)} ef_reduce throughput cells ok; bf16 caps > f32, "
+      f"compressed wires beat bf16 step time at every stage, and "
+      f"accum > 1 cuts the zero2 per-step wire under the "
+      f"per-microbatch-reduce baseline)")
 EOF
 fi
 

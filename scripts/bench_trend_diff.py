@@ -24,6 +24,14 @@ step-time regression of the old mesh (the two factorizations price
 different schedules, so a ratio between them is meaningless).
 bench_smoke.sh carries a fixture asserting exactly this.
 
+Accumulation-ladder cells (bench_exec's `accum_ladder` kind, configs
+like `bert-32k-accum4-lans`) are grouped the same way by their ladder
+key: the `accum<a>-<opt>` tail splits into explicit "accum"/"opt"
+identity fields, and the cell's auxiliary measurements (the
+per-microbatch-reduce `baseline_secs` and both `*wire_secs` columns)
+are dropped from the identity so a repriced baseline still compares as
+the same cell across runs instead of appearing as removed + new.
+
 The diff is advisory by design: CI-runner noise makes small swings
 routine, so the script always exits 0 (the CI step is additionally
 `continue-on-error`). It exists so the perf trajectory the bench-smoke
@@ -59,6 +67,35 @@ def is_mesh_key(key):
     return any(k == "mesh" for k, _ in key)
 
 
+# An accumulation-ladder label at the tail of a config value — the
+# spelling of bench_exec's accum_ladder cells (bert-32k-accum4-lans).
+ACCUM_RE = re.compile(r"^(?P<base>.*?)-?accum(?P<accum>\d+)-(?P<opt>\w+)$")
+
+# Per-cell companion measurements of an accum_ladder record. These are
+# measurements, not identity: keeping them in the key would turn every
+# repricing of the baseline into a removed-cell + new-cell pair.
+ACCUM_AUX = ("baseline_secs", "wire_secs", "baseline_wire_secs")
+
+
+def split_accum(obj):
+    """Group an accum_ladder cell by its ladder key, in place: the
+    `accum<a>-<opt>` tail of the config becomes explicit "accum"/"opt"
+    identity fields, and the auxiliary baseline/wire measurements are
+    dropped from the identity so the same (config, zero, accum, opt)
+    ladder rung is compared across the two artifacts."""
+    if obj.get("kind") != "accum_ladder":
+        return
+    cfg = obj.get("config")
+    if isinstance(cfg, str) and "accum" not in obj:
+        m = ACCUM_RE.match(cfg)
+        if m:
+            obj["config"] = m.group("base") or "accum"
+            obj["accum"] = m.group("accum")
+            obj["opt"] = m.group("opt")
+    for k in ACCUM_AUX:
+        obj.pop(k, None)
+
+
 def load(path):
     """Parse one JSON-lines bench artifact into {key: measurement}."""
     out = {}
@@ -83,6 +120,7 @@ def load(path):
         # "gbps" (higher is better). "secs" wins if several appear.
         field = next(k for k in ("secs", "value", "gbps") if k in obj)
         secs = obj.pop(field)
+        split_accum(obj)
         split_mesh(obj)
         # Identity of the measurement cell: every non-measurement field.
         key = tuple(sorted((k, str(v)) for k, v in obj.items()))
