@@ -1,0 +1,111 @@
+//! CLI for the determinism linter ([`lamb_train::detlint`]).
+//!
+//! ```text
+//! detlint [--root <dir>] [--json <path>]
+//! ```
+//!
+//! Scans every `.rs` file under the source root (auto-detected:
+//! `rust/src` from the repository root, `src` from `rust/`), prints
+//! human-readable findings, optionally writes the machine-readable
+//! report, and exits nonzero if any violation fired — the CI gate.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use lamb_train::detlint;
+
+const USAGE: &str = "usage: detlint [--root <dir>] [--json <path>]
+  --root <dir>   source root to scan (default: rust/src, else src)
+  --json <path>  also write the machine-readable report to <path>
+  --rules        print the rule table and exit";
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut json_path: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = Some(PathBuf::from(v)),
+                None => return usage_err("--root needs a value"),
+            },
+            "--json" => match args.next() {
+                Some(v) => json_path = Some(PathBuf::from(v)),
+                None => return usage_err("--json needs a value"),
+            },
+            "--rules" => {
+                for r in detlint::RULES {
+                    println!("{:<16} {}", r.id, r.summary);
+                    println!("{:<16}   scope: {}", "", r.scope);
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                return usage_err(&format!("unknown argument {other:?}"))
+            }
+        }
+    }
+
+    let root = match root {
+        Some(r) => r,
+        None => {
+            let candidates = ["rust/src", "src"];
+            match candidates
+                .iter()
+                .map(Path::new)
+                .find(|p| p.is_dir())
+            {
+                Some(p) => p.to_path_buf(),
+                None => {
+                    eprintln!(
+                        "detlint: no source root found (tried \
+                         {candidates:?}); pass --root"
+                    );
+                    return ExitCode::from(2);
+                }
+            }
+        }
+    };
+
+    let report = match detlint::scan_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("detlint: scanning {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    if let Some(path) = &json_path {
+        if let Err(e) = std::fs::write(path, report.to_json()) {
+            eprintln!(
+                "detlint: writing report {}: {e}",
+                path.display()
+            );
+            return ExitCode::from(2);
+        }
+    }
+
+    for v in &report.violations {
+        println!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.snippet);
+    }
+    println!(
+        "detlint: {} file(s), {} violation(s), {} audited allow(s)",
+        report.files_scanned,
+        report.violations.len(),
+        report.allows.len()
+    );
+    if report.violations.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn usage_err(msg: &str) -> ExitCode {
+    eprintln!("detlint: {msg}\n{USAGE}");
+    ExitCode::from(2)
+}

@@ -609,6 +609,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 400-step convergence loop: minutes under Miri
     fn reduce_mean_ef_errors_telescope() {
         // Over many steps on a constant gradient, the EF-compressed mean
         // tracks the true mean: the running average of transmitted values
@@ -654,6 +655,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 2^17-value sweep per wire: minutes under Miri
     fn quantize_slice_bitwise_matches_scalar_codec() {
         let mut vals: Vec<f32> = Vec::new();
         // All 2^16 high halves (covers every exponent incl. NaN/Inf), plus

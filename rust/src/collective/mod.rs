@@ -53,6 +53,11 @@
 //! owner's optimizer step). The two halves sum exactly to the all-reduce
 //! time.
 
+// The collective stack is part of the determinism-critical core: no
+// silent panics (errors must carry enough context to debug a pod-scale
+// run), enforced module-wide and inherited by the submodules below.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod compress;
 pub mod precision;
 pub mod topology;
@@ -180,6 +185,9 @@ pub fn all_gather(shards: &[(usize, &[f32])], out: &mut [f32]) {
 pub fn accumulate(acc: &mut [f32], src: &[f32]) {
     assert_eq!(acc.len(), src.len());
     for i in 0..acc.len() {
+        // detlint: allow(f32-accum) microbatch accumulation is defined in
+        // fixed microbatch order; f32 += here IS the contract (matches the
+        // on-device accumulator), not an unordered reduction.
         acc[i] += src[i];
     }
 }
@@ -287,6 +295,9 @@ impl RingAllReduce {
                 };
                 // note: when src<dst, lo=src buffer (immutable), hi=dst
                 for i in a..b {
+                    // detlint: allow(f32-accum) this models the physical
+                    // ring's wire arithmetic (fixed phase order); the hot
+                    // path uses the f64-scratch reduce_mean instead.
                     hi[i] += lo[i];
                 }
                 phases += 1;

@@ -480,6 +480,7 @@ mod tests {
     /// property the exec shards rely on (a stored value re-crossing the
     /// wire is bit-identical).
     #[test]
+    #[cfg_attr(miri, ignore)] // 4000 random roundtrips: minutes under Miri
     fn quantize_idempotent_on_random_values() {
         let mut rng = Rng::new(42);
         for p in [Precision::Bf16, Precision::F16] {
@@ -506,6 +507,7 @@ mod tests {
     /// widen-then-narrow returns the original bits (modulo NaN
     /// quieting).
     #[test]
+    #[cfg_attr(miri, ignore)] // 65536-pattern sweep: minutes under Miri
     fn f16_all_bit_patterns_roundtrip() {
         for h in 0..=u16::MAX {
             let x = f16_bits_to_f32(h);

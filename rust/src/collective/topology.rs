@@ -286,6 +286,10 @@ impl Topology {
     /// per-bucket algorithm selection. Ties break toward the earlier
     /// candidate (ring first), so a flat topology under `auto` still
     /// reports the pre-topology default where costs coincide.
+    // candidates() returns a non-empty slice by construction (Fixed is
+    // one kind, Auto is ScheduleKind::ALL), so the final expect is an
+    // invariant, not an error path.
+    #[allow(clippy::expect_used)]
     pub fn pick(&self, op: CollOp, k: usize, bytes: usize) -> (ScheduleKind, f64) {
         let mut best = None;
         for &kind in self.candidates() {

@@ -526,6 +526,7 @@ impl TrainConfig {
     }
 
     pub fn from_doc(doc: &TomlDoc) -> Result<TrainConfig> {
+        Self::reject_unknown_keys(doc)?;
         let mut c = TrainConfig::default();
         let gets = |k: &str| -> Option<String> {
             doc.get(k).and_then(|v| v.as_str().map(String::from))
@@ -555,8 +556,17 @@ impl TrainConfig {
                 other => bail!("unknown step_path {other:?}"),
             };
         }
-        if let Some(v) = gets("exec.mode") {
-            c.exec_mode = crate::exec::ExecMode::parse(&v)
+        if let Some(raw) = doc.get("exec.mode") {
+            // Hard-error on a mistyped value (number/bool) instead of
+            // silently keeping the default mode.
+            let v = raw.as_str().ok_or_else(|| {
+                anyhow!(
+                    "exec.mode must be a string \
+                     \"serial\"|\"parallel\"|\"zero1\"|\"zero2\"|\"zero3\" \
+                     (got {raw:?})"
+                )
+            })?;
+            c.exec_mode = crate::exec::ExecMode::parse(v)
                 .ok_or_else(|| anyhow!(
                     "unknown exec mode {v:?} \
                      (expected serial|parallel|zero1|zero2|zero3)"
@@ -588,8 +598,33 @@ impl TrainConfig {
                 ),
             };
         }
-        if let Some(v) = geti("exec.workers") { c.exec_workers = v as usize; }
-        if let Some(v) = geti("exec.bucket_kb") { c.bucket_kb = v as usize; }
+        if let Some(raw) = doc.get("exec.workers") {
+            // Hard-error on a mistyped value (float/string/bool) instead
+            // of silently auto-sizing the pool, mirroring exec.zero_stage.
+            let v = raw.as_i64().ok_or_else(|| {
+                anyhow!(
+                    "exec.workers must be an integer >= 0 \
+                     (0 = auto; got {raw:?})"
+                )
+            })?;
+            if v < 0 {
+                bail!("exec.workers must be >= 0 (got {v})");
+            }
+            c.exec_workers = v as usize;
+        }
+        if let Some(raw) = doc.get("exec.bucket_kb") {
+            // Hard-error on a mistyped value instead of silently keeping
+            // the default bucket size, mirroring exec.zero_stage.
+            let v = raw.as_i64().ok_or_else(|| {
+                anyhow!(
+                    "exec.bucket_kb must be an integer >= 1 (got {raw:?})"
+                )
+            })?;
+            if v < 1 {
+                bail!("exec.bucket_kb must be >= 1 (got {v})");
+            }
+            c.bucket_kb = v as usize;
+        }
         if let Some(raw) = doc.get("exec.accum_steps") {
             // Hard-error on a mistyped value (float/string/bool) instead
             // of silently accumulating the wrong batch, mirroring
@@ -848,6 +883,70 @@ impl TrainConfig {
         if let Some(v) = geti("run.log_every") { c.log_every = v; }
         c.validate()?;
         Ok(c)
+    }
+
+    /// Every key the five strict tables document. The tables whose
+    /// values already hard-error on mistypes also reject *unknown*
+    /// keys: a typo'd key name (`bucket_mb`, `zerostage`) is the same
+    /// failure mode as a typo'd value and must not silently fall back
+    /// to a default. Legacy sections (`model.`/`run.`/`batch.`/
+    /// `cluster.`/`optimizer.`) predate the strict regime and stay
+    /// lenient for sweep-script compatibility.
+    const KNOWN_STRICT_KEYS: &'static [(&'static str, &'static [&'static str])] = &[
+        (
+            "exec",
+            &["mode", "workers", "bucket_kb", "zero_stage", "accum_steps"],
+        ),
+        (
+            "topology",
+            &[
+                "node_size",
+                "intra_gbps",
+                "inter_gbps",
+                "intra_us",
+                "inter_us",
+                "schedule",
+                "cross_step",
+            ],
+        ),
+        (
+            "precision",
+            &[
+                "params",
+                "grads",
+                "grads_wire",
+                "master_weights",
+                "loss_scale",
+                "norms_fp32",
+            ],
+        ),
+        (
+            "trace",
+            &["enabled", "dir", "sim_trace", "host_trace", "metrics_jsonl"],
+        ),
+        ("mesh", &["dp", "tp", "pp", "allow_inter_node_tp"]),
+    ];
+
+    fn reject_unknown_keys(doc: &TomlDoc) -> Result<()> {
+        for full in doc.keys() {
+            let Some((section, key)) = full.split_once('.') else {
+                continue;
+            };
+            let Some((_, known)) = Self::KNOWN_STRICT_KEYS
+                .iter()
+                .find(|(s, _)| *s == section)
+            else {
+                continue;
+            };
+            if !known.contains(&key) {
+                bail!(
+                    "unknown key {full:?} in the strict [{section}] \
+                     table (known keys: {})",
+                    known.join(", ")
+                );
+            }
+        }
+        Ok(())
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -1570,6 +1669,107 @@ betas = [0.9, 0.999]
         // the default topology is flat (node_size 1), so any tp > 1
         // needs the override there too
         assert!(bad(&[("mesh.tp", "2")]));
+    }
+
+    /// Table-driven sweep over EVERY documented key of the five strict
+    /// tables (`[exec]`/`[topology]`/`[precision]`/`[trace]`/`[mesh]`):
+    /// each key accepts a well-typed value and hard-errors on a
+    /// mistyped one, and each section rejects unknown key names. The
+    /// table below must stay in sync with `KNOWN_STRICT_KEYS` — the
+    /// final assert enforces that mechanically, so adding a config key
+    /// without extending this test fails loudly.
+    #[test]
+    fn strict_tables_reject_mistypes_and_unknown_keys_exhaustively() {
+        // (key, well-typed value, mistyped value, companion overrides
+        // the good value needs to pass cross-field validation)
+        let cases: &[(&str, &str, &str, &[(&str, &str)])] = &[
+            ("exec.mode", "\"parallel\"", "2", &[]),
+            ("exec.workers", "4", "\"4\"", &[]),
+            ("exec.bucket_kb", "256", "2.5", &[]),
+            ("exec.zero_stage", "2", "\"2\"", &[]),
+            ("exec.accum_steps", "4", "true", &[]),
+            ("topology.node_size", "8", "\"8\"", &[]),
+            ("topology.intra_gbps", "600.0", "true", &[]),
+            ("topology.inter_gbps", "70.0", "\"70\"", &[]),
+            ("topology.intra_us", "1.0", "false", &[]),
+            ("topology.inter_us", "44.0", "\"44us\"", &[]),
+            ("topology.schedule", "\"auto\"", "3", &[]),
+            ("topology.cross_step", "true", "1", &[]),
+            (
+                "precision.params",
+                "\"bf16\"",
+                "32",
+                &[("exec.zero_stage", "2")],
+            ),
+            ("precision.grads", "\"bf16\"", "true", &[]),
+            ("precision.grads_wire", "\"1bit\"", "8", &[]),
+            ("precision.master_weights", "true", "\"no\"", &[]),
+            ("precision.loss_scale", "\"dynamic\"", "true", &[]),
+            ("precision.norms_fp32", "false", "\"on\"", &[]),
+            ("trace.enabled", "true", "1", &[]),
+            ("trace.dir", "\"out/tr\"", "3", &[]),
+            ("trace.sim_trace", "false", "\"t\"", &[]),
+            ("trace.host_trace", "true", "0", &[]),
+            ("trace.metrics_jsonl", "false", "2.0", &[]),
+            ("mesh.dp", "8", "\"8\"", &[]),
+            ("mesh.tp", "1", "1.5", &[]),
+            ("mesh.pp", "1", "false", &[]),
+            ("mesh.allow_inter_node_tp", "true", "\"y\"", &[]),
+        ];
+        let load = |kv: &[(&str, &str)]| {
+            let kv: Vec<(String, String)> = kv
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect();
+            TrainConfig::load(None, &kv)
+        };
+        for &(key, good, bad, companions) in cases {
+            let mut kv = companions.to_vec();
+            kv.push((key, good));
+            load(&kv).unwrap_or_else(|e| {
+                panic!("{key} = {good} must parse: {e}")
+            });
+            assert!(
+                load(&[(key, bad)]).is_err(),
+                "{key} = {bad} (mistyped) must hard-error"
+            );
+        }
+        // Unknown keys in a strict table are the same failure mode as
+        // a mistyped value: hard errors naming the known key set.
+        for (section, typo) in [
+            ("exec", "bucket_mb"),
+            ("topology", "nodesize"),
+            ("precision", "parms"),
+            ("trace", "enable"),
+            ("mesh", "dpp"),
+        ] {
+            let key = format!("{section}.{typo}");
+            let err = load(&[(&key, "1")])
+                .expect_err("unknown strict-table key must error")
+                .to_string();
+            assert!(err.contains(&key), "{err}");
+            assert!(err.contains("known keys"), "{err}");
+        }
+        // Legacy sections stay lenient: unknown keys there are ignored
+        // (sweep scripts attach free-form metadata).
+        load(&[("run.annotation", "\"v3\""), ("optimizer.momentum", "0.9")])
+            .expect("non-strict sections remain lenient");
+        // The case table covers every documented key, so a new
+        // KNOWN_STRICT_KEYS entry without a test case fails here.
+        let documented: usize = TrainConfig::KNOWN_STRICT_KEYS
+            .iter()
+            .map(|(_, keys)| keys.len())
+            .sum();
+        assert_eq!(cases.len(), documented, "case table out of sync");
+        for &(key, _, _, _) in cases {
+            let (section, k) = key.split_once('.').unwrap();
+            assert!(
+                TrainConfig::KNOWN_STRICT_KEYS
+                    .iter()
+                    .any(|(s, keys)| *s == section && keys.contains(&k)),
+                "{key} missing from KNOWN_STRICT_KEYS"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,712 @@
+//! `detlint` — the repo's zero-dependency determinism linter.
+//!
+//! Every performance claim in this crate rests on bitwise-determinism
+//! contracts (serial ↔ parallel, dense ↔ ZeRO-0/1/2/3, f32 wire ↔
+//! compressed EF wire, traced ↔ untraced). Those contracts depend on
+//! properties the type system does not see: iteration order, float
+//! accumulation order, which thread is allowed to read a clock, and
+//! what a worker thread does when it hits a `panic!`. This module is a
+//! line/token scanner that denies the repo-specific hazard classes on
+//! the paths the contracts cover — a tripwire, not a type system.
+//!
+//! The rules (see [`RULES`]):
+//!
+//! * `hash-iter` — `HashMap`/`HashSet` anywhere in `collective/`,
+//!   `exec/`, `optim/`, `cluster/`. Their iteration order is
+//!   randomized per process; one `for` loop over either in a reduce or
+//!   owner-map path silently breaks rank-order invariance. Use
+//!   `BTreeMap`/`BTreeSet` or a `Vec`.
+//! * `wall-clock` — `Instant::now`/`SystemTime` in the numeric and
+//!   exec directories outside `trace/host.rs` (the one blessed clock
+//!   reader). Telemetry timestamps that never feed numerics are fine —
+//!   annotate them.
+//! * `f32-accum` — float accumulation that bypasses the f64 rank-order
+//!   kernels: `.sum::<f32>()`, indexed `+=` reduction loops in
+//!   `collective/`, or a scalar f32 accumulator binding. Reductions
+//!   must route through `collective::reduce_mean` / `reduce_mean_ef`
+//!   (f64 scratch, fixed worker order).
+//! * `panic-in-worker` — `unwrap()`/`expect()` in `exec/pool.rs`. A
+//!   panicking worker thread drops its channel sender while its
+//!   siblings keep the channel open, so the coordinator's step loop
+//!   deadlocks waiting for a `Done` that never comes. Worker-side
+//!   failures must be forwarded (`pool::Msg::Failed`), not unwrapped.
+//! * `byte-cast` — integer `as` casts inside `*bytes*` byte-accounting
+//!   helpers (`payload_bytes`, `stage_state_bytes`, …). A silently
+//!   truncating cast in the accounting is how a pod model overprices or
+//!   underprices a collective without any test noticing; use
+//!   `usize::try_from` or widen to `u128`/`f64` explicitly.
+//! * `bad-allow` — a malformed escape hatch: `// detlint:
+//!   allow(<rule>)` naming an unknown rule or missing a justification.
+//!
+//! ## The escape hatch
+//!
+//! A line (or the comment block directly above it — the justification
+//! may span several comment lines) may carry
+//!
+//! ```text
+//! // detlint: allow(<rule>) <justification>
+//! ```
+//!
+//! The justification is mandatory and free-form; the rule id must be
+//! one of [`RULES`]. A blank line between the comment block and the
+//! code breaks the association. Allows are collected into the report so reviewers
+//! can audit every suppression in one place (`detlint --json`).
+//!
+//! ## Scanning model
+//!
+//! One pass per file, line-oriented, after stripping `//` comments
+//! (string-literal aware). The trailing `#[cfg(test)] mod tests` block
+//! — the only test-module shape this crate uses — is skipped: tests
+//! may unwrap freely. The scanner is deliberately dumb: no macro
+//! expansion, no type inference. False positives are expected to be
+//! rare and are what the allow-annotation is for; false negatives are
+//! bounded by the rules being substring-level (renaming `HashMap` via
+//! `use ... as` would evade it — don't).
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One lint rule: id (the spelling used in allow-annotations), a short
+/// summary, and the directory scope it applies to.
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub summary: &'static str,
+    pub scope: &'static str,
+}
+
+/// The rule table. Ids are the spellings accepted by
+/// `// detlint: allow(<id>) <justification>`.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "hash-iter",
+        summary: "HashMap/HashSet in a determinism-critical directory \
+                  (randomized iteration order); use BTreeMap/BTreeSet or Vec",
+        scope: "collective/ exec/ optim/ cluster/",
+    },
+    RuleInfo {
+        id: "wall-clock",
+        summary: "Instant::now/SystemTime outside trace/host.rs; clock \
+                  reads belong to the host-trace recorder",
+        scope: "collective/ exec/ optim/ cluster/ trace/ (except trace/host.rs)",
+    },
+    RuleInfo {
+        id: "f32-accum",
+        summary: "f32 accumulation bypassing the f64 rank-order kernels \
+                  (.sum::<f32>(), indexed += reduction, scalar f32 accumulator)",
+        scope: ".sum::<f32>() + accumulator bindings in collective/ exec/ \
+                optim/ cluster/; indexed += in collective/",
+    },
+    RuleInfo {
+        id: "panic-in-worker",
+        summary: "unwrap()/expect() in exec/pool.rs; a panicking worker \
+                  thread strands the step barrier — forward Msg::Failed instead",
+        scope: "exec/pool.rs",
+    },
+    RuleInfo {
+        id: "byte-cast",
+        summary: "integer `as` cast inside a *bytes* byte-accounting helper \
+                  (silent truncation); use usize::try_from or widen explicitly",
+        scope: "collective/ exec/ cluster/ metrics/",
+    },
+    RuleInfo {
+        id: "bad-allow",
+        summary: "malformed detlint allow-annotation (unknown rule or \
+                  missing justification)",
+        scope: "everywhere",
+    },
+];
+
+/// One finding. `file` is the path relative to the scanned root with
+/// `/` separators; `line` is 1-based.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub snippet: String,
+}
+
+/// One audited suppression site.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AllowSite {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub justification: String,
+}
+
+/// The result of scanning a tree (or a single source).
+#[derive(Default)]
+pub struct Report {
+    pub files_scanned: usize,
+    pub violations: Vec<Violation>,
+    pub allows: Vec<AllowSite>,
+}
+
+const ALLOW_MARKER: &str = "detlint: allow(";
+
+/// Integer target types of an `as` cast that can silently truncate (or
+/// sign-flip) a byte count.
+const INT_CAST_TARGETS: &[&str] = &[
+    "u8", "u16", "u32", "u64", "usize", "i8", "i16", "i32", "i64", "isize",
+];
+
+fn rule_known(id: &str) -> bool {
+    RULES.iter().any(|r| r.id == id)
+}
+
+fn in_any(path: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| path.starts_with(d))
+}
+
+/// Strip a `//` line comment, tracking string literals so a `//` inside
+/// a `"..."` does not truncate the code. A `'"'` char literal is
+/// special-cased so it does not toggle the string state.
+fn strip_comment(line: &str) -> &str {
+    let b = line.as_bytes();
+    let mut in_str = false;
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'\\' if in_str => i += 1, // skip the escaped byte
+            b'"' => {
+                // `'"'` is a char literal, not a string delimiter.
+                let char_lit = !in_str
+                    && i > 0
+                    && b[i - 1] == b'\''
+                    && i + 1 < b.len()
+                    && b[i + 1] == b'\'';
+                if !char_lit {
+                    in_str = !in_str;
+                }
+            }
+            b'/' if !in_str && i + 1 < b.len() && b[i + 1] == b'/' => {
+                return &line[..i];
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    line
+}
+
+/// Extract the name of a `fn` declared on this line, if any.
+fn fn_name(code: &str) -> Option<&str> {
+    let mut search = 0;
+    while let Some(rel) = code[search..].find("fn ") {
+        let p = search + rel;
+        let boundary = p == 0
+            || matches!(code.as_bytes()[p - 1], b' ' | b'(' | b'\t');
+        if boundary {
+            let rest = &code[p + 3..];
+            let end = rest
+                .find(|c: char| !(c.is_alphanumeric() || c == '_'))
+                .unwrap_or(rest.len());
+            if end > 0 {
+                return Some(&rest[..end]);
+            }
+        }
+        search = p + 3;
+    }
+    None
+}
+
+/// Tracks whether the scan position is inside the body of a fn whose
+/// name contains "bytes" (naive brace counting on comment-stripped
+/// lines — good enough for this crate's formatting).
+#[derive(Default)]
+struct BytesFnTracker {
+    pending: bool, // saw the signature, waiting for `{` or `;`
+    in_fn: bool,
+    depth: i32,
+}
+
+impl BytesFnTracker {
+    /// Feed one comment-stripped line; returns true if any part of the
+    /// line falls inside a `*bytes*` fn body.
+    fn feed(&mut self, code: &str) -> bool {
+        let mut inside = self.in_fn;
+        if !self.in_fn && !self.pending {
+            if let Some(name) = fn_name(code) {
+                if name.contains("bytes") {
+                    self.pending = true;
+                }
+            }
+        }
+        for ch in code.chars() {
+            if self.pending {
+                match ch {
+                    '{' => {
+                        self.pending = false;
+                        self.in_fn = true;
+                        self.depth = 1;
+                        inside = true;
+                    }
+                    ';' => self.pending = false, // trait decl, no body
+                    _ => {}
+                }
+            } else if self.in_fn {
+                match ch {
+                    '{' => self.depth += 1,
+                    '}' => {
+                        self.depth -= 1;
+                        if self.depth == 0 {
+                            self.in_fn = false;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        inside
+    }
+}
+
+/// Does the line contain an `as <int-type>` cast?
+fn has_int_cast(code: &str) -> bool {
+    let mut search = 0;
+    while let Some(rel) = code[search..].find(" as ") {
+        let p = search + rel + 4;
+        let rest = &code[p..];
+        let end = rest
+            .find(|c: char| !(c.is_alphanumeric() || c == '_'))
+            .unwrap_or(rest.len());
+        if INT_CAST_TARGETS.contains(&&rest[..end]) {
+            return true;
+        }
+        search = p;
+    }
+    false
+}
+
+/// Is this a scalar f32 accumulator binding (`let mut sum = 0.0f32` and
+/// friends)? Vec allocations are not accumulators.
+fn is_f32_accumulator_binding(code: &str) -> bool {
+    let Some(p) = code.find("let mut ") else {
+        return false;
+    };
+    if code.contains("vec!") || code.contains("Vec") {
+        return false;
+    }
+    let zero_init = code.contains("0.0f32")
+        || code.contains("0f32")
+        || (code.contains(": f32") && code.contains("= 0."));
+    if !zero_init {
+        return false;
+    }
+    let rest = &code[p + 8..];
+    let end = rest
+        .find(|c: char| !(c.is_alphanumeric() || c == '_'))
+        .unwrap_or(rest.len());
+    let ident = &rest[..end];
+    ["sum", "acc", "total"].iter().any(|k| ident.contains(k))
+}
+
+/// Find the line index where the trailing `#[cfg(test)] mod tests`
+/// block starts (everything from there on is skipped).
+fn test_module_start(lines: &[&str]) -> usize {
+    for (i, l) in lines.iter().enumerate() {
+        if l.trim_start().starts_with("#[cfg(test)]")
+            && lines
+                .iter()
+                .skip(i + 1)
+                .take(3)
+                .any(|n| n.trim_start().starts_with("mod "))
+        {
+            return i;
+        }
+    }
+    lines.len()
+}
+
+/// Scan one source text. `path` is the file's path relative to the
+/// source root, with `/` separators (it selects which rules apply).
+pub fn scan_source(
+    path: &str,
+    text: &str,
+) -> (Vec<Violation>, Vec<AllowSite>) {
+    let lines: Vec<&str> = text.lines().collect();
+    let mut violations = Vec::new();
+    let mut allows = Vec::new();
+
+    // Pass 1: allow-annotations. Only the comment part of a line is
+    // parsed (a marker inside a string literal is data, not an
+    // annotation), and doc comments are prose — `//! // detlint:
+    // allow(...)` in module docs must not register.
+    let mut allow_at: Vec<Option<String>> = vec![None; lines.len()];
+    for (i, raw) in lines.iter().enumerate() {
+        let comment = &raw[strip_comment(raw).len()..];
+        let trimmed = comment.trim_start();
+        if trimmed.starts_with("//!") || trimmed.starts_with("///") {
+            continue;
+        }
+        let Some(p) = comment.find(ALLOW_MARKER) else {
+            continue;
+        };
+        let rest = &comment[p + ALLOW_MARKER.len()..];
+        let Some(close) = rest.find(')') else {
+            violations.push(Violation {
+                file: path.to_string(),
+                line: i + 1,
+                rule: "bad-allow",
+                snippet: raw.trim().to_string(),
+            });
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        let justification = rest[close + 1..].trim().to_string();
+        if !rule_known(&rule) || rule == "bad-allow" {
+            violations.push(Violation {
+                file: path.to_string(),
+                line: i + 1,
+                rule: "bad-allow",
+                snippet: format!("unknown rule {rule:?}"),
+            });
+        } else if justification.is_empty() {
+            violations.push(Violation {
+                file: path.to_string(),
+                line: i + 1,
+                rule: "bad-allow",
+                snippet: format!("allow({rule}) without a justification"),
+            });
+        } else {
+            allow_at[i] = Some(rule.clone());
+            allows.push(AllowSite {
+                file: path.to_string(),
+                line: i + 1,
+                rule,
+                justification,
+            });
+        }
+    }
+
+    // Pass 2: rules, up to the trailing test module.
+    let test_start = test_module_start(&lines);
+    let mut bytes_fn = BytesFnTracker::default();
+    let numeric_dirs = ["collective/", "exec/", "optim/", "cluster/"];
+    let clock_dirs =
+        ["collective/", "exec/", "optim/", "cluster/", "trace/"];
+    let bytes_dirs = ["collective/", "exec/", "cluster/", "metrics/"];
+    for (i, raw) in lines.iter().enumerate().take(test_start) {
+        let code = strip_comment(raw);
+        let in_bytes_fn = bytes_fn.feed(code);
+        // An allow applies to its own line, or — when written as a
+        // comment block — to the first code line below the block:
+        // walk upward through contiguous comment-only lines (so the
+        // justification may span several lines). A blank line breaks
+        // the association.
+        let allowed = |rule: &str| -> bool {
+            if allow_at[i].as_deref() == Some(rule) {
+                return true;
+            }
+            let mut j = i;
+            while j > 0 {
+                j -= 1;
+                let t = lines[j].trim_start();
+                if !t.starts_with("//") || t.starts_with("//!") {
+                    return false;
+                }
+                if allow_at[j].as_deref() == Some(rule) {
+                    return true;
+                }
+            }
+            false
+        };
+        let mut fire = |rule: &'static str| {
+            violations.push(Violation {
+                file: path.to_string(),
+                line: i + 1,
+                rule,
+                snippet: raw.trim().to_string(),
+            });
+        };
+
+        if in_any(path, &numeric_dirs)
+            && (code.contains("HashMap") || code.contains("HashSet"))
+            && !allowed("hash-iter")
+        {
+            fire("hash-iter");
+        }
+
+        if in_any(path, &clock_dirs)
+            && path != "trace/host.rs"
+            && (code.contains("Instant::now")
+                || code.contains("SystemTime"))
+            && !allowed("wall-clock")
+        {
+            fire("wall-clock");
+        }
+
+        let f32_sum = in_any(path, &numeric_dirs)
+            && code.contains(".sum::<f32>");
+        let f32_indexed = path.starts_with("collective/")
+            && code.contains("] +=");
+        let f32_binding = in_any(path, &["collective/", "exec/"])
+            && is_f32_accumulator_binding(code);
+        if (f32_sum || f32_indexed || f32_binding) && !allowed("f32-accum")
+        {
+            fire("f32-accum");
+        }
+
+        if path == "exec/pool.rs"
+            && (code.contains(".unwrap()") || code.contains(".expect("))
+            && !allowed("panic-in-worker")
+        {
+            fire("panic-in-worker");
+        }
+
+        if in_any(path, &bytes_dirs)
+            && in_bytes_fn
+            && has_int_cast(code)
+            && !allowed("byte-cast")
+        {
+            fire("byte-cast");
+        }
+    }
+
+    (violations, allows)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Scan every `.rs` file under `root` (normally `rust/src`). Files are
+/// visited in sorted path order so reports are deterministic.
+pub fn scan_tree(root: &Path) -> io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut report = Report::default();
+    for f in &files {
+        let rel = match f.strip_prefix(root) {
+            Ok(r) => r,
+            Err(_) => f.as_path(),
+        };
+        let rel = rel.to_string_lossy().replace('\\', "/");
+        let text = fs::read_to_string(f)?;
+        let (v, a) = scan_source(&rel, &text);
+        report.violations.extend(v);
+        report.allows.extend(a);
+        report.files_scanned += 1;
+    }
+    report
+        .violations
+        .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(report)
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl Report {
+    /// Machine-readable report (the `--json` output). Self-contained
+    /// serializer — the crate is fully offline, no serde.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"violations\": [");
+        for (i, v) in self.violations.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "\n    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \
+                 \"snippet\": \"{}\"}}",
+                esc(&v.file),
+                v.line,
+                v.rule,
+                esc(&v.snippet)
+            ));
+        }
+        s.push_str("\n  ],\n  \"allows\": [");
+        for (i, a) in self.allows.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "\n    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \
+                 \"justification\": \"{}\"}}",
+                esc(&a.file),
+                a.line,
+                esc(&a.rule),
+                esc(&a.justification)
+            ));
+        }
+        s.push_str(&format!(
+            "\n  ],\n  \"files_scanned\": {},\n  \"clean\": {}\n}}\n",
+            self.files_scanned,
+            self.violations.is_empty()
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comment_stripper_respects_strings() {
+        assert_eq!(strip_comment("let x = 1; // tail"), "let x = 1; ");
+        assert_eq!(
+            strip_comment(r#"let url = "https://x"; let y = 2;"#),
+            r#"let url = "https://x"; let y = 2;"#
+        );
+        assert_eq!(strip_comment("// whole line"), "");
+        // '"' char literal does not open a string.
+        assert_eq!(strip_comment(r#"if c == '"' { } // c"#), r#"if c == '"' { } "#);
+    }
+
+    #[test]
+    fn fn_name_extraction() {
+        assert_eq!(fn_name("pub fn payload_bytes(self) -> usize {"), Some("payload_bytes"));
+        assert_eq!(fn_name("    fn bytes(&self) -> usize {"), Some("bytes"));
+        assert_eq!(fn_name("pub(crate) fn stage_state_bytes("), Some("stage_state_bytes"));
+        assert_eq!(fn_name("let f = |x| x;"), None);
+        assert_eq!(fn_name("retired: &mut dyn FnMut(usize, &[f32])"), None);
+    }
+
+    #[test]
+    fn hash_iter_fires_in_scope_only() {
+        let src = "use std::collections::HashMap;\n";
+        let (v, _) = scan_source("exec/mod.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "hash-iter");
+        let (v, _) = scan_source("runtime/pjrt.rs", src);
+        assert!(v.is_empty(), "out-of-scope dir must not fire");
+    }
+
+    #[test]
+    fn wall_clock_exempts_trace_host() {
+        let src = "let t = Instant::now();\n";
+        assert_eq!(scan_source("exec/pool.rs", src).0[0].rule, "wall-clock");
+        assert!(scan_source("trace/host.rs", src).0.is_empty());
+    }
+
+    #[test]
+    fn allow_annotation_suppresses_same_and_next_line() {
+        let same = "let t = Instant::now(); // detlint: allow(wall-clock) telemetry only\n";
+        assert!(scan_source("exec/x.rs", same).0.is_empty());
+        let above = "// detlint: allow(wall-clock) telemetry only\nlet t = Instant::now();\n";
+        assert!(scan_source("exec/x.rs", above).0.is_empty());
+        // A multi-line justification comment block also covers the
+        // first code line below it.
+        let block = "// detlint: allow(wall-clock) telemetry only;\n// never feeds the numeric path\nlet t = Instant::now();\n";
+        assert!(scan_source("exec/x.rs", block).0.is_empty());
+        // ...but a blank line breaks the association.
+        let far = "// detlint: allow(wall-clock) telemetry only\n\nlet t = Instant::now();\n";
+        assert_eq!(scan_source("exec/x.rs", far).0.len(), 1);
+    }
+
+    #[test]
+    fn allow_requires_known_rule_and_justification() {
+        let unknown = "// detlint: allow(no-such-rule) because\n";
+        let (v, a) = scan_source("exec/x.rs", unknown);
+        assert_eq!(v[0].rule, "bad-allow");
+        assert!(a.is_empty());
+        let bare = "let t = Instant::now(); // detlint: allow(wall-clock)\n";
+        let (v, _) = scan_source("exec/x.rs", bare);
+        // The allow is rejected, so BOTH bad-allow and the underlying
+        // wall-clock violation are reported.
+        assert!(v.iter().any(|x| x.rule == "bad-allow"));
+        assert!(v.iter().any(|x| x.rule == "wall-clock"));
+    }
+
+    #[test]
+    fn f32_accum_patterns() {
+        let (v, _) = scan_source(
+            "collective/mod.rs",
+            "let total: f32 = xs.iter().sum::<f32>();\n",
+        );
+        assert_eq!(v[0].rule, "f32-accum");
+        let (v, _) =
+            scan_source("collective/mod.rs", "acc[i] += src[i];\n");
+        assert_eq!(v[0].rule, "f32-accum");
+        let (v, _) =
+            scan_source("exec/mod.rs", "let mut sum = 0.0f32;\n");
+        assert_eq!(v[0].rule, "f32-accum");
+        // f64 accumulators and Vec allocations are the blessed idiom.
+        assert!(scan_source("exec/mod.rs", "let mut lsum = 0.0f64;\n")
+            .0
+            .is_empty());
+        assert!(scan_source(
+            "exec/mod.rs",
+            "let mut acc: Vec<f32> = Vec::new();\n"
+        )
+        .0
+        .is_empty());
+    }
+
+    #[test]
+    fn byte_cast_only_inside_bytes_fns() {
+        let src = "\
+pub fn payload_bytes(n: usize) -> usize {
+    let bits = n * 9;
+    (bits / 8) as u32 as usize
+}
+pub fn unrelated(n: u64) -> usize {
+    n as usize
+}
+";
+        let (v, _) = scan_source("collective/compress.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "byte-cast");
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn test_modules_are_skipped() {
+        let src = "\
+fn live() {}
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+    fn f() { x.unwrap(); }
+}
+";
+        let (v, _) = scan_source("exec/pool.rs", src);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn json_report_is_valid_and_complete() {
+        let (violations, allows) = scan_source(
+            "exec/pool.rs",
+            "let x = y.unwrap(); // \"quote\" in snippet\n",
+        );
+        let report = Report { files_scanned: 1, violations, allows };
+        let parsed = crate::util::json::Json::parse(&report.to_json())
+            .expect("report must be valid JSON");
+        let v = parsed.get("violations").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(v.len(), 1);
+        assert_eq!(
+            v[0].get("rule").and_then(|r| r.as_str()),
+            Some("panic-in-worker")
+        );
+        assert_eq!(parsed.get("clean").and_then(|c| c.as_bool()), Some(false));
+    }
+}

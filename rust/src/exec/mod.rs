@@ -67,8 +67,16 @@
 //! (`coordinator::NativeTrainer::with_exec_mesh` rejects tp/pp > 1),
 //! and the pure-dp mesh is bitwise-identical to everything above.
 
+// Correctness gate (see ARCHITECTURE.md "Correctness tooling"): in the
+// exec stack an unwrap/expect is never neutral — a panic on a worker
+// thread strands the step barrier, and a panic on the driver kills the
+// run — so each one must be an explicit, justified decision
+// (`#[allow]` with a comment) or an error path.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod bucket;
 pub mod pool;
+pub mod protocol;
 pub mod zero;
 
 pub use bucket::{Bucket, BucketPlan};
@@ -436,6 +444,11 @@ impl Gather {
     /// `ef` is the error-feedback state for compressed wires: the
     /// full-length per-worker send residuals (sliced to the bucket here)
     /// plus the bucket's recv residual.
+    // The expect below asserts the `offer` contract: reduce_into is
+    // only ever called after `offer` returned true for bucket `b`, so
+    // every part is present. Runs on the driver thread — a violation
+    // is a caller bug worth a crash, not a stranded barrier.
+    #[allow(clippy::expect_used)]
     pub(crate) fn reduce_into(
         &self,
         plan: &BucketPlan,
@@ -479,6 +492,9 @@ impl Gather {
     /// (the error-feedback residuals, sliced to the same ranges and
     /// anchored to the same global offset, see to that at the compressed
     /// wires too).
+    // Same `offer` contract as `reduce_into`: driver-thread invariant
+    // assertion, not a worker-side panic hazard.
+    #[allow(clippy::expect_used)]
     pub(crate) fn scatter_into(
         &self,
         plan: &BucketPlan,
@@ -676,6 +692,7 @@ impl Executor {
         // Host-trace hooks below read clocks and metadata only — the
         // numeric path of a traced step is identical to an untraced one.
         let _step_span = thost::span_id("exec.step", step);
+        // detlint: allow(wall-clock) telemetry epoch for StepOutcome timings; never feeds the numeric path
         let t0 = Instant::now();
         let ctx = StepCtx {
             step,
@@ -761,7 +778,12 @@ impl Executor {
             Backend::Pool(pool) => {
                 {
                     let _g = thost::span("exec.begin_step");
-                    pool.begin_step(&ctx);
+                    if let Err(e) = pool.begin_step(&ctx) {
+                        // A worker died on an earlier step; the pool
+                        // cannot complete a barrier any more. Fail the
+                        // step loudly — there is no partial recovery.
+                        panic!("exec step {step}: {e}");
+                    }
                 }
                 let mut done = 0usize;
                 let mut reduced_n = 0usize;
@@ -770,7 +792,10 @@ impl Executor {
                         // Coordinator turnaround: time spent waiting on
                         // the worker channel (idle vs reduce work).
                         let _g = thost::span("exec.recv");
-                        pool.recv()
+                        match pool.recv() {
+                            Ok(m) => m,
+                            Err(e) => panic!("exec step {step}: {e}"),
+                        }
                     };
                     match msg {
                         pool::Msg::Bucket { worker, bucket, data, at } => {
@@ -820,6 +845,19 @@ impl Executor {
                             compute_done = compute_done.max(f);
                             done += 1;
                         }
+                        pool::Msg::Failed { worker, panic } => {
+                            // A worker's compute panicked mid-step.
+                            // Surface it immediately — before this arm
+                            // existed, a dead worker meant the `done <
+                            // k` loop above waited forever (the
+                            // silent-deadlock regression tests in
+                            // `pool::tests` and `tests/test_exec.rs`
+                            // pin the fix).
+                            panic!(
+                                "exec step {step}: worker {worker} \
+                                 panicked: {panic}"
+                            );
+                        }
                     }
                 }
             }
@@ -862,6 +900,7 @@ impl Executor {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::util::Rng;
@@ -1432,5 +1471,69 @@ mod tests {
         for i in 0..n {
             assert_eq!(pa[i].to_bits(), pb[i].to_bits(), "i={i}");
         }
+    }
+
+    /// Regression test for the silent-deadlock hazard at the executor
+    /// level: a panic inside one pool worker's compute must propagate
+    /// out of `Executor::step` as a prompt panic naming the worker —
+    /// before `pool::Msg::Failed` existed, this test hung forever in
+    /// the `done < k` receive loop.
+    #[test]
+    fn executor_surfaces_worker_panic_instead_of_hanging() {
+        struct Boom {
+            id: usize,
+            n: usize,
+        }
+        impl GradWorker for Boom {
+            fn n(&self) -> usize {
+                self.n
+            }
+            fn compute(
+                &mut self,
+                ctx: &StepCtx,
+                grads: &mut [f32],
+                _retired: &mut dyn FnMut(usize, &[f32]),
+            ) -> f32 {
+                if self.id == 1 {
+                    panic!("poisoned replica state");
+                }
+                for g in grads.iter_mut() {
+                    *g = ctx.step as f32;
+                }
+                0.0
+            }
+        }
+        let n = 32;
+        let segs = tile(&[16, 16]);
+        let workers: Vec<Box<dyn GradWorker>> = (0..3)
+            .map(|id| Box::new(Boom { id, n }) as Box<dyn GradWorker>)
+            .collect();
+        let cfg = ExecConfig {
+            mode: ExecMode::Parallel,
+            workers: 3,
+            bucket_bytes: 16 * 4,
+            ..ExecConfig::default()
+        };
+        let mut ex = Executor::new(cfg, &segs, workers);
+        let params = vec![0.0f32; n];
+        let mut reduced = vec![0.0f32; n];
+        let err = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                ex.step(1, 4, &params, &mut reduced)
+            }),
+        )
+        .expect_err("the step must panic, not hang");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(
+            msg.contains("worker 1 panicked")
+                && msg.contains("poisoned replica state"),
+            "panic must name the worker and carry its payload: {msg:?}"
+        );
+        // The pool must still shut down cleanly (drop joins all
+        // threads; the survivors are parked on their command channels).
+        drop(ex);
     }
 }

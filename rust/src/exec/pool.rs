@@ -14,9 +14,21 @@
 //! (dense / ZeRO-1), or a reduce-scatter into the owning worker's shard
 //! (ZeRO-2); the worker side of the protocol is identical either way.
 //!
+//! **Failure contract.** A panic inside a worker's compute must never
+//! die silently: the panicking thread would drop its result-channel
+//! sender while its siblings keep the channel open, so the driver's
+//! step loop (`done < k`) would block forever on a `Done` that never
+//! comes. Workers therefore run compute under `catch_unwind` and
+//! forward the panic as [`Msg::Failed`]; the driver surfaces it
+//! immediately (see `Executor::step`). The channel/barrier/flush
+//! ordering of this protocol — including that failure path — is
+//! exhaustively model-checked in [`super::protocol`].
+//!
 //! Shutdown is by dropping the pool: command senders close, worker loops
 //! end, threads are joined.
 
+use std::fmt;
+use std::panic::AssertUnwindSafe;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::{Builder, JoinHandle};
 use std::time::Instant;
@@ -36,6 +48,51 @@ pub enum Msg {
     },
     /// A worker finished its whole gradient computation.
     Done { worker: usize, loss: f32, at: Instant },
+    /// A worker's compute panicked. The worker flushed its trace
+    /// buffer, reported this, and exited; the driver must fail the
+    /// step loudly instead of waiting on a `Done` that will never
+    /// arrive.
+    Failed { worker: usize, panic: String },
+}
+
+/// A pool interaction found dead worker threads.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PoolError {
+    /// `begin_step` hit a closed command channel: that worker exited
+    /// (it reported [`Msg::Failed`] on an earlier step).
+    WorkerGone { worker: usize },
+    /// The shared result channel is closed: every worker has exited
+    /// while the driver still expected messages.
+    AllWorkersGone,
+}
+
+impl fmt::Display for PoolError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PoolError::WorkerGone { worker } => write!(
+                f,
+                "exec worker {worker} is gone (it panicked on an \
+                 earlier step); the pool cannot run further steps"
+            ),
+            PoolError::AllWorkersGone => {
+                write!(f, "all exec worker threads exited unexpectedly")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PoolError {}
+
+/// Render a `catch_unwind` payload: `panic!` carries `&str` or
+/// `String`; anything else is opaque.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
 }
 
 pub struct WorkerPool {
@@ -47,6 +104,10 @@ pub struct WorkerPool {
 
 impl WorkerPool {
     /// Move each worker onto its own named thread.
+    // A failed OS-thread spawn happens at pool construction, before any
+    // step is in flight, so panicking here cannot strand a barrier —
+    // there is no cleaner recovery than failing construction.
+    #[allow(clippy::expect_used)]
     pub fn spawn(
         workers: Vec<Box<dyn GradWorker>>,
         plan: BucketPlan,
@@ -72,41 +133,70 @@ impl WorkerPool {
                         if ctx.accum > 1 && acc.len() != n {
                             acc.resize(n, 0.0);
                         }
-                        let loss = {
-                            // One host-trace span per step on this
-                            // worker's lane (clock reads only — the
-                            // numeric path is untouched).
-                            let _g = crate::trace::host::span_id(
-                                "worker.compute",
-                                ctx.step,
-                            );
-                            drive_worker_accum(
-                                worker.as_mut(),
-                                &mut grads,
-                                &mut acc,
-                                &plan,
-                                &ctx,
-                                &mut |bucket, payload| {
-                                    let _ = msg_tx.send(Msg::Bucket {
-                                        worker: wid,
-                                        bucket,
-                                        data: payload.to_vec(),
-                                        at: Instant::now(),
-                                    });
+                        // A panic in compute (model bug, poisoned
+                        // state) is caught and forwarded as
+                        // `Msg::Failed` — see the failure contract in
+                        // the module docs.
+                        let result =
+                            std::panic::catch_unwind(AssertUnwindSafe(
+                                || {
+                                    // One host-trace span per step on
+                                    // this worker's lane (clock reads
+                                    // only — the numeric path is
+                                    // untouched).
+                                    let _g = crate::trace::host::span_id(
+                                        "worker.compute",
+                                        ctx.step,
+                                    );
+                                    drive_worker_accum(
+                                        worker.as_mut(),
+                                        &mut grads,
+                                        &mut acc,
+                                        &plan,
+                                        &ctx,
+                                        &mut |bucket, payload| {
+                                            let _ = msg_tx.send(Msg::Bucket {
+                                                worker: wid,
+                                                bucket,
+                                                data: payload.to_vec(),
+                                                // detlint: allow(wall-clock) telemetry timestamp for StepComm; never feeds the numeric path
+                                                at: Instant::now(),
+                                            });
+                                        },
+                                    )
                                 },
-                            )
-                        };
+                            ));
                         // Natural barrier: hand buffered events to the
-                        // shared sink before reporting Done (cheap no-op
+                        // shared sink before reporting (cheap no-op
                         // when tracing is off or the buffer is empty).
+                        // Runs on the panic path too: the unwound
+                        // span guard already recorded its span.
                         crate::trace::host::flush_thread();
-                        let _ = msg_tx.send(Msg::Done {
-                            worker: wid,
-                            loss,
-                            at: Instant::now(),
-                        });
+                        match result {
+                            Ok(loss) => {
+                                let _ = msg_tx.send(Msg::Done {
+                                    worker: wid,
+                                    loss,
+                                    // detlint: allow(wall-clock) telemetry timestamp for StepComm; never feeds the numeric path
+                                    at: Instant::now(),
+                                });
+                            }
+                            Err(payload) => {
+                                let _ = msg_tx.send(Msg::Failed {
+                                    worker: wid,
+                                    panic: panic_message(
+                                        payload.as_ref(),
+                                    ),
+                                });
+                                // The replica may hold half-updated
+                                // state; retire the thread rather than
+                                // compute garbage on the next step.
+                                return;
+                            }
+                        }
                     }
                 })
+                // detlint: allow(panic-in-worker) driver-side, at construction: no step is in flight, so no barrier can be stranded
                 .expect("spawning exec worker thread");
             cmd_txs.push(cmd_tx);
             handles.push(handle);
@@ -122,15 +212,23 @@ impl WorkerPool {
     }
 
     /// Broadcast the step context to every worker.
-    pub fn begin_step(&self, ctx: &StepCtx) {
-        for tx in &self.cmd_txs {
-            tx.send(ctx.clone()).expect("exec worker thread died");
+    ///
+    /// `Err` means a worker's command channel is closed because the
+    /// worker exited after reporting [`Msg::Failed`] on an earlier
+    /// step. Workers before it in index order have already received
+    /// the context; the caller must surface the error, not retry.
+    pub fn begin_step(&self, ctx: &StepCtx) -> Result<(), PoolError> {
+        for (worker, tx) in self.cmd_txs.iter().enumerate() {
+            if tx.send(ctx.clone()).is_err() {
+                return Err(PoolError::WorkerGone { worker });
+            }
         }
+        Ok(())
     }
 
     /// Blocking receive of the next worker message.
-    pub fn recv(&self) -> Msg {
-        self.msg_rx.recv().expect("all exec worker threads died")
+    pub fn recv(&self) -> Result<Msg, PoolError> {
+        self.msg_rx.recv().map_err(|_| PoolError::AllWorkersGone)
     }
 }
 
@@ -145,6 +243,7 @@ impl Drop for WorkerPool {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::optim::Seg;
@@ -173,6 +272,35 @@ mod tests {
         }
     }
 
+    /// Panics mid-compute — the hazard `Msg::Failed` exists for.
+    struct PanicWorker {
+        n: usize,
+    }
+
+    impl GradWorker for PanicWorker {
+        fn n(&self) -> usize {
+            self.n
+        }
+
+        fn compute(
+            &mut self,
+            _ctx: &StepCtx,
+            _grads: &mut [f32],
+            _retired: &mut dyn FnMut(usize, &[f32]),
+        ) -> f32 {
+            panic!("synthetic worker failure");
+        }
+    }
+
+    fn step_ctx(n: usize) -> StepCtx {
+        StepCtx {
+            step: 2,
+            batch_share: 1,
+            accum: 1,
+            params: Arc::new(vec![0.0; n]),
+        }
+    }
+
     #[test]
     fn pool_round_trip_and_clean_shutdown() {
         let n = 32;
@@ -185,18 +313,12 @@ mod tests {
             })
             .collect();
         let pool = WorkerPool::spawn(workers, plan.clone(), n);
-        let ctx = StepCtx {
-            step: 2,
-            batch_share: 1,
-            accum: 1,
-            params: Arc::new(vec![0.0; n]),
-        };
-        pool.begin_step(&ctx);
+        pool.begin_step(&step_ctx(n)).unwrap();
         let mut buckets = 0;
         let mut losses = vec![0.0f32; 3];
         let mut done = 0;
         while done < 3 {
-            match pool.recv() {
+            match pool.recv().unwrap() {
                 Msg::Bucket { worker, data, .. } => {
                     buckets += 1;
                     // worker i emits (i+1) * step everywhere
@@ -207,10 +329,84 @@ mod tests {
                     losses[worker] = loss;
                     done += 1;
                 }
+                Msg::Failed { worker, panic } => {
+                    unreachable!("worker {worker} failed: {panic}")
+                }
             }
         }
         assert_eq!(buckets, 3 * plan.len());
         assert_eq!(losses, vec![1.0, 2.0, 3.0]);
         drop(pool); // must join without hanging
+    }
+
+    /// Regression test for the silent-deadlock hazard: a worker that
+    /// panics mid-compute must surface as `Msg::Failed` while the
+    /// sibling workers still complete, and the pool must join cleanly
+    /// — before the `catch_unwind` forwarding, this scenario hung the
+    /// driver's step loop forever.
+    #[test]
+    fn panicking_worker_reports_failed_instead_of_deadlocking() {
+        let n = 16;
+        let segs = Seg::whole(n);
+        let plan = BucketPlan::from_segs(&segs, 8 * 4);
+        let workers: Vec<Box<dyn GradWorker>> = (0..3)
+            .map(|i| {
+                if i == 1 {
+                    Box::new(PanicWorker { n }) as Box<dyn GradWorker>
+                } else {
+                    Box::new(ConstWorker { val: 1.0, n })
+                        as Box<dyn GradWorker>
+                }
+            })
+            .collect();
+        let pool = WorkerPool::spawn(workers, plan, n);
+        pool.begin_step(&step_ctx(n)).unwrap();
+        let mut failed = None;
+        let mut done = 0;
+        while done < 2 || failed.is_none() {
+            match pool.recv().unwrap() {
+                Msg::Bucket { .. } => {}
+                Msg::Done { .. } => done += 1,
+                Msg::Failed { worker, panic } => {
+                    failed = Some((worker, panic));
+                }
+            }
+        }
+        let (worker, panic) = failed.unwrap();
+        assert_eq!(worker, 1);
+        assert!(
+            panic.contains("synthetic worker failure"),
+            "panic payload must be forwarded verbatim, got {panic:?}"
+        );
+        // The dead worker's thread returned; Drop joins all three.
+        drop(pool);
+    }
+
+    /// After a worker died, the next `begin_step` must report which
+    /// worker is gone instead of panicking the driver thread.
+    #[test]
+    fn begin_step_reports_dead_worker() {
+        let n = 8;
+        let segs = Seg::whole(n);
+        let plan = BucketPlan::from_segs(&segs, 8 * 4);
+        let workers: Vec<Box<dyn GradWorker>> =
+            vec![Box::new(PanicWorker { n })];
+        let pool = WorkerPool::spawn(workers, plan, n);
+        pool.begin_step(&step_ctx(n)).unwrap();
+        match pool.recv().unwrap() {
+            Msg::Failed { worker: 0, .. } => {}
+            _ => unreachable!("expected Msg::Failed from worker 0"),
+        }
+        // The sole worker exited: the result channel closes...
+        match pool.recv() {
+            Err(PoolError::AllWorkersGone) => {}
+            Err(e) => unreachable!("unexpected pool error: {e}"),
+            Ok(_) => unreachable!("result channel should be closed"),
+        }
+        // ...and a fresh broadcast names the dead worker.
+        assert_eq!(
+            pool.begin_step(&step_ctx(n)),
+            Err(PoolError::WorkerGone { worker: 0 })
+        );
     }
 }

@@ -1,0 +1,523 @@
+//! Exhaustive interleaving checker for the worker-pool step protocol.
+//!
+//! [`pool::WorkerPool`](super::pool) and the host-trace recorder
+//! ([`crate::trace::host`]) together implement a small concurrent
+//! protocol per step:
+//!
+//! ```text
+//! driver:    begin_step (broadcast ctx, worker order) ─┐
+//! worker w:  recv ctx → compute (emit buckets, record  │ mpsc, FIFO
+//!            span) → flush trace buf → send Done ──────┤
+//! driver:    recv loop until k Dones + all buckets     │
+//!            reduced (reduce in worker index order) ───┘
+//! driver:    trace drain (epoch-filter stale events)
+//! ```
+//!
+//! The determinism and liveness claims of that protocol are ordering
+//! properties no unit test can cover exhaustively: a test observes one
+//! scheduler interleaving per run. This module is the crate's
+//! loom-style answer — an abstract state machine of the protocol whose
+//! every transition is one atomic action (an mpsc send/recv, a
+//! trace-buffer flush, a state change), plus a depth-first enumeration
+//! of **every** reachable interleaving with state deduplication. The
+//! sync seam the real code runs on is swappable for the `loom` crate's
+//! primitives (`crate::util::sync`, `--cfg loom`) where available; the
+//! in-tree model needs no dependency and additionally covers the mpsc
+//! channels, which loom does not model.
+//!
+//! Checked invariants, over all interleavings:
+//!
+//! * **No deadlock**: every non-terminal state has an enabled action
+//!   (terminal = step drained, or a worker failure surfaced).
+//! * **Reduction determinism**: a bucket reduces exactly once, only
+//!   after every worker contributed, and payloads are consumed in
+//!   worker index order regardless of arrival order (the `Gather`
+//!   contract).
+//! * **Barrier-flush ordering**: at drain time every worker's
+//!   current-epoch trace span is in the shared lanes exactly once —
+//!   this is exactly the "flush before `Done`" ordering in
+//!   `pool.rs`; the mutated protocol (`flush_before_done: false`)
+//!   violates it in some interleaving, which the checker must find.
+//! * **Epoch filtering**: a stale event pre-seeded in a worker's
+//!   thread-local buffer (left over from a previous session) is
+//!   flushed but dropped by the drain filter.
+//! * **Failure propagation**: a worker that panics mid-compute
+//!   surfaces as `Msg::Failed` and the driver aborts; with the
+//!   pre-fix protocol (`report_failure: false` — the silent thread
+//!   death this crate used to have) the checker must find the
+//!   deadlock.
+//!
+//! The two mutation knobs exist so the tests can prove the checker
+//! *detects* the bugs, not merely that the healthy protocol passes.
+
+use std::collections::BTreeSet;
+
+/// Epoch tags for modeled trace events.
+const STALE: u8 = 0;
+const CUR: u8 = 1;
+
+/// A worker failure injection: the worker panics after emitting
+/// `after_buckets` bucket payloads (before reporting its loss).
+#[derive(Clone, Copy, Debug)]
+pub struct Fail {
+    pub worker: usize,
+    pub after_buckets: usize,
+}
+
+/// One protocol scenario to model-check.
+#[derive(Clone, Copy, Debug)]
+pub struct Spec {
+    pub workers: usize,
+    pub buckets: usize,
+    pub fail: Option<Fail>,
+    /// The real protocol flushes the trace buffer *before* sending
+    /// `Done` (the natural barrier). `false` mutates the model to the
+    /// buggy ordering, to prove the checker catches it.
+    pub flush_before_done: bool,
+    /// The real protocol forwards worker panics as `Msg::Failed`.
+    /// `false` mutates the model to silent thread death (the pre-fix
+    /// behavior), to prove the checker finds the deadlock.
+    pub report_failure: bool,
+    /// Abort with an error if the search exceeds this many states —
+    /// a hang guard, not a soundness bound.
+    pub max_states: usize,
+}
+
+impl Spec {
+    /// The shipping protocol, healthy run.
+    pub fn healthy(workers: usize, buckets: usize) -> Spec {
+        Spec {
+            workers,
+            buckets,
+            fail: None,
+            flush_before_done: true,
+            report_failure: true,
+            max_states: 5_000_000,
+        }
+    }
+
+    /// The shipping protocol with a mid-compute worker panic.
+    pub fn with_failure(
+        workers: usize,
+        buckets: usize,
+        fail: Fail,
+    ) -> Spec {
+        Spec { fail: Some(fail), ..Spec::healthy(workers, buckets) }
+    }
+}
+
+/// In-flight message on the modeled shared mpsc channel.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+enum MsgM {
+    Bucket { worker: u8, bucket: u8 },
+    Done { worker: u8 },
+    Failed { worker: u8 },
+}
+
+/// Per-worker program counter.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+enum WorkerState {
+    /// Blocked on the command channel.
+    Idle,
+    /// Computing; `emitted` buckets already sent.
+    Computing { emitted: u8 },
+    /// Compute finished (span recorded); running the two-action
+    /// closing sequence (flush + report, order per spec). `phase`
+    /// counts completed closing actions.
+    Closing { failed: bool, phase: u8 },
+    /// Healthy worker parked on the command channel for a next step.
+    Parked,
+    /// Failed worker's thread returned.
+    Exited,
+}
+
+/// One atomic transition of the protocol.
+#[derive(Clone, Copy, Debug)]
+enum Action {
+    /// Driver sends the step ctx to the next worker (index order).
+    CoordSend,
+    /// Driver pops the next message off the shared channel.
+    CoordRecv,
+    /// Driver drains the trace session (after the step loop exits).
+    CoordDrain,
+    /// Worker emits its next bucket payload.
+    Emit(usize),
+    /// Worker's compute returns (records its span) — or panics, if
+    /// this worker is the failure injection point.
+    FinishCompute(usize),
+    /// Worker runs the next action of its closing sequence.
+    Close(usize),
+}
+
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct State {
+    cmds_sent: u8,
+    workers: Vec<WorkerState>,
+    queue: Vec<MsgM>,
+    /// Per bucket: bitmask of workers whose payload arrived.
+    parts: Vec<u16>,
+    reduced: Vec<bool>,
+    done: u8,
+    aborted: bool,
+    drained: bool,
+    /// Per worker thread-local trace buffer (epoch tags).
+    local_buf: Vec<Vec<u8>>,
+    /// Shared flushed lanes: (worker, epoch tag).
+    lanes: Vec<(u8, u8)>,
+}
+
+impl State {
+    fn init(spec: &Spec) -> State {
+        let k = spec.workers;
+        let mut local_buf = vec![Vec::new(); k];
+        // Seed worker 0's thread-local buffer with an event from a
+        // previous session: the epoch filter must drop it at drain.
+        if k > 0 {
+            local_buf[0].push(STALE);
+        }
+        State {
+            cmds_sent: 0,
+            workers: vec![WorkerState::Idle; k],
+            queue: Vec::new(),
+            parts: vec![0; spec.buckets],
+            reduced: vec![false; spec.buckets],
+            done: 0,
+            aborted: false,
+            drained: false,
+            local_buf,
+            lanes: Vec::new(),
+        }
+    }
+
+    fn step_loop_finished(&self, spec: &Spec) -> bool {
+        self.done as usize == spec.workers
+            && self.reduced.iter().all(|&r| r)
+    }
+
+    fn terminal(&self) -> bool {
+        self.drained || self.aborted
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "cmds_sent={} workers={:?} queue={:?} done={} reduced={:?}",
+            self.cmds_sent, self.workers, self.queue, self.done,
+            self.reduced
+        )
+    }
+}
+
+fn enabled_actions(spec: &Spec, s: &State) -> Vec<Action> {
+    let mut acts = Vec::new();
+    if s.terminal() {
+        return acts;
+    }
+    if (s.cmds_sent as usize) < spec.workers {
+        acts.push(Action::CoordSend);
+    }
+    if !s.queue.is_empty() && !s.step_loop_finished(spec) {
+        acts.push(Action::CoordRecv);
+    }
+    if s.step_loop_finished(spec) && !s.drained {
+        acts.push(Action::CoordDrain);
+    }
+    for (w, ws) in s.workers.iter().enumerate() {
+        match *ws {
+            WorkerState::Computing { emitted } => {
+                let fails_now = matches!(
+                    spec.fail,
+                    Some(Fail { worker, after_buckets })
+                        if worker == w
+                            && after_buckets == emitted as usize
+                );
+                if fails_now || (emitted as usize) == spec.buckets {
+                    acts.push(Action::FinishCompute(w));
+                } else {
+                    acts.push(Action::Emit(w));
+                }
+            }
+            WorkerState::Closing { .. } => acts.push(Action::Close(w)),
+            WorkerState::Idle
+            | WorkerState::Parked
+            | WorkerState::Exited => {}
+        }
+    }
+    acts
+}
+
+/// Apply one action; `Err` is an invariant violation.
+fn apply(spec: &Spec, s: &mut State, a: Action) -> Result<(), String> {
+    match a {
+        Action::CoordSend => {
+            let w = s.cmds_sent as usize;
+            // begin_step on a live worker: Idle -> Computing. (A dead
+            // worker would surface as PoolError::WorkerGone; the model
+            // runs a single step, so every worker starts live.)
+            s.workers[w] = WorkerState::Computing { emitted: 0 };
+            s.cmds_sent += 1;
+        }
+        Action::CoordRecv => {
+            let msg = s.queue.remove(0);
+            match msg {
+                MsgM::Bucket { worker, bucket } => {
+                    let b = bucket as usize;
+                    let bit = 1u16 << worker;
+                    if s.parts[b] & bit != 0 {
+                        return Err(format!(
+                            "duplicate payload: worker {worker} \
+                             bucket {b}"
+                        ));
+                    }
+                    if s.reduced[b] {
+                        return Err(format!(
+                            "payload for already-reduced bucket {b}"
+                        ));
+                    }
+                    s.parts[b] |= bit;
+                    let full = (1u16 << spec.workers) - 1;
+                    if s.parts[b] == full {
+                        // Gather::reduce_into consumes the parts in
+                        // worker index order (not arrival order) —
+                        // with the full bitmask present, that order is
+                        // canonical by construction, which is the
+                        // rank-order-invariance contract.
+                        s.reduced[b] = true;
+                    }
+                }
+                MsgM::Done { worker } => {
+                    let _ = worker;
+                    s.done += 1;
+                }
+                MsgM::Failed { .. } => {
+                    // Executor::step panics immediately: the failure
+                    // is surfaced, the step loop never spins waiting
+                    // for the dead worker.
+                    s.aborted = true;
+                }
+            }
+        }
+        Action::CoordDrain => {
+            // trace::host::drain with the epoch filter: only
+            // current-epoch events survive.
+            let k = spec.workers;
+            let mut cur = vec![0usize; k];
+            let mut stale_seen = false;
+            for &(w, e) in &s.lanes {
+                if e == CUR {
+                    cur[w as usize] += 1;
+                } else {
+                    stale_seen = true;
+                }
+            }
+            for (w, &c) in cur.iter().enumerate() {
+                if c != 1 {
+                    return Err(format!(
+                        "trace drain: worker {w} current-epoch span \
+                         count {c} (want exactly 1) — the flush/Done \
+                         barrier ordering is broken; state: {}",
+                        s.describe()
+                    ));
+                }
+            }
+            if k > 0 && !stale_seen {
+                return Err(
+                    "trace drain: the seeded stale event never \
+                     reached the shared lanes (flush lost it)"
+                        .to_string(),
+                );
+            }
+            s.drained = true;
+        }
+        Action::Emit(w) => {
+            let WorkerState::Computing { emitted } = s.workers[w] else {
+                return Err(format!("emit from non-computing worker {w}"));
+            };
+            // Backprop retires the last bucket first: emit descending.
+            let bucket = (spec.buckets - 1 - emitted as usize) as u8;
+            s.queue.push(MsgM::Bucket { worker: w as u8, bucket });
+            s.workers[w] =
+                WorkerState::Computing { emitted: emitted + 1 };
+        }
+        Action::FinishCompute(w) => {
+            let failed = matches!(
+                spec.fail,
+                Some(Fail { worker, .. }) if worker == w
+            );
+            // The compute span is recorded when its guard drops — on
+            // the panic path too (unwinding drops the guard).
+            s.local_buf[w].push(CUR);
+            s.workers[w] = WorkerState::Closing { failed, phase: 0 };
+        }
+        Action::Close(w) => {
+            let WorkerState::Closing { failed, phase } = s.workers[w]
+            else {
+                return Err(format!("close on non-closing worker {w}"));
+            };
+            // The closing sequence is [flush, report] in the real
+            // protocol; the mutation swaps it.
+            let flush_now = (phase == 0) == spec.flush_before_done;
+            if flush_now {
+                let events = std::mem::take(&mut s.local_buf[w]);
+                for e in events {
+                    s.lanes.push((w as u8, e));
+                }
+            } else if failed {
+                if spec.report_failure {
+                    s.queue.push(MsgM::Failed { worker: w as u8 });
+                }
+                // else: silent thread death (the pre-fix bug).
+            } else {
+                s.queue.push(MsgM::Done { worker: w as u8 });
+            }
+            s.workers[w] = if phase == 0 {
+                WorkerState::Closing { failed, phase: 1 }
+            } else if failed {
+                WorkerState::Exited
+            } else {
+                WorkerState::Parked
+            };
+        }
+    }
+    Ok(())
+}
+
+/// The checker's verdict. `error: None` means every reachable
+/// interleaving satisfied every invariant and reached a terminal
+/// state.
+#[derive(Debug)]
+pub struct CheckOutcome {
+    /// Distinct states explored.
+    pub states: usize,
+    pub error: Option<String>,
+}
+
+/// Exhaustively explore every interleaving of `spec` (DFS over the
+/// action graph with state deduplication).
+pub fn model_check(spec: &Spec) -> CheckOutcome {
+    assert!(
+        spec.workers >= 1 && spec.workers <= 8,
+        "model supports 1..=8 workers"
+    );
+    assert!(spec.buckets >= 1, "need at least one bucket");
+    let mut visited: BTreeSet<State> = BTreeSet::new();
+    let mut out = CheckOutcome { states: 0, error: None };
+    explore(spec, State::init(spec), &mut visited, &mut out);
+    out
+}
+
+fn explore(
+    spec: &Spec,
+    s: State,
+    visited: &mut BTreeSet<State>,
+    out: &mut CheckOutcome,
+) {
+    if out.error.is_some() || visited.contains(&s) {
+        return;
+    }
+    out.states += 1;
+    if out.states > spec.max_states {
+        out.error = Some(format!(
+            "state explosion: more than {} states",
+            spec.max_states
+        ));
+        return;
+    }
+    let actions = enabled_actions(spec, &s);
+    if actions.is_empty() && !s.terminal() {
+        out.error = Some(format!("deadlock: {}", s.describe()));
+        return;
+    }
+    visited.insert(s.clone());
+    for a in actions {
+        let mut next = s.clone();
+        match apply(spec, &mut next, a) {
+            Ok(()) => explore(spec, next, visited, out),
+            Err(e) => {
+                out.error = Some(e);
+                return;
+            }
+        }
+        if out.error.is_some() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_protocol_passes_exhaustively_2x2() {
+        let out = model_check(&Spec::healthy(2, 2));
+        assert!(out.error.is_none(), "{:?}", out.error);
+        // Sanity: the search is actually exploring interleavings, not
+        // a single trace.
+        assert!(out.states > 100, "only {} states", out.states);
+    }
+
+    #[test]
+    fn healthy_protocol_passes_exhaustively_3x1() {
+        let out = model_check(&Spec::healthy(3, 1));
+        assert!(out.error.is_none(), "{:?}", out.error);
+    }
+
+    #[test]
+    fn worker_panic_aborts_instead_of_deadlocking() {
+        let out = model_check(&Spec::with_failure(
+            2,
+            2,
+            Fail { worker: 1, after_buckets: 1 },
+        ));
+        assert!(out.error.is_none(), "{:?}", out.error);
+    }
+
+    #[test]
+    fn checker_finds_the_silent_death_deadlock() {
+        // The pre-fix protocol: a panicked worker reports nothing.
+        let spec = Spec {
+            report_failure: false,
+            ..Spec::with_failure(2, 1, Fail { worker: 0, after_buckets: 0 })
+        };
+        let out = model_check(&spec);
+        let err = out.error.expect(
+            "silent worker death must deadlock the step loop",
+        );
+        assert!(err.contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn checker_finds_the_flush_after_done_race() {
+        // Mutated barrier ordering: Done before flush. Some
+        // interleaving drains the trace before the last worker
+        // flushed, losing its span.
+        let spec = Spec {
+            flush_before_done: false,
+            ..Spec::healthy(2, 1)
+        };
+        let out = model_check(&spec);
+        let err = out
+            .error
+            .expect("flush-after-Done must lose a span somewhere");
+        assert!(err.contains("trace drain"), "{err}");
+    }
+
+    #[test]
+    fn failure_at_every_injection_point_stays_live() {
+        // Panic before the first bucket, between buckets, and after
+        // the last bucket: no interleaving may deadlock.
+        for after in 0..=2 {
+            let out = model_check(&Spec::with_failure(
+                2,
+                2,
+                Fail { worker: 0, after_buckets: after },
+            ));
+            assert!(
+                out.error.is_none(),
+                "fail after {after} buckets: {:?}",
+                out.error
+            );
+        }
+    }
+}

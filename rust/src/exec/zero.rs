@@ -899,6 +899,7 @@ impl Zero3State {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::collective::Precision;

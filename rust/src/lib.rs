@@ -61,6 +61,7 @@ pub mod collective;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod detlint;
 pub mod exec;
 pub mod manifest;
 pub mod metrics;

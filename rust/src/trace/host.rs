@@ -19,11 +19,14 @@
 //! The recorder is a process-global single session (matching the
 //! process-global exec engine it instruments): [`start`] → record →
 //! [`drain`]. Tests that enable it serialize through [`exclusive`].
+//!
+//! Sync primitives come from [`crate::util::sync`] (the loom seam),
+//! and the flush/drain ordering relative to the worker-pool barrier is
+//! exhaustively model-checked in [`crate::exec::protocol`].
 
 use super::{Arg, Span, Trace, CAT_HOST};
+use crate::util::sync::{AtomicBool, Mutex, MutexGuard, Ordering};
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Mutex, MutexGuard};
 use std::time::Instant;
 
 static ENABLED: AtomicBool = AtomicBool::new(false);

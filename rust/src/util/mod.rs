@@ -7,5 +7,6 @@
 pub mod bench;
 pub mod json;
 pub mod rng;
+pub mod sync;
 
 pub use rng::Rng;

@@ -1,0 +1,24 @@
+//! Swappable sync primitives: the loom seam.
+//!
+//! Every concurrency primitive the exec/trace stack uses is imported
+//! through this module instead of `std::sync` directly, so the whole
+//! stack can be recompiled against the [loom] model checker's
+//! permutation-testing primitives with `RUSTFLAGS="--cfg loom"` when
+//! that crate is available in the build environment. The offline build
+//! has no loom dependency — the `cfg(loom)` branch is declared via
+//! `check-cfg` in `Cargo.toml` and simply never compiles — and the
+//! in-tree exhaustive checker ([`crate::exec::protocol`]) covers the
+//! protocol-level interleavings instead (including the mpsc channels,
+//! which loom does not model).
+//!
+//! [loom]: https://docs.rs/loom
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicBool, Ordering};
+#[cfg(loom)]
+pub use loom::sync::{Mutex, MutexGuard};
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicBool, Ordering};
+#[cfg(not(loom))]
+pub use std::sync::{Mutex, MutexGuard};

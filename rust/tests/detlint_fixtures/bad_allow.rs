@@ -1,0 +1,8 @@
+// detlint-fixture: exec/fixture.rs bad-allow
+// Seeded violations: malformed escape hatches. An allow naming an
+// unknown rule is a typo that would otherwise silently suppress
+// nothing; an allow without a justification defeats the audit trail.
+pub fn noop() {
+    // detlint: allow(no-such-rule) this rule id does not exist
+    // detlint: allow(wall-clock)
+}

@@ -1,0 +1,7 @@
+// detlint-fixture: exec/fixture.rs byte-cast
+// Seeded violation: a truncating `as` cast inside a byte-accounting
+// helper. On payloads past 4 GiB a u64 -> u32 `as` cast silently
+// wraps; byte math must use widening casts or checked conversions.
+pub fn payload_bytes(elems: u64) -> u32 {
+    (elems * 4) as u32
+}

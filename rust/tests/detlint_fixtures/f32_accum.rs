@@ -1,0 +1,14 @@
+// detlint-fixture: collective/fixture.rs f32-accum
+// Seeded violations: all three spellings of order-sensitive f32
+// accumulation in a reduce kernel. The blessed pattern is the f64
+// scratch accumulator of collective::reduce_mean.
+pub fn reduce(parts: &[&[f32]], out: &mut [f32]) {
+    let mut total_sum = 0.0f32;
+    for p in parts {
+        total_sum += p.iter().sum::<f32>();
+        for (i, &x) in p.iter().enumerate() {
+            out[i] += x;
+        }
+    }
+    out[0] = total_sum;
+}

@@ -1,0 +1,11 @@
+// detlint-fixture: collective/fixture.rs hash-iter
+// Seeded violation: HashMap/HashSet in a determinism-critical module.
+// Hash iteration order varies per process (SipHash keys are random),
+// so any reduction or bucket walk driven by it is nondeterministic.
+use std::collections::HashMap;
+
+pub fn bucket_owners() -> HashMap<usize, usize> {
+    let mut owners = HashMap::new();
+    owners.insert(0, 0);
+    owners
+}

@@ -1,0 +1,9 @@
+// detlint-fixture: exec/pool.rs panic-in-worker
+// Seeded violation: a bare unwrap inside the worker-pool module. A
+// panicking worker thread drops its channel sender while its siblings
+// keep the channel alive, so the coordinator's recv loop waits for a
+// Done that never comes — the silent-deadlock failure mode the
+// Msg::Failed protocol exists to prevent.
+pub fn drive(result: Result<f32, String>) -> f32 {
+    result.unwrap()
+}

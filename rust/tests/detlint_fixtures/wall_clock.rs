@@ -1,0 +1,9 @@
+// detlint-fixture: exec/fixture.rs wall-clock
+// Seeded violation: reading a wall clock outside trace::host. Clock
+// reads on the step path make traced and untraced runs diverge and
+// are banned everywhere except the trace recorder itself.
+use std::time::Instant;
+
+pub fn stamp() -> Instant {
+    Instant::now()
+}

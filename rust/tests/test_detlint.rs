@@ -1,0 +1,163 @@
+//! Determinism-linter acceptance tests.
+//!
+//! Two halves, both required for the linter to mean anything:
+//!
+//! 1. **Every rule fires.** `tests/detlint_fixtures/*.rs` holds one
+//!    seeded-violation file per rule (cargo does not compile files in
+//!    test subdirectories, so the fixtures can contain banned code).
+//!    Each fixture declares its pseudo-path and expected rule in a
+//!    `// detlint-fixture: <path> <rule>` header; the linter must
+//!    report that rule — and only that rule — for the file. A rule
+//!    with no fixture fails the coverage assertion, so adding a rule
+//!    without proving it fires is impossible.
+//! 2. **The shipped tree is clean.** `scan_tree` over `src/` must
+//!    report zero violations — the same gate CI runs via the detlint
+//!    binary — and every allow-annotation in the tree must carry its
+//!    audited justification.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use lamb_train::detlint::{scan_source, scan_tree, RULES};
+
+fn manifest_path(rel: &str) -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+fn fixtures() -> Vec<(String, String, String, String)> {
+    // (file name, pseudo-path, expected rule, source text)
+    let dir = manifest_path("tests/detlint_fixtures");
+    let mut out = Vec::new();
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .expect("fixture dir exists")
+        .map(|e| e.expect("readable fixture entry").path())
+        .filter(|p| p.extension().is_some_and(|x| x == "rs"))
+        .collect();
+    entries.sort();
+    for path in entries {
+        let text = std::fs::read_to_string(&path).expect("fixture reads");
+        let header = text.lines().next().expect("fixture has a header");
+        let rest = header
+            .strip_prefix("// detlint-fixture: ")
+            .unwrap_or_else(|| {
+                panic!("{path:?} missing '// detlint-fixture:' header")
+            });
+        let (pseudo, rule) = rest
+            .split_once(' ')
+            .expect("header is '<pseudo-path> <rule>'");
+        out.push((
+            path.file_name().expect("file name").to_string_lossy().into_owned(),
+            pseudo.to_string(),
+            rule.trim().to_string(),
+            text,
+        ));
+    }
+    out
+}
+
+#[test]
+fn every_rule_fires_on_its_fixture() {
+    let mut covered = BTreeSet::new();
+    for (name, pseudo, rule, text) in fixtures() {
+        assert!(
+            RULES.iter().any(|r| r.id == rule),
+            "{name}: header names unknown rule {rule:?}"
+        );
+        let (violations, _) = scan_source(&pseudo, &text);
+        assert!(
+            !violations.is_empty(),
+            "{name}: rule {rule} did not fire on its seeded fixture"
+        );
+        for v in &violations {
+            assert_eq!(
+                v.rule, rule,
+                "{name}: expected only {rule} violations, got {} at \
+                 line {}: {}",
+                v.rule, v.line, v.snippet
+            );
+            assert_eq!(v.file, pseudo);
+            assert!(v.line >= 1 && v.line <= text.lines().count());
+        }
+        covered.insert(rule);
+    }
+    // No rule may ship without a fixture proving it fires.
+    for r in RULES {
+        assert!(
+            covered.contains(r.id),
+            "rule {} has no seeded fixture under tests/detlint_fixtures",
+            r.id
+        );
+    }
+}
+
+/// The linter's own acceptance gate: the post-PR tree is clean. This is
+/// the same scan `cargo run --bin detlint` performs in CI, run as a
+/// test so a violating commit fails `cargo test` locally too.
+#[test]
+fn shipped_tree_is_clean() {
+    let report = scan_tree(&manifest_path("src")).expect("src scans");
+    assert!(
+        report.files_scanned > 30,
+        "suspiciously few files scanned: {}",
+        report.files_scanned
+    );
+    let rendered: Vec<String> = report
+        .violations
+        .iter()
+        .map(|v| format!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.snippet))
+        .collect();
+    assert!(
+        report.violations.is_empty(),
+        "detlint violations in the shipped tree:\n{}",
+        rendered.join("\n")
+    );
+    // Every suppression in the tree carries its audit trail, and the
+    // known allow sites (the telemetry clocks in the exec engine, the
+    // two contract-defined f32 accumulations in the collectives) are
+    // present — if a refactor drops them the linter would fire above,
+    // and if it silently widens them this inventory catches it.
+    assert!(
+        !report.allows.is_empty(),
+        "expected audited allow-annotations in the tree"
+    );
+    for a in &report.allows {
+        assert!(
+            !a.justification.is_empty(),
+            "{}:{}: allow({}) without justification",
+            a.file,
+            a.line,
+            a.rule
+        );
+    }
+    let by_rule: BTreeSet<&str> =
+        report.allows.iter().map(|a| a.rule.as_str()).collect();
+    assert!(by_rule.contains("wall-clock"), "{by_rule:?}");
+    assert!(by_rule.contains("f32-accum"), "{by_rule:?}");
+    assert!(by_rule.contains("panic-in-worker"), "{by_rule:?}");
+}
+
+/// The JSON report round-trips through the crate's own JSON parser and
+/// carries the full violation/allow inventory (what CI uploads as the
+/// build artifact).
+#[test]
+fn json_report_parses_and_inventories_the_tree() {
+    let report = scan_tree(&manifest_path("src")).expect("src scans");
+    let json = report.to_json();
+    let doc = lamb_train::util::json::Json::parse(&json)
+        .expect("report JSON parses");
+    let files = doc
+        .get("files_scanned")
+        .and_then(|v| v.as_f64())
+        .expect("files_scanned present") as usize;
+    assert_eq!(files, report.files_scanned);
+    let allows = doc
+        .get("allows")
+        .and_then(|v| v.as_arr())
+        .expect("allows array present");
+    assert_eq!(allows.len(), report.allows.len());
+    let violations = doc
+        .get("violations")
+        .and_then(|v| v.as_arr())
+        .expect("violations array present");
+    assert!(violations.is_empty());
+}

@@ -1,0 +1,76 @@
+//! Heavier exhaustive interleaving checks of the worker-pool step
+//! protocol (`exec::protocol`) — the loom-style suite.
+//!
+//! The quick 2x2 / 3x1 configurations run in the module's unit tests
+//! on every `cargo test`. The configurations here explore much larger
+//! state spaces (hundreds of thousands of states) and run under
+//! `cargo test --features loom --test test_loom_pool`, which CI
+//! exercises in the static-analysis job.
+#![cfg(feature = "loom")]
+
+use lamb_train::exec::protocol::{model_check, Fail, Spec};
+
+#[test]
+fn healthy_protocol_exhaustive_3x2() {
+    let out = model_check(&Spec::healthy(3, 2));
+    assert!(out.error.is_none(), "{:?}", out.error);
+    assert!(out.states > 10_000, "only {} states", out.states);
+}
+
+#[test]
+fn healthy_protocol_exhaustive_2x3() {
+    let out = model_check(&Spec::healthy(2, 3));
+    assert!(out.error.is_none(), "{:?}", out.error);
+}
+
+#[test]
+fn healthy_protocol_exhaustive_4x1() {
+    let out = model_check(&Spec::healthy(4, 1));
+    assert!(out.error.is_none(), "{:?}", out.error);
+}
+
+/// Every failure injection point of every worker in a 3x2 pod: the
+/// panic may land before any bucket, between buckets, or after the
+/// last one, and no interleaving may deadlock or mis-reduce.
+#[test]
+fn every_failure_point_stays_live_3x2() {
+    for worker in 0..3 {
+        for after in 0..=2 {
+            let out = model_check(&Spec::with_failure(
+                3,
+                2,
+                Fail { worker, after_buckets: after },
+            ));
+            assert!(
+                out.error.is_none(),
+                "worker {worker} failing after {after} buckets: {:?}",
+                out.error
+            );
+        }
+    }
+}
+
+/// The mutation checks scale too: silent thread death deadlocks a
+/// 3-worker pod from any failure point, and the checker proves it.
+#[test]
+fn silent_death_deadlocks_every_failure_point_3x1() {
+    for worker in 0..3 {
+        let spec = Spec {
+            report_failure: false,
+            ..Spec::with_failure(3, 1, Fail { worker, after_buckets: 0 })
+        };
+        let err = model_check(&spec)
+            .error
+            .expect("silent death must deadlock");
+        assert!(err.contains("deadlock"), "{err}");
+    }
+}
+
+#[test]
+fn flush_after_done_race_found_at_scale() {
+    let spec = Spec { flush_before_done: false, ..Spec::healthy(3, 2) };
+    let err = model_check(&spec)
+        .error
+        .expect("mutated barrier ordering must lose a span");
+    assert!(err.contains("trace drain"), "{err}");
+}

@@ -10,7 +10,7 @@
 #   the file is one JSON object; the script fails (nonzero exit) if any
 #   bench errors or emits a line that does not parse as JSON.
 set -euo pipefail
-cd "$(dirname "$0")/.."
+cd "$(dirname "$0")/.." || exit 1
 
 OUT="${1:-BENCH_smoke.json}"
 
